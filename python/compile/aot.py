@@ -1,0 +1,210 @@
+"""AOT pipeline: lower the L2 JAX functions (with their L1 Pallas kernels)
+to HLO **text** artifacts the Rust runtime loads via PJRT.
+
+HLO text — NOT ``lowered.compiler_ir("hlo").serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProtos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the ``xla``
+crate) rejects; the text parser reassigns ids and round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Usage::
+
+    python -m compile.aot --out-dir ../artifacts
+
+Writes one ``<name>.hlo.txt`` per artifact plus ``manifest.json``
+describing shapes/dtypes (consumed by ``rust/src/runtime/artifact.rs``).
+Skips artifacts whose HLO already exists and is newer than this package's
+sources (so ``make artifacts`` is a cheap no-op on rebuilds).
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _input_meta(specs):
+    return [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in specs
+    ]
+
+
+class Builder:
+    def __init__(self, out_dir: str, force: bool):
+        self.out_dir = out_dir
+        self.force = force
+        self.manifest = {"version": 1, "artifacts": []}
+        os.makedirs(out_dir, exist_ok=True)
+        pkg_dir = os.path.dirname(os.path.abspath(__file__))
+        self.src_mtime = max(
+            os.path.getmtime(os.path.join(root, f))
+            for root, _, files in os.walk(pkg_dir)
+            for f in files
+            if f.endswith(".py")
+        )
+
+    def emit(self, name, fn, specs, num_outputs, meta=None):
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        entry = {
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "inputs": _input_meta(specs),
+            "num_outputs": num_outputs,
+            "meta": meta or {},
+        }
+        self.manifest["artifacts"].append(entry)
+        if (
+            not self.force
+            and os.path.exists(path)
+            and os.path.getmtime(path) >= self.src_mtime
+        ):
+            print(f"  [skip] {name} (up to date)")
+            return
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  [emit] {name}: {len(text)} chars, inputs={len(specs)}")
+
+    def finish(self):
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(self.manifest, f, indent=2)
+        print(f"manifest: {len(self.manifest['artifacts'])} artifacts")
+
+
+# The e2e transformer configuration (examples/transformer_e2e.rs).
+E2E_CFG = model.TransformerConfig(vocab=256, d_model=128, n_layers=4, n_heads=4, seq=64)
+E2E_BATCH = 8
+# A small configuration for fast integration tests.
+SMALL_CFG = model.TransformerConfig(vocab=256, d_model=32, n_layers=2, n_heads=2, seq=16)
+SMALL_BATCH = 2
+# Gossip artifact sizes: n nodes mixing the e2e model's flat state.
+GOSSIP_N = 8
+
+
+def build(out_dir: str, force: bool = False):
+    b = Builder(out_dir, force)
+
+    # --- logistic regression grad oracle (d=10, B=32; Appendix D.5) -----
+    d, batch = 10, 32
+    b.emit(
+        "logreg_grad",
+        model.logreg_loss_and_grad,
+        [spec((d,)), spec((batch, d)), spec((batch,))],
+        num_outputs=2,
+        meta={"d": d, "batch": batch},
+    )
+
+    # --- transformer train step: (flat_params, window) -> (loss, grad) --
+    for name, cfg, bs in (
+        ("transformer_step", E2E_CFG, E2E_BATCH),
+        ("transformer_step_small", SMALL_CFG, SMALL_BATCH),
+    ):
+        p = model.param_count(cfg)
+        fn = lambda flat, window, cfg=cfg: model.transformer_loss_and_grad(cfg, flat, window)
+        b.emit(
+            name,
+            fn,
+            [spec((p,)), spec((bs, cfg.seq + 1), jnp.int32)],
+            num_outputs=2,
+            meta={
+                "param_count": p,
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "seq": cfg.seq,
+                "batch": bs,
+            },
+        )
+
+    # --- gossip update (Pallas kernel) over the e2e model state ---------
+    for name, n, p in (
+        ("gossip_update", GOSSIP_N, model.param_count(E2E_CFG)),
+        ("gossip_update_small", 4, 96),
+    ):
+        b.emit(
+            name,
+            model.gossip_update,
+            [
+                spec((n, n)),
+                spec((n, p)),
+                spec((n, p)),
+                spec((n, p)),
+                spec((), jnp.float32),
+                spec((), jnp.float32),
+            ],
+            num_outputs=2,
+            meta={"n": n, "p": p},
+        )
+
+    # --- one-peer specialized gossip (no W materialization) -------------
+    from .kernels import one_peer as one_peer_kernel
+
+    n, pp = GOSSIP_N, model.param_count(E2E_CFG)
+    b.emit(
+        "gossip_one_peer",
+        one_peer_kernel.gossip_one_peer,
+        [
+            spec((), jnp.int32),
+            spec((n, pp)),
+            spec((n, pp)),
+            spec((n, pp)),
+            spec((), jnp.float32),
+            spec((), jnp.float32),
+        ],
+        num_outputs=2,
+        meta={"n": n, "p": pp},
+    )
+
+    # --- initial parameters for the e2e example (raw little-endian f32) --
+    # The Rust coordinator needs a *correct* init (layer-norm scales = 1);
+    # exporting it here keeps the layout contract in one place.
+    import numpy as np
+
+    for fname, cfg in (
+        ("transformer_init.bin", E2E_CFG),
+        ("transformer_init_small.bin", SMALL_CFG),
+    ):
+        path = os.path.join(out_dir, fname)
+        if force or not os.path.exists(path) or os.path.getmtime(path) < b.src_mtime:
+            flat = np.asarray(model.init_params(cfg, seed=0), dtype="<f4")
+            flat.tofile(path)
+            print(f"  [emit] {fname}: {flat.size} params")
+        else:
+            print(f"  [skip] {fname} (up to date)")
+
+    b.finish()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true", help="rebuild even if up to date")
+    args = ap.parse_args()
+    build(args.out_dir, args.force)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,90 @@
+"""Pallas kernel for the fused DmSGD gossip update (Algorithm 1).
+
+This is the paper's compute hot-spot on the coordinator side: for stacked
+node state ``X, M, G ∈ R^{n×P}`` and weight matrix ``W ∈ R^{n×n}``,
+
+    X' = W (X − γ M)        M' = W (β M + G)
+
+The operation is memory-bound in P (n is at most a few hundred, P is the
+model size). TPU mapping (DESIGN.md §Hardware-Adaptation): tile the P
+dimension into VMEM-sized blocks; W (tiny) stays resident per block; each
+of X, M, G is streamed through VMEM exactly once, and the two small
+``n × n @ n × p_block`` matmuls hit the MXU. On this testbed the kernel
+runs under ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); the BlockSpec structure is preserved either way.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default P-tile. 3 input streams + 2 output streams of (n × P_BLOCK) f32
+# plus the (n × n) W must fit VMEM (≈16 MiB): for n ≤ 256,
+# 5 · 256 · 2048 · 4 B ≈ 10.5 MiB. See python/tests/test_kernels.py for
+# the footprint assertion.
+P_BLOCK = 2048
+
+# VMEM budget used for the footprint check (bytes).
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def vmem_footprint(n: int, p_block: int) -> int:
+    """Bytes resident in VMEM for one grid step of the gossip kernel."""
+    streams = 5  # x, m, g in; x', m' out
+    return 4 * (streams * n * p_block + n * n)
+
+
+def _gossip_kernel(w_ref, x_ref, m_ref, g_ref, beta_ref, gamma_ref, xo_ref, mo_ref):
+    w = w_ref[...]
+    x = x_ref[...]
+    m = m_ref[...]
+    g = g_ref[...]
+    beta = beta_ref[0]
+    gamma = gamma_ref[0]
+    # One pass over m for both halves of the update.
+    xo_ref[...] = jnp.dot(w, x - gamma * m, preferred_element_type=jnp.float32)
+    mo_ref[...] = jnp.dot(w, beta * m + g, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("p_block", "interpret"))
+def gossip_dmsgd(w, x, m, g, beta, gamma, *, p_block: int = P_BLOCK, interpret: bool = True):
+    """Fused DmSGD mixing update via Pallas.
+
+    Args:
+      w: (n, n) f32 weight matrix.
+      x, m, g: (n, p) f32 stacked state.
+      beta, gamma: f32 scalars (0-d or python floats).
+      p_block: P-dimension tile; the final tile is padded by Pallas.
+      interpret: run in interpret mode (required on CPU PJRT).
+
+    Returns:
+      (x', m') — both (n, p) f32.
+    """
+    n, p = x.shape
+    assert w.shape == (n, n) and m.shape == (n, p) and g.shape == (n, p)
+    pb = min(p_block, p)
+    grid = (pl.cdiv(p, pb),)
+    beta_arr = jnp.full((1,), beta, jnp.float32)
+    gamma_arr = jnp.full((1,), gamma, jnp.float32)
+    state_spec = pl.BlockSpec((n, pb), lambda i: (0, i))
+    out_shape = (
+        jax.ShapeDtypeStruct((n, p), jnp.float32),
+        jax.ShapeDtypeStruct((n, p), jnp.float32),
+    )
+    return pl.pallas_call(
+        _gossip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, n), lambda i: (0, 0)),  # W resident per block
+            state_spec,
+            state_spec,
+            state_spec,
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=(state_spec, state_spec),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(w, x, m, g, beta_arr, gamma_arr)

@@ -1,0 +1,64 @@
+"""Blocked Pallas matmul targeting the MXU systolic array.
+
+Used by the transformer MLP (``model.py``) when ``use_pallas=True`` and as
+the standalone kernel benchmark. TPU mapping: 128×128 MXU-shaped tiles
+with an f32 accumulator carried across the K grid dimension; on this
+testbed it runs under ``interpret=True`` (the CPU PJRT client cannot
+execute Mosaic custom-calls), so correctness is validated here and MXU
+utilization is *estimated* from the BlockSpec in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile sizes.
+BM, BK, BN = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    # Grid is (M/bm, N/bn, K/bk); K is the innermost (fastest) dimension so
+    # the f32 accumulator in o_ref is revisited across k steps.
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret"))
+def matmul(a, b, *, bm: int = BM, bk: int = BK, bn: int = BN, interpret: bool = True):
+    """C = A @ B with A (m, k) and B (k, n), f32 accumulation.
+
+    Tiles are clamped to the operand shapes; ragged edges are padded by
+    Pallas's BlockSpec machinery.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm_, bk_, bn_ = min(bm, m), min(bk, k), min(bn, n)
+    # Pad ragged edges to tile multiples: out-of-bounds block contents are
+    # undefined in Pallas, and an undefined K-edge would poison the
+    # accumulator. Zero padding is exact for matmul.
+    mp, kp, np_ = -(-m // bm_) * bm_, -(-k // bk_) * bk_, -(-n // bn_) * bn_
+    a_p = jnp.pad(a, ((0, mp - m), (0, kp - k))) if (mp, kp) != (m, k) else a
+    b_p = jnp.pad(b, ((0, kp - k), (0, np_ - n))) if (kp, np_) != (k, n) else b
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]

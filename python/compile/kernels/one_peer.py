@@ -1,0 +1,69 @@
+"""Specialized Pallas kernel for *one-peer* gossip updates.
+
+The one-peer exponential realization has exactly two nonzeros per row of
+W (½ on the diagonal, ½ at hop offset `2^t`), so materializing W and
+paying an `n×n @ n×p` MXU matmul per block is wasted work. This kernel
+computes Algorithm 1's update directly from the hop:
+
+    x'_i = ½ (x_i − γ m_i) + ½ (x_{i+h} − γ m_{i+h})
+    m'_i = ½ (β m_i + g_i) + ½ (β m_{i+h} + g_{i+h})
+
+i.e. a roll-and-average along the node axis — pure VPU streaming, no MXU,
+no W in VMEM. For n = 256 this removes the n² weight block and ~4·n²·p
+FLOPs per update relative to the dense kernel (see compile.analyze).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+P_BLOCK = 4096
+
+
+def _one_peer_kernel(hop_ref, x_ref, m_ref, g_ref, beta_ref, gamma_ref, xo_ref, mo_ref):
+    hop = hop_ref[0]
+    beta = beta_ref[0]
+    gamma = gamma_ref[0]
+    xh = x_ref[...] - gamma * m_ref[...]
+    mh = beta * m_ref[...] + g_ref[...]
+    # Row i's peer is row (i + hop) mod n: roll by -hop along nodes.
+    xo_ref[...] = 0.5 * (xh + jnp.roll(xh, -hop, axis=0))
+    mo_ref[...] = 0.5 * (mh + jnp.roll(mh, -hop, axis=0))
+
+
+@functools.partial(jax.jit, static_argnames=("p_block", "interpret"))
+def gossip_one_peer(hop, x, m, g, beta, gamma, *, p_block: int = P_BLOCK, interpret: bool = True):
+    """One-peer fused DmSGD update.
+
+    Args:
+      hop: i32 scalar — the neighbor offset `2^{mod(k, τ)}`.
+      x, m, g: (n, p) f32 stacked state.
+      beta, gamma: f32 scalars.
+    Returns:
+      (x', m') — both (n, p) f32.
+    """
+    n, p = x.shape
+    pb = min(p_block, p)
+    grid = (pl.cdiv(p, pb),)
+    state_spec = pl.BlockSpec((n, pb), lambda i: (0, i))
+    scalar = pl.BlockSpec((1,), lambda i: (0,))
+    return pl.pallas_call(
+        _one_peer_kernel,
+        grid=grid,
+        in_specs=[scalar, state_spec, state_spec, state_spec, scalar, scalar],
+        out_specs=(state_spec, state_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ),
+        interpret=interpret,
+    )(
+        jnp.full((1,), hop, jnp.int32),
+        x,
+        m,
+        g,
+        jnp.full((1,), beta, jnp.float32),
+        jnp.full((1,), gamma, jnp.float32),
+    )

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package is validated against these references at
+build time (pytest + hypothesis sweeps in ``python/tests``). The oracles
+are deliberately written in the most direct jnp form — no tiling, no
+tricks — so they serve as the semantic ground truth.
+"""
+
+import jax.numpy as jnp
+
+
+def gossip_dmsgd_ref(w, x, m, g, beta, gamma):
+    """Algorithm 1's fused mixing update (the paper's core operation).
+
+    x' = W (x − γ m)
+    m' = W (β m + g)
+
+    Args:
+      w: (n, n) doubly-stochastic weight matrix.
+      x, m, g: (n, p) stacked per-node parameters / momenta / gradients.
+      beta, gamma: scalars.
+    Returns:
+      (x', m') each (n, p).
+    """
+    x_new = w @ (x - gamma * m)
+    m_new = w @ (beta * m + g)
+    return x_new, m_new
+
+
+def matmul_ref(a, b):
+    """Plain matmul oracle (f32 accumulate)."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)

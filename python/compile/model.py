@@ -1,0 +1,207 @@
+"""Layer-2 JAX models, lowered AOT to HLO text for the Rust runtime.
+
+Three entry points, matching the Rust runtime's artifact contract
+(flat f32 parameter vectors in, ``(loss, grad)`` out — so the Rust
+coordinator can treat every model as an opaque vector):
+
+* :func:`logreg_loss_and_grad` — the logistic-regression workload of
+  Appendix D.5 (used by runtime integration tests to cross-check the
+  pure-Rust implementation).
+* :func:`transformer_loss_and_grad` — a decoder-only byte-level
+  transformer LM (the deep-training workload of the end-to-end example).
+* :func:`gossip_update` — Algorithm 1's fused mixing update, delegating
+  to the Layer-1 Pallas kernel so the kernel lowers into the same HLO the
+  Rust hot path executes.
+"""
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import gossip as gossip_kernel
+from .kernels import matmul as matmul_kernel
+
+# ---------------------------------------------------------------------------
+# Logistic regression (Appendix D.5)
+# ---------------------------------------------------------------------------
+
+
+def logreg_loss(x, h, y):
+    """Mean logistic loss: (1/B) Σ ln(1 + exp(−y·hᵀx)), y ∈ {±1}."""
+    z = h @ x
+    return jnp.mean(jax.nn.softplus(-y * z))
+
+
+@jax.jit
+def logreg_loss_and_grad(x, h, y):
+    """Returns (loss, grad) — the per-node gradient oracle."""
+    return jax.value_and_grad(logreg_loss)(x, h, y)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only transformer LM with flat parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    seq: int = 64
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def param_shapes(cfg: TransformerConfig):
+    """Ordered (name, shape) list — the flat layout contract with Rust."""
+    shapes = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+        ("pos_embed", (cfg.seq, cfg.d_model)),
+    ]
+    for layer in range(cfg.n_layers):
+        shapes += [
+            (f"l{layer}.ln1_scale", (cfg.d_model,)),
+            (f"l{layer}.ln1_bias", (cfg.d_model,)),
+            (f"l{layer}.wqkv", (cfg.d_model, 3 * cfg.d_model)),
+            (f"l{layer}.wo", (cfg.d_model, cfg.d_model)),
+            (f"l{layer}.ln2_scale", (cfg.d_model,)),
+            (f"l{layer}.ln2_bias", (cfg.d_model,)),
+            (f"l{layer}.w1", (cfg.d_model, cfg.d_ff)),
+            (f"l{layer}.b1", (cfg.d_ff,)),
+            (f"l{layer}.w2", (cfg.d_ff, cfg.d_model)),
+            (f"l{layer}.b2", (cfg.d_model,)),
+        ]
+    shapes += [
+        ("lnf_scale", (cfg.d_model,)),
+        ("lnf_bias", (cfg.d_model,)),
+        ("unembed", (cfg.d_model, cfg.vocab)),
+    ]
+    return shapes
+
+
+def param_count(cfg: TransformerConfig) -> int:
+    total = 0
+    for _, shape in param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        total += size
+    return total
+
+
+def unflatten(cfg: TransformerConfig, flat):
+    """Slice the flat vector into the named parameter dict."""
+    params = {}
+    offset = 0
+    for name, shape in param_shapes(cfg):
+        size = 1
+        for s in shape:
+            size *= s
+        params[name] = flat[offset : offset + size].reshape(shape)
+        offset += size
+    return params
+
+
+def init_params(cfg: TransformerConfig, seed: int = 0):
+    """Deterministic init: scaled-normal weights, ones/zeros layer norms."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in param_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if "scale" in name:
+            chunk = jnp.ones(shape, jnp.float32)
+        elif "bias" in name or name.endswith(".b1") or name.endswith(".b2"):
+            chunk = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            std = (1.0 / fan_in) ** 0.5
+            chunk = std * jax.random.normal(sub, shape, jnp.float32)
+        chunks.append(chunk.reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+def _layer_norm(x, scale, bias, eps=1e-5):
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _dense(x, w, use_pallas):
+    """2-D dense over the last axis, optionally via the Pallas kernel."""
+    if not use_pallas:
+        return x @ w
+    flat = x.reshape(-1, x.shape[-1])
+    out = matmul_kernel.matmul(flat, w)
+    return out.reshape(*x.shape[:-1], w.shape[-1])
+
+
+def forward(cfg: TransformerConfig, params, tokens, *, use_pallas: bool = False):
+    """Causal LM logits for tokens (B, S) with S == cfg.seq."""
+    b, s = tokens.shape
+    h = params["embed"][tokens] + params["pos_embed"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+    for layer in range(cfg.n_layers):
+        p = lambda k: params[f"l{layer}.{k}"]  # noqa: E731
+        # Attention block.
+        x = _layer_norm(h, p("ln1_scale"), p("ln1_bias"))
+        qkv = _dense(x, p("wqkv"), use_pallas)
+        q, k, v = jnp.split(qkv, 3, axis=-1)
+        q = q.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        k = k.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (cfg.d_head**0.5)
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_model)
+        h = h + _dense(out, p("wo"), use_pallas)
+        # MLP block.
+        x = _layer_norm(h, p("ln2_scale"), p("ln2_bias"))
+        x = _dense(x, p("w1"), use_pallas) + p("b1")
+        x = jax.nn.gelu(x)
+        x = _dense(x, p("w2"), use_pallas) + p("b2")
+        h = h + x
+    h = _layer_norm(h, params["lnf_scale"], params["lnf_bias"])
+    return h @ params["unembed"]
+
+
+def transformer_loss(cfg: TransformerConfig, flat, window, *, use_pallas: bool = False):
+    """Mean next-token cross entropy over a (B, S+1) token window."""
+    params = unflatten(cfg, flat)
+    inputs = window[:, :-1]
+    targets = window[:, 1:]
+    logits = forward(cfg, params, inputs, use_pallas=use_pallas)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "use_pallas"))
+def transformer_loss_and_grad(cfg: TransformerConfig, flat, window, *, use_pallas: bool = False):
+    """(loss, grad) with grad flattened to match ``flat`` — the artifact
+    signature the Rust coordinator consumes."""
+    fn = lambda f: transformer_loss(cfg, f, window, use_pallas=use_pallas)  # noqa: E731
+    return jax.value_and_grad(fn)(flat)
+
+
+# ---------------------------------------------------------------------------
+# Gossip update (Layer-1 Pallas kernel behind the L2 entry point)
+# ---------------------------------------------------------------------------
+
+
+def gossip_update(w, x, m, g, beta, gamma):
+    """Algorithm 1's fused mixing update; lowers the Pallas kernel into the
+    artifact HLO."""
+    return gossip_kernel.gossip_dmsgd(w, x, m, g, beta, gamma)

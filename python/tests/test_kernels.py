@@ -1,0 +1,181 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and block sizes) so tiling edge cases — ragged
+tiles, single-row stacks, blocks larger than the operand — are all
+exercised against ``ref.py``.
+"""
+
+import sys
+import os
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gossip, matmul, ref
+
+
+def doubly_stochastic(n: int, rng: np.random.Generator) -> np.ndarray:
+    """Random doubly-stochastic matrix by Sinkhorn iteration."""
+    w = rng.uniform(0.1, 1.0, size=(n, n))
+    for _ in range(50):
+        w /= w.sum(axis=1, keepdims=True)
+        w /= w.sum(axis=0, keepdims=True)
+    return w.astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 12),
+    p=st.integers(1, 257),
+    p_block=st.sampled_from([1, 7, 64, 2048]),
+    beta=st.floats(0.0, 0.99),
+    gamma=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_gossip_matches_ref(n, p, p_block, beta, gamma, seed):
+    rng = np.random.default_rng(seed)
+    w = doubly_stochastic(n, rng)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    m = rng.standard_normal((n, p)).astype(np.float32)
+    g = rng.standard_normal((n, p)).astype(np.float32)
+    xo, mo = gossip.gossip_dmsgd(
+        jnp.array(w), jnp.array(x), jnp.array(m), jnp.array(g), beta, gamma, p_block=p_block
+    )
+    xr, mr = ref.gossip_dmsgd_ref(w, x, m, g, beta, gamma)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-5, atol=1e-5)
+
+
+def test_gossip_exact_averaging_after_tau_steps():
+    """Lemma 1, executed through the kernel: τ one-peer mixes = exact mean."""
+    n, p, tau = 8, 33, 3
+    rng = np.random.default_rng(1)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    m = np.zeros((n, p), np.float32)
+    g = np.zeros((n, p), np.float32)
+    for t in range(tau):
+        w = np.zeros((n, n), np.float32)
+        for i in range(n):
+            w[i, i] += 0.5
+            w[i, (i + (1 << t)) % n] += 0.5
+        x, m = (np.asarray(a) for a in gossip.gossip_dmsgd(
+            jnp.array(w), jnp.array(x), jnp.array(m), jnp.array(g), 0.0, 0.0
+        ))
+    mean = np.asarray(x).mean(axis=0, keepdims=True)
+    np.testing.assert_allclose(np.asarray(x), np.repeat(mean, n, axis=0), atol=1e-5)
+
+
+def test_gossip_preserves_mean():
+    """Doubly-stochastic W keeps the node-mean invariant (γ = 0)."""
+    rng = np.random.default_rng(2)
+    n, p = 6, 100
+    w = doubly_stochastic(n, rng)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    z = np.zeros_like(x)
+    xo, _ = gossip.gossip_dmsgd(jnp.array(w), jnp.array(x), jnp.array(z), jnp.array(z), 0.0, 0.0)
+    np.testing.assert_allclose(
+        np.asarray(xo).mean(axis=0), x.mean(axis=0), rtol=1e-4, atol=1e-5
+    )
+
+
+def test_gossip_vmem_footprint_within_budget():
+    """The default BlockSpec fits the 16 MiB VMEM budget up to n = 256."""
+    assert gossip.vmem_footprint(256, gossip.P_BLOCK) <= gossip.VMEM_BYTES
+    assert gossip.vmem_footprint(64, gossip.P_BLOCK) <= gossip.VMEM_BYTES // 4
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 180),
+    n=st.integers(1, 200),
+    block=st.sampled_from([16, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_matches_ref(m, k, n, block, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, k)).astype(np.float32)
+    b = rng.standard_normal((k, n)).astype(np.float32)
+    c = matmul.matmul(jnp.array(a), jnp.array(b), bm=block, bk=block, bn=block)
+    np.testing.assert_allclose(
+        np.asarray(c), np.asarray(ref.matmul_ref(a, b)), rtol=1e-4, atol=1e-4
+    )
+
+
+def test_matmul_identity():
+    a = np.eye(64, dtype=np.float32)
+    b = np.arange(64 * 32, dtype=np.float32).reshape(64, 32)
+    c = matmul.matmul(jnp.array(a), jnp.array(b), bm=16, bk=16, bn=16)
+    np.testing.assert_allclose(np.asarray(c), b)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    """bf16 inputs accumulate in f32 (the MXU contract)."""
+    rng = np.random.default_rng(3)
+    a = jnp.array(rng.standard_normal((48, 48)), dtype)
+    b = jnp.array(rng.standard_normal((48, 48)), dtype)
+    c = matmul.matmul(a, b, bm=16, bk=16, bn=16)
+    assert c.dtype == jnp.float32
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(
+        np.asarray(c),
+        np.asarray(a, np.float32) @ np.asarray(b, np.float32),
+        rtol=tol,
+        atol=tol,
+    )
+
+
+# ---------------------------------------------------------------------------
+# One-peer specialized kernel (kernels/one_peer.py)
+# ---------------------------------------------------------------------------
+
+from compile.kernels import one_peer  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tau_exp=st.integers(1, 5),
+    p=st.integers(1, 300),
+    t=st.integers(0, 8),
+    p_block=st.sampled_from([32, 4096]),
+    beta=st.floats(0.0, 0.99),
+    gamma=st.floats(0.0, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_one_peer_kernel_matches_dense_gossip(tau_exp, p, t, p_block, beta, gamma, seed):
+    n = 1 << tau_exp
+    hop = 1 << (t % tau_exp)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    m = rng.standard_normal((n, p)).astype(np.float32)
+    g = rng.standard_normal((n, p)).astype(np.float32)
+    w = np.zeros((n, n), np.float32)
+    for i in range(n):
+        w[i, i] += 0.5
+        w[i, (i + hop) % n] += 0.5
+    xo, mo = one_peer.gossip_one_peer(
+        hop, jnp.array(x), jnp.array(m), jnp.array(g), beta, gamma, p_block=p_block
+    )
+    xr, mr = ref.gossip_dmsgd_ref(w, x, m, g, beta, gamma)
+    np.testing.assert_allclose(np.asarray(xo), np.asarray(xr), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(mo), np.asarray(mr), rtol=1e-5, atol=1e-5)
+
+
+def test_one_peer_tau_steps_reach_exact_average():
+    """Lemma 1 through the specialized kernel."""
+    n, p = 16, 40
+    rng = np.random.default_rng(4)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    m = np.zeros((n, p), np.float32)
+    g = np.zeros((n, p), np.float32)
+    for t in range(4):  # tau = log2(16)
+        x, m = (
+            np.asarray(a)
+            for a in one_peer.gossip_one_peer(1 << t, jnp.array(x), jnp.array(m), jnp.array(g), 0.0, 0.0)
+        )
+    np.testing.assert_allclose(x, np.repeat(x.mean(axis=0, keepdims=True), n, axis=0), atol=1e-5)

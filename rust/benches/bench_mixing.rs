@@ -1,0 +1,69 @@
+//! Benchmark: the gossip/mixing hot path (the per-iteration communication
+//! work behind the TIME columns of Tables 2–3).
+//!
+//! Measures `mix_dmsgd` throughput across topologies and model sizes, and
+//! compares against a naive two-pass implementation (the §Perf ablation).
+
+use expograph::bench::{bench_config, black_box};
+use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::topology::schedule::static_weights;
+use expograph::topology::TopologyKind;
+use expograph::util::rng::Pcg;
+
+fn stack(n: usize, p: usize, seed: u64) -> StackedParams {
+    let mut rng = Pcg::seeded(seed);
+    let mut s = StackedParams::zeros(n, p);
+    for v in s.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    s
+}
+
+fn main() {
+    println!("== bench_mixing: fused DmSGD mixing update ==");
+    println!("state bytes = 5 streams x n x P x 4B per update\n");
+    for &(n, p) in &[(8usize, 865_024usize), (16, 865_024), (32, 100_000), (64, 100_000)] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring, TopologyKind::FullyConnected] {
+            let w = static_weights(kind, n, 1);
+            let sw = SparseWeights::from_dense(&w);
+            let mut x = stack(n, p, 1);
+            let mut m = stack(n, p, 2);
+            let g = stack(n, p, 3);
+            let mut xb = StackedParams::zeros(n, p);
+            let mut mb = StackedParams::zeros(n, p);
+            let stats = bench_config(
+                &format!("mix_dmsgd n={n} P={p} {}", kind.name()),
+                2, 5, 64, 0.5,
+                &mut || {
+                    sw.mix_dmsgd(&mut x, &mut m, &g, 0.9, 0.05, &mut xb, &mut mb);
+                    black_box(&x);
+                },
+            );
+            let bytes = 5.0 * (n * p) as f64 * 4.0;
+            println!("{}", stats.report_throughput(bytes / 1e9, "GB"));
+        }
+        println!();
+    }
+
+    // Ablation: fused vs two-pass (separate premix + two mixes).
+    let (n, p) = (8usize, 865_024usize);
+    let w = static_weights(TopologyKind::StaticExp, n, 1);
+    let sw = SparseWeights::from_dense(&w);
+    let x0 = stack(n, p, 1);
+    let m0 = stack(n, p, 2);
+    let g = stack(n, p, 3);
+    let mut pre_x = StackedParams::zeros(n, p);
+    let mut pre_m = StackedParams::zeros(n, p);
+    let mut out_x = StackedParams::zeros(n, p);
+    let mut out_m = StackedParams::zeros(n, p);
+    let stats = bench_config("two_pass n=8 P=865024 static_exp", 2, 5, 64, 0.5, &mut || {
+        for i in 0..n * p {
+            pre_x.data[i] = x0.data[i] - 0.05 * m0.data[i];
+            pre_m.data[i] = 0.9 * m0.data[i] + g.data[i];
+        }
+        sw.mix(&pre_x, &mut out_x);
+        sw.mix(&pre_m, &mut out_m);
+        black_box(&out_x);
+    });
+    println!("{}", stats.report());
+}

@@ -1,0 +1,71 @@
+//! Benchmark: PJRT artifact execution latency (the L2/runtime hot path of
+//! the end-to-end example). Requires `make artifacts`; exits gracefully
+//! otherwise.
+
+use expograph::bench::{bench_config, black_box};
+use expograph::data::corpus::Corpus;
+use expograph::runtime::{GossipExecutor, LogRegExecutor, Manifest, Runtime, TransformerExecutor};
+use expograph::util::rng::Pcg;
+
+fn main() {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts not built (run `make artifacts`); skipping");
+        return;
+    }
+    let rt = Runtime::new(&dir).expect("runtime");
+    println!("== bench_runtime (PJRT {}) ==\n", rt.platform());
+
+    // Logreg grad (tiny).
+    let lr = LogRegExecutor::load(&rt).unwrap();
+    let x = vec![0.1f32; lr.d];
+    let h = vec![0.2f32; lr.batch * lr.d];
+    let y = vec![1.0f32; lr.batch];
+    let stats = bench_config("logreg_grad (d=10, B=32)", 3, 10, 512, 0.5, &mut || {
+        black_box(lr.loss_and_grad(&x, &h, &y).unwrap());
+    });
+    println!("{}", stats.report());
+
+    // Transformer step (small + e2e).
+    for name in ["transformer_step_small", "transformer_step"] {
+        let te = TransformerExecutor::load(&rt, name).unwrap();
+        let mut rng = Pcg::seeded(1);
+        let params: Vec<f32> = (0..te.param_count).map(|_| 0.02 * rng.normal() as f32).collect();
+        let window = Corpus::alice().sample_batch(&mut rng, te.batch, te.seq);
+        let mut grad = vec![0.0f32; te.param_count];
+        let stats = bench_config(
+            &format!("{name} (P={}, B={}, S={})", te.param_count, te.batch, te.seq),
+            1, 3, 32, 1.0,
+            &mut || {
+                black_box(te.loss_and_grad(&params, &window, &mut grad).unwrap());
+            },
+        );
+        let tokens = (te.batch * te.seq) as f64;
+        println!("{}", stats.report_throughput(tokens, "tok"));
+    }
+
+    // Gossip artifact (the Pallas kernel path) vs the Rust hot path.
+    let ge = GossipExecutor::load(&rt, "gossip_update").unwrap();
+    let mut rng = Pcg::seeded(2);
+    let w: Vec<f32> = {
+        let m = expograph::topology::exponential::one_peer_exp_weights(ge.n, 0);
+        let mut out = Vec::new();
+        for i in 0..ge.n {
+            for j in 0..ge.n {
+                out.push(m[(i, j)] as f32);
+            }
+        }
+        out
+    };
+    let mk = |rng: &mut Pcg| -> Vec<f32> { (0..ge.n * ge.p).map(|_| rng.normal() as f32).collect() };
+    let (x, m, g) = (mk(&mut rng), mk(&mut rng), mk(&mut rng));
+    let stats = bench_config(
+        &format!("gossip_update artifact (n={}, P={})", ge.n, ge.p),
+        1, 3, 32, 1.0,
+        &mut || {
+            black_box(ge.update(&w, &x, &m, &g, 0.9, 0.05).unwrap());
+        },
+    );
+    let bytes = 5.0 * (ge.n * ge.p) as f64 * 4.0;
+    println!("{}", stats.report_throughput(bytes / 1e9, "GB"));
+}

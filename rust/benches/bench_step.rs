@@ -1,0 +1,90 @@
+//! Benchmark: full end-to-end training iterations per topology and n —
+//! the wall-clock shape behind Table 2 (compute + mixing, simulated comm
+//! reported separately via the cost model).
+
+use expograph::bench::{bench_config, black_box};
+use expograph::coordinator::trainer::{GradProvider, QuadraticProvider};
+use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::costmodel::CostModel;
+use expograph::data::classify::{generate, ClassifyConfig};
+use expograph::data::shard::{shard, Sharding};
+use expograph::exp::classify_runner::ClassifyProvider;
+use expograph::models::{Mlp, MlpConfig};
+use expograph::optim::AlgorithmKind;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+fn bench_training_step(
+    label: &str,
+    n: usize,
+    provider: &dyn GradProvider,
+    kind: TopologyKind,
+) {
+    let dim = provider.dim();
+    let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut sched = Schedule::new(kind, n, 1);
+    let mut k = 0usize;
+    let stats = bench_config(label, 2, 10, 512, 0.5, &mut || {
+        let w = sched.weight_at(k);
+        let sw = SparseWeights::from_dense(&w);
+        for i in 0..n {
+            let row = unsafe {
+                std::slice::from_raw_parts_mut(grads.data.as_mut_ptr().add(i * dim), dim)
+            };
+            black_box(provider.grad(i, opt.params().row(i), k, 7, row));
+        }
+        opt.step(&sw, &grads, 0.05);
+        k += 1;
+    });
+    println!("{}", stats.report());
+}
+
+fn main() {
+    println!("== bench_step: full training iteration (grad + mix) ==\n");
+    // MLP classification (the Table 2 workload).
+    let data = generate(&ClassifyConfig::default());
+    for n in [8usize, 32] {
+        let shards = shard(&data.train, n, Sharding::Homogeneous, 1);
+        let mlp = Mlp::new(MlpConfig { input: 32, hidden: 32, classes: 10 });
+        let provider = ClassifyProvider { data: &data, shards: &shards, mlp, batch: 32 };
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring] {
+            bench_training_step(
+                &format!("mlp_step n={n} {}", kind.name()),
+                n,
+                &provider,
+                kind,
+            );
+        }
+        println!();
+    }
+    // Large-P quadratic (mixing-dominated regime).
+    let n = 8;
+    let provider = QuadraticProvider::shared(n, 200_000, 0.0, 3);
+    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+        bench_training_step(
+            &format!("quadratic_step n={n} P=200000 {}", kind.name()),
+            n,
+            &provider,
+            kind,
+        );
+    }
+
+    // Simulated per-iteration comm time (the actual Table 2 TIME shape).
+    println!("\nsimulated per-iteration time (ResNet-50 messages, n=32):");
+    let cost = CostModel::paper_default(0.4);
+    for kind in [
+        TopologyKind::OnePeerExp,
+        TopologyKind::RandomMatch,
+        TopologyKind::Ring,
+        TopologyKind::Grid2D,
+        TopologyKind::StaticExp,
+        TopologyKind::HalfRandom,
+    ] {
+        println!(
+            "  {:<14} {:.4} s/iter",
+            kind.name(),
+            cost.iteration_time(kind, 32, 25.5e6 * 4.0)
+        );
+    }
+}

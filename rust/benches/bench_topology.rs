@@ -1,0 +1,47 @@
+//! Benchmark: weight-matrix generation and spectral-gap computation
+//! (the analysis path behind Table 5 / Fig. 3).
+
+use expograph::bench::{bench_config, black_box};
+use expograph::linalg::power;
+use expograph::spectral;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+fn main() {
+    println!("== bench_topology ==\n");
+    for n in [64usize, 256] {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::RandomMatch,
+            TopologyKind::HalfRandom,
+        ] {
+            let stats = bench_config(
+                &format!("schedule_weight_at n={n} {}", kind.name()),
+                2, 10, 256, 0.3,
+                &mut || {
+                    let mut s = Schedule::new(kind, n, 1);
+                    black_box(s.weight_at(0));
+                },
+            );
+            println!("{}", stats.report());
+        }
+        // Spectral-gap methods.
+        let ring = Schedule::new(TopologyKind::Ring, n, 0).weight_at(0);
+        let exp = Schedule::new(TopologyKind::StaticExp, n, 0).weight_at(0);
+        let s1 = bench_config(&format!("rho jacobi (ring) n={n}"), 1, 3, 32, 0.3, &mut || {
+            black_box(spectral::rho(&ring));
+        });
+        println!("{}", s1.report());
+        let s2 = bench_config(&format!("rho circulant-DFT (exp) n={n}"), 1, 3, 64, 0.3, &mut || {
+            black_box(spectral::circulant_rho(&exp));
+        });
+        println!("{}", s2.report());
+        let s3 = bench_config(&format!("rho power-iteration n={n}"), 1, 3, 32, 0.3, &mut || {
+            black_box(power::consensus_norm(&exp));
+        });
+        println!("{}", s3.report());
+        println!();
+    }
+}

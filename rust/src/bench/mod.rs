@@ -1,0 +1,130 @@
+//! Micro-benchmark harness (criterion is unavailable offline, so the
+//! `rust/benches/*.rs` targets use this in-crate harness: warmup, repeated
+//! timed runs, and robust statistics).
+
+use std::time::Instant;
+
+/// Statistics from one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Mean seconds per iteration.
+    pub mean: f64,
+    /// Min / max seconds per iteration.
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    /// Render "name  median  (min … max)" with adaptive units.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} {:>12}  ({} … {})  [{} samples]",
+            self.name,
+            fmt_secs(self.median),
+            fmt_secs(self.min),
+            fmt_secs(self.max),
+            self.iters
+        )
+    }
+
+    /// Throughput line given an items/bytes count processed per iteration.
+    pub fn report_throughput(&self, items: f64, unit: &str) -> String {
+        format!("{}  |  {:.3} {}/s", self.report(), items / self.median, unit)
+    }
+}
+
+/// Format seconds with adaptive units.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} us", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed runs, then timed runs until both
+/// `min_iters` and `min_seconds` of accumulated time are reached (capped at
+/// `max_iters`).
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchStats {
+    bench_config(name, 3, 10, 512, 1.0, &mut f)
+}
+
+/// Configurable variant for expensive benchmarks.
+pub fn bench_config<F: FnMut()>(
+    name: &str,
+    warmup: usize,
+    min_iters: usize,
+    max_iters: usize,
+    min_seconds: f64,
+    f: &mut F,
+) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters
+        || (start.elapsed().as_secs_f64() < min_seconds && samples.len() < max_iters)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() >= max_iters {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let median = if n % 2 == 1 {
+        samples[n / 2]
+    } else {
+        0.5 * (samples[n / 2 - 1] + samples[n / 2])
+    };
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        median,
+        mean: samples.iter().sum::<f64>() / n as f64,
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut acc = 0u64;
+        let stats = bench_config("noop", 1, 5, 16, 0.01, &mut || {
+            acc = acc.wrapping_add(1);
+            black_box(acc);
+        });
+        assert!(stats.iters >= 5);
+        assert!(stats.min <= stats.median && stats.median <= stats.max);
+        assert!(stats.median >= 0.0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" us"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

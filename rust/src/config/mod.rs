@@ -1,0 +1,168 @@
+//! Experiment configuration: JSON files (parsed with the in-crate
+//! [`crate::util::json`] reader) plus CLI overrides.
+//!
+//! Example config (see `configs/` at the repo root):
+//!
+//! ```json
+//! {
+//!   "nodes": 16,
+//!   "topology": "one_peer_exp",
+//!   "algorithm": "dmsgd",
+//!   "iters": 2000,
+//!   "lr": 0.05,
+//!   "beta": 0.9,
+//!   "batch": 32,
+//!   "heterogeneous": false,
+//!   "seed": 1
+//! }
+//! ```
+
+use crate::optim::AlgorithmKind;
+use crate::topology::TopologyKind;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One training-run configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub nodes: usize,
+    pub topology: TopologyKind,
+    pub algorithm: AlgorithmKind,
+    pub iters: usize,
+    pub lr: f32,
+    pub beta: f32,
+    pub batch: usize,
+    pub heterogeneous: bool,
+    pub warmup_allreduce: bool,
+    pub seed: u64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            nodes: 16,
+            topology: TopologyKind::OnePeerExp,
+            algorithm: AlgorithmKind::DmSgd,
+            iters: 2000,
+            lr: 0.05,
+            beta: 0.9,
+            batch: 32,
+            heterogeneous: false,
+            warmup_allreduce: true,
+            seed: 1,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Parse from a JSON document; absent keys keep defaults.
+    pub fn from_json(doc: &Json) -> Result<RunConfig> {
+        let mut cfg = RunConfig::default();
+        let obj = doc.as_object().ok_or_else(|| anyhow!("config must be a JSON object"))?;
+        for (key, val) in obj {
+            match key.as_str() {
+                "nodes" => cfg.nodes = val.as_usize().context("nodes")?,
+                "iters" => cfg.iters = val.as_usize().context("iters")?,
+                "batch" => cfg.batch = val.as_usize().context("batch")?,
+                "seed" => cfg.seed = val.as_f64().context("seed")? as u64,
+                "lr" => cfg.lr = val.as_f64().context("lr")? as f32,
+                "beta" => cfg.beta = val.as_f64().context("beta")? as f32,
+                "heterogeneous" => cfg.heterogeneous = val.as_bool().context("heterogeneous")?,
+                "warmup_allreduce" => {
+                    cfg.warmup_allreduce = val.as_bool().context("warmup_allreduce")?
+                }
+                "topology" => {
+                    let s = val.as_str().context("topology")?;
+                    cfg.topology =
+                        TopologyKind::parse(s).ok_or_else(|| anyhow!("unknown topology {s}"))?;
+                }
+                "algorithm" => {
+                    let s = val.as_str().context("algorithm")?;
+                    cfg.algorithm =
+                        AlgorithmKind::parse(s).ok_or_else(|| anyhow!("unknown algorithm {s}"))?;
+                }
+                other => bail!("unknown config key: {other}"),
+            }
+        }
+        if cfg.nodes == 0 {
+            bail!("nodes must be positive");
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Apply a `key=value` CLI override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "nodes" => self.nodes = value.parse()?,
+            "iters" => self.iters = value.parse()?,
+            "batch" => self.batch = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "lr" => self.lr = value.parse()?,
+            "beta" => self.beta = value.parse()?,
+            "heterogeneous" => self.heterogeneous = value.parse()?,
+            "warmup_allreduce" => self.warmup_allreduce = value.parse()?,
+            "topology" => {
+                self.topology =
+                    TopologyKind::parse(value).ok_or_else(|| anyhow!("unknown topology {value}"))?
+            }
+            "algorithm" => {
+                self.algorithm = AlgorithmKind::parse(value)
+                    .ok_or_else(|| anyhow!("unknown algorithm {value}"))?
+            }
+            other => bail!("unknown config key: {other}"),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let doc = Json::parse(
+            r#"{"nodes": 8, "topology": "static_exp", "algorithm": "qg_dmsgd",
+                "iters": 100, "lr": 0.1, "beta": 0.8, "batch": 16,
+                "heterogeneous": true, "seed": 42}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.nodes, 8);
+        assert_eq!(cfg.topology, TopologyKind::StaticExp);
+        assert_eq!(cfg.algorithm, AlgorithmKind::QgDmSgd);
+        assert!(cfg.heterogeneous);
+        assert_eq!(cfg.seed, 42);
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let cfg = RunConfig::from_json(&Json::parse(r#"{"nodes": 4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.nodes, 4);
+        assert_eq!(cfg.algorithm, AlgorithmKind::DmSgd);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_bad_values() {
+        assert!(RunConfig::from_json(&Json::parse(r#"{"nopes": 1}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&Json::parse(r#"{"topology": "mobius"}"#).unwrap()).is_err());
+        assert!(RunConfig::from_json(&Json::parse(r#"{"nodes": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut cfg = RunConfig::default();
+        cfg.set("topology", "ring").unwrap();
+        cfg.set("lr", "0.25").unwrap();
+        assert_eq!(cfg.topology, TopologyKind::Ring);
+        assert_eq!(cfg.lr, 0.25);
+        assert!(cfg.set("bogus", "1").is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Consensus / partial-averaging analysis (Sec. 4 of the paper).
+//!
+//! Implements the numerical studies behind Fig. 4 (residue decay of static
+//! vs one-peer exponential vs random matching), Fig. 10 (non-power-of-2
+//! sizes), Fig. 11 (sampling strategies) and Fig. 12 (`‖∏ Ŵ^{(i)}‖₂²`),
+//! plus the exact-averaging verification of Lemma 1.
+
+use crate::linalg::{power, Matrix};
+use crate::topology::schedule::Schedule;
+use crate::topology::TopologyKind;
+use crate::util::rng::Pcg;
+
+/// One gossip step on a vector of node values: `x ← W x`.
+pub fn gossip_step(w: &Matrix, x: &[f64]) -> Vec<f64> {
+    w.matvec(x)
+}
+
+/// Consensus residue of node values: `‖x − x̄·1‖₂`.
+pub fn residue_norm(x: &[f64]) -> f64 {
+    let n = x.len() as f64;
+    let mean = x.iter().sum::<f64>() / n;
+    x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>().sqrt()
+}
+
+/// Run `iters` gossip steps of a topology schedule starting from a random
+/// vector; return the residue norm after each step, normalized by the
+/// initial residue (this is the y-axis of Figs. 4/10/11).
+pub fn residue_decay(kind: TopologyKind, n: usize, iters: usize, seed: u64) -> Vec<f64> {
+    let mut sched = Schedule::new(kind, n, seed);
+    let mut rng = Pcg::new(seed ^ 0xD15C0, 1);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let r0 = residue_norm(&x).max(f64::MIN_POSITIVE);
+    let mut out = Vec::with_capacity(iters);
+    for k in 0..iters {
+        let w = sched.weight_at(k);
+        x = gossip_step(&w, &x);
+        out.push(residue_norm(&x) / r0);
+    }
+    out
+}
+
+/// Fig. 12's quantity: `‖∏_{i=0}^{k−1} Ŵ^{(i)}‖₂²` for the one-peer
+/// exponential schedule, where `Ŵ = W − 11ᵀ/n`, for `k = 1..iters`.
+pub fn residue_product_norms(kind: TopologyKind, n: usize, iters: usize, seed: u64) -> Vec<f64> {
+    let mut sched = Schedule::new(kind, n, seed);
+    let mut prod = Matrix::eye(n);
+    let mut out = Vec::with_capacity(iters);
+    for k in 0..iters {
+        let w_hat = sched.weight_at(k).consensus_residue();
+        prod = w_hat.matmul(&prod);
+        let norm = power::spectral_norm(&prod);
+        out.push(norm * norm);
+    }
+    out
+}
+
+/// Lemma 1 check: max-abs error `‖∏_{t} W^{(t)} − J‖_∞` over one period of
+/// τ one-peer matrices starting at offset `k0`.
+pub fn one_peer_period_error(n: usize, k0: usize) -> f64 {
+    let tau = crate::topology::exponential::tau(n).max(1);
+    let mut prod = Matrix::eye(n);
+    for k in k0..k0 + tau {
+        let w = crate::topology::exponential::one_peer_exp_weights(n, k % tau);
+        prod = w.matmul(&prod);
+    }
+    prod.sub(&Matrix::averaging(n)).max_abs()
+}
+
+/// ρ_max of Lemma 6: `max_i ‖Ŵ^{(i)}‖₂` over one period of the one-peer
+/// schedule.
+pub fn one_peer_rho_max(n: usize) -> f64 {
+    let tau = crate::topology::exponential::tau(n).max(1);
+    (0..tau)
+        .map(|t| {
+            let w = crate::topology::exponential::one_peer_exp_weights(n, t);
+            power::spectral_norm(&w.consensus_residue())
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Number of gossip steps for the residue to fall below `tol` (∞ ⇒
+/// `iters`). Reported in Fig. 4-style comparisons.
+pub fn steps_to_tolerance(kind: TopologyKind, n: usize, tol: f64, iters: usize, seed: u64) -> usize {
+    let decay = residue_decay(kind, n, iters, seed);
+    decay.iter().position(|&r| r < tol).map(|p| p + 1).unwrap_or(iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residue_norm_basics() {
+        assert!(residue_norm(&[2.0, 2.0, 2.0]) < 1e-15);
+        let r = residue_norm(&[1.0, -1.0]);
+        assert!((r - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_peer_exact_average_after_tau_steps() {
+        // Lemma 1 (vector form): residue hits machine zero at k = τ for
+        // n a power of two, from any starting offset.
+        for n in [4usize, 8, 16, 32] {
+            let tau = crate::topology::exponential::tau(n);
+            let decay = residue_decay(TopologyKind::OnePeerExp, n, tau + 2, 99);
+            assert!(decay[tau - 1] < 1e-12, "n={n}: {decay:?}");
+            for k0 in 0..tau {
+                assert!(one_peer_period_error(n, k0) < 1e-12, "n={n} k0={k0}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_not_exact_for_non_power_of_two() {
+        // Fig. 10: for n ∉ 2^ℕ the residue decays but never hits zero in
+        // one period.
+        for n in [5usize, 6, 9, 12] {
+            let tau = crate::topology::exponential::tau(n);
+            let decay = residue_decay(TopologyKind::OnePeerExp, n, 4 * tau, 7);
+            assert!(decay[tau - 1] > 1e-8, "n={n}");
+            // ... but still decays asymptotically.
+            assert!(decay[4 * tau - 1] < decay[tau - 1], "n={n}");
+        }
+    }
+
+    #[test]
+    fn static_exp_decays_geometrically_not_exactly() {
+        // Fig. 4: static exponential only converges asymptotically.
+        let n = 16;
+        let decay = residue_decay(TopologyKind::StaticExp, n, 12, 3);
+        for k in 1..12 {
+            assert!(decay[k] < decay[k - 1] + 1e-15, "not monotone at {k}");
+        }
+        assert!(decay[3] > 1e-6, "static exp should not be exact at tau");
+        // Rate consistent with ρ = (τ−1)/(τ+1) = 0.6 for n=16... within slack.
+        let rho = crate::spectral::static_exp_rho_bound(n);
+        assert!(decay[11] < rho.powi(8), "decay too slow: {}", decay[11]);
+    }
+
+    #[test]
+    fn random_match_decays_asymptotically() {
+        let n = 16;
+        let decay = residue_decay(TopologyKind::RandomMatch, n, 40, 5);
+        assert!(decay[39] < 1e-3, "random matching failed to mix: {}", decay[39]);
+        assert!(decay[3] > 1e-12, "random matching should not be exact at tau");
+    }
+
+    #[test]
+    fn residue_product_hits_zero_for_one_peer_pow2() {
+        // Fig. 12: ‖∏ Ŵ‖² drops to 0 at k = τ.
+        let n = 16;
+        let tau = crate::topology::exponential::tau(n);
+        let norms = residue_product_norms(TopologyKind::OnePeerExp, n, tau + 1, 1);
+        assert!(norms[tau - 1] < 1e-20, "{norms:?}");
+        assert!(norms[0] > 0.5, "single realization should contract mildly");
+    }
+
+    #[test]
+    fn rho_max_is_at_most_one() {
+        for n in [4usize, 8, 16, 64] {
+            let r = one_peer_rho_max(n);
+            assert!(r <= 1.0 + 1e-9 && r > 0.5, "n={n} rho_max={r}");
+        }
+    }
+
+    #[test]
+    fn perm_order_also_exact() {
+        // Appendix B.3.2: random permutation keeps periodic exact averaging.
+        let n = 16;
+        let tau = crate::topology::exponential::tau(n);
+        let decay = residue_decay(TopologyKind::OnePeerExpPerm, n, tau, 13);
+        assert!(decay[tau - 1] < 1e-12, "{decay:?}");
+    }
+
+    #[test]
+    fn uniform_sampling_not_periodically_exact() {
+        // With replacement a period usually misses an exponent; over a few
+        // periods it still converges with probability one.
+        let n = 16;
+        let tau = crate::topology::exponential::tau(n);
+        let decay = residue_decay(TopologyKind::OnePeerExpUniform, n, 12 * tau, 21);
+        assert!(decay[12 * tau - 1] < 1e-6, "uniform sampling failed to mix");
+    }
+}

@@ -1,0 +1,343 @@
+//! Partial-averaging (neighbor all-reduce) over stacked node state — the
+//! coordinator's hot path.
+//!
+//! The dense `n × n` weight matrix is converted once per iteration into a
+//! sparse row form (`SparseWeights`); mixing an `n × P` state stack then
+//! costs `O(nnz(W) · P)` streaming flops. [`SparseWeights::mix_dmsgd`]
+//! fuses Algorithm 1's two mixes — `m⁺ = W(βm + g)` and
+//! `x⁺ = W(x − γm)` — into a single pass over the parameter dimension so
+//! each of `x`, `m`, `g` is read exactly once per nonzero (see DESIGN.md
+//! §Perf).
+
+use super::state::StackedParams;
+use crate::linalg::Matrix;
+
+/// Sparse row-major form of a doubly-stochastic weight matrix.
+#[derive(Clone, Debug)]
+pub struct SparseWeights {
+    pub n: usize,
+    /// For each output row `i`: the `(j, w_ij)` of its nonzero entries.
+    pub rows: Vec<Vec<(usize, f32)>>,
+    /// Max number of distinct off-diagonal partners of any node.
+    pub max_degree: usize,
+}
+
+impl SparseWeights {
+    /// Convert from a dense weight matrix, dropping exact zeros.
+    pub fn from_dense(w: &Matrix) -> SparseWeights {
+        let n = w.rows();
+        assert_eq!(n, w.cols());
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = Vec::new();
+            for j in 0..n {
+                let v = w[(i, j)];
+                if v != 0.0 {
+                    row.push((j, v as f32));
+                }
+            }
+            rows.push(row);
+        }
+        let max_degree = crate::topology::weight::max_comm_degree(w);
+        SparseWeights { n, rows, max_degree }
+    }
+
+    /// Compute `out` rows in `range` of `W · input`.
+    #[inline]
+    fn mix_rows(&self, range: std::ops::Range<usize>, input: &[f32], dim: usize, out: &mut [f32]) {
+        let base = range.start;
+        const CHUNK: usize = 8192;
+        for i in range {
+            let off = (i - base) * dim;
+            let row = &self.rows[i];
+            if row.is_empty() {
+                out[off..off + dim].iter_mut().for_each(|v| *v = 0.0);
+                continue;
+            }
+            // Dim-chunked accumulation: output chunk stays in L1 across
+            // the nonzeros (see mix_dmsgd_rows).
+            let mut c0 = 0usize;
+            while c0 < dim {
+                let c1 = (c0 + CHUNK).min(dim);
+                let orow = &mut out[off + c0..off + c1];
+                for (idx, &(j, wij)) in row.iter().enumerate() {
+                    let irow = &input[j * dim + c0..j * dim + c1];
+                    if idx == 0 {
+                        for (o, v) in orow.iter_mut().zip(irow.iter()) {
+                            *o = wij * v;
+                        }
+                    } else {
+                        for (o, v) in orow.iter_mut().zip(irow.iter()) {
+                            *o += wij * v;
+                        }
+                    }
+                }
+                c0 = c1;
+            }
+        }
+    }
+
+    /// `out = W · input` over the stack (row i of out = Σ_j w_ij · row j).
+    /// Row-parallel on threads for large states (see `mix_dmsgd`).
+    pub fn mix(&self, input: &StackedParams, out: &mut StackedParams) {
+        assert_eq!(input.n, self.n);
+        assert_eq!(out.n, self.n);
+        assert_eq!(input.dim, out.dim);
+        let n = self.n;
+        let dim = input.dim;
+        let total = n * dim;
+        let threads = if total >= 1 << 19 {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n)
+        } else {
+            1
+        };
+        if threads <= 1 {
+            self.mix_rows(0..n, &input.data, dim, &mut out.data);
+            return;
+        }
+        let rows_per = n.div_ceil(threads);
+        let inp = &input.data;
+        std::thread::scope(|scope| {
+            let mut rest = out.data.as_mut_slice();
+            let mut start = 0usize;
+            while start < n {
+                let end = (start + rows_per).min(n);
+                let take = (end - start) * dim;
+                let (chunk, tail) = rest.split_at_mut(take);
+                rest = tail;
+                let range = start..end;
+                scope.spawn(move || self.mix_rows(range, inp, dim, chunk));
+                start = end;
+            }
+        });
+    }
+
+    /// Compute fused output rows `i ∈ rows_range` into `xo`/`mo` slices
+    /// covering exactly those rows.
+    #[inline]
+    fn mix_dmsgd_rows(
+        &self,
+        rows_range: std::ops::Range<usize>,
+        x: &[f32],
+        m: &[f32],
+        g: &[f32],
+        beta: f32,
+        gamma: f32,
+        dim: usize,
+        xo_rows: &mut [f32],
+        mo_rows: &mut [f32],
+    ) {
+        let base = rows_range.start;
+        // Chunk the parameter dimension so the output chunk stays resident
+        // in L1 across the nonzero accumulation (otherwise every extra
+        // nonzero costs a full read-modify-write pass over DRAM — measured
+        // −40% throughput for the 6-nonzero static-exp rows; see
+        // EXPERIMENTS.md §Perf).
+        const CHUNK: usize = 4096;
+        for i in rows_range {
+            let off = (i - base) * dim;
+            let row = &self.rows[i];
+            if row.is_empty() {
+                xo_rows[off..off + dim].iter_mut().for_each(|v| *v = 0.0);
+                mo_rows[off..off + dim].iter_mut().for_each(|v| *v = 0.0);
+                continue;
+            }
+            // One-peer / matching rows have exactly two nonzeros — the
+            // recommended deployment (Table 1) — worth a fused two-source
+            // loop: one write per output element, no accumulation pass.
+            if row.len() == 2 {
+                let (j0, w0) = row[0];
+                let (j1, w1) = row[1];
+                let (x0, x1) = (&x[j0 * dim..(j0 + 1) * dim], &x[j1 * dim..(j1 + 1) * dim]);
+                let (m0, m1) = (&m[j0 * dim..(j0 + 1) * dim], &m[j1 * dim..(j1 + 1) * dim]);
+                let (g0, g1) = (&g[j0 * dim..(j0 + 1) * dim], &g[j1 * dim..(j1 + 1) * dim]);
+                let xo = &mut xo_rows[off..off + dim];
+                let mo = &mut mo_rows[off..off + dim];
+                for k in 0..dim {
+                    let (m0k, m1k) = (m0[k], m1[k]);
+                    xo[k] = w0 * (x0[k] - gamma * m0k) + w1 * (x1[k] - gamma * m1k);
+                    mo[k] = w0 * (beta * m0k + g0[k]) + w1 * (beta * m1k + g1[k]);
+                }
+                continue;
+            }
+            let mut c0 = 0usize;
+            while c0 < dim {
+                let c1 = (c0 + CHUNK).min(dim);
+                let xo = &mut xo_rows[off + c0..off + c1];
+                let mo = &mut mo_rows[off + c0..off + c1];
+                for (idx, &(j, wij)) in row.iter().enumerate() {
+                    let xj = &x[j * dim + c0..j * dim + c1];
+                    let mj = &m[j * dim + c0..j * dim + c1];
+                    let gj = &g[j * dim + c0..j * dim + c1];
+                    if idx == 0 {
+                        for k in 0..xo.len() {
+                            let mjk = mj[k];
+                            xo[k] = wij * (xj[k] - gamma * mjk);
+                            mo[k] = wij * (beta * mjk + gj[k]);
+                        }
+                    } else {
+                        for k in 0..xo.len() {
+                            let mjk = mj[k];
+                            xo[k] += wij * (xj[k] - gamma * mjk);
+                            mo[k] += wij * (beta * mjk + gj[k]);
+                        }
+                    }
+                }
+                c0 = c1;
+            }
+        }
+    }
+
+    /// The fused DmSGD mixing update (Algorithm 1):
+    ///
+    /// ```text
+    /// x⁺_i = Σ_j w_ij (x_j − γ m_j)
+    /// m⁺_i = Σ_j w_ij (β m_j + g_j)
+    /// ```
+    ///
+    /// `x`/`m` are updated in place through double buffers owned here.
+    /// Large states are processed on `available_parallelism` threads with
+    /// output rows partitioned per thread (the update is row-parallel by
+    /// construction — see §Perf in DESIGN.md).
+    pub fn mix_dmsgd(
+        &self,
+        x: &mut StackedParams,
+        m: &mut StackedParams,
+        g: &StackedParams,
+        beta: f32,
+        gamma: f32,
+        x_buf: &mut StackedParams,
+        m_buf: &mut StackedParams,
+    ) {
+        let n = self.n;
+        let dim = x.dim;
+        assert!(x.n == n && m.n == n && g.n == n && x_buf.n == n && m_buf.n == n);
+        // Threading threshold: below ~2 MF of streamed state the spawn
+        // overhead dominates (measured in EXPERIMENTS.md §Perf).
+        let total = n * dim;
+        let threads = if total >= 1 << 19 {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n)
+        } else {
+            1
+        };
+        if threads <= 1 {
+            let (xd, md, gd) = (&x.data, &m.data, &g.data);
+            self.mix_dmsgd_rows(0..n, xd, md, gd, beta, gamma, dim, &mut x_buf.data, &mut m_buf.data);
+        } else {
+            let rows_per = n.div_ceil(threads);
+            let (xd, md, gd) = (&x.data, &m.data, &g.data);
+            std::thread::scope(|scope| {
+                let mut xo_rest = x_buf.data.as_mut_slice();
+                let mut mo_rest = m_buf.data.as_mut_slice();
+                let mut start = 0usize;
+                while start < n {
+                    let end = (start + rows_per).min(n);
+                    let take = (end - start) * dim;
+                    let (xo, xr) = xo_rest.split_at_mut(take);
+                    let (mo, mr) = mo_rest.split_at_mut(take);
+                    xo_rest = xr;
+                    mo_rest = mr;
+                    let range = start..end;
+                    scope.spawn(move || {
+                        self.mix_dmsgd_rows(range, xd, md, gd, beta, gamma, dim, xo, mo);
+                    });
+                    start = end;
+                }
+            });
+        }
+        std::mem::swap(&mut x.data, &mut x_buf.data);
+        std::mem::swap(&mut m.data, &mut m_buf.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::exponential::{one_peer_exp_weights, static_exp_weights};
+
+    fn stack(n: usize, dim: usize, seed: u64) -> StackedParams {
+        let mut rng = crate::util::rng::Pcg::seeded(seed);
+        let mut s = StackedParams::zeros(n, dim);
+        for v in s.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        s
+    }
+
+    #[test]
+    fn sparse_matches_dense_matvec() {
+        let w = static_exp_weights(8);
+        let sw = SparseWeights::from_dense(&w);
+        let input = stack(8, 5, 1);
+        let mut out = StackedParams::zeros(8, 5);
+        sw.mix(&input, &mut out);
+        // Compare per column against dense matvec.
+        for col in 0..5 {
+            let v: Vec<f64> = (0..8).map(|i| input.row(i)[col] as f64).collect();
+            let dense = w.matvec(&v);
+            for i in 0..8 {
+                assert!((out.row(i)[col] as f64 - dense[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn mixing_preserves_mean() {
+        // Doubly-stochastic W: column sums 1 → the node-mean is invariant.
+        let w = one_peer_exp_weights(16, 2);
+        let sw = SparseWeights::from_dense(&w);
+        let input = stack(16, 7, 2);
+        let before = input.mean();
+        let mut out = StackedParams::zeros(16, 7);
+        sw.mix(&input, &mut out);
+        let after = out.mean();
+        for (b, a) in before.iter().zip(after.iter()) {
+            assert!((b - a).abs() < 1e-5, "mean not preserved: {b} vs {a}");
+        }
+    }
+
+    #[test]
+    fn fused_dmsgd_matches_two_separate_mixes() {
+        let n = 8;
+        let dim = 6;
+        let w = static_exp_weights(n);
+        let sw = SparseWeights::from_dense(&w);
+        let (beta, gamma) = (0.9f32, 0.05f32);
+        let x0 = stack(n, dim, 3);
+        let m0 = stack(n, dim, 4);
+        let g = stack(n, dim, 5);
+        // Reference: explicit temporaries.
+        let mut pre_x = StackedParams::zeros(n, dim);
+        let mut pre_m = StackedParams::zeros(n, dim);
+        for i in 0..n {
+            for k in 0..dim {
+                pre_x.row_mut(i)[k] = x0.row(i)[k] - gamma * m0.row(i)[k];
+                pre_m.row_mut(i)[k] = beta * m0.row(i)[k] + g.row(i)[k];
+            }
+        }
+        let mut want_x = StackedParams::zeros(n, dim);
+        let mut want_m = StackedParams::zeros(n, dim);
+        sw.mix(&pre_x, &mut want_x);
+        sw.mix(&pre_m, &mut want_m);
+        // Fused.
+        let mut x = x0.clone();
+        let mut m = m0.clone();
+        let mut xb = StackedParams::zeros(n, dim);
+        let mut mb = StackedParams::zeros(n, dim);
+        sw.mix_dmsgd(&mut x, &mut m, &g, beta, gamma, &mut xb, &mut mb);
+        for i in 0..n {
+            for k in 0..dim {
+                assert!((x.row(i)[k] - want_x.row(i)[k]).abs() < 1e-6);
+                assert!((m.row(i)[k] - want_m.row(i)[k]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_degree_matches_topology() {
+        let sw = SparseWeights::from_dense(&one_peer_exp_weights(16, 0));
+        assert_eq!(sw.max_degree, 2); // sends to one, receives from one
+        let sw2 = SparseWeights::from_dense(&Matrix::averaging(16));
+        assert_eq!(sw2.max_degree, 15);
+    }
+}

@@ -1,0 +1,21 @@
+//! The Layer-3 coordinator: node state, the partial-averaging hot path,
+//! the training loop, learning-rate schedules, metrics, and
+//! transient-iteration detection.
+//!
+//! This is the BlueFog-analogue system layer of the reproduction — the
+//! part of the paper's stack that owns topology scheduling, the DmSGD
+//! update, and experiment orchestration. Gradients come from either the
+//! pure-Rust models ([`crate::models`]) or the PJRT runtime
+//! ([`crate::runtime`]); the coordinator is agnostic.
+
+pub mod mixing;
+pub mod schedule_lr;
+pub mod state;
+pub mod trainer;
+pub mod transient;
+
+pub use mixing::SparseWeights;
+pub use schedule_lr::LrSchedule;
+pub use state::StackedParams;
+pub use trainer::{GradProvider, TrainConfig, Trainer, TrainingHistory};
+pub use transient::transient_iterations;

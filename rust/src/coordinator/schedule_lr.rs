@@ -1,0 +1,83 @@
+//! Learning-rate schedules.
+//!
+//! The paper's protocols: linear warm-up for the first 5 epochs then ×0.1
+//! decay at epochs 30/60/80 (ImageNet, Sec. 6.1); γ halved every 1000
+//! iterations (logistic regression, Appendix D.5); and the theory rate
+//! `γ = √(n(1−β)³/T)` (Theorem 1).
+
+/// A learning-rate schedule evaluated per iteration.
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    /// Constant γ.
+    Const(f32),
+    /// γ halved every `every` iterations (Appendix D.5 protocol).
+    HalveEvery { init: f32, every: usize },
+    /// Step decay by `factor` at each milestone iteration, with optional
+    /// linear warm-up over the first `warmup` iterations (Goyal et al.
+    /// protocol used in Sec. 6).
+    Milestones { init: f32, factor: f32, milestones: Vec<usize>, warmup: usize },
+}
+
+impl LrSchedule {
+    /// γ_k.
+    pub fn at(&self, k: usize) -> f32 {
+        match self {
+            LrSchedule::Const(g) => *g,
+            LrSchedule::HalveEvery { init, every } => init * 0.5f32.powi((k / every) as i32),
+            LrSchedule::Milestones { init, factor, milestones, warmup } => {
+                let base = if *warmup > 0 && k < *warmup {
+                    init * (k + 1) as f32 / *warmup as f32
+                } else {
+                    *init
+                };
+                let hits = milestones.iter().filter(|&&m| k >= m).count() as i32;
+                base * factor.powi(hits)
+            }
+        }
+    }
+
+    /// The theory step size of Theorem 1: `γ = √(n(1−β)³) / √T`, clipped
+    /// to `max_lr` for stability at small T.
+    pub fn theory(n: usize, beta: f32, total_iters: usize, max_lr: f32) -> LrSchedule {
+        let g = ((n as f32) * (1.0 - beta).powi(3)).sqrt() / (total_iters as f32).sqrt();
+        LrSchedule::Const(g.min(max_lr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn halve_every() {
+        let s = LrSchedule::HalveEvery { init: 0.2, every: 1000 };
+        assert_eq!(s.at(0), 0.2);
+        assert_eq!(s.at(999), 0.2);
+        assert_eq!(s.at(1000), 0.1);
+        assert_eq!(s.at(2500), 0.05);
+    }
+
+    #[test]
+    fn milestones_with_warmup() {
+        let s = LrSchedule::Milestones {
+            init: 1.0,
+            factor: 0.1,
+            milestones: vec![100, 200],
+            warmup: 10,
+        };
+        assert!((s.at(0) - 0.1).abs() < 1e-6); // warming up
+        assert!((s.at(9) - 1.0).abs() < 1e-6);
+        assert!((s.at(50) - 1.0).abs() < 1e-6);
+        assert!((s.at(150) - 0.1).abs() < 1e-6);
+        assert!((s.at(250) - 0.01).abs() < 1e-7);
+    }
+
+    #[test]
+    fn theory_rate_shrinks_with_t() {
+        let a = LrSchedule::theory(16, 0.9, 1_000, 1.0).at(0);
+        let b = LrSchedule::theory(16, 0.9, 100_000, 1.0).at(0);
+        assert!(a > b);
+        // γ = √(16·0.001)/√1000 = 0.1265.../31.6 ≈ 0.004
+        assert!((a - (16.0f32 * 0.001f32).sqrt() / 1000f32.sqrt()).abs() < 1e-6);
+    }
+}

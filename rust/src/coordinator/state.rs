@@ -1,0 +1,129 @@
+//! Stacked per-node training state.
+//!
+//! `StackedParams` is the `n × P` matrix `𝐱^{(k)}` of Appendix D.1: row `i`
+//! is node `i`'s flat parameter (or momentum, or gradient) vector in f32.
+//! All decentralized updates are linear maps over this stacking.
+
+/// Row-major `n × dim` stack of per-node vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StackedParams {
+    pub n: usize,
+    pub dim: usize,
+    pub data: Vec<f32>,
+}
+
+impl StackedParams {
+    /// All-zero stack.
+    pub fn zeros(n: usize, dim: usize) -> Self {
+        StackedParams { n, dim, data: vec![0.0; n * dim] }
+    }
+
+    /// Every node starts from the same vector (paper's experiments
+    /// broadcast an identical initialization).
+    pub fn replicate(n: usize, row: &[f32]) -> Self {
+        let dim = row.len();
+        let mut data = Vec::with_capacity(n * dim);
+        for _ in 0..n {
+            data.extend_from_slice(row);
+        }
+        StackedParams { n, dim, data }
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Mean across nodes: `x̄ = (1/n) Σ_i x_i` into `out`.
+    pub fn mean_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dim);
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let scale = 1.0 / self.n as f32;
+        for i in 0..self.n {
+            let row = self.row(i);
+            for (o, v) in out.iter_mut().zip(row.iter()) {
+                *o += v * scale;
+            }
+        }
+    }
+
+    /// Mean across nodes (allocating).
+    pub fn mean(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dim];
+        self.mean_into(&mut out);
+        out
+    }
+
+    /// Consensus distance `‖𝐱 − 1x̄ᵀ‖²_F = Σ_i ‖x_i − x̄‖²` (f64 accumulate).
+    pub fn consensus_distance(&self) -> f64 {
+        let mean = self.mean();
+        let mut total = 0.0f64;
+        for i in 0..self.n {
+            let row = self.row(i);
+            for (v, m) in row.iter().zip(mean.iter()) {
+                let d = (*v - *m) as f64;
+                total += d * d;
+            }
+        }
+        total
+    }
+
+    /// Replace every row by the global mean (the warm-up all-reduce of
+    /// Corollary 3, and parallel SGD's exact averaging).
+    pub fn allreduce(&mut self) {
+        let mean = self.mean();
+        for i in 0..self.n {
+            self.row_mut(i).copy_from_slice(&mean);
+        }
+    }
+
+    /// Mean squared distance to a reference vector:
+    /// `(1/n) Σ_i ‖x_i − r‖²` (Fig. 13's y-axis with `r = x*`).
+    pub fn mean_sq_error_to(&self, reference: &[f32]) -> f64 {
+        assert_eq!(reference.len(), self.dim);
+        let mut total = 0.0f64;
+        for i in 0..self.n {
+            for (v, r) in self.row(i).iter().zip(reference.iter()) {
+                let d = (*v - *r) as f64;
+                total += d * d;
+            }
+        }
+        total / self.n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn replicate_and_mean() {
+        let s = StackedParams::replicate(4, &[1.0, 2.0, 3.0]);
+        assert_eq!(s.mean(), vec![1.0, 2.0, 3.0]);
+        assert!(s.consensus_distance() < 1e-12);
+    }
+
+    #[test]
+    fn consensus_distance_known() {
+        let mut s = StackedParams::zeros(2, 1);
+        s.row_mut(0)[0] = 1.0;
+        s.row_mut(1)[0] = -1.0;
+        // mean 0 → distance 1 + 1 = 2.
+        assert!((s.consensus_distance() - 2.0).abs() < 1e-12);
+        s.allreduce();
+        assert!(s.consensus_distance() < 1e-15);
+        assert_eq!(s.row(0)[0], 0.0);
+    }
+
+    #[test]
+    fn mse_to_reference() {
+        let s = StackedParams::replicate(3, &[1.0, 1.0]);
+        let mse = s.mean_sq_error_to(&[0.0, 0.0]);
+        assert!((mse - 2.0).abs() < 1e-12);
+    }
+}

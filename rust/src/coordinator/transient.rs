@@ -1,0 +1,88 @@
+//! Transient-iteration detection (Sec. 2 / Fig. 1).
+//!
+//! The paper defines transient iterations as those before a decentralized
+//! algorithm reaches the linear-speedup stage — operationally (Fig. 1),
+//! the iterations before its error curve merges with parallel SGD's.
+//! We detect the merge point on smoothed curves: the smallest `K` such
+//! that for all recorded `k ≥ K`, `err_dec[k] ≤ ratio · err_par[k]`.
+
+/// Moving-average smoothing (window `w`, causal).
+pub fn smooth(xs: &[f64], w: usize) -> Vec<f64> {
+    if w <= 1 {
+        return xs.to_vec();
+    }
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        acc += x;
+        if i >= w {
+            acc -= xs[i - w];
+        }
+        out.push(acc / (i.min(w - 1) + 1) as f64);
+    }
+    out
+}
+
+/// Transient iterations: first index `K` after which the decentralized
+/// error stays within `ratio ×` the parallel error. Returns `None` if the
+/// curves never merge. Both curves must be sampled at the same iterations.
+pub fn transient_iterations(dec: &[f64], par: &[f64], ratio: f64, window: usize) -> Option<usize> {
+    assert_eq!(dec.len(), par.len());
+    let d = smooth(dec, window);
+    let p = smooth(par, window);
+    let mut k_merge = None;
+    for k in 0..d.len() {
+        if d[k] <= ratio * p[k] {
+            if k_merge.is_none() {
+                k_merge = Some(k);
+            }
+        } else {
+            k_merge = None;
+        }
+    }
+    k_merge
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smooth_is_mean_preserving_on_constants() {
+        let s = smooth(&[2.0; 10], 4);
+        assert!(s.iter().all(|&v| (v - 2.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn detects_merge_point() {
+        // Parallel: 1/k decay. Decentralized: 10/k until k=50, then equal.
+        let par: Vec<f64> = (1..=100).map(|k| 1.0 / k as f64).collect();
+        let dec: Vec<f64> = (1..=100)
+            .map(|k| if k < 50 { 10.0 / k as f64 } else { 1.0 / k as f64 })
+            .collect();
+        let t = transient_iterations(&dec, &par, 1.5, 1).unwrap();
+        assert!((45..=52).contains(&t), "t={t}");
+    }
+
+    #[test]
+    fn no_merge_returns_none() {
+        let par = vec![1.0; 50];
+        let dec = vec![10.0; 50];
+        assert_eq!(transient_iterations(&dec, &par, 1.5, 1), None);
+    }
+
+    #[test]
+    fn transient_resets_on_recross() {
+        // Merges at 10 but diverges again at 30, then re-merges at 60.
+        let par = vec![1.0; 100];
+        let mut dec = vec![5.0; 100];
+        for v in dec.iter_mut().take(30).skip(10) {
+            *v = 1.0;
+        }
+        for v in dec.iter_mut().skip(60) {
+            *v = 1.0;
+        }
+        let t = transient_iterations(&dec, &par, 1.5, 1).unwrap();
+        assert_eq!(t, 60);
+    }
+}

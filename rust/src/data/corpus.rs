@@ -1,0 +1,204 @@
+//! Tiny text corpus + byte-level tokenizer for the end-to-end transformer
+//! example (`examples/transformer_e2e.rs`).
+//!
+//! The embedded corpus is public-domain text (Lewis Carroll, *Alice's
+//! Adventures in Wonderland*, 1865 — opening chapters). It is small (~8 KB)
+//! but real: a character-level LM trained on it shows a clean, paper-style
+//! loss curve within a few hundred steps.
+
+use crate::util::rng::Pcg;
+
+/// Public-domain training text.
+pub const ALICE: &str = r#"Alice was beginning to get very tired of sitting by her sister on the
+bank, and of having nothing to do: once or twice she had peeped into
+the book her sister was reading, but it had no pictures or
+conversations in it, "and what is the use of a book," thought Alice
+"without pictures or conversations?"
+
+So she was considering in her own mind (as well as she could, for the
+hot day made her feel very sleepy and stupid), whether the pleasure of
+making a daisy-chain would be worth the trouble of getting up and
+picking the daisies, when suddenly a White Rabbit with pink eyes ran
+close by her.
+
+There was nothing so very remarkable in that; nor did Alice think it
+so very much out of the way to hear the Rabbit say to itself, "Oh
+dear! Oh dear! I shall be late!" (when she thought it over afterwards,
+it occurred to her that she ought to have wondered at this, but at the
+time it all seemed quite natural); but when the Rabbit actually took a
+watch out of its waistcoat-pocket, and looked at it, and then hurried
+on, Alice started to her feet, for it flashed across her mind that she
+had never before seen a rabbit with either a waistcoat-pocket, or a
+watch to take out of it, and burning with curiosity, she ran across
+the field after it, and fortunately was just in time to see it pop
+down a large rabbit-hole under the hedge.
+
+In another moment down went Alice after it, never once considering how
+in the world she was to get out again.
+
+The rabbit-hole went straight on like a tunnel for some way, and then
+dipped suddenly down, so suddenly that Alice had not a moment to think
+about stopping herself before she found herself falling down a very
+deep well.
+
+Either the well was very deep, or she fell very slowly, for she had
+plenty of time as she went down to look about her and to wonder what
+was going to happen next. First, she tried to look down and make out
+what she was coming to, but it was too dark to see anything; then she
+looked at the sides of the well, and noticed that they were filled
+with cupboards and book-shelves; here and there she saw maps and
+pictures hung upon pegs. She took down a jar from one of the shelves
+as she passed; it was labelled "ORANGE MARMALADE", but to her great
+disappointment it was empty: she did not like to drop the jar for fear
+of killing somebody underneath, so managed to put it into one of the
+cupboards as she fell past it.
+
+"Well!" thought Alice to herself, "after such a fall as this, I shall
+think nothing of tumbling down stairs! How brave they'll all think me
+at home! Why, I wouldn't say anything about it, even if I fell off the
+top of the house!" (Which was very likely true.)
+
+Down, down, down. Would the fall never come to an end? "I wonder how
+many miles I've fallen by this time?" she said aloud. "I must be
+getting somewhere near the centre of the earth. Let me see: that would
+be four thousand miles down, I think--" (for, you see, Alice had learnt
+several things of this sort in her lessons in the schoolroom, and
+though this was not a very good opportunity for showing off her
+knowledge, as there was no one to listen to her, still it was good
+practice to say it over) "--yes, that's about the right distance--but
+then I wonder what Latitude or Longitude I've got to?" (Alice had no
+idea what Latitude was, or Longitude either, but thought they were
+nice grand words to say.)
+
+Presently she began again. "I wonder if I shall fall right through the
+earth! How funny it'll seem to come out among the people that walk
+with their heads downward! The Antipathies, I think--" (she was rather
+glad there was no one listening, this time, as it didn't sound at all
+the right word) "--but I shall have to ask them what the name of the
+country is, you know. Please, Ma'am, is this New Zealand or Australia?"
+(and she tried to curtsey as she spoke--fancy curtseying as you're
+falling through the air! Do you think you could manage it?) "And what
+an ignorant little girl she'll think me for asking! No, it'll never do
+to ask: perhaps I shall see it written up somewhere."
+
+Down, down, down. There was nothing else to do, so Alice soon began
+talking again. "Dinah'll miss me very much to-night, I should think!"
+(Dinah was the cat.) "I hope they'll remember her saucer of milk at
+tea-time. Dinah my dear! I wish you were down here with me! There are
+no mice in the air, I'm afraid, but you might catch a bat, and that's
+very like a mouse, you know. But do cats eat bats, I wonder?" And here
+Alice began to get rather sleepy, and went on saying to herself, in a
+dreamy sort of way, "Do cats eat bats? Do cats eat bats?" and
+sometimes, "Do bats eat cats?" for, you see, as she couldn't answer
+either question, it didn't much matter which way she put it. She felt
+that she was dozing off, and had just begun to dream that she was
+walking hand in hand with Dinah, and saying to her very earnestly,
+"Now, Dinah, tell me the truth: did you ever eat a bat?" when suddenly,
+thump! thump! down she came upon a heap of sticks and dry leaves, and
+the fall was over.
+
+Alice was not a bit hurt, and she jumped up on to her feet in a
+moment: she looked up, but it was all dark overhead; before her was
+another long passage, and the White Rabbit was still in sight,
+hurrying down it. There was not a moment to be lost: away went Alice
+like the wind, and was just in time to hear it say, as it turned a
+corner, "Oh my ears and whiskers, how late it's getting!" She was
+close behind it when she turned the corner, but the Rabbit was no
+longer to be seen: she found herself in a long, low hall, which was
+lit up by a row of lamps hanging from the roof.
+"#;
+
+/// Byte-level vocabulary size (full byte range keeps the tokenizer total).
+pub const VOCAB_SIZE: usize = 256;
+
+/// Tokenized corpus with batch sampling.
+#[derive(Clone)]
+pub struct Corpus {
+    pub tokens: Vec<u8>,
+}
+
+impl Corpus {
+    /// The embedded Alice corpus.
+    pub fn alice() -> Corpus {
+        Corpus { tokens: ALICE.as_bytes().to_vec() }
+    }
+
+    /// From arbitrary text.
+    pub fn from_text(text: &str) -> Corpus {
+        Corpus { tokens: text.as_bytes().to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Split token stream into `nodes` contiguous shards (data-parallel
+    /// "documents" per node).
+    pub fn shard(&self, nodes: usize) -> Vec<Corpus> {
+        let per = self.tokens.len() / nodes;
+        (0..nodes)
+            .map(|i| Corpus { tokens: self.tokens[i * per..(i + 1) * per].to_vec() })
+            .collect()
+    }
+
+    /// Sample a `(batch, seq+1)` window batch of token ids as i32 (inputs
+    /// are `[.., :seq]`, targets `[.., 1:]` — the model consumes the full
+    /// window and does the shift internally).
+    pub fn sample_batch(&self, rng: &mut Pcg, batch: usize, seq: usize) -> Vec<i32> {
+        assert!(self.tokens.len() > seq + 1, "corpus shorter than sequence length");
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let start = rng.below(self.tokens.len() - seq - 1);
+            for t in 0..=seq {
+                out.push(self.tokens[start + t] as i32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_nontrivial() {
+        let c = Corpus::alice();
+        assert!(c.len() > 4000, "corpus too small: {}", c.len());
+    }
+
+    #[test]
+    fn shards_partition_evenly() {
+        let c = Corpus::alice();
+        let shards = c.shard(8);
+        assert_eq!(shards.len(), 8);
+        let per = c.len() / 8;
+        for s in &shards {
+            assert_eq!(s.len(), per);
+        }
+    }
+
+    #[test]
+    fn batches_have_window_shape_and_range() {
+        let c = Corpus::alice();
+        let mut rng = Pcg::seeded(1);
+        let b = c.sample_batch(&mut rng, 4, 16);
+        assert_eq!(b.len(), 4 * 17);
+        assert!(b.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn batch_windows_are_contiguous_text() {
+        let c = Corpus::alice();
+        let mut rng = Pcg::seeded(2);
+        let b = c.sample_batch(&mut rng, 1, 8);
+        // The window must appear in the corpus.
+        let window: Vec<u8> = b.iter().map(|&t| t as u8).collect();
+        let found = c.tokens.windows(9).any(|w| w == window.as_slice());
+        assert!(found);
+    }
+}

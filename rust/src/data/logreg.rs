@@ -1,0 +1,246 @@
+//! Distributed logistic regression data per Appendix D.5.
+//!
+//! Node `i` holds `M` samples `{h_{i,m}, y_{i,m}}` with `h ~ N(0, 10·I_d)`
+//! and `y ∈ {±1}` drawn by passing `hᵀx*_i` through the logistic link.
+//! Homogeneous data: all nodes share one `x*`; heterogeneous: each node
+//! draws (and normalizes) its own `x*_i`.
+
+use crate::util::rng::Pcg;
+
+/// One node's local dataset.
+#[derive(Clone, Debug)]
+pub struct LogRegShard {
+    /// Features, row-major `M × d`.
+    pub features: Vec<f64>,
+    /// Labels in `{+1, −1}`, length `M`.
+    pub labels: Vec<f64>,
+    /// The generating parameter `x*_i` (normalized), length `d`.
+    pub x_star: Vec<f64>,
+    pub m: usize,
+    pub d: usize,
+}
+
+/// The full distributed problem: one shard per node.
+#[derive(Clone, Debug)]
+pub struct LogRegProblem {
+    pub shards: Vec<LogRegShard>,
+    pub d: usize,
+    /// Consensus ground truth `x̄* = (1/n)Σ x*_i` (what DmSGD converges
+    /// toward when measuring MSE as in Fig. 13).
+    pub x_star_mean: Vec<f64>,
+}
+
+/// Configuration for the generator.
+#[derive(Clone, Copy, Debug)]
+pub struct LogRegConfig {
+    pub nodes: usize,
+    /// Samples per node (paper: 14000 for Fig. 13).
+    pub samples_per_node: usize,
+    /// Feature dimension (paper: 10).
+    pub dim: usize,
+    /// Heterogeneous data: distinct `x*_i` per node.
+    pub heterogeneous: bool,
+    pub seed: u64,
+}
+
+impl Default for LogRegConfig {
+    fn default() -> Self {
+        LogRegConfig { nodes: 64, samples_per_node: 14_000, dim: 10, heterogeneous: true, seed: 1 }
+    }
+}
+
+fn normalized_gaussian(rng: &mut Pcg, d: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-12);
+    for x in v.iter_mut() {
+        *x /= norm;
+    }
+    v
+}
+
+/// Generate the distributed problem.
+pub fn generate(cfg: &LogRegConfig) -> LogRegProblem {
+    let mut rng = Pcg::new(cfg.seed, 0x106);
+    let shared_star = normalized_gaussian(&mut rng, cfg.dim);
+    let mut shards = Vec::with_capacity(cfg.nodes);
+    for node in 0..cfg.nodes {
+        let mut node_rng = Pcg::new(cfg.seed ^ (node as u64).wrapping_mul(0x9E3779B9), 0x107);
+        let x_star = if cfg.heterogeneous {
+            normalized_gaussian(&mut node_rng, cfg.dim)
+        } else {
+            shared_star.clone()
+        };
+        let mut features = Vec::with_capacity(cfg.samples_per_node * cfg.dim);
+        let mut labels = Vec::with_capacity(cfg.samples_per_node);
+        let feat_std = 10.0_f64.sqrt(); // h ~ N(0, 10 I_d)
+        for _ in 0..cfg.samples_per_node {
+            let mut dot = 0.0;
+            for j in 0..cfg.dim {
+                let h = node_rng.normal() * feat_std;
+                dot += h * x_star[j];
+                features.push(h);
+            }
+            let p = 1.0 / (1.0 + (-dot).exp());
+            let y = if node_rng.uniform() <= p { 1.0 } else { -1.0 };
+            labels.push(y);
+        }
+        shards.push(LogRegShard {
+            features,
+            labels,
+            x_star,
+            m: cfg.samples_per_node,
+            d: cfg.dim,
+        });
+    }
+    let mut x_star_mean = vec![0.0; cfg.dim];
+    for s in &shards {
+        for j in 0..cfg.dim {
+            x_star_mean[j] += s.x_star[j] / cfg.nodes as f64;
+        }
+    }
+    LogRegProblem { shards, d: cfg.dim, x_star_mean }
+}
+
+impl LogRegShard {
+    /// Feature row `m`.
+    #[inline]
+    pub fn feature(&self, m: usize) -> &[f64] {
+        &self.features[m * self.d..(m + 1) * self.d]
+    }
+
+    /// Full-batch loss `1/M Σ ln(1 + exp(−y·hᵀx))`.
+    pub fn loss(&self, x: &[f64]) -> f64 {
+        let mut total = 0.0;
+        for m in 0..self.m {
+            let z: f64 = self.feature(m).iter().zip(x).map(|(h, w)| h * w).sum();
+            total += softplus(-self.labels[m] * z);
+        }
+        total / self.m as f64
+    }
+
+    /// Stochastic gradient on minibatch indices `batch` (accumulated into
+    /// `grad`, which is zeroed first).
+    pub fn minibatch_grad(&self, x: &[f64], batch: &[usize], grad: &mut [f64]) {
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let scale = 1.0 / batch.len() as f64;
+        for &m in batch {
+            let h = self.feature(m);
+            let y = self.labels[m];
+            let z: f64 = h.iter().zip(x.iter()).map(|(a, b)| a * b).sum();
+            // ∂/∂x ln(1+exp(−y z)) = −y·σ(−y z)·h
+            let coeff = -y * sigmoid(-y * z) * scale;
+            for (g, hv) in grad.iter_mut().zip(h.iter()) {
+                *g += coeff * hv;
+            }
+        }
+    }
+
+    /// Full-batch gradient.
+    pub fn full_grad(&self, x: &[f64], grad: &mut [f64]) {
+        let all: Vec<usize> = (0..self.m).collect();
+        self.minibatch_grad(x, &all, grad);
+    }
+}
+
+#[inline]
+fn sigmoid(z: f64) -> f64 {
+    if z >= 0.0 {
+        1.0 / (1.0 + (-z).exp())
+    } else {
+        let e = z.exp();
+        e / (1.0 + e)
+    }
+}
+
+#[inline]
+fn softplus(z: f64) -> f64 {
+    // ln(1 + e^z), numerically stable.
+    if z > 30.0 {
+        z
+    } else if z < -30.0 {
+        z.exp()
+    } else {
+        (1.0 + z.exp()).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LogRegProblem {
+        generate(&LogRegConfig {
+            nodes: 4,
+            samples_per_node: 200,
+            dim: 6,
+            heterogeneous: true,
+            seed: 3,
+        })
+    }
+
+    #[test]
+    fn shapes_and_labels() {
+        let p = small();
+        assert_eq!(p.shards.len(), 4);
+        for s in &p.shards {
+            assert_eq!(s.features.len(), 200 * 6);
+            assert!(s.labels.iter().all(|&y| y == 1.0 || y == -1.0));
+            let norm: f64 = s.x_star.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9, "x* normalized");
+        }
+    }
+
+    #[test]
+    fn heterogeneous_stars_differ_homogeneous_agree() {
+        let het = small();
+        assert_ne!(het.shards[0].x_star, het.shards[1].x_star);
+        let hom = generate(&LogRegConfig { heterogeneous: false, nodes: 3, ..Default::default() });
+        assert_eq!(hom.shards[0].x_star, hom.shards[2].x_star);
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let p = small();
+        let s = &p.shards[0];
+        let x: Vec<f64> = (0..6).map(|i| 0.1 * (i as f64) - 0.2).collect();
+        let mut grad = vec![0.0; 6];
+        s.full_grad(&x, &mut grad);
+        let eps = 1e-6;
+        for j in 0..6 {
+            let mut xp = x.clone();
+            xp[j] += eps;
+            let mut xm = x.clone();
+            xm[j] -= eps;
+            let fd = (s.loss(&xp) - s.loss(&xm)) / (2.0 * eps);
+            assert!((fd - grad[j]).abs() < 1e-6, "j={j}: fd={fd} grad={}", grad[j]);
+        }
+    }
+
+    #[test]
+    fn gradient_descent_reduces_loss() {
+        let p = small();
+        let s = &p.shards[0];
+        let mut x = vec![0.0; 6];
+        let mut grad = vec![0.0; 6];
+        let l0 = s.loss(&x);
+        for _ in 0..50 {
+            s.full_grad(&x, &mut grad);
+            for (xi, gi) in x.iter_mut().zip(grad.iter()) {
+                *xi -= 0.05 * gi;
+            }
+        }
+        let l1 = s.loss(&x);
+        assert!(l1 < l0 * 0.8, "loss {l0} -> {l1}");
+        // And the learned direction correlates with x*.
+        let dot: f64 = x.iter().zip(&s.x_star).map(|(a, b)| a * b).sum();
+        assert!(dot > 0.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = small();
+        let b = small();
+        assert_eq!(a.shards[2].features, b.shards[2].features);
+        assert_eq!(a.shards[2].labels, b.shards[2].labels);
+    }
+}

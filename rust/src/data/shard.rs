@@ -1,0 +1,204 @@
+//! Sharding a dataset across nodes.
+//!
+//! * **Homogeneous** (the paper's data-center assumption, Table 1): a
+//!   global shuffle, then contiguous equal slices — every node sees the
+//!   same distribution, so the heterogeneity bound `b² ≈ 0`.
+//! * **Heterogeneous** (Appendix C / Table 8): Dirichlet-style label skew —
+//!   each node draws class proportions so `∇f_i` differ across nodes
+//!   (`b² > 0`).
+
+use super::classify::Dataset;
+use crate::util::rng::Pcg;
+
+/// How to split the data across nodes.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    /// IID shuffle → equal slices.
+    Homogeneous,
+    /// Label-skewed with Dirichlet concentration `alpha` (lower = more
+    /// skewed; 0.1 is highly heterogeneous, 100 ≈ iid).
+    Heterogeneous { alpha: f64 },
+}
+
+/// Per-node index lists into the parent dataset.
+#[derive(Clone, Debug)]
+pub struct Shards {
+    pub indices: Vec<Vec<usize>>,
+}
+
+impl Shards {
+    pub fn node(&self, i: usize) -> &[usize] {
+        &self.indices[i]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.indices.len()
+    }
+}
+
+/// Sample from Dirichlet(alpha, …, alpha) via normalized Gamma draws
+/// (Marsaglia–Tsang for shape ≥ 1, boost trick below 1).
+fn dirichlet(rng: &mut Pcg, k: usize, alpha: f64) -> Vec<f64> {
+    fn gamma(rng: &mut Pcg, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Boost: Gamma(a) = Gamma(a+1) · U^{1/a}
+            let u = rng.uniform().max(1e-300);
+            return gamma(rng, shape + 1.0) * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = rng.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = rng.uniform().max(1e-300);
+            if u.ln() < 0.5 * x * x + d - d * v + d * v.ln() {
+                return d * v;
+            }
+        }
+    }
+    let draws: Vec<f64> = (0..k).map(|_| gamma(rng, alpha).max(1e-12)).collect();
+    let sum: f64 = draws.iter().sum();
+    draws.into_iter().map(|g| g / sum).collect()
+}
+
+/// Split `data` into `nodes` shards.
+pub fn shard(data: &Dataset, nodes: usize, mode: Sharding, seed: u64) -> Shards {
+    let mut rng = Pcg::new(seed, 0x5AAD);
+    match mode {
+        Sharding::Homogeneous => {
+            let mut idx: Vec<usize> = (0..data.len).collect();
+            rng.shuffle(&mut idx);
+            let per = data.len / nodes;
+            let indices = (0..nodes)
+                .map(|i| idx[i * per..(i + 1) * per].to_vec())
+                .collect();
+            Shards { indices }
+        }
+        Sharding::Heterogeneous { alpha } => {
+            // Group sample indices by class.
+            let mut by_class: Vec<Vec<usize>> = vec![Vec::new(); data.classes];
+            for (i, &c) in data.labels.iter().enumerate() {
+                by_class[c as usize].push(i);
+            }
+            for cls in by_class.iter_mut() {
+                rng.shuffle(cls);
+            }
+            let mut indices: Vec<Vec<usize>> = vec![Vec::new(); nodes];
+            for cls in &by_class {
+                // Node proportions for this class.
+                let props = dirichlet(&mut rng, nodes, alpha);
+                let mut cursor = 0usize;
+                for (node, p) in props.iter().enumerate() {
+                    let take = if node + 1 == nodes {
+                        cls.len() - cursor
+                    } else {
+                        ((p * cls.len() as f64).round() as usize).min(cls.len() - cursor)
+                    };
+                    indices[node].extend_from_slice(&cls[cursor..cursor + take]);
+                    cursor += take;
+                }
+            }
+            // Guarantee every node has at least one sample.
+            for node in 0..nodes {
+                if indices[node].is_empty() {
+                    indices[node].push(rng.below(data.len));
+                }
+                let node_indices = &mut indices[node];
+                rng.shuffle(node_indices);
+            }
+            Shards { indices }
+        }
+    }
+}
+
+/// Label-distribution skew measure: mean total-variation distance between a
+/// node's label distribution and the global one. 0 = perfectly iid.
+pub fn label_skew(data: &Dataset, shards: &Shards) -> f64 {
+    let c = data.classes;
+    let mut global = vec![0.0f64; c];
+    for &l in &data.labels {
+        global[l as usize] += 1.0;
+    }
+    let total: f64 = global.iter().sum();
+    for g in global.iter_mut() {
+        *g /= total;
+    }
+    let mut tv_sum = 0.0;
+    for node in &shards.indices {
+        let mut local = vec![0.0f64; c];
+        for &i in node {
+            local[data.labels[i] as usize] += 1.0;
+        }
+        let lt: f64 = local.iter().sum::<f64>().max(1.0);
+        let tv: f64 = local
+            .iter()
+            .zip(global.iter())
+            .map(|(l, g)| (l / lt - g).abs())
+            .sum::<f64>()
+            / 2.0;
+        tv_sum += tv;
+    }
+    tv_sum / shards.num_nodes() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classify::{generate, ClassifyConfig};
+
+    fn data() -> Dataset {
+        generate(&ClassifyConfig { train_per_class: 100, val_per_class: 10, ..Default::default() })
+            .train
+    }
+
+    #[test]
+    fn homogeneous_shards_are_equal_and_disjoint() {
+        let d = data();
+        let s = shard(&d, 8, Sharding::Homogeneous, 1);
+        assert_eq!(s.num_nodes(), 8);
+        let mut seen = vec![false; d.len];
+        for node in &s.indices {
+            assert_eq!(node.len(), d.len / 8);
+            for &i in node {
+                assert!(!seen[i], "index {i} duplicated");
+                seen[i] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn heterogeneous_is_more_skewed_than_homogeneous() {
+        let d = data();
+        let hom = shard(&d, 8, Sharding::Homogeneous, 2);
+        let het = shard(&d, 8, Sharding::Heterogeneous { alpha: 0.1 }, 2);
+        let s_hom = label_skew(&d, &hom);
+        let s_het = label_skew(&d, &het);
+        assert!(s_het > s_hom + 0.1, "hom={s_hom} het={s_het}");
+        // No node starves.
+        for node in &het.indices {
+            assert!(!node.is_empty());
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut rng = Pcg::seeded(4);
+        for &alpha in &[0.1, 1.0, 10.0] {
+            let p = dirichlet(&mut rng, 6, alpha);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn large_alpha_approaches_uniform() {
+        let mut rng = Pcg::seeded(5);
+        let p = dirichlet(&mut rng, 4, 1000.0);
+        for &x in &p {
+            assert!((x - 0.25).abs() < 0.05, "{p:?}");
+        }
+    }
+}

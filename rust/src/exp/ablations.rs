@@ -1,0 +1,177 @@
+//! Ablation studies for the design choices DESIGN.md calls out, plus the
+//! paper's future-work direction (symmetric time-varying graphs).
+
+use super::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
+use super::Ctx;
+use crate::coordinator::trainer::{TrainConfig, Trainer};
+use crate::coordinator::LrSchedule;
+use crate::optim::AlgorithmKind;
+use crate::topology::schedule::Schedule;
+use crate::topology::TopologyKind;
+use crate::util::csv::CsvWriter;
+use crate::util::table::TextTable;
+use anyhow::Result;
+
+/// Corollary 3 ablation: warm-up all-reduce zeroes the initial-phase
+/// consensus term. Measures the consensus distance over the first periods
+/// and the final MSE with/without warm-up.
+pub fn ablation_warmup(ctx: &Ctx) -> Result<()> {
+    let n = 32;
+    let iters = ctx.scaled(2000);
+    let problem = paper_problem(n, 1000, true, ctx.seed);
+    let x_star = global_minimizer(&problem, 400);
+    let x_star32: Vec<f32> = x_star.iter().map(|&v| v as f32).collect();
+    let mut csv = CsvWriter::new(&["warmup", "iter", "consensus", "mse"]);
+    let mut finals = Vec::new();
+    for warmup in [true, false] {
+        let provider =
+            super::logreg_runner::LogRegProvider { problem: &problem, batch: 8 };
+        // Different random init per node when warm-up is off, so the
+        // ablation actually has something to reduce.
+        let mut init = crate::coordinator::StackedParams::zeros(n, problem.d);
+        let mut rng = crate::util::rng::Pcg::seeded(ctx.seed ^ 0xAB1);
+        for v in init.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let opt: Box<dyn crate::optim::Optimizer> =
+            Box::new(crate::optim::DmSgd::new(init, 0.8));
+        let mut trainer = Trainer::new(
+            Schedule::new(TopologyKind::OnePeerExp, n, ctx.seed),
+            opt,
+            &provider,
+            TrainConfig {
+                iters,
+                lr: LrSchedule::HalveEvery { init: 0.1, every: iters / 3 },
+                warmup_allreduce: warmup,
+                record_every: 10,
+                parallel_grads: false,
+                seed: ctx.seed,
+                msg_bytes: None,
+                cost: None,
+            },
+        );
+        let mut last_mse = 0.0;
+        let hist = trainer.run_with(|_, params| {
+            last_mse = params.mean_sq_error_to(&x_star32);
+        });
+        for (k, c) in &hist.consensus {
+            csv.row_f64(&[warmup as usize as f64, *k as f64, *c, f64::NAN]);
+        }
+        finals.push((warmup, hist.consensus[0].1, last_mse));
+    }
+    csv.write(ctx.csv_path("ablation_warmup"))?;
+    println!("Ablation — warm-up all-reduce (Corollary 3), n={n}");
+    let mut t = TextTable::new(&["warmup", "initial consensus", "final MSE"]);
+    for (w, c0, mse) in finals {
+        t.row(vec![w.to_string(), format!("{c0:.3e}"), format!("{mse:.3e}")]);
+    }
+    println!("{}", t.render());
+    println!("  csv: {}", ctx.csv_path("ablation_warmup").display());
+    Ok(())
+}
+
+/// One-peer sampling-order ablation (Appendix B.3.2), end-to-end: the
+/// consensus-level story of Fig. 11 carried through actual DmSGD training.
+pub fn ablation_sampling(ctx: &Ctx) -> Result<()> {
+    let n = 32;
+    let iters = ctx.scaled(3000);
+    let problem = paper_problem(n, 2000, true, ctx.seed);
+    let x_star = global_minimizer(&problem, 400);
+    let orders = [
+        TopologyKind::OnePeerExp,
+        TopologyKind::OnePeerExpPerm,
+        TopologyKind::OnePeerExpUniform,
+    ];
+    let mut t = TextTable::new(&["order", "final MSE", "mean MSE (last quarter)"]);
+    let mut csv = CsvWriter::new(&["order", "final_mse", "tail_mse"]);
+    println!("Ablation — one-peer sampling order, DmSGD, n={n}, {iters} iters");
+    for kind in orders {
+        let curve = run_logreg(
+            &problem,
+            &x_star,
+            &LogRegRun {
+                topology: kind,
+                algorithm: AlgorithmKind::DmSgd,
+                beta: 0.8,
+                lr: LrSchedule::HalveEvery { init: 0.2, every: 1000 },
+                iters,
+                batch: 8,
+                record_every: 50,
+                seed: ctx.seed + 2,
+            },
+        );
+        let q = curve.mse.len() * 3 / 4;
+        let tail = curve.mse[q..].iter().sum::<f64>() / (curve.mse.len() - q) as f64;
+        t.row(vec![
+            kind.name().into(),
+            format!("{:.3e}", curve.mse.last().unwrap()),
+            format!("{tail:.3e}"),
+        ]);
+        csv.row(&[
+            kind.name().into(),
+            format!("{}", curve.mse.last().unwrap()),
+            format!("{tail}"),
+        ]);
+    }
+    csv.write(ctx.csv_path("ablation_sampling"))?;
+    println!("{}", t.render());
+    println!("  expected: cyclic ≈ random-perm ≤ uniform-sampling (exactness of Lemma 1)");
+    println!("  csv: {}", ctx.csv_path("ablation_sampling").display());
+    Ok(())
+}
+
+/// Future-work study (paper conclusion): symmetric time-varying graphs
+/// and bias-corrected methods. Compares, on heterogeneous data:
+/// DmSGD/one-peer-exp, gradient tracking/one-peer-exp (asymmetric OK),
+/// D²-lazy/static-hypercube (symmetric static), and documents that naive
+/// D² over one-peer hypercube matchings is unstable.
+pub fn ablation_symmetric(ctx: &Ctx) -> Result<()> {
+    let n = 32; // power of two: hypercube variants valid
+    let iters = ctx.scaled(3000);
+    let problem = paper_problem(n, 2000, true, ctx.seed + 5);
+    let x_star = global_minimizer(&problem, 400);
+    let runs = [
+        ("dmsgd/one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::DmSgd),
+        ("dmsgd/one_peer_hypercube", TopologyKind::OnePeerHypercube, AlgorithmKind::DmSgd),
+        ("tracking/one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::GradientTracking),
+        ("d2_lazy/hypercube", TopologyKind::Hypercube, AlgorithmKind::D2),
+        ("d2_lazy/one_peer_hypercube", TopologyKind::OnePeerHypercube, AlgorithmKind::D2),
+        ("parallel", TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+    ];
+    let mut t = TextTable::new(&["method/topology", "final MSE", "per-iter comm"]);
+    let mut csv = CsvWriter::new(&["method", "topology", "final_mse"]);
+    println!("Ablation — symmetric time-varying graphs (future work), n={n}, hetero data");
+    for (label, kind, algo) in runs {
+        let curve = run_logreg(
+            &problem,
+            &x_star,
+            &LogRegRun {
+                topology: kind,
+                algorithm: algo,
+                beta: 0.8,
+                lr: LrSchedule::HalveEvery { init: 0.1, every: 1000 },
+                iters,
+                batch: 8,
+                record_every: 50,
+                seed: ctx.seed + 6,
+            },
+        );
+        let final_mse = *curve.mse.last().unwrap();
+        let comm = crate::costmodel::analytic_degree(kind, n);
+        t.row(vec![
+            label.into(),
+            if final_mse.is_finite() { format!("{final_mse:.3e}") } else { "DIVERGED".into() },
+            if kind == TopologyKind::FullyConnected { "n-1 (allreduce)".into() } else { comm.to_string() },
+        ]);
+        csv.row(&[algo.name().into(), kind.name().into(), format!("{final_mse}")]);
+    }
+    csv.write(ctx.csv_path("ablation_symmetric"))?;
+    println!("{}", t.render());
+    println!("  reading: on *deterministic* heterogeneous problems lazy D² over the");
+    println!("  one-peer hypercube is exact (see examples/symmetric_timevarying.rs), but");
+    println!("  under stochastic gradients its marginally-stable mode amplifies noise —");
+    println!("  evidence that the paper's open problem (symmetric time-varying graphs");
+    println!("  matching one-peer-exp) is genuinely open for SGD-style methods.");
+    println!("  csv: {}", ctx.csv_path("ablation_symmetric").display());
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Shared machinery for the deep-training-style experiments (Tables 2, 3,
+//! 4, 9, 10): an MLP-classification [`GradProvider`] over sharded
+//! Gaussian-mixture data, and a runner reporting validation accuracy plus
+//! the simulated wall-clock of the paper's actual workload (ImageNet /
+//! ResNet-50 message sizes through the α-β cost model — see DESIGN.md
+//! §Substitutions).
+
+use crate::coordinator::trainer::{GradProvider, TrainConfig, Trainer};
+use crate::coordinator::LrSchedule;
+use crate::costmodel::CostModel;
+use crate::data::classify::{generate, ClassifyConfig, ClassifyData};
+use crate::data::shard::{shard, Sharding, Shards};
+use crate::models::{Mlp, MlpConfig};
+use crate::optim::AlgorithmKind;
+use crate::topology::schedule::Schedule;
+use crate::topology::TopologyKind;
+use crate::util::rng::Pcg;
+
+/// Per-node MLP gradients over the sharded classification data.
+pub struct ClassifyProvider<'a> {
+    pub data: &'a ClassifyData,
+    pub shards: &'a Shards,
+    pub mlp: Mlp,
+    pub batch: usize,
+}
+
+impl GradProvider for ClassifyProvider<'_> {
+    fn dim(&self) -> usize {
+        self.mlp.cfg.param_count()
+    }
+
+    fn nodes(&self) -> usize {
+        self.shards.num_nodes()
+    }
+
+    fn grad(&self, node: usize, params: &[f32], iter: usize, seed: u64, out: &mut [f32]) -> f32 {
+        let local = self.shards.node(node);
+        let mut rng = Pcg::new(
+            seed ^ (node as u64).wrapping_mul(0xD1B54A32D192ED03) ^ (iter as u64) << 18,
+            0xC1A,
+        );
+        let batch: Vec<usize> = (0..self.batch).map(|_| local[rng.below(local.len())]).collect();
+        self.mlp.loss_grad(params, &self.data.train, &batch, out)
+    }
+}
+
+/// One deep-training-style run specification.
+#[derive(Clone, Debug)]
+pub struct ClassifySpec {
+    pub nodes: usize,
+    pub topology: TopologyKind,
+    pub algorithm: AlgorithmKind,
+    pub hidden: usize,
+    pub iters: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub beta: f32,
+    pub heterogeneous: bool,
+    pub seed: u64,
+}
+
+/// Result row: the analogue of one cell of Tables 2/3/4.
+#[derive(Clone, Debug)]
+pub struct ClassifyResult {
+    pub val_acc: f64,
+    pub final_loss: f64,
+    /// Simulated 90-epoch ImageNet wall clock in hours (cost model with
+    /// the paper's ResNet-50-scale message size, NOT this MLP's size).
+    pub sim_hours: f64,
+    pub consensus: f64,
+}
+
+/// Simulated Table 2 wall-clock: 90 epochs of ImageNet (1,281,167 images)
+/// at global batch `256·n`, ResNet-50 messages (25.5 M params ≈ 102 MB),
+/// compute ≈ 0.4 s/iteration per node, 70% comm/compute overlap.
+pub fn simulated_imagenet_hours(kind: TopologyKind, n: usize) -> f64 {
+    let iters_per_epoch = 1_281_167.0 / (256.0 * n as f64);
+    let cost = CostModel::paper_default(0.4);
+    let msg_bytes = 25.5e6 * 4.0;
+    let per_iter = cost.iteration_time(kind, n, msg_bytes);
+    90.0 * iters_per_epoch * per_iter / 3600.0
+}
+
+/// Run one specification on the given dataset.
+pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult {
+    let mode = if spec.heterogeneous {
+        Sharding::Heterogeneous { alpha: 0.3 }
+    } else {
+        Sharding::Homogeneous
+    };
+    let shards = shard(&data.train, spec.nodes, mode, spec.seed);
+    let mlp = Mlp::new(MlpConfig {
+        input: data.train.dim,
+        hidden: spec.hidden,
+        classes: data.train.classes,
+    });
+    let provider = ClassifyProvider { data, shards: &shards, mlp, batch: spec.batch };
+    let init = mlp.init(spec.seed ^ 0xAB);
+    let opt = spec.algorithm.build(spec.nodes, &init, spec.beta);
+    let mut trainer = Trainer::new(
+        Schedule::new(spec.topology, spec.nodes, spec.seed),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: spec.iters,
+            lr: LrSchedule::Milestones {
+                init: spec.lr,
+                factor: 0.1,
+                milestones: vec![spec.iters * 2 / 3, spec.iters * 8 / 9],
+                warmup: spec.iters / 20,
+            },
+            warmup_allreduce: true,
+            record_every: (spec.iters / 10).max(1),
+            parallel_grads: false,
+            seed: spec.seed,
+            msg_bytes: None,
+            cost: None,
+        },
+    );
+    let hist = trainer.run();
+    // Validation accuracy of the *mean* model (the paper evaluates the
+    // averaged model after training).
+    let mean = trainer.optimizer.params().mean();
+    let val_acc = mlp.accuracy(&mean, &data.val);
+    let tail = hist.loss.len().saturating_sub(20);
+    let final_loss = hist.loss[tail..].iter().sum::<f64>() / (hist.loss.len() - tail) as f64;
+    ClassifyResult {
+        val_acc,
+        final_loss,
+        sim_hours: simulated_imagenet_hours(spec.topology, spec.nodes),
+        consensus: hist.consensus.last().map(|c| c.1).unwrap_or(0.0),
+    }
+}
+
+/// The shared dataset for the table experiments.
+pub fn table_dataset(seed: u64) -> ClassifyData {
+    generate(&ClassifyConfig {
+        dim: 32,
+        classes: 10,
+        train_per_class: 400,
+        val_per_class: 100,
+        separation: 3.0,
+        seed,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dmsgd_learns_classification_over_one_peer_exp() {
+        let data = table_dataset(3);
+        let spec = ClassifySpec {
+            nodes: 8,
+            topology: TopologyKind::OnePeerExp,
+            algorithm: AlgorithmKind::DmSgd,
+            hidden: 32,
+            iters: 600,
+            batch: 32,
+            lr: 0.1,
+            beta: 0.9,
+            heterogeneous: false,
+            seed: 1,
+        };
+        let r = run_classify(&data, &spec);
+        assert!(r.val_acc > 0.75, "val acc {}", r.val_acc);
+        assert!(r.final_loss < 1.0, "final loss {}", r.final_loss);
+    }
+
+    #[test]
+    fn simulated_hours_ordering_matches_paper() {
+        // Table 2, n=32: one-peer ≈ match < ring < grid < static exp <
+        // half-random.
+        let n = 32;
+        let h = |k| simulated_imagenet_hours(k, n);
+        assert!(h(TopologyKind::OnePeerExp) <= h(TopologyKind::Ring));
+        assert!(h(TopologyKind::Ring) < h(TopologyKind::Grid2D));
+        assert!(h(TopologyKind::Grid2D) < h(TopologyKind::StaticExp));
+        assert!(h(TopologyKind::StaticExp) < h(TopologyKind::HalfRandom));
+        // Linear speedup: n=32 is faster than n=4 for one-peer.
+        assert!(
+            simulated_imagenet_hours(TopologyKind::OnePeerExp, 32)
+                < simulated_imagenet_hours(TopologyKind::OnePeerExp, 4) / 4.0
+        );
+    }
+}

@@ -1,0 +1,300 @@
+//! Figure experiments (Figs. 1, 3, 4, 10, 11, 12, 13).
+
+use super::logreg_runner::{
+    average_curves, global_minimizer, paper_problem, run_logreg, LogRegRun, MseCurve,
+};
+use super::Ctx;
+use crate::consensus;
+use crate::coordinator::{transient_iterations, LrSchedule};
+use crate::optim::AlgorithmKind;
+use crate::spectral;
+use crate::topology::TopologyKind;
+use crate::util::csv::CsvWriter;
+use crate::util::table::TextTable;
+use anyhow::Result;
+
+/// Fig. 1 — transient-iteration illustration: DSGD vs parallel SGD on
+/// homogeneous logistic regression; the curves merge after the transient
+/// phase.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let n = 32;
+    let iters = ctx.scaled(6000);
+    let problem = paper_problem(n, 2000, false, ctx.seed);
+    let x_star = global_minimizer(&problem, 600);
+    let lr = LrSchedule::HalveEvery { init: 0.1, every: iters / 5 };
+    let mk_run = |topology, algorithm| LogRegRun {
+        topology,
+        algorithm,
+        beta: 0.0,
+        lr: lr.clone(),
+        iters,
+        batch: 8,
+        record_every: 25,
+        seed: ctx.seed,
+    };
+    let dec = run_logreg(&problem, &x_star, &mk_run(TopologyKind::Ring, AlgorithmKind::DSgd));
+    let par = run_logreg(
+        &problem,
+        &x_star,
+        &mk_run(TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+    );
+
+    let mut csv = CsvWriter::new(&["iter", "dsgd_ring_mse", "parallel_mse"]);
+    for i in 0..dec.iters.len() {
+        csv.row_f64(&[dec.iters[i] as f64, dec.mse[i], par.mse[i]]);
+    }
+    csv.write(ctx.csv_path("fig1"))?;
+
+    let t = transient_iterations(&dec.mse, &par.mse, 2.0, 4);
+    println!("Fig. 1 — transient iterations (DSGD/ring vs parallel SGD, n={n})");
+    match t {
+        Some(idx) => println!(
+            "  curves merge at recorded sample {idx} (≈ iteration {})",
+            dec.iters[idx]
+        ),
+        None => println!("  curves did not merge within {iters} iterations"),
+    }
+    println!("  final MSE: dsgd={:.3e} parallel={:.3e}", dec.mse.last().unwrap(), par.mse.last().unwrap());
+    println!("  csv: {}", ctx.csv_path("fig1").display());
+    Ok(())
+}
+
+/// Fig. 3 — spectral gap `1 − ρ` vs n for ring / grid / static exp,
+/// against the Proposition 1 line `2/(1+⌈log₂n⌉)`.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let mut csv = CsvWriter::new(&["n", "ring", "grid", "static_exp", "prop1_theory"]);
+    let mut max_dev_even = 0.0f64;
+    for n in (4..=290).step_by(2) {
+        let ring = spectral::topology_gap(TopologyKind::Ring, n, 0);
+        let grid = spectral::topology_gap(TopologyKind::Grid2D, n, 0);
+        let exp = spectral::topology_gap(TopologyKind::StaticExp, n, 0);
+        let theory = 1.0 - spectral::static_exp_rho_bound(n);
+        max_dev_even = max_dev_even.max((exp - theory).abs());
+        csv.row_f64(&[n as f64, ring, grid, exp, theory]);
+    }
+    csv.write(ctx.csv_path("fig3"))?;
+    println!("Fig. 3 — spectral gaps for n = 4..290 (even n)");
+    println!("  max |measured − Prop.1| over even n: {max_dev_even:.2e} (paper: exact match)");
+    let mut t = TextTable::new(&["n", "1-rho ring", "1-rho grid", "1-rho static exp", "theory"]);
+    for n in [8usize, 32, 64, 128, 256] {
+        t.row(vec![
+            n.to_string(),
+            format!("{:.4}", spectral::topology_gap(TopologyKind::Ring, n, 0)),
+            format!("{:.4}", spectral::topology_gap(TopologyKind::Grid2D, n, 0)),
+            format!("{:.4}", spectral::topology_gap(TopologyKind::StaticExp, n, 0)),
+            format!("{:.4}", 1.0 - spectral::static_exp_rho_bound(n)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("  csv: {}", ctx.csv_path("fig3").display());
+    Ok(())
+}
+
+fn residue_decay_csv(
+    ctx: &Ctx,
+    name: &str,
+    series: &[(String, Vec<f64>)],
+    iters: usize,
+) -> Result<()> {
+    let mut header: Vec<&str> = vec!["iter"];
+    for (label, _) in series {
+        header.push(label);
+    }
+    let mut csv = CsvWriter::new(&header);
+    for k in 0..iters {
+        let mut row = vec![k as f64 + 1.0];
+        for (_, decay) in series {
+            row.push(decay[k].max(1e-300));
+        }
+        csv.row_f64(&row);
+    }
+    csv.write(ctx.csv_path(name))?;
+    Ok(())
+}
+
+/// Fig. 4 — consensus residue decay: one-peer exp hits exact averaging at
+/// τ steps; static exp and random matching only decay asymptotically.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let n = 16;
+    let iters = 24;
+    let series: Vec<(String, Vec<f64>)> = [
+        ("one_peer_exp", TopologyKind::OnePeerExp),
+        ("static_exp", TopologyKind::StaticExp),
+        ("random_match", TopologyKind::RandomMatch),
+    ]
+    .into_iter()
+    .map(|(label, kind)| (label.to_string(), consensus::residue_decay(kind, n, iters, ctx.seed)))
+    .collect();
+    residue_decay_csv(ctx, "fig4", &series, iters)?;
+
+    let tau = crate::topology::exponential::tau(n);
+    println!("Fig. 4 — consensus residue decay, n = {n} (τ = {tau})");
+    let mut t = TextTable::new(&["k", "one-peer exp", "static exp", "random match"]);
+    for k in 0..10 {
+        t.row(vec![
+            (k + 1).to_string(),
+            format!("{:.3e}", series[0].1[k]),
+            format!("{:.3e}", series[1].1[k]),
+            format!("{:.3e}", series[2].1[k]),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "  one-peer residue at k=τ: {:.1e} (exact averaging, Lemma 1)",
+        series[0].1[tau - 1]
+    );
+    println!("  csv: {}", ctx.csv_path("fig4").display());
+    Ok(())
+}
+
+/// Fig. 10 — one-peer exponential residue decay when n is NOT a power of
+/// two: asymptotic, not periodic-exact.
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let sizes = [5usize, 6, 9, 12];
+    let iters = 30;
+    let series: Vec<(String, Vec<f64>)> = sizes
+        .iter()
+        .map(|&n| {
+            (format!("n{n}"), consensus::residue_decay(TopologyKind::OnePeerExp, n, iters, ctx.seed))
+        })
+        .collect();
+    residue_decay_csv(ctx, "fig10", &series, iters)?;
+    println!("Fig. 10 — one-peer exp with n not a power of 2 (no exact averaging)");
+    for (i, &n) in sizes.iter().enumerate() {
+        let tau = crate::topology::exponential::tau(n);
+        println!(
+            "  n={n}: residue at k=τ={tau}: {:.2e} (>0), at k=30: {:.2e}",
+            series[i].1[tau - 1],
+            series[i].1[iters - 1]
+        );
+    }
+    println!("  csv: {}", ctx.csv_path("fig10").display());
+    Ok(())
+}
+
+/// Fig. 11 — one-peer sampling strategies: cyclic and random-permutation
+/// achieve periodic exact averaging; uniform sampling only asymptotic.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    let n = 16;
+    let iters = 24;
+    let series: Vec<(String, Vec<f64>)> = [
+        ("cyclic", TopologyKind::OnePeerExp),
+        ("random_perm", TopologyKind::OnePeerExpPerm),
+        ("uniform_sampling", TopologyKind::OnePeerExpUniform),
+    ]
+    .into_iter()
+    .map(|(label, kind)| (label.to_string(), consensus::residue_decay(kind, n, iters, ctx.seed)))
+    .collect();
+    residue_decay_csv(ctx, "fig11", &series, iters)?;
+    let tau = crate::topology::exponential::tau(n);
+    println!("Fig. 11 — one-peer sampling strategies, n = {n}");
+    println!("  residue at k=τ: cyclic={:.1e} perm={:.1e} uniform={:.1e}",
+        series[0].1[tau - 1], series[1].1[tau - 1], series[2].1[tau - 1]);
+    println!("  residue at k={iters}: uniform={:.1e} (asymptotic only)", series[2].1[iters - 1]);
+    println!("  csv: {}", ctx.csv_path("fig11").display());
+    Ok(())
+}
+
+/// Fig. 12 — `‖∏_{i<k} Ŵ^{(i)}‖₂²` for one-peer exp over different n:
+/// drops to exactly 0 at k = τ(n).
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let sizes = [8usize, 16, 32, 64];
+    let iters = 8;
+    let mut header = vec!["k".to_string()];
+    header.extend(sizes.iter().map(|n| format!("n{n}")));
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = CsvWriter::new(&href);
+    let norms: Vec<Vec<f64>> = sizes
+        .iter()
+        .map(|&n| consensus::residue_product_norms(TopologyKind::OnePeerExp, n, iters, ctx.seed))
+        .collect();
+    for k in 0..iters {
+        let mut row = vec![k as f64 + 1.0];
+        for series in &norms {
+            row.push(series[k]);
+        }
+        csv.row_f64(&row);
+    }
+    csv.write(ctx.csv_path("fig12"))?;
+    println!("Fig. 12 — ‖∏ Ŵ^(i)‖₂² vs k for one-peer exponential");
+    let mut t = TextTable::new(&["k", "n=8", "n=16", "n=32", "n=64"]);
+    for k in 0..iters {
+        t.row(
+            std::iter::once((k + 1).to_string())
+                .chain(norms.iter().map(|s| format!("{:.2e}", s[k])))
+                .collect(),
+        );
+    }
+    println!("{}", t.render());
+    for (i, &n) in sizes.iter().enumerate() {
+        let tau = crate::topology::exponential::tau(n);
+        println!("  n={n}: zero at k=τ={tau}? {}", norms[i][tau - 1] < 1e-18);
+    }
+    println!("  csv: {}", ctx.csv_path("fig12").display());
+    Ok(())
+}
+
+/// Fig. 13 — DmSGD convergence curves (MSE to x*) across topologies on
+/// heterogeneous logistic regression: n=64, d=10, β=0.8, γ=0.2 halved
+/// every 1000 iterations, averaged over trials.
+pub fn fig13(ctx: &Ctx) -> Result<()> {
+    let n = 64;
+    let iters = ctx.scaled(6000);
+    let trials = ctx.scaled(5);
+    let samples = ctx.scaled(14_000).min(14_000).max(500);
+    let kinds = [
+        ("parallel", TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+        ("ring", TopologyKind::Ring, AlgorithmKind::DmSgd),
+        ("grid", TopologyKind::Grid2D, AlgorithmKind::DmSgd),
+        ("static_exp", TopologyKind::StaticExp, AlgorithmKind::DmSgd),
+        ("one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::DmSgd),
+    ];
+    let mut curves: Vec<(String, MseCurve)> = Vec::new();
+    for (label, kind, algo) in kinds {
+        let mut trials_curves = Vec::new();
+        for trial in 0..trials {
+            let problem = paper_problem(n, samples, true, ctx.seed + trial as u64);
+            let x_star = global_minimizer(&problem, 500);
+            let run = LogRegRun {
+                topology: kind,
+                algorithm: algo,
+                beta: 0.8,
+                lr: LrSchedule::HalveEvery { init: 0.2, every: 1000 },
+                iters,
+                batch: 8,
+                record_every: 50,
+                seed: ctx.seed + 1000 + trial as u64,
+            };
+            trials_curves.push(run_logreg(&problem, &x_star, &run));
+        }
+        curves.push((label.to_string(), average_curves(&trials_curves)));
+        println!(
+            "  {label:<14} final MSE {:.3e}",
+            curves.last().unwrap().1.mse.last().unwrap()
+        );
+    }
+    let mut header = vec!["iter".to_string()];
+    header.extend(curves.iter().map(|(l, _)| l.clone()));
+    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = CsvWriter::new(&href);
+    for i in 0..curves[0].1.iters.len() {
+        let mut row = vec![curves[0].1.iters[i] as f64];
+        for (_, c) in &curves {
+            row.push(c.mse[i]);
+        }
+        csv.row_f64(&row);
+    }
+    csv.write(ctx.csv_path("fig13"))?;
+
+    // Transient iterations relative to the parallel baseline.
+    println!("Fig. 13 — DmSGD convergence, n={n}, {trials} trial(s), {iters} iters");
+    let par = &curves[0].1;
+    for (label, curve) in curves.iter().skip(1) {
+        let t = transient_iterations(&curve.mse, &par.mse, 1.5, 4)
+            .map(|i| curve.iters[i] as i64)
+            .unwrap_or(-1);
+        println!("  {label:<14} transient iterations ≈ {t}");
+    }
+    println!("  csv: {}", ctx.csv_path("fig13").display());
+    Ok(())
+}

@@ -1,0 +1,187 @@
+//! Shared machinery for the logistic-regression experiments (Fig. 1,
+//! Fig. 13, Tables 7–8): a [`GradProvider`] over the Appendix D.5 data,
+//! the exact global minimizer (for the MSE-to-`x*` y-axis), and a runner
+//! returning the MSE curve per algorithm/topology.
+
+use crate::coordinator::trainer::{GradProvider, TrainConfig, Trainer};
+use crate::coordinator::LrSchedule;
+use crate::data::logreg::{generate, LogRegConfig, LogRegProblem};
+use crate::optim::AlgorithmKind;
+use crate::topology::schedule::Schedule;
+use crate::topology::TopologyKind;
+use crate::util::rng::Pcg;
+
+/// Per-node minibatch gradients over the logistic-regression shards
+/// (f64 inner compute, f32 at the optimizer boundary).
+pub struct LogRegProvider<'a> {
+    pub problem: &'a LogRegProblem,
+    pub batch: usize,
+}
+
+impl GradProvider for LogRegProvider<'_> {
+    fn dim(&self) -> usize {
+        self.problem.d
+    }
+
+    fn nodes(&self) -> usize {
+        self.problem.shards.len()
+    }
+
+    fn grad(&self, node: usize, params: &[f32], iter: usize, seed: u64, out: &mut [f32]) -> f32 {
+        let shard = &self.problem.shards[node];
+        let mut rng = Pcg::new(
+            seed ^ (node as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ (iter as u64) << 20,
+            0x10C,
+        );
+        let batch: Vec<usize> = (0..self.batch).map(|_| rng.below(shard.m)).collect();
+        let x64: Vec<f64> = params.iter().map(|&v| v as f64).collect();
+        let mut g64 = vec![0.0f64; shard.d];
+        shard.minibatch_grad(&x64, &batch, &mut g64);
+        for (o, g) in out.iter_mut().zip(g64.iter()) {
+            *o = *g as f32;
+        }
+        // Report the minibatch loss.
+        let mut loss = 0.0;
+        for &m in &batch {
+            let z: f64 = shard.feature(m).iter().zip(&x64).map(|(h, w)| h * w).sum();
+            let yz = -shard.labels[m] * z;
+            loss += if yz > 30.0 { yz } else { (1.0 + yz.exp()).ln() };
+        }
+        (loss / self.batch as f64) as f32
+    }
+}
+
+/// Exact minimizer of the *global* objective `f = (1/n)Σ f_i` via
+/// full-batch gradient descent with backtracking-free long run.
+pub fn global_minimizer(problem: &LogRegProblem, iters: usize) -> Vec<f64> {
+    let d = problem.d;
+    let n = problem.shards.len();
+    let mut x = vec![0.0f64; d];
+    let mut g = vec![0.0f64; d];
+    let mut g_node = vec![0.0f64; d];
+    for _ in 0..iters {
+        g.iter_mut().for_each(|v| *v = 0.0);
+        for shard in &problem.shards {
+            shard.full_grad(&x, &mut g_node);
+            for (acc, v) in g.iter_mut().zip(g_node.iter()) {
+                *acc += v / n as f64;
+            }
+        }
+        // L ≈ max eig of (1/4M)HᵀH; feature std √10, d small → lr 0.05 is
+        // stable for the App. D.5 scaling.
+        for (xi, gi) in x.iter_mut().zip(g.iter()) {
+            *xi -= 0.05 * gi;
+        }
+    }
+    x
+}
+
+/// One experiment run: MSE-to-`x*` sampled every `record_every` iters.
+pub struct MseCurve {
+    pub iters: Vec<usize>,
+    pub mse: Vec<f64>,
+}
+
+/// Configuration for a logreg training run.
+pub struct LogRegRun {
+    pub topology: TopologyKind,
+    pub algorithm: AlgorithmKind,
+    pub beta: f32,
+    pub lr: LrSchedule,
+    pub iters: usize,
+    pub batch: usize,
+    pub record_every: usize,
+    pub seed: u64,
+}
+
+/// Run one (topology, algorithm) combination; `x_star` is the global
+/// minimizer to measure against.
+pub fn run_logreg(problem: &LogRegProblem, x_star: &[f64], run: &LogRegRun) -> MseCurve {
+    let n = problem.shards.len();
+    let provider = LogRegProvider { problem, batch: run.batch };
+    let opt = run.algorithm.build(n, &vec![0.0f32; problem.d], run.beta);
+    let mut trainer = Trainer::new(
+        Schedule::new(run.topology, n, run.seed),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: run.iters,
+            lr: run.lr.clone(),
+            warmup_allreduce: false,
+            record_every: run.record_every,
+            parallel_grads: false,
+            seed: run.seed,
+            msg_bytes: None,
+            cost: None,
+        },
+    );
+    let x_star32: Vec<f32> = x_star.iter().map(|&v| v as f32).collect();
+    let mut iters = Vec::new();
+    let mut mse = Vec::new();
+    trainer.run_with(|k, params| {
+        iters.push(k);
+        mse.push(params.mean_sq_error_to(&x_star32));
+    });
+    MseCurve { iters, mse }
+}
+
+/// Average several seeds' MSE curves pointwise.
+pub fn average_curves(curves: &[MseCurve]) -> MseCurve {
+    assert!(!curves.is_empty());
+    let len = curves[0].mse.len();
+    let mut mse = vec![0.0; len];
+    for c in curves {
+        assert_eq!(c.mse.len(), len);
+        for (acc, v) in mse.iter_mut().zip(c.mse.iter()) {
+            *acc += v / curves.len() as f64;
+        }
+    }
+    MseCurve { iters: curves[0].iters.clone(), mse }
+}
+
+/// Standard problem for the figure experiments.
+pub fn paper_problem(nodes: usize, samples: usize, heterogeneous: bool, seed: u64) -> LogRegProblem {
+    generate(&LogRegConfig { nodes, samples_per_node: samples, dim: 10, heterogeneous, seed })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimizer_beats_zero_vector() {
+        let p = paper_problem(4, 300, true, 3);
+        let x = global_minimizer(&p, 300);
+        let mean_loss =
+            |v: &[f64]| p.shards.iter().map(|s| s.loss(v)).sum::<f64>() / p.shards.len() as f64;
+        assert!(mean_loss(&x) < mean_loss(&vec![0.0; p.d]) - 0.05);
+    }
+
+    #[test]
+    fn dmsgd_mse_decreases_toward_x_star() {
+        let p = paper_problem(8, 500, false, 4);
+        let x_star = global_minimizer(&p, 400);
+        let run = LogRegRun {
+            topology: TopologyKind::OnePeerExp,
+            algorithm: AlgorithmKind::DmSgd,
+            beta: 0.8,
+            lr: LrSchedule::HalveEvery { init: 0.1, every: 400 },
+            iters: 1200,
+            batch: 16,
+            record_every: 50,
+            seed: 7,
+        };
+        let curve = run_logreg(&p, &x_star, &run);
+        let first = curve.mse[0];
+        let last = *curve.mse.last().unwrap();
+        assert!(last < 0.1 * first, "mse {first} -> {last}");
+    }
+
+    #[test]
+    fn average_of_identical_curves_is_identity() {
+        let c1 = MseCurve { iters: vec![0, 1], mse: vec![1.0, 0.5] };
+        let c2 = MseCurve { iters: vec![0, 1], mse: vec![3.0, 1.5] };
+        let avg = average_curves(&[c1, c2]);
+        assert_eq!(avg.mse, vec![2.0, 1.0]);
+    }
+}

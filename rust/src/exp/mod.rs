@@ -1,0 +1,84 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (see DESIGN.md §Per-experiment index).
+//!
+//! Each experiment is a function `fn(ctx) -> Result<()>` that writes CSV
+//! series to `results/` and prints a paper-style table. Invoke via
+//! `expograph exp <id>` (or `expograph exp all`).
+
+pub mod ablations;
+pub mod classify_runner;
+pub mod figures;
+pub mod logreg_runner;
+pub mod tables;
+
+use anyhow::{bail, Result};
+use std::path::PathBuf;
+
+/// Shared experiment context.
+pub struct Ctx {
+    /// Output directory for CSVs (default `results/`).
+    pub out_dir: PathBuf,
+    /// Global scale factor for iteration counts / trials: 1.0 = paper-
+    /// faithful protocol, lower = quick smoke run.
+    pub scale: f64,
+    pub seed: u64,
+}
+
+impl Default for Ctx {
+    fn default() -> Self {
+        Ctx { out_dir: PathBuf::from("results"), scale: 1.0, seed: 1 }
+    }
+}
+
+impl Ctx {
+    /// Scale an iteration/trial count (at least 1).
+    pub fn scaled(&self, base: usize) -> usize {
+        ((base as f64 * self.scale).round() as usize).max(1)
+    }
+
+    pub fn csv_path(&self, name: &str) -> PathBuf {
+        self.out_dir.join(format!("{name}.csv"))
+    }
+}
+
+/// All experiment ids, in run order.
+pub const ALL: &[&str] = &[
+    "fig3", "fig4", "fig10", "fig11", "fig12", "table1", "table5", "table6",
+    "fig1", "fig13", "table7", "table8", "table2", "table3", "table4",
+    "table9", "table10", "ablation_warmup", "ablation_sampling",
+    "ablation_symmetric",
+];
+
+/// Dispatch one experiment by id.
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "fig1" => figures::fig1(ctx),
+        "fig3" => figures::fig3(ctx),
+        "fig4" => figures::fig4(ctx),
+        "fig10" => figures::fig10(ctx),
+        "fig11" => figures::fig11(ctx),
+        "fig12" => figures::fig12(ctx),
+        "fig13" => figures::fig13(ctx),
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "table4" => tables::table4(ctx),
+        "table5" => tables::table5(ctx),
+        "table6" => tables::table6(ctx),
+        "table7" => tables::table7(ctx),
+        "table8" => tables::table8(ctx),
+        "table9" => tables::table9(ctx),
+        "table10" => tables::table10(ctx),
+        "ablation_warmup" => ablations::ablation_warmup(ctx),
+        "ablation_sampling" => ablations::ablation_sampling(ctx),
+        "ablation_symmetric" => ablations::ablation_symmetric(ctx),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment id: {other} (see DESIGN.md index)"),
+    }
+}

@@ -1,0 +1,50 @@
+//! # expograph
+//!
+//! Decentralized deep training over **exponential graphs** — a
+//! production-oriented reproduction of *"Exponential Graph is Provably
+//! Efficient for Decentralized Deep Training"* (Ying, Yuan, Chen, Hu, Pan,
+//! Yin — NeurIPS 2021).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`topology`] — the full topology zoo of the paper (ring, star, grid,
+//!   torus, hypercube, random graphs, bipartite random match, static and
+//!   one-peer exponential graphs) with doubly-stochastic weight-matrix
+//!   generation.
+//! * [`spectral`] — spectral-gap analysis (Proposition 1) built on the
+//!   in-crate [`linalg`] substrate (DFT over circulants, Jacobi symmetric
+//!   eigensolver, power iteration).
+//! * [`consensus`] — gossip/partial-averaging simulation and the periodic
+//!   exact-averaging property (Lemma 1).
+//! * [`optim`] — decentralized optimizers: DSGD, DmSGD (Algorithm 1),
+//!   vanilla DmSGD, QG-DmSGD, and the parallel (all-reduce) SGD baseline.
+//! * [`coordinator`] — the training orchestrator: node state, topology
+//!   schedule, warm-up all-reduce, metrics, transient-iteration detection.
+//! * [`costmodel`] — the α-β per-iteration communication-time model used to
+//!   reproduce the wall-clock columns of Tables 2–3.
+//! * [`runtime`] — PJRT CPU client that loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) produced by the build-time JAX/Pallas layers.
+//! * [`data`], [`models`] — synthetic workloads (logistic regression per
+//!   Appendix D.5, classification, tiny-corpus LM) and pure-Rust reference
+//!   models for laptop-scale sweeps.
+//! * [`exp`] — the experiment harness regenerating every table and figure
+//!   of the paper's evaluation.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request/training path is pure Rust.
+
+pub mod bench;
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod costmodel;
+pub mod data;
+pub mod exp;
+pub mod linalg;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod spectral;
+pub mod topology;
+pub mod util;

@@ -1,0 +1,157 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! The Metropolis weight matrices of ring, star, grid and torus topologies
+//! are symmetric doubly-stochastic, so their full real spectrum is obtained
+//! here. Convergence: off-diagonal Frobenius mass strictly decreases each
+//! rotation; we sweep until it drops below `tol · ‖A‖_F`.
+
+use super::matrix::Matrix;
+
+/// Result of a symmetric eigendecomposition.
+pub struct SymmetricEig {
+    /// Eigenvalues, sorted descending.
+    pub values: Vec<f64>,
+}
+
+/// Compute all eigenvalues of a symmetric matrix with the cyclic Jacobi
+/// method. Panics if `a` is not square; callers should ensure symmetry
+/// (asymmetry below `1e-9` is tolerated and symmetrized).
+pub fn sym_eigenvalues(a: &Matrix) -> SymmetricEig {
+    assert_eq!(a.rows(), a.cols(), "jacobi: non-square input");
+    let n = a.rows();
+    // Work on a symmetrized copy to wash out representation noise.
+    let mut m = a.clone();
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let s = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = s;
+            m[(j, i)] = s;
+        }
+    }
+    let norm = m.fro_norm().max(f64::MIN_POSITIVE);
+    let tol = 1e-14 * norm;
+    let max_sweeps = 64;
+
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() <= tol / (n as f64) {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Classic Jacobi rotation angle.
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Apply rotation G(p,q,θ)ᵀ · M · G(p,q,θ).
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+            }
+        }
+    }
+
+    let mut values: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    values.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    SymmetricEig { values }
+}
+
+/// Second-largest eigenvalue *magnitude* of a symmetric doubly-stochastic
+/// matrix: `ρ(W) = max_{λ_i ≠ λ_max} |λ_i|` where the top eigenvalue 1 is
+/// excluded once.
+pub fn sym_rho(w: &Matrix) -> f64 {
+    let eig = sym_eigenvalues(w);
+    // Exclude exactly one copy of the (largest) Perron eigenvalue ≈ 1.
+    let mut mags: Vec<f64> = eig.values.iter().map(|v| v.abs()).collect();
+    // values are sorted descending; values[0] ≈ 1 is the Perron root.
+    let perron_idx = 0;
+    mags.remove(perron_idx);
+    mags.into_iter().fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_matrix_eigs_are_diagonal() {
+        let mut a = Matrix::zeros(4, 4);
+        for (i, v) in [3.0, -1.0, 0.5, 2.0].iter().enumerate() {
+            a[(i, i)] = *v;
+        }
+        let eig = sym_eigenvalues(&a);
+        assert_eq!(eig.values, vec![3.0, 2.0, 0.5, -1.0]);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3 and 1.
+        let a = Matrix::from_rows(2, 2, &[2.0, 1.0, 1.0, 2.0]);
+        let eig = sym_eigenvalues(&a);
+        assert!((eig.values[0] - 3.0).abs() < 1e-12);
+        assert!((eig.values[1] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_and_frobenius_invariants() {
+        // Random symmetric matrix: Σλ = tr(A), Σλ² = ‖A‖_F².
+        let n = 12;
+        let mut a = Matrix::zeros(n, n);
+        let mut state = 0x9e3779b97f4a7c15u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+        };
+        for i in 0..n {
+            for j in i..n {
+                let v = next();
+                a[(i, j)] = v;
+                a[(j, i)] = v;
+            }
+        }
+        let tr: f64 = (0..n).map(|i| a[(i, i)]).sum();
+        let fro2 = a.fro_norm().powi(2);
+        let eig = sym_eigenvalues(&a);
+        let sum: f64 = eig.values.iter().sum();
+        let sum2: f64 = eig.values.iter().map(|v| v * v).sum();
+        assert!((sum - tr).abs() < 1e-9, "trace mismatch: {sum} vs {tr}");
+        assert!((sum2 - fro2).abs() < 1e-8, "fro mismatch: {sum2} vs {fro2}");
+    }
+
+    #[test]
+    fn rho_of_averaging_matrix_is_zero() {
+        let j = Matrix::averaging(6);
+        assert!(sym_rho(&j) < 1e-12);
+    }
+
+    #[test]
+    fn rho_of_identity_is_one() {
+        // I has eigenvalue 1 with multiplicity n; removing one copy leaves 1.
+        assert!((sym_rho(&Matrix::eye(5)) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Dense linear-algebra substrate.
+//!
+//! The spectral analysis in the paper needs three tools, all implemented
+//! here from scratch (no external linear-algebra crates):
+//!
+//! * [`Complex`] arithmetic and a radix-agnostic [`fft`] module — circulant
+//!   weight matrices (static exponential graph, Eq. (5)) have eigenvalues
+//!   given by the DFT of their generating vector (Lemma 2 of the paper).
+//! * A cyclic [`jacobi`] eigensolver for symmetric matrices — the
+//!   Metropolis weight matrices of ring/star/grid/torus are symmetric.
+//! * [`power`] iteration on `(W−J)ᵀ(W−J)` for the consensus-relevant
+//!   spectral norm `‖W − 11ᵀ/n‖₂` of arbitrary (possibly non-symmetric,
+//!   time-varying) weight matrices.
+
+pub mod complex;
+pub mod fft;
+pub mod jacobi;
+pub mod matrix;
+pub mod power;
+
+pub use complex::Complex;
+pub use matrix::Matrix;

@@ -1,0 +1,110 @@
+//! Power iteration for spectral norms.
+//!
+//! The consensus analysis needs `‖W − 11ᵀ/n‖₂` for arbitrary (possibly
+//! non-symmetric, possibly products of time-varying) weight matrices —
+//! Proposition 1 establishes this equals ρ(W) for exponential graphs, and
+//! Fig. 12 tracks `‖∏ Ŵ^{(i)}‖₂²` over iterations. Since `‖A‖₂² =
+//! λ_max(AᵀA)` and `AᵀA` is symmetric PSD, plain power iteration converges
+//! monotonically in the Rayleigh quotient.
+
+use super::matrix::Matrix;
+
+/// Deterministic starting vector that is extremely unlikely to be orthogonal
+/// to the top eigenvector: pseudo-random entries from a fixed LCG.
+fn seed_vector(n: usize, seed: u64) -> Vec<f64> {
+    let mut state = seed | 1;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 1.0
+        })
+        .collect()
+}
+
+fn normalize(v: &mut [f64]) -> f64 {
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    if norm > 0.0 {
+        for x in v.iter_mut() {
+            *x /= norm;
+        }
+    }
+    norm
+}
+
+/// Largest eigenvalue of a symmetric PSD matrix via power iteration.
+pub fn psd_top_eigenvalue(a: &Matrix, max_iters: usize, tol: f64) -> f64 {
+    assert_eq!(a.rows(), a.cols());
+    let n = a.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let mut v = seed_vector(n, 0xE55AF00D);
+    normalize(&mut v);
+    let mut lambda = 0.0;
+    for _ in 0..max_iters {
+        let mut w = a.matvec(&v);
+        let norm = normalize(&mut w);
+        if (norm - lambda).abs() <= tol * lambda.max(1e-30) {
+            return norm;
+        }
+        lambda = norm;
+        v = w;
+    }
+    lambda
+}
+
+/// Spectral norm `‖A‖₂ = σ_max(A)` via power iteration on `AᵀA`.
+pub fn spectral_norm(a: &Matrix) -> f64 {
+    let ata = a.transpose().matmul(a);
+    psd_top_eigenvalue(&ata, 10_000, 1e-14).max(0.0).sqrt()
+}
+
+/// `‖W − 11ᵀ/n‖₂` — the consensus contraction factor of a weight matrix.
+pub fn consensus_norm(w: &Matrix) -> f64 {
+    spectral_norm(&w.consensus_residue())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spectral_norm_of_diagonal() {
+        let mut a = Matrix::zeros(3, 3);
+        a[(0, 0)] = -4.0;
+        a[(1, 1)] = 2.0;
+        a[(2, 2)] = 1.0;
+        assert!((spectral_norm(&a) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spectral_norm_nonsymmetric_known() {
+        // A = [[0, 2], [0, 0]] has σ_max = 2 (ρ(A) = 0 — norm ≠ spectral radius).
+        let a = Matrix::from_rows(2, 2, &[0.0, 2.0, 0.0, 0.0]);
+        assert!((spectral_norm(&a) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_norm_of_averaging_is_zero() {
+        assert!(consensus_norm(&Matrix::averaging(8)) < 1e-9);
+    }
+
+    #[test]
+    fn consensus_norm_of_identity_is_one() {
+        assert!((consensus_norm(&Matrix::eye(8)) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn matches_jacobi_on_symmetric() {
+        // For symmetric W, ‖W − J‖₂ should equal max |λ_i| over non-Perron λ
+        // when W is doubly stochastic. Use a symmetric gossip-like matrix.
+        let w = Matrix::from_rows(
+            3,
+            3,
+            &[0.5, 0.25, 0.25, 0.25, 0.5, 0.25, 0.25, 0.25, 0.5],
+        );
+        let via_power = consensus_norm(&w);
+        let via_jacobi = crate::linalg::jacobi::sym_rho(&w);
+        assert!((via_power - via_jacobi).abs() < 1e-9, "{via_power} vs {via_jacobi}");
+    }
+}

@@ -1,0 +1,182 @@
+//! `expograph` — CLI launcher for the decentralized-training framework.
+//!
+//! Subcommands:
+//!   exp <id|all> [--scale S] [--seed N] [--out DIR]   regenerate paper tables/figures
+//!   train [--config FILE] [key=value ...]             one decentralized training run
+//!   spectral <topology> <n>                           spectral gap of a topology
+//!   info                                              artifact + runtime status
+
+use anyhow::{bail, Context, Result};
+use expograph::config::RunConfig;
+use expograph::coordinator::trainer::{TrainConfig, Trainer};
+use expograph::coordinator::LrSchedule;
+use expograph::costmodel::CostModel;
+use expograph::exp::{self, Ctx};
+use expograph::spectral;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+const USAGE: &str = "\
+expograph — decentralized deep training over exponential graphs
+  (reproduction of Ying et al., NeurIPS 2021)
+
+USAGE:
+  expograph exp <id|all> [--scale S] [--seed N] [--out DIR]
+      ids: fig1 fig3 fig4 fig10 fig11 fig12 fig13
+           table1 table2 table3 table4 table5 table6 table7 table8 table9 table10
+      --scale S   protocol scale factor (1.0 = paper protocol, 0.1 = smoke)
+  expograph train [--config FILE] [key=value ...]
+      keys: nodes topology algorithm iters lr beta batch heterogeneous seed
+  expograph spectral <topology> <n>
+  expograph info
+";
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&args[1..]),
+        Some("train") => cmd_train(&args[1..]),
+        Some("spectral") => cmd_spectral(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help" | "-h" | "help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
+    }
+}
+
+fn cmd_exp(args: &[String]) -> Result<()> {
+    let mut ctx = Ctx::default();
+    let mut id: Option<&str> = None;
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        match arg.as_str() {
+            "--scale" => {
+                ctx.scale = it.next().context("--scale needs a value")?.parse()?;
+            }
+            "--seed" => {
+                ctx.seed = it.next().context("--seed needs a value")?.parse()?;
+            }
+            "--out" => {
+                ctx.out_dir = it.next().context("--out needs a value")?.into();
+            }
+            other if id.is_none() => id = Some(other),
+            other => bail!("unexpected argument {other}"),
+        }
+    }
+    let id = id.context("exp requires an experiment id (or 'all')")?;
+    let t0 = std::time::Instant::now();
+    exp::run(id, &ctx)?;
+    eprintln!("[exp {id}] done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let mut cfg = RunConfig::default();
+    let mut it = args.iter().peekable();
+    while let Some(arg) = it.next() {
+        if arg == "--config" {
+            let path = it.next().context("--config needs a file")?;
+            cfg = RunConfig::load(path)?;
+        } else if let Some((k, v)) = arg.split_once('=') {
+            cfg.set(k, v)?;
+        } else {
+            bail!("expected key=value, got {arg}");
+        }
+    }
+    println!("config: {cfg:?}");
+
+    // Logistic-regression workload (the Appendix D.5 protocol) — the
+    // fastest end-to-end demonstration of the full stack. For the deep
+    // model see examples/transformer_e2e.rs.
+    let problem = expograph::exp::logreg_runner::paper_problem(
+        cfg.nodes,
+        2000,
+        cfg.heterogeneous,
+        cfg.seed,
+    );
+    let provider =
+        expograph::exp::logreg_runner::LogRegProvider { problem: &problem, batch: cfg.batch };
+    let opt = cfg.algorithm.build(cfg.nodes, &vec![0.0f32; problem.d], cfg.beta);
+    let mut trainer = Trainer::new(
+        Schedule::new(cfg.topology, cfg.nodes, cfg.seed),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: cfg.iters,
+            lr: LrSchedule::HalveEvery { init: cfg.lr, every: (cfg.iters / 4).max(1) },
+            warmup_allreduce: cfg.warmup_allreduce,
+            record_every: (cfg.iters / 20).max(1),
+            parallel_grads: false,
+            seed: cfg.seed,
+            msg_bytes: None,
+            cost: Some(CostModel::paper_default(0.01)),
+        },
+    );
+    let hist = trainer.run_with(|k, params| {
+        println!(
+            "  iter {k:>6}  consensus {:.3e}",
+            params.consensus_distance()
+        );
+    });
+    println!(
+        "final: loss {:.4}  sim_time {:.2}s  consensus {:.3e}",
+        hist.loss.last().unwrap(),
+        hist.sim_time,
+        hist.consensus.last().unwrap().1
+    );
+    Ok(())
+}
+
+fn cmd_spectral(args: &[String]) -> Result<()> {
+    let kind = args
+        .first()
+        .and_then(|s| TopologyKind::parse(s))
+        .context("spectral <topology> <n>")?;
+    let n: usize = args.get(1).context("spectral <topology> <n>")?.parse()?;
+    if kind.is_time_varying() {
+        println!("{kind} is time-varying; per-realization ‖Ŵ‖₂ and exact-averaging stats:");
+        println!("  rho_max = {:.6}", expograph::consensus::one_peer_rho_max(n));
+        println!(
+            "  residue after tau={} steps: {:.3e}",
+            expograph::topology::exponential::tau(n),
+            expograph::consensus::one_peer_period_error(n, 0)
+        );
+        return Ok(());
+    }
+    let w = expograph::topology::schedule::static_weights(kind, n, 1);
+    let (rho, method) = spectral::rho_with_method(&w);
+    println!("topology={kind} n={n}");
+    println!("  rho = {rho:.6}  (method: {method:?})");
+    println!("  spectral gap 1-rho = {:.6}", 1.0 - rho);
+    if kind == TopologyKind::StaticExp {
+        println!(
+            "  Proposition 1 bound: rho <= {:.6} (equality iff n even)",
+            spectral::static_exp_rho_bound(n)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    println!("expograph {}", env!("CARGO_PKG_VERSION"));
+    let dir = expograph::runtime::Manifest::default_dir();
+    println!("artifacts dir: {}", dir.display());
+    match expograph::runtime::Manifest::load(&dir) {
+        Ok(m) => {
+            println!("manifest: {} artifacts", m.artifacts.len());
+            for a in &m.artifacts {
+                let ins: Vec<String> =
+                    a.inputs.iter().map(|i| format!("{:?}", i.shape)).collect();
+                println!("  {:<26} inputs {}", a.name, ins.join(" "));
+            }
+            match expograph::runtime::Runtime::new(&dir) {
+                Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+                Err(e) => println!("PJRT unavailable: {e}"),
+            }
+        }
+        Err(e) => println!("no artifacts: {e}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,262 @@
+//! Two-layer MLP classifier with manual backprop (f32).
+//!
+//! Architecture: `x → W1·x + b1 → tanh → W2·h + b2 → softmax CE`.
+//! Parameters live in one flat `Vec<f32>` (layout below) so the
+//! decentralized optimizers can treat models as opaque vectors — the same
+//! contract the AOT transformer artifacts use.
+
+use crate::data::classify::Dataset;
+use crate::util::rng::Pcg;
+
+/// MLP shape.
+#[derive(Clone, Copy, Debug)]
+pub struct MlpConfig {
+    pub input: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl MlpConfig {
+    /// Number of parameters: `h·d + h + C·h + C`.
+    pub fn param_count(&self) -> usize {
+        self.hidden * self.input + self.hidden + self.classes * self.hidden + self.classes
+    }
+}
+
+/// Flat-parameter MLP. All methods are stateless with respect to
+/// parameters — they take the flat slice explicitly.
+#[derive(Clone, Copy, Debug)]
+pub struct Mlp {
+    pub cfg: MlpConfig,
+}
+
+/// Offsets into the flat parameter vector.
+struct Layout {
+    w1: usize,
+    b1: usize,
+    w2: usize,
+    b2: usize,
+    end: usize,
+}
+
+impl Mlp {
+    pub fn new(cfg: MlpConfig) -> Mlp {
+        Mlp { cfg }
+    }
+
+    fn layout(&self) -> Layout {
+        let MlpConfig { input, hidden, classes } = self.cfg;
+        let w1 = 0;
+        let b1 = w1 + hidden * input;
+        let w2 = b1 + hidden;
+        let b2 = w2 + classes * hidden;
+        Layout { w1, b1, w2, b2, end: b2 + classes }
+    }
+
+    /// Xavier-style deterministic initialization.
+    pub fn init(&self, seed: u64) -> Vec<f32> {
+        let l = self.layout();
+        let mut rng = Pcg::new(seed, 0x317);
+        let mut p = vec![0.0f32; l.end];
+        let s1 = (2.0 / (self.cfg.input + self.cfg.hidden) as f64).sqrt();
+        for v in p[l.w1..l.b1].iter_mut() {
+            *v = (rng.normal() * s1) as f32;
+        }
+        let s2 = (2.0 / (self.cfg.hidden + self.cfg.classes) as f64).sqrt();
+        for v in p[l.w2..l.b2].iter_mut() {
+            *v = (rng.normal() * s2) as f32;
+        }
+        p
+    }
+
+    /// Forward pass logits for one sample into `logits` (scratch `hid` is
+    /// the tanh hidden activation).
+    fn forward(&self, params: &[f32], x: &[f32], hid: &mut [f32], logits: &mut [f32]) {
+        let l = self.layout();
+        let MlpConfig { input, hidden, classes } = self.cfg;
+        for h in 0..hidden {
+            let row = &params[l.w1 + h * input..l.w1 + (h + 1) * input];
+            let mut acc = params[l.b1 + h];
+            for (w, xi) in row.iter().zip(x.iter()) {
+                acc += w * xi;
+            }
+            hid[h] = acc.tanh();
+        }
+        for c in 0..classes {
+            let row = &params[l.w2 + c * hidden..l.w2 + (c + 1) * hidden];
+            let mut acc = params[l.b2 + c];
+            for (w, hv) in row.iter().zip(hid.iter()) {
+                acc += w * hv;
+            }
+            logits[c] = acc;
+        }
+    }
+
+    /// Mean cross-entropy loss and gradient over the minibatch `batch`
+    /// (indices into `data`). `grad` is zeroed and filled; returns loss.
+    pub fn loss_grad(
+        &self,
+        params: &[f32],
+        data: &Dataset,
+        batch: &[usize],
+        grad: &mut [f32],
+    ) -> f32 {
+        let l = self.layout();
+        assert_eq!(params.len(), l.end);
+        assert_eq!(grad.len(), l.end);
+        grad.iter_mut().for_each(|g| *g = 0.0);
+        let MlpConfig { input, hidden, classes } = self.cfg;
+        let mut hid = vec![0.0f32; hidden];
+        let mut logits = vec![0.0f32; classes];
+        let mut probs = vec![0.0f32; classes];
+        let mut dhid = vec![0.0f32; hidden];
+        let scale = 1.0 / batch.len() as f32;
+        let mut loss = 0.0f32;
+        for &idx in batch {
+            let x = data.feature(idx);
+            let y = data.labels[idx] as usize;
+            self.forward(params, x, &mut hid, &mut logits);
+            // Softmax + CE.
+            let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let mut z = 0.0f32;
+            for c in 0..classes {
+                probs[c] = (logits[c] - maxl).exp();
+                z += probs[c];
+            }
+            for c in 0..classes {
+                probs[c] /= z;
+            }
+            loss -= (probs[y].max(1e-12)).ln() * scale;
+            // Backprop: dlogits = probs − one_hot(y).
+            probs[y] -= 1.0;
+            dhid.iter_mut().for_each(|d| *d = 0.0);
+            for c in 0..classes {
+                let dl = probs[c] * scale;
+                grad[l.b2 + c] += dl;
+                let wrow = &params[l.w2 + c * hidden..l.w2 + (c + 1) * hidden];
+                let grow = &mut grad[l.w2 + c * hidden..l.w2 + (c + 1) * hidden];
+                for h in 0..hidden {
+                    grow[h] += dl * hid[h];
+                    dhid[h] += dl * wrow[h];
+                }
+            }
+            for h in 0..hidden {
+                let da = dhid[h] * (1.0 - hid[h] * hid[h]); // tanh'
+                grad[l.b1 + h] += da;
+                let grow = &mut grad[l.w1 + h * input..l.w1 + (h + 1) * input];
+                for (g, xi) in grow.iter_mut().zip(x.iter()) {
+                    *g += da * xi;
+                }
+            }
+        }
+        loss
+    }
+
+    /// Mean loss without gradient (for validation curves).
+    pub fn loss(&self, params: &[f32], data: &Dataset, batch: &[usize]) -> f32 {
+        let MlpConfig { hidden, classes, .. } = self.cfg;
+        let mut hid = vec![0.0f32; hidden];
+        let mut logits = vec![0.0f32; classes];
+        let mut loss = 0.0f32;
+        for &idx in batch {
+            let x = data.feature(idx);
+            let y = data.labels[idx] as usize;
+            self.forward(params, x, &mut hid, &mut logits);
+            let maxl = logits.iter().fold(f32::NEG_INFINITY, |m, &v| m.max(v));
+            let z: f32 = logits.iter().map(|&v| (v - maxl).exp()).sum();
+            loss += z.ln() + maxl - logits[y];
+        }
+        loss / batch.len() as f32
+    }
+
+    /// Top-1 accuracy over a dataset.
+    pub fn accuracy(&self, params: &[f32], data: &Dataset) -> f64 {
+        let MlpConfig { hidden, classes, .. } = self.cfg;
+        let mut hid = vec![0.0f32; hidden];
+        let mut logits = vec![0.0f32; classes];
+        let mut correct = 0usize;
+        for i in 0..data.len {
+            self.forward(params, data.feature(i), &mut hid, &mut logits);
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if pred as u32 == data.labels[i] {
+                correct += 1;
+            }
+        }
+        correct as f64 / data.len as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::classify::{generate, ClassifyConfig};
+
+    fn setup() -> (Mlp, Dataset, Dataset) {
+        let d = generate(&ClassifyConfig {
+            dim: 8,
+            classes: 4,
+            train_per_class: 60,
+            val_per_class: 30,
+            separation: 2.5,
+            seed: 5,
+        });
+        let mlp = Mlp::new(MlpConfig { input: 8, hidden: 16, classes: 4 });
+        (mlp, d.train, d.val)
+    }
+
+    #[test]
+    fn param_count_matches_layout() {
+        let (mlp, _, _) = setup();
+        assert_eq!(mlp.cfg.param_count(), 16 * 8 + 16 + 4 * 16 + 4);
+        assert_eq!(mlp.init(0).len(), mlp.cfg.param_count());
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let (mlp, train, _) = setup();
+        let params = mlp.init(3);
+        let batch: Vec<usize> = (0..16).collect();
+        let mut grad = vec![0.0f32; params.len()];
+        let loss = mlp.loss_grad(&params, &train, &batch, &mut grad);
+        assert!((loss - mlp.loss(&params, &train, &batch)).abs() < 1e-5);
+        // Probe a spread of parameter indices.
+        let eps = 1e-3f32;
+        for &j in &[0usize, 5, 130, 140, 170, params.len() - 1] {
+            let mut pp = params.clone();
+            pp[j] += eps;
+            let lp = mlp.loss(&pp, &train, &batch);
+            pp[j] -= 2.0 * eps;
+            let lm = mlp.loss(&pp, &train, &batch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[j]).abs() < 2e-3_f32.max(0.05 * fd.abs()),
+                "j={j}: fd={fd} grad={}",
+                grad[j]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_learns_to_classify() {
+        let (mlp, train, val) = setup();
+        let mut params = mlp.init(1);
+        let mut grad = vec![0.0f32; params.len()];
+        let mut rng = Pcg::seeded(9);
+        let acc0 = mlp.accuracy(&params, &val);
+        for _ in 0..400 {
+            let batch: Vec<usize> = (0..32).map(|_| rng.below(train.len)).collect();
+            mlp.loss_grad(&params, &train, &batch, &mut grad);
+            for (p, g) in params.iter_mut().zip(grad.iter()) {
+                *p -= 0.1 * g;
+            }
+        }
+        let acc1 = mlp.accuracy(&params, &val);
+        assert!(acc1 > 0.7, "val accuracy {acc0} -> {acc1}");
+        assert!(acc1 > acc0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Pure-Rust reference models.
+//!
+//! These run the laptop-scale topology sweeps (Tables 2/3/4/9/10, Figs.
+//! 1/13) where one AOT artifact per `(n, shape)` combination would be
+//! impractical; the AOT transformer path (`runtime` + `python/compile`)
+//! covers the deep-learning end-to-end example. Both stacks share the same
+//! coordinator and optimizers.
+
+pub mod mlp;
+
+pub use mlp::{Mlp, MlpConfig};

@@ -1,0 +1,113 @@
+//! Decentralized optimizers.
+//!
+//! All operate on the stacked state `𝐱 ∈ R^{n×P}` with a per-iteration
+//! doubly-stochastic weight matrix `W^{(k)}`:
+//!
+//! * [`DSgd`] — decentralized SGD, adapt-then-combine:
+//!   `x⁺ = W(x − γ g)` (Lian et al. [30]; Table 10, Fig. 1).
+//! * [`DmSgd`] — decentralized momentum SGD, Algorithm 1 of the paper
+//!   (Yu et al. [64]): both the model *and the momentum* are partially
+//!   averaged, and the model update uses the *previous* momentum:
+//!   `m⁺ = W(βm + g)`, `x⁺ = W(x − γm)`.
+//! * [`VanillaDmSgd`] — momentum kept local (Assran et al. [3]):
+//!   `m⁺ = βm + g`, `x⁺ = Wx − γm⁺`.
+//! * [`QgDmSgd`] — quasi-global momentum (Lin et al. [32]): local step
+//!   with momentum, gossip, then momentum updated from the realized
+//!   model displacement `m⁺ = βm + (1−β)(x − x⁺)/γ`.
+//! * [`ParallelMSgd`] — the parallel (all-reduce) baseline: exact global
+//!   gradient averaging plus ordinary momentum.
+//!
+//! Every optimizer exposes the same [`Optimizer`] interface so the
+//! coordinator and the experiment harness can swap them freely.
+
+use crate::coordinator::mixing::SparseWeights;
+use crate::coordinator::state::StackedParams;
+
+pub mod algorithms;
+pub mod bias_corrected;
+
+pub use algorithms::{DSgd, DmSgd, ParallelMSgd, QgDmSgd, VanillaDmSgd};
+pub use bias_corrected::{GradientTracking, D2};
+
+/// The algorithm grid of Tables 3–4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgorithmKind {
+    DSgd,
+    DmSgd,
+    VanillaDmSgd,
+    QgDmSgd,
+    ParallelSgd,
+    /// D²/Exact-Diffusion [57] — requires symmetric W (see
+    /// [`bias_corrected`]).
+    D2,
+    /// Gradient tracking (DIGing) — heterogeneity-robust on arbitrary
+    /// doubly-stochastic schedules.
+    GradientTracking,
+}
+
+impl AlgorithmKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::DSgd => "dsgd",
+            AlgorithmKind::DmSgd => "dmsgd",
+            AlgorithmKind::VanillaDmSgd => "vanilla_dmsgd",
+            AlgorithmKind::QgDmSgd => "qg_dmsgd",
+            AlgorithmKind::ParallelSgd => "parallel_sgd",
+            AlgorithmKind::D2 => "d2",
+            AlgorithmKind::GradientTracking => "gradient_tracking",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<AlgorithmKind> {
+        Some(match s {
+            "dsgd" => AlgorithmKind::DSgd,
+            "dmsgd" => AlgorithmKind::DmSgd,
+            "vanilla_dmsgd" => AlgorithmKind::VanillaDmSgd,
+            "qg_dmsgd" => AlgorithmKind::QgDmSgd,
+            "parallel_sgd" | "parallel" => AlgorithmKind::ParallelSgd,
+            "d2" => AlgorithmKind::D2,
+            "gradient_tracking" | "diging" => AlgorithmKind::GradientTracking,
+            _ => return None,
+        })
+    }
+
+    /// Instantiate with replicated initial parameters.
+    pub fn build(&self, n: usize, init: &[f32], beta: f32) -> Box<dyn Optimizer> {
+        let x = StackedParams::replicate(n, init);
+        match self {
+            AlgorithmKind::DSgd => Box::new(DSgd::new(x)),
+            AlgorithmKind::DmSgd => Box::new(DmSgd::new(x, beta)),
+            AlgorithmKind::VanillaDmSgd => Box::new(VanillaDmSgd::new(x, beta)),
+            AlgorithmKind::QgDmSgd => Box::new(QgDmSgd::new(x, beta)),
+            AlgorithmKind::ParallelSgd => Box::new(ParallelMSgd::new(x, beta)),
+            AlgorithmKind::D2 => Box::new(D2::new(x)),
+            AlgorithmKind::GradientTracking => Box::new(GradientTracking::new(x)),
+        }
+    }
+}
+
+impl std::fmt::Display for AlgorithmKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Interface every decentralized optimizer implements.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// One training iteration: per-node stochastic gradients `g^{(k)}` and
+    /// this iteration's weight matrix (sparse form), learning rate `γ_k`.
+    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32);
+
+    /// Current stacked parameters.
+    fn params(&self) -> &StackedParams;
+
+    /// Mutable parameters (used by the warm-up all-reduce).
+    fn params_mut(&mut self) -> &mut StackedParams;
+
+    /// Does this optimizer ignore `W` and use exact global averaging?
+    fn is_parallel(&self) -> bool {
+        false
+    }
+}

@@ -1,0 +1,188 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. `artifacts/manifest.json` describes every HLO-text
+//! artifact (input shapes/dtypes, output arity, model metadata).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element dtype of an artifact input.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "float32" => Dtype::F32,
+            "int32" => Dtype::I32,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+}
+
+/// One input tensor description.
+#[derive(Clone, Debug)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl InputSpec {
+    pub fn num_elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Absolute path to the `.hlo.txt` file.
+    pub path: PathBuf,
+    pub inputs: Vec<InputSpec>,
+    pub num_outputs: usize,
+    /// Free-form metadata (param_count, model config, …).
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ArtifactSpec {
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).map(|v| *v as usize)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let mut artifacts = Vec::new();
+        for entry in doc
+            .get("artifacts")
+            .and_then(Json::as_array)
+            .ok_or_else(|| anyhow!("manifest missing artifacts array"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string();
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("artifact {name} missing file"))?;
+            let mut inputs = Vec::new();
+            for inp in entry
+                .get("inputs")
+                .and_then(Json::as_array)
+                .ok_or_else(|| anyhow!("artifact {name} missing inputs"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .and_then(Json::as_array)
+                    .ok_or_else(|| anyhow!("input missing shape"))?
+                    .iter()
+                    .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape")))
+                    .collect::<Result<Vec<_>>>()?;
+                let dtype = Dtype::parse(
+                    inp.get("dtype").and_then(Json::as_str).unwrap_or("float32"),
+                )?;
+                inputs.push(InputSpec { shape, dtype });
+            }
+            let num_outputs = entry
+                .get("num_outputs")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("artifact {name} missing num_outputs"))?;
+            let mut meta = BTreeMap::new();
+            if let Some(obj) = entry.get("meta").and_then(Json::as_object) {
+                for (k, v) in obj {
+                    if let Some(num) = v.as_f64() {
+                        meta.insert(k.clone(), num);
+                    }
+                }
+            }
+            artifacts.push(ArtifactSpec { name, path: dir.join(file), inputs, num_outputs, meta });
+        }
+        Ok(Manifest { artifacts, dir })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest (have: {:?})",
+                self.artifacts.iter().map(|a| a.name.as_str()).collect::<Vec<_>>()))
+    }
+
+    /// Default artifacts directory: `$EXPOGRAPH_ARTIFACTS` or `artifacts/`
+    /// relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("EXPOGRAPH_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let tmp = std::env::temp_dir().join(format!("expograph-test-{}", std::process::id()));
+        std::fs::create_dir_all(&tmp).unwrap();
+        write_manifest(
+            &tmp,
+            r#"{"version":1,"artifacts":[
+                {"name":"a","file":"a.hlo.txt",
+                 "inputs":[{"shape":[3,4],"dtype":"float32"},{"shape":[2],"dtype":"int32"}],
+                 "num_outputs":2,"meta":{"param_count":12}}]}"#,
+        );
+        let m = Manifest::load(&tmp).unwrap();
+        let a = m.get("a").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![3, 4]);
+        assert_eq!(a.inputs[0].num_elements(), 12);
+        assert_eq!(a.inputs[1].dtype, Dtype::I32);
+        assert_eq!(a.meta_usize("param_count"), Some(12));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_helpful() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Integration: if `make artifacts` ran, the real manifest parses.
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("logreg_grad").is_ok());
+            assert!(m.get("transformer_step").is_ok());
+            assert!(m.get("gossip_update").is_ok());
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! `Runtime` owns the CPU PJRT client; `Executable` wraps one compiled
+//! artifact with shape checking against the manifest; `TransformerExecutor`
+//! and `LogRegExecutor` add typed front-ends matching the artifact
+//! signatures emitted by `python/compile/aot.py`.
+//!
+//! PJRT handles are `Rc`-backed (not `Send`/`Sync`), so executors live on
+//! the coordinator thread; per-node gradient calls are issued sequentially
+//! (one CPU client already uses all cores for a single execution).
+
+use super::artifact::{ArtifactSpec, Dtype, Manifest};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Typed view of one artifact input buffer.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// The PJRT runtime: client + manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// CPU client over the artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest })
+    }
+
+    /// Default artifacts location (env var or workspace `artifacts/`).
+    pub fn from_default_dir() -> Result<Runtime> {
+        Runtime::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact by manifest name.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let spec = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        Ok(Executable { exe, spec })
+    }
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    /// Execute with shape-checked inputs; returns the decomposed output
+    /// tuple as literals.
+    pub fn run(&self, inputs: &[Input]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (idx, (input, ispec)) in inputs.iter().zip(self.spec.inputs.iter()).enumerate() {
+            let dims: Vec<i64> = ispec.shape.iter().map(|&d| d as i64).collect();
+            let lit = match (input, ispec.dtype) {
+                (Input::F32(data), Dtype::F32) => {
+                    if data.len() != ispec.num_elements() {
+                        bail!(
+                            "{} input {idx}: expected {} f32 elements, got {}",
+                            self.spec.name,
+                            ispec.num_elements(),
+                            data.len()
+                        );
+                    }
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                (Input::I32(data), Dtype::I32) => {
+                    if data.len() != ispec.num_elements() {
+                        bail!(
+                            "{} input {idx}: expected {} i32 elements, got {}",
+                            self.spec.name,
+                            ispec.num_elements(),
+                            data.len()
+                        );
+                    }
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+                _ => bail!("{} input {idx}: dtype mismatch", self.spec.name),
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outputs = result.to_tuple()?;
+        if outputs.len() != self.spec.num_outputs {
+            bail!(
+                "artifact {} returned {} outputs, manifest says {}",
+                self.spec.name,
+                outputs.len(),
+                self.spec.num_outputs
+            );
+        }
+        Ok(outputs)
+    }
+}
+
+/// Typed front-end for the `transformer_step*` artifacts:
+/// `(flat_params f32[P], window i32[B, S+1]) → (loss f32[], grad f32[P])`.
+pub struct TransformerExecutor {
+    exe: Executable,
+    pub param_count: usize,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TransformerExecutor {
+    pub fn load(rt: &Runtime, name: &str) -> Result<TransformerExecutor> {
+        let exe = rt.load(name)?;
+        let spec = exe.spec();
+        let param_count = spec
+            .meta_usize("param_count")
+            .context("transformer artifact missing param_count meta")?;
+        let batch = spec.meta_usize("batch").context("missing batch meta")?;
+        let seq = spec.meta_usize("seq").context("missing seq meta")?;
+        Ok(TransformerExecutor { exe, param_count, batch, seq })
+    }
+
+    /// One gradient evaluation. `window` is `batch × (seq+1)` i32 tokens.
+    pub fn loss_and_grad(&self, params: &[f32], window: &[i32], grad_out: &mut [f32]) -> Result<f32> {
+        let outputs = self.exe.run(&[Input::F32(params), Input::I32(window)])?;
+        let loss = outputs[0].to_vec::<f32>()?[0];
+        let grad = outputs[1].to_vec::<f32>()?;
+        if grad.len() != grad_out.len() {
+            bail!("grad length {} vs buffer {}", grad.len(), grad_out.len());
+        }
+        grad_out.copy_from_slice(&grad);
+        Ok(loss)
+    }
+}
+
+/// Typed front-end for `logreg_grad`:
+/// `(x f32[d], h f32[B,d], y f32[B]) → (loss f32[], grad f32[d])`.
+pub struct LogRegExecutor {
+    exe: Executable,
+    pub d: usize,
+    pub batch: usize,
+}
+
+impl LogRegExecutor {
+    pub fn load(rt: &Runtime) -> Result<LogRegExecutor> {
+        let exe = rt.load("logreg_grad")?;
+        let d = exe.spec().meta_usize("d").context("missing d meta")?;
+        let batch = exe.spec().meta_usize("batch").context("missing batch meta")?;
+        Ok(LogRegExecutor { exe, d, batch })
+    }
+
+    pub fn loss_and_grad(&self, x: &[f32], h: &[f32], y: &[f32]) -> Result<(f32, Vec<f32>)> {
+        let outputs = self.exe.run(&[Input::F32(x), Input::F32(h), Input::F32(y)])?;
+        Ok((outputs[0].to_vec::<f32>()?[0], outputs[1].to_vec::<f32>()?))
+    }
+}
+
+/// Typed front-end for the `gossip_update*` artifacts (the Pallas kernel
+/// path): `(W, X, M, G, β, γ) → (X′, M′)` over `n × p` stacked state.
+pub struct GossipExecutor {
+    exe: Executable,
+    pub n: usize,
+    pub p: usize,
+}
+
+impl GossipExecutor {
+    pub fn load(rt: &Runtime, name: &str) -> Result<GossipExecutor> {
+        let exe = rt.load(name)?;
+        let n = exe.spec().meta_usize("n").context("missing n meta")?;
+        let p = exe.spec().meta_usize("p").context("missing p meta")?;
+        Ok(GossipExecutor { exe, n, p })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    pub fn update(
+        &self,
+        w: &[f32],
+        x: &[f32],
+        m: &[f32],
+        g: &[f32],
+        beta: f32,
+        gamma: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let outputs = self.exe.run(&[
+            Input::F32(w),
+            Input::F32(x),
+            Input::F32(m),
+            Input::F32(g),
+            Input::F32(&[beta]),
+            Input::F32(&[gamma]),
+        ])?;
+        Ok((outputs[0].to_vec::<f32>()?, outputs[1].to_vec::<f32>()?))
+    }
+}

@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client from
+//! the coordinator hot path. Python is never invoked here.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactSpec, Manifest};
+pub use executor::{Executable, GossipExecutor, Input, LogRegExecutor, Runtime, TransformerExecutor};

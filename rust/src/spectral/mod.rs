@@ -1,0 +1,192 @@
+//! Spectral-gap analysis (Sec. 3 of the paper).
+//!
+//! `ρ(W) = max_{λ_i(W) ≠ 1} |λ_i(W)|` — the second largest eigenvalue
+//! magnitude; `1 − ρ` is the spectral gap. Dispatch:
+//!
+//! * symmetric `W` (Metropolis topologies) → Jacobi eigensolver,
+//! * circulant `W` (exponential graphs) → DFT of the generating vector
+//!   (Lemma 2 / Appendix A.2),
+//! * anything else → power iteration on the residue, giving `‖W − J‖₂`
+//!   which upper-bounds ρ (and equals it for normal matrices).
+
+use crate::linalg::{fft, jacobi, power, Matrix};
+use crate::topology::exponential::{self, tau};
+use crate::topology::{schedule, TopologyKind};
+
+/// How a ρ value was computed (for reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RhoMethod {
+    SymmetricEig,
+    CirculantDft,
+    ResidueNorm,
+}
+
+/// Detect whether `w` is circulant: `w[i][j]` depends only on `(i−j) mod n`.
+pub fn is_circulant(w: &Matrix, tol: f64) -> bool {
+    let n = w.rows();
+    if n != w.cols() {
+        return false;
+    }
+    for i in 1..n {
+        for j in 0..n {
+            if (w[(i, j)] - w[(0, (j + n - i) % n)]).abs() > tol {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// First column of a circulant matrix (its generating vector).
+pub fn generating_vector(w: &Matrix) -> Vec<f64> {
+    (0..w.rows()).map(|i| w[(i, 0)]).collect()
+}
+
+/// ρ of a circulant doubly-stochastic matrix via DFT: drop the `k = 0`
+/// (Perron) eigenvalue, take the max remaining magnitude.
+pub fn circulant_rho(w: &Matrix) -> f64 {
+    let c = generating_vector(w);
+    let eigs = fft::circulant_eigenvalues(&c);
+    eigs.iter().skip(1).map(|z| z.abs()).fold(0.0, f64::max)
+}
+
+/// ρ(W) with method dispatch. Returns `(rho, method)`.
+pub fn rho_with_method(w: &Matrix) -> (f64, RhoMethod) {
+    if w.is_symmetric(1e-12) {
+        (jacobi::sym_rho(w), RhoMethod::SymmetricEig)
+    } else if is_circulant(w, 1e-12) {
+        (circulant_rho(w), RhoMethod::CirculantDft)
+    } else {
+        (power::consensus_norm(w), RhoMethod::ResidueNorm)
+    }
+}
+
+/// ρ(W).
+pub fn rho(w: &Matrix) -> f64 {
+    rho_with_method(w).0
+}
+
+/// Spectral gap `1 − ρ(W)`.
+pub fn spectral_gap(w: &Matrix) -> f64 {
+    1.0 - rho(w)
+}
+
+/// Proposition 1's bound for the static exponential graph:
+/// `ρ ≤ (τ−1)/(τ+1)` i.e. `1 − ρ ≥ 2/(τ+1)`, with equality for even n.
+pub fn static_exp_rho_bound(n: usize) -> f64 {
+    let t = tau(n) as f64;
+    (t - 1.0) / (t + 1.0)
+}
+
+/// Spectral gap of a topology kind at size `n` (numerical).
+pub fn topology_gap(kind: TopologyKind, n: usize, seed: u64) -> f64 {
+    let w = schedule::static_weights(kind, n, seed);
+    spectral_gap(&w)
+}
+
+/// Numerically verify both claims of Proposition 1 for one `n`:
+/// returns `(rho_dft, residue_norm, bound)`.
+pub fn verify_proposition1(n: usize) -> (f64, f64, f64) {
+    let w = exponential::static_exp_weights(n);
+    let r = circulant_rho(&w);
+    let norm = power::consensus_norm(&w);
+    (r, norm, static_exp_rho_bound(n))
+}
+
+/// Theory rows of Table 5 (Appendix A.3.2): asymptotic `1−ρ` and max
+/// degree per topology, as closed-form functions of `n` where the paper
+/// gives them.
+pub fn table5_theory(kind: TopologyKind, n: usize) -> (String, String) {
+    let nf = n as f64;
+    let log2n = (nf.log2()).max(1.0);
+    match kind {
+        TopologyKind::Ring => (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), "2".into()),
+        TopologyKind::Star => (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), format!("{}", n - 1)),
+        TopologyKind::Grid2D => {
+            (format!("O(1/(n log n)) ~ {:.2e}", 1.0 / (nf * log2n)), "4".into())
+        }
+        TopologyKind::Torus2D => (format!("O(1/n) ~ {:.2e}", 1.0 / nf), "4".into()),
+        TopologyKind::HalfRandom => ("O(1)".into(), format!("{}", (n - 1) / 2)),
+        TopologyKind::RandomMatch => ("N.A.".into(), "1".into()),
+        TopologyKind::StaticExp => (
+            format!("2/(1+ceil(log2 n)) = {:.4}", 2.0 / (1.0 + tau(n) as f64)),
+            format!("{}", tau(n)),
+        ),
+        TopologyKind::OnePeerExp => ("N.A. (time-varying)".into(), "1".into()),
+        _ => ("-".into(), "-".into()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::exponential::static_exp_weights;
+
+    #[test]
+    fn proposition1_even_n_exact() {
+        // Even n: 1 − ρ = 2/(1+τ) exactly.
+        for n in [4usize, 6, 8, 10, 16, 32, 64, 128, 200] {
+            let (rho_dft, norm, bound) = verify_proposition1(n);
+            assert!(
+                (rho_dft - bound).abs() < 1e-10,
+                "n={n}: rho={rho_dft} bound={bound}"
+            );
+            // ‖W − J‖₂ = ρ(W) (second claim of Prop. 1).
+            assert!((norm - rho_dft).abs() < 1e-7, "n={n}: norm={norm} rho={rho_dft}");
+        }
+    }
+
+    #[test]
+    fn proposition1_odd_n_strict() {
+        // Odd n: ρ strictly below the bound.
+        for n in [5usize, 7, 9, 15, 33, 65] {
+            let (rho_dft, _, bound) = verify_proposition1(n);
+            assert!(rho_dft < bound - 1e-12, "n={n}: rho={rho_dft} !< bound={bound}");
+            assert!(rho_dft > 0.0);
+        }
+    }
+
+    #[test]
+    fn circulant_detection() {
+        assert!(is_circulant(&static_exp_weights(6), 1e-12));
+        assert!(is_circulant(&Matrix::averaging(5), 1e-12));
+        let mut w = Matrix::averaging(4);
+        w[(0, 1)] += 0.1;
+        w[(0, 0)] -= 0.1;
+        assert!(!is_circulant(&w, 1e-12));
+    }
+
+    #[test]
+    fn gap_ordering_matches_figure3() {
+        // Fig. 3: gap(static exp) >> gap(grid) > gap(ring) for moderate n.
+        let n = 64;
+        let g_exp = topology_gap(TopologyKind::StaticExp, n, 0);
+        let g_grid = topology_gap(TopologyKind::Grid2D, n, 0);
+        let g_ring = topology_gap(TopologyKind::Ring, n, 0);
+        assert!(g_exp > g_grid && g_grid > g_ring, "{g_exp} {g_grid} {g_ring}");
+        // Exp graph: exactly 2/(1+6) for n=64.
+        assert!((g_exp - 2.0 / 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn hypercube_gap_matches_remark2() {
+        // Remark 2: hypercube (Metropolis ≡ 1/(1+log2 n) per edge) has
+        // gap 2/(1 + log2 n).
+        let n = 16;
+        let g = topology_gap(TopologyKind::Hypercube, n, 0);
+        assert!((g - 2.0 / 5.0).abs() < 1e-9, "g={g}");
+    }
+
+    #[test]
+    fn fully_connected_gap_is_one() {
+        assert!((topology_gap(TopologyKind::FullyConnected, 8, 0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rho_method_dispatch() {
+        let (_, m1) = rho_with_method(&schedule::static_weights(TopologyKind::Ring, 8, 0));
+        assert_eq!(m1, RhoMethod::SymmetricEig);
+        let (_, m2) = rho_with_method(&static_exp_weights(8));
+        assert_eq!(m2, RhoMethod::CirculantDft);
+    }
+}

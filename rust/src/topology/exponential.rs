@@ -1,0 +1,290 @@
+//! Exponential graphs — the paper's contribution.
+//!
+//! * **Static exponential graph** (Sec. 3, Eq. (5)): node `i` receives from
+//!   nodes `i + 2^t (mod n)` for `t = 0..τ−1`, `τ = ⌈log₂ n⌉`, every entry
+//!   `1/(τ+1)`. The matrix is circulant and doubly stochastic but (for
+//!   `n > 2`) *not* symmetric.
+//! * **One-peer exponential graph** (Sec. 4, Eq. (7)): at iteration `k`
+//!   node `i` averages ½–½ with the single neighbor `i + 2^{mod(k,τ)}`
+//!   (mod n). For `n = 2^τ`, any `τ` distinct realizations multiply to
+//!   exact averaging (Lemma 1).
+//!
+//! Sampling strategies for the one-peer sequence (Appendix B.3.2):
+//! cyclic (the paper's default), random permutation (still exact-averaging),
+//! and uniform sampling with replacement (only asymptotically exact).
+
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg;
+
+/// `τ = ⌈log₂ n⌉` — the period of the one-peer schedule and the degree of
+/// the static graph.
+pub fn tau(n: usize) -> usize {
+    assert!(n >= 1);
+    if n == 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Hop offsets of the static exponential graph: `2^0, 2^1, …, 2^{τ−1}`
+/// (all `< n`, all distinct).
+pub fn hop_offsets(n: usize) -> Vec<usize> {
+    (0..tau(n)).map(|t| 1usize << t).collect()
+}
+
+/// Weight matrix of the static exponential graph (Eq. (5)).
+pub fn static_exp_weights(n: usize) -> Matrix {
+    let t = tau(n);
+    let coeff = 1.0 / (t as f64 + 1.0);
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        w[(i, i)] = coeff;
+        for &h in &hop_offsets(n) {
+            let j = (i + h) % n;
+            // For n = 1 or degenerate offsets j == i, fold into the diagonal.
+            w[(i, j)] += coeff;
+        }
+    }
+    if n == 1 {
+        w[(0, 0)] = 1.0;
+    }
+    w
+}
+
+/// Generating vector (first column) of the static exponential circulant:
+/// entry `c[d] = 1/(τ+1)` iff `d = 0` or `d = n − 2^t` for some hop `2^t`.
+///
+/// (`W[i][j] ≠ 0` iff `j − i ≡ 2^t`, i.e. first-column index
+/// `d = i − j ≡ −2^t (mod n)`.)
+pub fn static_exp_generating_vector(n: usize) -> Vec<f64> {
+    let t = tau(n);
+    let coeff = 1.0 / (t as f64 + 1.0);
+    let mut c = vec![0.0; n];
+    c[0] = coeff;
+    for &h in &hop_offsets(n) {
+        c[(n - h % n) % n] += coeff;
+    }
+    if n == 1 {
+        c[0] = 1.0;
+    }
+    c
+}
+
+/// Weight matrix of the one-peer exponential realization with hop exponent
+/// `t` (i.e. `W^{(k)}` with `t = mod(k, τ)`): Eq. (7).
+pub fn one_peer_exp_weights(n: usize, t: usize) -> Matrix {
+    let period = tau(n);
+    let mut w = Matrix::zeros(n, n);
+    if n == 1 {
+        w[(0, 0)] = 1.0;
+        return w;
+    }
+    let hop = 1usize << (t % period.max(1));
+    for i in 0..n {
+        let j = (i + hop) % n;
+        w[(i, i)] += 0.5;
+        w[(i, j)] += 0.5;
+    }
+    w
+}
+
+/// How the one-peer sequence walks through the τ hop exponents.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OnePeerOrder {
+    /// `t = mod(k, τ)` — the paper's default (Eq. (7)).
+    Cyclic,
+    /// Random permutation of `{0..τ}` per period, sampled without
+    /// replacement (Appendix B.3.2 — retains exact averaging).
+    RandomPermutation,
+    /// Uniform sampling with replacement (Appendix B.3.2 — only
+    /// asymptotically exact).
+    UniformSampling,
+}
+
+/// Stateful generator of one-peer hop exponents under a sampling strategy.
+#[derive(Clone, Debug)]
+pub struct OnePeerSequence {
+    n: usize,
+    order: OnePeerOrder,
+    rng: Pcg,
+    perm: Vec<usize>,
+    pos: usize,
+}
+
+impl OnePeerSequence {
+    pub fn new(n: usize, order: OnePeerOrder, seed: u64) -> Self {
+        OnePeerSequence { n, order, rng: Pcg::new(seed, 0x0E), perm: Vec::new(), pos: 0 }
+    }
+
+    /// Hop exponent for iteration `k`. For `Cyclic` this is a pure function
+    /// of `k`; the random strategies consume the internal RNG and must be
+    /// called with consecutive `k`.
+    pub fn exponent_at(&mut self, k: usize) -> usize {
+        let period = tau(self.n).max(1);
+        match self.order {
+            OnePeerOrder::Cyclic => k % period,
+            OnePeerOrder::UniformSampling => self.rng.below(period),
+            OnePeerOrder::RandomPermutation => {
+                if self.pos == 0 || self.pos >= self.perm.len() {
+                    self.perm = self.rng.permutation(period);
+                    self.pos = 0;
+                }
+                let t = self.perm[self.pos];
+                self.pos += 1;
+                t
+            }
+        }
+    }
+
+    /// Weight matrix for iteration `k`.
+    pub fn weight_at(&mut self, k: usize) -> Matrix {
+        let t = self.exponent_at(k);
+        one_peer_exp_weights(self.n, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::weight::{is_doubly_stochastic, max_comm_degree};
+
+    #[test]
+    fn tau_values() {
+        assert_eq!(tau(1), 0);
+        assert_eq!(tau(2), 1);
+        assert_eq!(tau(3), 2);
+        assert_eq!(tau(4), 2);
+        assert_eq!(tau(5), 3);
+        assert_eq!(tau(6), 3);
+        assert_eq!(tau(8), 3);
+        assert_eq!(tau(9), 4);
+        assert_eq!(tau(64), 6);
+        assert_eq!(tau(290), 9);
+    }
+
+    #[test]
+    fn static_exp_is_doubly_stochastic() {
+        for n in [2usize, 3, 4, 6, 8, 9, 16, 33, 64] {
+            let w = static_exp_weights(n);
+            assert!(is_doubly_stochastic(&w, 1e-12), "n={n}");
+        }
+    }
+
+    #[test]
+    fn static_exp_6node_matches_paper_figure() {
+        // Fig. 6: n=6, τ=3, nonzeros 1/4 at offsets {0,1,2,4}.
+        let w = static_exp_weights(6);
+        for i in 0..6 {
+            for j in 0..6 {
+                let offset = (j + 6 - i) % 6;
+                let expect = if matches!(offset, 0 | 1 | 2 | 4) { 0.25 } else { 0.0 };
+                assert!((w[(i, j)] - expect).abs() < 1e-15, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn static_exp_degree_is_tau() {
+        for n in [4usize, 8, 16, 32, 64] {
+            let w = static_exp_weights(n);
+            // Directed: each node sends to τ nodes and receives from τ nodes;
+            // for power-of-two n the union has 2τ (τ=1: same node) members...
+            // comm degree counts distinct *partners*, direction-agnostic.
+            let deg = max_comm_degree(&w);
+            let t = tau(n);
+            assert!(deg <= 2 * t && deg >= t, "n={n} deg={deg} tau={t}");
+        }
+    }
+
+    #[test]
+    fn generating_vector_reconstructs_matrix() {
+        for n in [5usize, 6, 8, 12] {
+            let c = static_exp_generating_vector(n);
+            let w = static_exp_weights(n);
+            for i in 0..n {
+                for j in 0..n {
+                    let d = (i + n - j) % n;
+                    assert!((w[(i, j)] - c[d]).abs() < 1e-15, "n={n} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_is_doubly_stochastic_with_degree_1() {
+        for n in [2usize, 3, 4, 6, 8, 16, 17] {
+            for t in 0..tau(n) {
+                let w = one_peer_exp_weights(n, t);
+                assert!(is_doubly_stochastic(&w, 1e-12), "n={n} t={t}");
+                assert!(max_comm_degree(&w) <= 2, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn one_peer_power_of_two_exact_averaging() {
+        // Lemma 1: product of all τ realizations equals J = 11ᵀ/n.
+        for n in [2usize, 4, 8, 16, 32] {
+            let mut prod = Matrix::eye(n);
+            for t in 0..tau(n) {
+                prod = one_peer_exp_weights(n, t).matmul(&prod);
+            }
+            let err = prod.sub(&Matrix::averaging(n)).max_abs();
+            assert!(err < 1e-12, "n={n} err={err}");
+        }
+    }
+
+    #[test]
+    fn one_peer_non_power_of_two_not_exact() {
+        // Remark 4: no exact averaging for n not a power of 2.
+        for n in [3usize, 5, 6, 12] {
+            let mut prod = Matrix::eye(n);
+            for t in 0..tau(n) {
+                prod = one_peer_exp_weights(n, t).matmul(&prod);
+            }
+            let err = prod.sub(&Matrix::averaging(n)).max_abs();
+            assert!(err > 1e-3, "n={n} unexpectedly exact");
+        }
+    }
+
+    #[test]
+    fn one_peer_any_order_exact_averaging() {
+        // Lemma 3: any ordering of the τ distinct matrices works (they
+        // commute — all circulant).
+        let n = 16;
+        let orders = [[3usize, 0, 2, 1], [1, 3, 0, 2]];
+        for ord in orders {
+            let mut prod = Matrix::eye(n);
+            for &t in &ord {
+                prod = one_peer_exp_weights(n, t).matmul(&prod);
+            }
+            assert!(prod.sub(&Matrix::averaging(n)).max_abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sequence_strategies_cover_period() {
+        let n = 16;
+        let period = tau(n);
+        // Cyclic: exponents are 0,1,2,3,0,1,...
+        let mut cyc = OnePeerSequence::new(n, OnePeerOrder::Cyclic, 1);
+        let exps: Vec<usize> = (0..8).map(|k| cyc.exponent_at(k)).collect();
+        assert_eq!(exps, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        // Random permutation: each period is a permutation of 0..τ.
+        let mut perm = OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, 7);
+        for _period in 0..5 {
+            let mut seen = vec![false; period];
+            for k in 0..period {
+                let t = perm.exponent_at(k);
+                assert!(!seen[t], "duplicate exponent in one period");
+                seen[t] = true;
+            }
+        }
+        // Uniform sampling: exponents in range.
+        let mut unif = OnePeerSequence::new(n, OnePeerOrder::UniformSampling, 9);
+        for k in 0..100 {
+            assert!(unif.exponent_at(k) < period);
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Undirected graph representation and the classic static topologies:
+//! ring, star, 2D-grid, 2D-torus and hypercube (Appendix A.3.1).
+
+/// Simple undirected graph on nodes `0..n` (no self-loops; weight matrices
+/// add the diagonal separately).
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    adj: Vec<Vec<usize>>,
+}
+
+impl Graph {
+    /// Empty graph on `n` nodes.
+    pub fn empty(n: usize) -> Self {
+        Graph { n, adj: vec![Vec::new(); n] }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Add the undirected edge `{u, v}` (idempotent, ignores self-loops).
+    pub fn add_edge(&mut self, u: usize, v: usize) {
+        assert!(u < self.n && v < self.n, "edge out of range");
+        if u == v || self.adj[u].contains(&v) {
+            return;
+        }
+        self.adj[u].push(v);
+        self.adj[v].push(u);
+    }
+
+    /// Neighbors of node `i`.
+    pub fn neighbors(&self, i: usize) -> &[usize] {
+        &self.adj[i]
+    }
+
+    /// Degree of node `i`.
+    pub fn degree(&self, i: usize) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Maximum degree over all nodes.
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    /// Total number of undirected edges.
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum::<usize>() / 2
+    }
+
+    /// Is the graph connected? (BFS from node 0; the empty graph with
+    /// `n ≤ 1` counts as connected.)
+    pub fn is_connected(&self) -> bool {
+        if self.n <= 1 {
+            return true;
+        }
+        let mut seen = vec![false; self.n];
+        let mut stack = vec![0usize];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = stack.pop() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        count == self.n
+    }
+}
+
+/// Undirected ring on `n` nodes.
+pub fn ring(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        g.add_edge(i, (i + 1) % n);
+    }
+    g
+}
+
+/// Star: node 0 is the hub.
+pub fn star(n: usize) -> Graph {
+    let mut g = Graph::empty(n);
+    for i in 1..n {
+        g.add_edge(0, i);
+    }
+    g
+}
+
+/// Factor `n` into `r × c` with `r ≤ c` and `r` the largest divisor
+/// `≤ √n` — used to shape grids/tori for non-square `n` (the paper's
+/// experiments use n = 4, 8, 16, 32).
+pub fn grid_shape(n: usize) -> (usize, usize) {
+    assert!(n > 0);
+    let mut r = (n as f64).sqrt() as usize;
+    while r > 1 && n % r != 0 {
+        r -= 1;
+    }
+    (r.max(1), n / r.max(1))
+}
+
+/// 2D grid (no wraparound).
+pub fn grid2d(n: usize) -> Graph {
+    let (r, c) = grid_shape(n);
+    let mut g = Graph::empty(n);
+    for i in 0..r {
+        for j in 0..c {
+            let u = i * c + j;
+            if j + 1 < c {
+                g.add_edge(u, u + 1);
+            }
+            if i + 1 < r {
+                g.add_edge(u, u + c);
+            }
+        }
+    }
+    g
+}
+
+/// 2D torus (grid with wraparound).
+pub fn torus2d(n: usize) -> Graph {
+    let (r, c) = grid_shape(n);
+    let mut g = Graph::empty(n);
+    for i in 0..r {
+        for j in 0..c {
+            let u = i * c + j;
+            g.add_edge(u, i * c + (j + 1) % c);
+            g.add_edge(u, ((i + 1) % r) * c + j);
+        }
+    }
+    g
+}
+
+/// Hypercube on `n = 2^τ` nodes (Remark 2). Panics if `n` is not a power
+/// of two.
+pub fn hypercube(n: usize) -> Graph {
+    assert!(n.is_power_of_two(), "hypercube requires n = 2^tau");
+    let mut g = Graph::empty(n);
+    let tau = n.trailing_zeros() as usize;
+    for u in 0..n {
+        for b in 0..tau {
+            g.add_edge(u, u ^ (1 << b));
+        }
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_degrees_and_connectivity() {
+        let g = ring(8);
+        assert!(g.is_connected());
+        assert_eq!(g.max_degree(), 2);
+        assert_eq!(g.num_edges(), 8);
+        // n = 2 ring degenerates to a single edge.
+        let g2 = ring(2);
+        assert_eq!(g2.num_edges(), 1);
+        assert_eq!(g2.max_degree(), 1);
+    }
+
+    #[test]
+    fn star_has_hub() {
+        let g = star(9);
+        assert!(g.is_connected());
+        assert_eq!(g.degree(0), 8);
+        assert_eq!(g.max_degree(), 8);
+        for i in 1..9 {
+            assert_eq!(g.degree(i), 1);
+        }
+    }
+
+    #[test]
+    fn grid_shapes() {
+        assert_eq!(grid_shape(16), (4, 4));
+        assert_eq!(grid_shape(8), (2, 4));
+        assert_eq!(grid_shape(32), (4, 8));
+        assert_eq!(grid_shape(7), (1, 7)); // prime: degenerates to a path
+    }
+
+    #[test]
+    fn grid_and_torus_structure() {
+        let g = grid2d(16);
+        assert!(g.is_connected());
+        assert_eq!(g.max_degree(), 4);
+        // Corner of a 4x4 grid has degree 2.
+        assert_eq!(g.degree(0), 2);
+        let t = torus2d(16);
+        assert!(t.is_connected());
+        // Torus is 4-regular.
+        for i in 0..16 {
+            assert_eq!(t.degree(i), 4);
+        }
+        assert_eq!(t.num_edges(), 32);
+    }
+
+    #[test]
+    fn torus_small_dims_no_duplicate_edges() {
+        // 2xC torus: wraparound in the length-2 dimension is the same edge
+        // both ways; add_edge must dedupe.
+        let t = torus2d(8); // (2, 4)
+        assert!(t.is_connected());
+        for i in 0..8 {
+            assert_eq!(t.degree(i), 3, "node {i}: vertical wrap is a single edge");
+        }
+    }
+
+    #[test]
+    fn hypercube_structure() {
+        let h = hypercube(16);
+        assert!(h.is_connected());
+        for i in 0..16 {
+            assert_eq!(h.degree(i), 4);
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_detected() {
+        let mut g = Graph::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(2, 3);
+        assert!(!g.is_connected());
+    }
+}

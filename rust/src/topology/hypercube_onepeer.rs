@@ -1,0 +1,79 @@
+//! One-peer hypercube (Remark 6 / the paper's future-work direction).
+//!
+//! At iteration `k`, node `i` pairs with `i XOR 2^{mod(k,τ)}` and averages
+//! ½–½. Unlike the one-peer *exponential* graph this realization is a
+//! perfect matching, so `W^{(k)}` is **symmetric** — the property D² and
+//! DecentLaM need — while keeping Ω(1) per-iteration communication AND
+//! periodic exact averaging in τ = log₂(n) steps (Shi et al. [54]):
+//! after all τ bit-dimensions have been averaged once, every node holds
+//! the global mean (the classic hypercube all-reduce).
+//!
+//! Requires `n = 2^τ`.
+
+use super::exponential::tau;
+use crate::linalg::Matrix;
+
+/// Weight matrix of the one-peer hypercube realization with bit `t`.
+pub fn one_peer_hypercube_weights(n: usize, t: usize) -> Matrix {
+    assert!(n.is_power_of_two(), "one-peer hypercube requires n = 2^tau");
+    let period = tau(n).max(1);
+    let bit = 1usize << (t % period);
+    let mut w = Matrix::zeros(n, n);
+    if n == 1 {
+        w[(0, 0)] = 1.0;
+        return w;
+    }
+    for i in 0..n {
+        let j = i ^ bit;
+        w[(i, i)] = 0.5;
+        w[(i, j)] = 0.5;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::weight::{is_doubly_stochastic, max_comm_degree};
+
+    #[test]
+    fn realizations_are_symmetric_doubly_stochastic_matchings() {
+        for n in [2usize, 4, 8, 16, 32] {
+            for t in 0..tau(n) {
+                let w = one_peer_hypercube_weights(n, t);
+                assert!(is_doubly_stochastic(&w, 1e-12), "n={n} t={t}");
+                assert!(w.is_symmetric(0.0), "n={n} t={t}");
+                assert_eq!(max_comm_degree(&w), 1, "n={n} t={t}: perfect matching");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_averaging_after_tau_steps() {
+        // The hypercube all-reduce property: ∏ W^{(t)} = J.
+        for n in [4usize, 8, 16, 64] {
+            let mut prod = Matrix::eye(n);
+            for t in 0..tau(n) {
+                prod = one_peer_hypercube_weights(n, t).matmul(&prod);
+            }
+            assert!(prod.sub(&Matrix::averaging(n)).max_abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn eigenvalues_admit_d2() {
+        // D² needs λ_min(W) > −1/3; a ½–½ matching has eigenvalues {0, 1},
+        // comfortably inside.
+        let w = one_peer_hypercube_weights(8, 1);
+        let eig = crate::linalg::jacobi::sym_eigenvalues(&w);
+        let min = eig.values.last().copied().unwrap();
+        assert!(min > -1.0 / 3.0 - 1e-12, "λ_min = {min}");
+        assert!(min > -1e-12 && eig.values[0] <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_non_power_of_two() {
+        one_peer_hypercube_weights(6, 0);
+    }
+}

@@ -1,0 +1,91 @@
+//! Bipartite random match graph (Appendix A.3.1): at each iteration a
+//! uniformly random perfect matching pairs the nodes; matched pairs average
+//! ½–½. Each node communicates with exactly one peer per iteration, like
+//! the one-peer exponential graph — but without the periodic
+//! exact-averaging property (Fig. 4).
+
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg;
+
+/// Stateful generator of random-matching weight matrices.
+#[derive(Clone, Debug)]
+pub struct RandomMatching {
+    n: usize,
+    rng: Pcg,
+}
+
+impl RandomMatching {
+    pub fn new(n: usize, seed: u64) -> Self {
+        RandomMatching { n, rng: Pcg::new(seed, 0xA7C) }
+    }
+
+    /// Sample the next matching's weight matrix. For odd `n` one node is
+    /// left unmatched (self-weight 1).
+    pub fn next_weights(&mut self) -> Matrix {
+        let n = self.n;
+        let perm = self.rng.permutation(n);
+        let mut w = Matrix::zeros(n, n);
+        let pairs = n / 2;
+        for p in 0..pairs {
+            let a = perm[2 * p];
+            let b = perm[2 * p + 1];
+            w[(a, a)] = 0.5;
+            w[(b, b)] = 0.5;
+            w[(a, b)] = 0.5;
+            w[(b, a)] = 0.5;
+        }
+        if n % 2 == 1 {
+            let lone = perm[n - 1];
+            w[(lone, lone)] = 1.0;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::weight::{is_doubly_stochastic, max_comm_degree};
+
+    #[test]
+    fn matchings_are_doubly_stochastic_symmetric_degree_1() {
+        let mut m = RandomMatching::new(16, 3);
+        for _ in 0..20 {
+            let w = m.next_weights();
+            assert!(is_doubly_stochastic(&w, 1e-12));
+            assert!(w.is_symmetric(0.0));
+            assert_eq!(max_comm_degree(&w), 1);
+        }
+    }
+
+    #[test]
+    fn odd_n_leaves_one_self_loop() {
+        let mut m = RandomMatching::new(7, 9);
+        let w = m.next_weights();
+        assert!(is_doubly_stochastic(&w, 1e-12));
+        let lones = (0..7).filter(|&i| (w[(i, i)] - 1.0).abs() < 1e-15).count();
+        assert_eq!(lones, 1);
+    }
+
+    #[test]
+    fn matchings_vary_over_time() {
+        let mut m = RandomMatching::new(8, 5);
+        let a = m.next_weights();
+        let mut differs = false;
+        for _ in 0..10 {
+            if m.next_weights() != a {
+                differs = true;
+                break;
+            }
+        }
+        assert!(differs, "matching never changed over 10 draws");
+    }
+
+    #[test]
+    fn matching_squares_to_projection() {
+        // A ½–½ matching matrix is idempotent: W² = W.
+        let mut m = RandomMatching::new(12, 11);
+        let w = m.next_weights();
+        assert!(w.matmul(&w).sub(&w).max_abs() < 1e-12);
+    }
+}

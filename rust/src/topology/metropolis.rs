@@ -1,0 +1,63 @@
+//! Metropolis–Hastings weights for undirected graphs ([43, Eq. (8)]):
+//!
+//! `w_ij = 1 / (1 + max(d_i, d_j))` for edges `{i,j}`,
+//! `w_ii = 1 − Σ_{j≠i} w_ij`.
+//!
+//! The result is symmetric and doubly stochastic for any undirected graph,
+//! which is how the paper weights ring, star, grid, torus, and the ER /
+//! geometric random graphs.
+
+use super::graphs::Graph;
+use crate::linalg::Matrix;
+
+/// Build the Metropolis weight matrix of an undirected graph.
+pub fn metropolis_weights(g: &Graph) -> Matrix {
+    let n = g.n();
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        let mut diag = 1.0;
+        for &j in g.neighbors(i) {
+            let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            w[(i, j)] = wij;
+            diag -= wij;
+        }
+        w[(i, i)] = diag;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::graphs;
+    use crate::topology::weight::is_doubly_stochastic;
+
+    #[test]
+    fn metropolis_is_doubly_stochastic_and_symmetric() {
+        for n in [3usize, 5, 8, 16, 31] {
+            for g in [graphs::ring(n), graphs::star(n), graphs::grid2d(n), graphs::torus2d(n)] {
+                let w = metropolis_weights(&g);
+                assert!(is_doubly_stochastic(&w, 1e-12), "n={n}");
+                assert!(w.is_symmetric(1e-15), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn ring_weights_known_values() {
+        // 4-ring: all degrees 2 → edge weight 1/3, diagonal 1/3.
+        let w = metropolis_weights(&graphs::ring(4));
+        assert!((w[(0, 1)] - 1.0 / 3.0).abs() < 1e-15);
+        assert!((w[(0, 0)] - 1.0 / 3.0).abs() < 1e-15);
+        assert_eq!(w[(0, 2)], 0.0);
+    }
+
+    #[test]
+    fn star_hub_diagonal() {
+        // Star n=5: hub degree 4, leaves degree 1 → edge weight 1/5.
+        let w = metropolis_weights(&graphs::star(5));
+        assert!((w[(0, 1)] - 0.2).abs() < 1e-15);
+        assert!((w[(0, 0)] - (1.0 - 4.0 * 0.2)).abs() < 1e-15);
+        assert!((w[(1, 1)] - 0.8).abs() < 1e-15);
+    }
+}

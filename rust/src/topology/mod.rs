@@ -1,0 +1,29 @@
+//! Network topologies and their doubly-stochastic weight matrices.
+//!
+//! This is the paper's object of study. Every topology in the evaluation is
+//! implemented:
+//!
+//! | Topology | Module | Weight rule |
+//! |---|---|---|
+//! | ring, star, 2D-grid, 2D-torus, hypercube | [`graphs`] | Metropolis ([`metropolis`]) |
+//! | ½-random graph | [`random`] | max-degree lazy walk `A/d_max + (I−D/d_max)` |
+//! | Erdős–Rényi `G(n,p)`, geometric `G(n,r)` | [`random`] | Metropolis |
+//! | bipartite random match | [`matching`] | pairwise ½–½ (time-varying) |
+//! | static exponential | [`exponential`] | Eq. (5): circulant `1/(τ+1)` |
+//! | one-peer exponential | [`exponential`] | Eq. (7): time-varying ½–½ |
+//!
+//! [`schedule`] exposes the uniform [`schedule::Schedule`] interface the
+//! coordinator consumes: a (possibly time-varying) sequence `W^{(k)}`.
+
+pub mod exponential;
+pub mod graphs;
+pub mod hypercube_onepeer;
+pub mod matching;
+pub mod metropolis;
+pub mod random;
+pub mod schedule;
+pub mod weight;
+
+pub use graphs::Graph;
+pub use schedule::{Schedule, TopologyKind};
+pub use weight::{is_doubly_stochastic, max_comm_degree};

@@ -1,0 +1,142 @@
+//! Random topologies (Appendix A.3.1 / A.3.3):
+//!
+//! * **½-random graph** — each edge present independently with `p = ½`,
+//!   weighted with the max-degree lazy rule `W = A/d_max + (I − D/d_max)`
+//!   (symmetric doubly stochastic; this is the standard construction
+//!   behind the paper's `W = A/d_max` shorthand).
+//! * **Erdős–Rényi** `G(n, p)` with `p = (1+c)·log(n)/n`.
+//! * **2-D geometric random graph** `G(n, r)` with `r² = (1+c)·log(n)/n` —
+//!   nodes placed uniformly in the unit square, edges within radius `r`.
+//!
+//! ER and geometric graphs are weighted with Metropolis (they can be
+//! irregular and even disconnected at moderate n — exactly the failure mode
+//! Table 6 reports).
+
+use super::graphs::Graph;
+use super::metropolis::metropolis_weights;
+use crate::linalg::Matrix;
+use crate::util::rng::Pcg;
+
+/// Bernoulli(p) graph on `n` nodes.
+pub fn gnp_graph(n: usize, p: f64, seed: u64) -> Graph {
+    let mut g = Graph::empty(n);
+    let mut rng = Pcg::new(seed, 0x6E9);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.uniform() < p {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// The paper's ½-random graph with max-degree lazy-walk weights.
+pub fn half_random_weights(n: usize, seed: u64) -> Matrix {
+    let g = gnp_graph(n, 0.5, seed);
+    max_degree_weights(&g)
+}
+
+/// `W = A/d_max + (I − D/d_max)`: symmetric doubly stochastic for any
+/// undirected graph.
+pub fn max_degree_weights(g: &Graph) -> Matrix {
+    let n = g.n();
+    let dmax = g.max_degree().max(1) as f64;
+    let mut w = Matrix::zeros(n, n);
+    for i in 0..n {
+        for &j in g.neighbors(i) {
+            w[(i, j)] = 1.0 / dmax;
+        }
+        w[(i, i)] = 1.0 - g.degree(i) as f64 / dmax;
+    }
+    w
+}
+
+/// Erdős–Rényi `G(n, p)` with the connectivity-threshold scaling
+/// `p = (1+c)·ln(n)/n`.
+pub fn erdos_renyi_graph(n: usize, c: f64, seed: u64) -> Graph {
+    let p = ((1.0 + c) * (n as f64).ln() / n as f64).min(1.0);
+    gnp_graph(n, p, seed)
+}
+
+/// 2-D geometric random graph with `r² = (1+c)·ln(n)/n`.
+pub fn geometric_graph(n: usize, c: f64, seed: u64) -> Graph {
+    let r2 = (1.0 + c) * (n as f64).ln() / n as f64;
+    let mut rng = Pcg::new(seed, 0x6E0);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.uniform(), rng.uniform())).collect();
+    let mut g = Graph::empty(n);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let dx = pts[i].0 - pts[j].0;
+            let dy = pts[i].1 - pts[j].1;
+            if dx * dx + dy * dy <= r2 {
+                g.add_edge(i, j);
+            }
+        }
+    }
+    g
+}
+
+/// Metropolis weights over an ER graph.
+pub fn erdos_renyi_weights(n: usize, c: f64, seed: u64) -> Matrix {
+    metropolis_weights(&erdos_renyi_graph(n, c, seed))
+}
+
+/// Metropolis weights over a geometric graph.
+pub fn geometric_weights(n: usize, c: f64, seed: u64) -> Matrix {
+    metropolis_weights(&geometric_graph(n, c, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::weight::{degree_spread, is_doubly_stochastic};
+
+    #[test]
+    fn half_random_is_doubly_stochastic_and_dense() {
+        for n in [8usize, 16, 33] {
+            let w = half_random_weights(n, 42);
+            assert!(is_doubly_stochastic(&w, 1e-12), "n={n}");
+            assert!(w.is_symmetric(1e-15));
+            // Expected degree ≈ (n−1)/2; check it's in a generous band.
+            let (_, hi) = degree_spread(&w);
+            assert!(hi as f64 > 0.25 * n as f64, "n={n} hi={hi}");
+        }
+    }
+
+    #[test]
+    fn er_and_geometric_weights_are_doubly_stochastic() {
+        for n in [16usize, 40] {
+            assert!(is_doubly_stochastic(&erdos_renyi_weights(n, 1.0, 3), 1e-12));
+            assert!(is_doubly_stochastic(&geometric_weights(n, 1.0, 3), 1e-12));
+        }
+    }
+
+    #[test]
+    fn er_degrees_can_be_unbalanced() {
+        // The paper's Table 6 point: ER degrees are not identical.
+        let g = erdos_renyi_graph(64, 0.5, 17);
+        let degs: Vec<usize> = (0..64).map(|i| g.degree(i)).collect();
+        let lo = *degs.iter().min().unwrap();
+        let hi = *degs.iter().max().unwrap();
+        assert!(hi > lo, "ER degrees unexpectedly uniform");
+    }
+
+    #[test]
+    fn gnp_extremes() {
+        let g0 = gnp_graph(10, 0.0, 1);
+        assert_eq!(g0.num_edges(), 0);
+        let g1 = gnp_graph(10, 1.0, 1);
+        assert_eq!(g1.num_edges(), 45);
+        assert!(g1.is_connected());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gnp_graph(20, 0.3, 5);
+        let b = gnp_graph(20, 0.3, 5);
+        for i in 0..20 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+    }
+}

@@ -1,0 +1,267 @@
+//! The uniform topology-schedule interface consumed by the coordinator:
+//! a (possibly time-varying) sequence of weight matrices `W^{(k)}`.
+
+use super::exponential::{one_peer_exp_weights, static_exp_weights, OnePeerOrder, OnePeerSequence};
+use super::graphs;
+use super::matching::RandomMatching;
+use super::metropolis::metropolis_weights;
+use super::random;
+use crate::linalg::Matrix;
+
+/// Every topology evaluated in the paper, plus the fully-connected
+/// (all-reduce) baseline used by parallel SGD.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TopologyKind {
+    Ring,
+    Star,
+    Grid2D,
+    Torus2D,
+    Hypercube,
+    /// ½-random graph (each edge with probability ½, max-degree weights).
+    HalfRandom,
+    /// Erdős–Rényi `G(n, p)` at the connectivity threshold scaling.
+    ErdosRenyi,
+    /// 2-D geometric random graph.
+    Geometric,
+    /// Bipartite random match (time-varying).
+    RandomMatch,
+    /// Static exponential graph (Eq. (5)).
+    StaticExp,
+    /// One-peer exponential graph, cyclic order (Eq. (7)).
+    OnePeerExp,
+    /// One-peer exponential, random permutation per period (App. B.3.2).
+    OnePeerExpPerm,
+    /// One-peer exponential, uniform sampling with replacement (App. B.3.2).
+    OnePeerExpUniform,
+    /// One-peer hypercube (Remark 6 / future work): symmetric ½–½
+    /// matchings along bit-dimensions; exact averaging each τ steps.
+    OnePeerHypercube,
+    /// Global averaging `J = 11ᵀ/n` every iteration (parallel SGD).
+    FullyConnected,
+}
+
+impl TopologyKind {
+    /// Short machine-readable name (used in CSV output and CLI).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologyKind::Ring => "ring",
+            TopologyKind::Star => "star",
+            TopologyKind::Grid2D => "grid",
+            TopologyKind::Torus2D => "torus",
+            TopologyKind::Hypercube => "hypercube",
+            TopologyKind::HalfRandom => "half_random",
+            TopologyKind::ErdosRenyi => "erdos_renyi",
+            TopologyKind::Geometric => "geometric",
+            TopologyKind::RandomMatch => "random_match",
+            TopologyKind::StaticExp => "static_exp",
+            TopologyKind::OnePeerExp => "one_peer_exp",
+            TopologyKind::OnePeerExpPerm => "one_peer_exp_perm",
+            TopologyKind::OnePeerExpUniform => "one_peer_exp_uniform",
+            TopologyKind::OnePeerHypercube => "one_peer_hypercube",
+            TopologyKind::FullyConnected => "fully_connected",
+        }
+    }
+
+    /// Parse from the CLI/config name.
+    pub fn parse(s: &str) -> Option<TopologyKind> {
+        Some(match s {
+            "ring" => TopologyKind::Ring,
+            "star" => TopologyKind::Star,
+            "grid" => TopologyKind::Grid2D,
+            "torus" => TopologyKind::Torus2D,
+            "hypercube" => TopologyKind::Hypercube,
+            "half_random" => TopologyKind::HalfRandom,
+            "erdos_renyi" => TopologyKind::ErdosRenyi,
+            "geometric" => TopologyKind::Geometric,
+            "random_match" => TopologyKind::RandomMatch,
+            "static_exp" => TopologyKind::StaticExp,
+            "one_peer_exp" => TopologyKind::OnePeerExp,
+            "one_peer_exp_perm" => TopologyKind::OnePeerExpPerm,
+            "one_peer_exp_uniform" => TopologyKind::OnePeerExpUniform,
+            "one_peer_hypercube" => TopologyKind::OnePeerHypercube,
+            "fully_connected" | "parallel" => TopologyKind::FullyConnected,
+            _ => return None,
+        })
+    }
+
+    /// Is the weight-matrix sequence time-varying?
+    pub fn is_time_varying(&self) -> bool {
+        matches!(
+            self,
+            TopologyKind::RandomMatch
+                | TopologyKind::OnePeerExp
+                | TopologyKind::OnePeerExpPerm
+                | TopologyKind::OnePeerExpUniform
+                | TopologyKind::OnePeerHypercube
+        )
+    }
+
+    /// The six topologies of Table 1 / Table 2.
+    pub fn table1() -> [TopologyKind; 6] {
+        [
+            TopologyKind::Ring,
+            TopologyKind::Grid2D,
+            TopologyKind::HalfRandom,
+            TopologyKind::RandomMatch,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+        ]
+    }
+}
+
+impl std::fmt::Display for TopologyKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+enum State {
+    Static(Matrix),
+    OnePeer(OnePeerSequence),
+    OnePeerHc { n: usize },
+    Matching(RandomMatching),
+}
+
+/// A stream of weight matrices `W^{(0)}, W^{(1)}, …` for one topology.
+///
+/// Static topologies return the same matrix each iteration; time-varying
+/// ones advance internal state. `weight_at` must be called with
+/// non-decreasing `k` for the stochastic schedules to stay reproducible.
+pub struct Schedule {
+    kind: TopologyKind,
+    n: usize,
+    state: State,
+}
+
+impl Schedule {
+    /// Build a schedule for `kind` on `n` nodes. `seed` feeds the random
+    /// topologies (and is ignored by deterministic ones).
+    pub fn new(kind: TopologyKind, n: usize, seed: u64) -> Schedule {
+        let state = match kind {
+            TopologyKind::Ring => State::Static(metropolis_weights(&graphs::ring(n))),
+            TopologyKind::Star => State::Static(metropolis_weights(&graphs::star(n))),
+            TopologyKind::Grid2D => State::Static(metropolis_weights(&graphs::grid2d(n))),
+            TopologyKind::Torus2D => State::Static(metropolis_weights(&graphs::torus2d(n))),
+            TopologyKind::Hypercube => State::Static(metropolis_weights(&graphs::hypercube(n))),
+            TopologyKind::HalfRandom => State::Static(random::half_random_weights(n, seed)),
+            TopologyKind::ErdosRenyi => State::Static(random::erdos_renyi_weights(n, 1.0, seed)),
+            TopologyKind::Geometric => State::Static(random::geometric_weights(n, 1.0, seed)),
+            TopologyKind::StaticExp => State::Static(static_exp_weights(n)),
+            TopologyKind::FullyConnected => State::Static(Matrix::averaging(n)),
+            TopologyKind::RandomMatch => State::Matching(RandomMatching::new(n, seed)),
+            TopologyKind::OnePeerExp => {
+                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::Cyclic, seed))
+            }
+            TopologyKind::OnePeerExpPerm => {
+                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, seed))
+            }
+            TopologyKind::OnePeerExpUniform => {
+                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::UniformSampling, seed))
+            }
+            TopologyKind::OnePeerHypercube => State::OnePeerHc { n },
+        };
+        Schedule { kind, n, state }
+    }
+
+    pub fn kind(&self) -> TopologyKind {
+        self.kind
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Weight matrix `W^{(k)}`.
+    pub fn weight_at(&mut self, k: usize) -> Matrix {
+        match &mut self.state {
+            State::Static(w) => w.clone(),
+            State::OnePeer(seq) => seq.weight_at(k),
+            State::OnePeerHc { n } => {
+                crate::topology::hypercube_onepeer::one_peer_hypercube_weights(*n, k)
+            }
+            State::Matching(m) => m.next_weights(),
+        }
+    }
+
+    /// Borrow the static matrix without cloning (None for time-varying).
+    pub fn static_weights(&self) -> Option<&Matrix> {
+        match &self.state {
+            State::Static(w) => Some(w),
+            _ => None,
+        }
+    }
+}
+
+/// Convenience: the static weight matrix of a non-time-varying topology.
+pub fn static_weights(kind: TopologyKind, n: usize, seed: u64) -> Matrix {
+    let mut s = Schedule::new(kind, n, seed);
+    s.weight_at(0)
+}
+
+/// Variant of [`one_peer_exp_weights`] re-exported here for schedule users.
+pub fn one_peer_weights(n: usize, t: usize) -> Matrix {
+    one_peer_exp_weights(n, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::weight::is_doubly_stochastic;
+
+    #[test]
+    fn all_kinds_produce_doubly_stochastic_sequences() {
+        let kinds = [
+            TopologyKind::Ring,
+            TopologyKind::Star,
+            TopologyKind::Grid2D,
+            TopologyKind::Torus2D,
+            TopologyKind::Hypercube,
+            TopologyKind::HalfRandom,
+            TopologyKind::ErdosRenyi,
+            TopologyKind::Geometric,
+            TopologyKind::RandomMatch,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::OnePeerExpPerm,
+            TopologyKind::OnePeerExpUniform,
+            TopologyKind::FullyConnected,
+        ];
+        for kind in kinds {
+            let n = 16; // power of two so hypercube is valid
+            let mut s = Schedule::new(kind, n, 1234);
+            for k in 0..6 {
+                let w = s.weight_at(k);
+                assert!(is_doubly_stochastic(&w, 1e-12), "{kind} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn static_kinds_are_constant() {
+        let mut s = Schedule::new(TopologyKind::Ring, 8, 0);
+        assert_eq!(s.weight_at(0), s.weight_at(5));
+        assert!(s.static_weights().is_some());
+    }
+
+    #[test]
+    fn one_peer_cycles_with_period_tau() {
+        let mut s = Schedule::new(TopologyKind::OnePeerExp, 8, 0);
+        let w0 = s.weight_at(0);
+        let w3 = s.weight_at(3);
+        assert_eq!(w0, w3); // τ(8) = 3
+        assert_ne!(w0, s.weight_at(1));
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::OnePeerExp,
+            TopologyKind::FullyConnected,
+            TopologyKind::Geometric,
+        ] {
+            assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(TopologyKind::parse("nope"), None);
+    }
+}

@@ -1,0 +1,130 @@
+//! Weight-matrix validation and structural queries (Assumption A.4).
+
+use crate::linalg::Matrix;
+
+/// Is `w` doubly stochastic to tolerance `tol`? (Rows and columns each sum
+/// to 1, all entries non-negative.)
+pub fn is_doubly_stochastic(w: &Matrix, tol: f64) -> bool {
+    if w.rows() != w.cols() {
+        return false;
+    }
+    let n = w.rows();
+    for i in 0..n {
+        let mut rsum = 0.0;
+        for j in 0..n {
+            let v = w[(i, j)];
+            if v < -tol {
+                return false;
+            }
+            rsum += v;
+        }
+        if (rsum - 1.0).abs() > tol {
+            return false;
+        }
+    }
+    for j in 0..n {
+        let mut csum = 0.0;
+        for i in 0..n {
+            csum += w[(i, j)];
+        }
+        if (csum - 1.0).abs() > tol {
+            return false;
+        }
+    }
+    true
+}
+
+/// Per-iteration communication degree implied by a weight matrix: the
+/// maximum over nodes of the number of *distinct neighbors* the node
+/// exchanges with (union of in- and out-neighbors, excluding itself).
+///
+/// This drives the paper's "Per-iter Comm." columns: 2 for ring, 4 for
+/// grid/torus, `⌈log₂ n⌉` for static exponential, 1 for one-peer
+/// exponential and bipartite random match.
+pub fn max_comm_degree(w: &Matrix) -> usize {
+    let n = w.rows();
+    let mut best = 0;
+    for i in 0..n {
+        let mut deg = 0;
+        for j in 0..n {
+            if i != j && (w[(i, j)] != 0.0 || w[(j, i)] != 0.0) {
+                deg += 1;
+            }
+        }
+        best = best.max(deg);
+    }
+    best
+}
+
+/// Average communication degree across nodes (for random-graph balance
+/// reporting, Table 6).
+pub fn mean_comm_degree(w: &Matrix) -> f64 {
+    let n = w.rows();
+    let mut total = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j && (w[(i, j)] != 0.0 || w[(j, i)] != 0.0) {
+                total += 1;
+            }
+        }
+    }
+    total as f64 / n as f64
+}
+
+/// Min/max node degree (for the degree-balance column of Table 6).
+pub fn degree_spread(w: &Matrix) -> (usize, usize) {
+    let n = w.rows();
+    let mut lo = usize::MAX;
+    let mut hi = 0;
+    for i in 0..n {
+        let mut deg = 0;
+        for j in 0..n {
+            if i != j && (w[(i, j)] != 0.0 || w[(j, i)] != 0.0) {
+                deg += 1;
+            }
+        }
+        lo = lo.min(deg);
+        hi = hi.max(deg);
+    }
+    (if lo == usize::MAX { 0 } else { lo }, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averaging_matrix_is_doubly_stochastic() {
+        assert!(is_doubly_stochastic(&Matrix::averaging(5), 1e-12));
+        assert!(is_doubly_stochastic(&Matrix::eye(5), 1e-12));
+    }
+
+    #[test]
+    fn rejects_non_stochastic() {
+        let mut w = Matrix::eye(3);
+        w[(0, 0)] = 0.5; // row 0 sums to 0.5
+        assert!(!is_doubly_stochastic(&w, 1e-12));
+        let mut neg = Matrix::averaging(3);
+        neg[(0, 1)] = -0.1;
+        neg[(0, 0)] = 1.0 - (-0.1) - 1.0 / 3.0; // row still sums to 1
+        assert!(!is_doubly_stochastic(&neg, 1e-12));
+    }
+
+    #[test]
+    fn comm_degree_counts_union_of_directions() {
+        // Directed: node 0 sends to 1 (w[1][0] > 0 means 1 receives from 0).
+        let mut w = Matrix::eye(3);
+        w[(1, 0)] = 0.5;
+        w[(1, 1)] = 0.5;
+        // Node 0 and node 1 each touch one neighbor; node 2 none.
+        assert_eq!(max_comm_degree(&w), 1);
+        let (lo, hi) = degree_spread(&w);
+        assert_eq!((lo, hi), (0, 1));
+    }
+
+    #[test]
+    fn full_averaging_degree_is_n_minus_1() {
+        assert_eq!(max_comm_degree(&Matrix::averaging(6)), 5);
+        assert!((mean_comm_degree(&Matrix::averaging(6)) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,96 @@
+//! CSV result emission. Every experiment writes its series/rows to
+//! `results/<id>.csv` so figures can be re-plotted externally.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV writer with a fixed header.
+pub struct CsvWriter {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        CsvWriter { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of already-formatted cells. Panics on arity mismatch.
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Append a row of f64 values (formatted with full precision).
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    fn quote(cell: &str) -> String {
+        if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+            format!("\"{}\"", cell.replace('"', "\"\""))
+        } else {
+            cell.to_string()
+        }
+    }
+
+    /// Render to a CSV string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.header.iter().map(|c| Self::quote(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| Self::quote(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(self.render().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut w = CsvWriter::new(&["n", "rho"]);
+        w.row_f64(&[8.0, 0.5]);
+        w.row(&["16".into(), "0.25".into()]);
+        assert_eq!(w.render(), "n,rho\n8,0.5\n16,0.25\n");
+        assert_eq!(w.len(), 2);
+    }
+
+    #[test]
+    fn quotes_special_cells() {
+        let mut w = CsvWriter::new(&["name"]);
+        w.row(&["a,b".into()]);
+        w.row(&["say \"hi\"".into()]);
+        assert_eq!(w.render(), "name\n\"a,b\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row(&["1".into()]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Cross-cutting utilities built in-crate (the sandbox has no network, so
+//! no third-party crates beyond `xla`/`anyhow`): a PCG random number
+//! generator, a JSON reader/writer for configs and artifact manifests, CSV
+//! result emission, and plain-text table rendering.
+
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,91 @@
+//! CLI integration tests: drive the `expograph` binary end-to-end.
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_expograph"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    for needle in ["exp", "train", "spectral", "info"] {
+        assert!(stdout.contains(needle), "help missing {needle}");
+    }
+}
+
+#[test]
+fn spectral_static_exp_reports_prop1() {
+    let (stdout, _, ok) = run(&["spectral", "static_exp", "64"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("rho = 0.714286"), "{stdout}"); // 5/7
+    assert!(stdout.contains("Proposition 1"));
+}
+
+#[test]
+fn spectral_one_peer_reports_exact_averaging() {
+    let (stdout, _, ok) = run(&["spectral", "one_peer_exp", "16"]);
+    assert!(ok);
+    assert!(stdout.contains("residue after tau=4"), "{stdout}");
+}
+
+#[test]
+fn unknown_subcommand_fails_with_usage() {
+    let (_, stderr, ok) = run(&["bogus"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn exp_rejects_unknown_id() {
+    let (_, stderr, ok) = run(&["exp", "fig99"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown experiment id"), "{stderr}");
+}
+
+#[test]
+fn exp_fig4_smoke_writes_csv() {
+    let tmp = std::env::temp_dir().join(format!("expograph-cli-{}", std::process::id()));
+    let (stdout, _, ok) = run(&["exp", "fig4", "--scale", "0.05", "--out", tmp.to_str().unwrap()]);
+    assert!(ok, "{stdout}");
+    assert!(tmp.join("fig4.csv").exists());
+    assert!(stdout.contains("exact averaging"));
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn train_with_config_and_overrides() {
+    let (stdout, stderr, ok) = run(&[
+        "train",
+        "--config",
+        &format!("{}/configs/ring_dsgd.json", env!("CARGO_MANIFEST_DIR")),
+        "iters=60",
+        "nodes=4",
+    ]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("final: loss"));
+    assert!(stdout.contains("topology: Ring"), "{stdout}");
+}
+
+#[test]
+fn train_rejects_bad_key() {
+    let (_, stderr, ok) = run(&["train", "flux_capacitor=1"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown config key"), "{stderr}");
+}
+
+#[test]
+fn info_prints_artifact_status() {
+    let (stdout, _, ok) = run(&["info"]);
+    assert!(ok);
+    assert!(stdout.contains("artifacts dir"), "{stdout}");
+}

@@ -1,0 +1,168 @@
+//! Paper-claims tests: each test pins one quantitative claim of the
+//! paper to the implementation (numbers, orderings, crossovers).
+
+use expograph::consensus;
+use expograph::coordinator::{transient_iterations, LrSchedule};
+use expograph::costmodel::{analytic_degree, CostModel};
+use expograph::exp::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
+use expograph::optim::AlgorithmKind;
+use expograph::spectral;
+use expograph::topology::exponential::tau;
+use expograph::topology::TopologyKind;
+
+/// Proposition 1, headline number: for n = 64, ρ = (τ−1)/(τ+1) = 5/7 and
+/// the spectral gap is 2/7 — far larger than ring (O(1/n²)) or grid.
+#[test]
+fn claim_spectral_gap_values_n64() {
+    let n = 64;
+    let gap_exp = spectral::topology_gap(TopologyKind::StaticExp, n, 0);
+    assert!((gap_exp - 2.0 / 7.0).abs() < 1e-10);
+    let gap_ring = spectral::topology_gap(TopologyKind::Ring, n, 0);
+    let gap_grid = spectral::topology_gap(TopologyKind::Grid2D, n, 0);
+    // Ring gap ~ O(1/n²): tiny at n=64.
+    assert!(gap_ring < 0.01, "ring gap {gap_ring}");
+    assert!(gap_grid < 0.05, "grid gap {gap_grid}");
+    assert!(gap_exp > 5.0 * gap_grid);
+}
+
+/// Remark 3: the spectral gap of the static exponential graph is NOT O(1)
+/// — it shrinks like 1/log2(n).
+#[test]
+fn claim_gap_shrinks_like_inverse_log() {
+    let g16 = spectral::topology_gap(TopologyKind::StaticExp, 16, 0);
+    let g256 = spectral::topology_gap(TopologyKind::StaticExp, 256, 0);
+    assert!(g256 < g16, "gap must shrink with n");
+    // 2/(1+log2 n): ratio g16/g256 = (1+8)/(1+4) = 1.8
+    assert!((g16 / g256 - 1.8).abs() < 1e-6);
+    // ½-random graph, by contrast, has an O(1) gap.
+    let gr64 = spectral::topology_gap(TopologyKind::HalfRandom, 64, 3);
+    let gr256 = spectral::topology_gap(TopologyKind::HalfRandom, 256, 3);
+    assert!(gr256 > 0.3 && gr64 > 0.3, "half-random gap should be O(1): {gr64}, {gr256}");
+}
+
+/// Lemma 1: exact averaging after τ = log2(n) one-peer steps iff n is a
+/// power of two, from any offset.
+#[test]
+fn claim_periodic_exact_averaging() {
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        for k0 in [0usize, 1, 5] {
+            assert!(consensus::one_peer_period_error(n, k0) < 1e-12, "n={n} k0={k0}");
+        }
+    }
+    for n in [6usize, 10, 24] {
+        assert!(consensus::one_peer_period_error(n, 0) > 1e-4, "n={n}");
+    }
+}
+
+/// Table 1, per-iteration communication column.
+#[test]
+fn claim_table1_comm_degrees() {
+    for n in [16usize, 32, 64, 256] {
+        assert_eq!(analytic_degree(TopologyKind::Ring, n), 2);
+        assert_eq!(analytic_degree(TopologyKind::Grid2D, n), 4);
+        assert_eq!(analytic_degree(TopologyKind::RandomMatch, n), 1);
+        assert_eq!(analytic_degree(TopologyKind::OnePeerExp, n), 1);
+        assert_eq!(analytic_degree(TopologyKind::StaticExp, n), tau(n));
+        assert_eq!(analytic_degree(TopologyKind::HalfRandom, n), (n - 1) / 2);
+    }
+}
+
+/// Table 2, observation [2]: per-iteration time ordering at n = 32 —
+/// one-peer ≈ random-match < ring < grid < static exp < ½-random.
+#[test]
+fn claim_table2_time_ordering() {
+    let cost = CostModel::paper_default(0.4);
+    let msg = 25.5e6 * 4.0;
+    let n = 32;
+    let t = |k| cost.iteration_time(k, n, msg);
+    assert!((t(TopologyKind::OnePeerExp) - t(TopologyKind::RandomMatch)).abs() < 1e-9);
+    assert!(t(TopologyKind::OnePeerExp) < t(TopologyKind::Ring));
+    assert!(t(TopologyKind::Ring) < t(TopologyKind::Grid2D));
+    assert!(t(TopologyKind::Grid2D) < t(TopologyKind::StaticExp));
+    assert!(t(TopologyKind::StaticExp) < t(TopologyKind::HalfRandom));
+}
+
+/// Table 1 + Sec. 5: one-peer and static exponential give DmSGD the same
+/// convergence behaviour (MSE curves land within a small factor), while
+/// ring is clearly slower at equal iteration budget on heterogeneous
+/// data — the accuracy ordering of Table 2, observation [3].
+#[test]
+fn claim_one_peer_matches_static_ring_lags() {
+    let n = 32;
+    let iters = 1500;
+    let problem = paper_problem(n, 1500, true, 11);
+    let x_star = global_minimizer(&problem, 400);
+    let mk = |topology| LogRegRun {
+        topology,
+        algorithm: AlgorithmKind::DmSgd,
+        beta: 0.8,
+        lr: LrSchedule::HalveEvery { init: 0.1, every: 500 },
+        iters,
+        batch: 8,
+        record_every: 50,
+        seed: 5,
+    };
+    let static_exp = run_logreg(&problem, &x_star, &mk(TopologyKind::StaticExp));
+    let one_peer = run_logreg(&problem, &x_star, &mk(TopologyKind::OnePeerExp));
+    let ring = run_logreg(&problem, &x_star, &mk(TopologyKind::Ring));
+    let tail = |c: &expograph::exp::logreg_runner::MseCurve| {
+        let k = c.mse.len();
+        c.mse[k - 4..].iter().sum::<f64>() / 4.0
+    };
+    let (s, o, r) = (tail(&static_exp), tail(&one_peer), tail(&ring));
+    // Remark 7: one-peer ≈ static (within 3x given stochasticity).
+    assert!(o < 3.0 * s && s < 3.0 * o, "static={s:.3e} one-peer={o:.3e}");
+    // Ring's consensus error floor is far higher (gap 1e-2 vs 2/7).
+    assert!(r > 3.0 * s.max(o), "ring={r:.3e} should lag static={s:.3e}");
+}
+
+/// Fig. 1: decentralized SGD eventually merges with parallel SGD
+/// (linear-speedup stage) — transient iterations are finite on
+/// homogeneous data.
+#[test]
+fn claim_transient_phase_finite_homogeneous() {
+    let n = 16;
+    let iters = 2000;
+    let problem = paper_problem(n, 1000, false, 3);
+    let x_star = global_minimizer(&problem, 400);
+    let mk = |topology, algorithm| LogRegRun {
+        topology,
+        algorithm,
+        beta: 0.0,
+        lr: LrSchedule::HalveEvery { init: 0.1, every: 600 },
+        iters,
+        batch: 8,
+        record_every: 25,
+        seed: 9,
+    };
+    let dec = run_logreg(&problem, &x_star, &mk(TopologyKind::StaticExp, AlgorithmKind::DSgd));
+    let par = run_logreg(
+        &problem,
+        &x_star,
+        &mk(TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+    );
+    let t = transient_iterations(&dec.mse, &par.mse, 1.5, 4);
+    assert!(t.is_some(), "static-exp DSGD never reached the parallel curve");
+}
+
+/// Remark 2 & hypercube comparison: the hypercube's gap matches the
+/// exponential graph's 2/(1+log2 n) at powers of two.
+#[test]
+fn claim_hypercube_equivalence_at_powers_of_two() {
+    for n in [8usize, 16, 64] {
+        let hc = spectral::topology_gap(TopologyKind::Hypercube, n, 0);
+        let exp = spectral::topology_gap(TopologyKind::StaticExp, n, 0);
+        assert!((hc - exp).abs() < 1e-9, "n={n}: hypercube {hc} vs exp {exp}");
+    }
+}
+
+/// Communication model sanity (Sec. 2): all-reduce is Ω(n) latency while
+/// one-peer partial averaging is Ω(1) — the gap widens with n.
+#[test]
+fn claim_allreduce_latency_vs_partial_averaging() {
+    let cost = CostModel::paper_default(0.0);
+    let msg = 1e6;
+    let ratio8 = cost.allreduce_time(8, msg) / cost.comm_time(TopologyKind::OnePeerExp, 8, msg);
+    let ratio64 = cost.allreduce_time(64, msg) / cost.comm_time(TopologyKind::OnePeerExp, 64, msg);
+    assert!(ratio64 > ratio8, "all-reduce should fall behind as n grows");
+}

@@ -1,0 +1,241 @@
+//! Property-based tests over randomized inputs (seeded, hand-rolled
+//! case generation — the sandbox has no proptest crate; failures print
+//! the offending seed/case so they are reproducible).
+
+use expograph::consensus;
+use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::linalg::{power, Matrix};
+use expograph::spectral;
+use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights, tau};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::weight::is_doubly_stochastic;
+use expograph::topology::TopologyKind;
+use expograph::util::json::Json;
+use expograph::util::rng::Pcg;
+
+const ALL_KINDS: &[TopologyKind] = &[
+    TopologyKind::Ring,
+    TopologyKind::Star,
+    TopologyKind::Grid2D,
+    TopologyKind::Torus2D,
+    TopologyKind::HalfRandom,
+    TopologyKind::ErdosRenyi,
+    TopologyKind::Geometric,
+    TopologyKind::RandomMatch,
+    TopologyKind::StaticExp,
+    TopologyKind::OnePeerExp,
+    TopologyKind::OnePeerExpPerm,
+    TopologyKind::OnePeerExpUniform,
+    TopologyKind::FullyConnected,
+];
+
+/// Invariant: every weight matrix any schedule ever emits is doubly
+/// stochastic (Assumption A.4), across sizes and seeds.
+#[test]
+fn prop_all_schedules_doubly_stochastic() {
+    let mut rng = Pcg::seeded(0xA11);
+    for case in 0..60 {
+        let n = 2 + rng.below(40);
+        let seed = rng.next_u64();
+        for &kind in ALL_KINDS {
+            let mut sched = Schedule::new(kind, n, seed);
+            for k in 0..4 {
+                let w = sched.weight_at(k);
+                assert!(
+                    is_doubly_stochastic(&w, 1e-9),
+                    "case {case}: {kind} n={n} seed={seed} k={k}"
+                );
+            }
+        }
+    }
+}
+
+/// Proposition 1 (both claims) for every n in 2..=200: DFT-ρ obeys the
+/// bound with equality iff n even, and ‖W − J‖₂ = ρ.
+#[test]
+fn prop_proposition1_full_sweep() {
+    for n in 2..=200usize {
+        let w = static_exp_weights(n);
+        let rho = spectral::circulant_rho(&w);
+        let bound = spectral::static_exp_rho_bound(n);
+        if n % 2 == 0 {
+            assert!((rho - bound).abs() < 1e-9, "n={n}: rho={rho} bound={bound}");
+        } else {
+            assert!(rho <= bound + 1e-12, "n={n}: rho={rho} above bound {bound}");
+            if n > 3 {
+                assert!(rho < bound - 1e-12, "n={n}: odd n should be strict");
+            }
+        }
+        let norm = power::consensus_norm(&w);
+        assert!((norm - rho).abs() < 1e-6, "n={n}: ‖W−J‖={norm} vs rho={rho}");
+    }
+}
+
+/// Lemma 1 / Lemma 3: any τ *distinct* one-peer realizations, in any
+/// order, from any starting offset, multiply to exact averaging (n = 2^τ).
+#[test]
+fn prop_one_peer_exact_averaging_random_orders() {
+    let mut rng = Pcg::seeded(0x1E);
+    for _ in 0..40 {
+        let tau_exp = 1 + rng.below(6); // n = 2..64
+        let n = 1usize << tau_exp;
+        let mut order: Vec<usize> = (0..tau(n)).collect();
+        rng.shuffle(&mut order);
+        let mut prod = Matrix::eye(n);
+        for &t in &order {
+            prod = one_peer_exp_weights(n, t).matmul(&prod);
+        }
+        let err = prod.sub(&Matrix::averaging(n)).max_abs();
+        assert!(err < 1e-12, "n={n} order={order:?} err={err}");
+    }
+}
+
+/// Negative: dropping any one exponent breaks exact averaging.
+#[test]
+fn prop_one_peer_incomplete_period_not_exact() {
+    let mut rng = Pcg::seeded(0x2E);
+    for _ in 0..20 {
+        let n = 1usize << (2 + rng.below(4)); // 4..32
+        let skip = rng.below(tau(n));
+        let mut prod = Matrix::eye(n);
+        for t in 0..tau(n) {
+            if t == skip {
+                continue;
+            }
+            prod = one_peer_exp_weights(n, t).matmul(&prod);
+        }
+        let err = prod.sub(&Matrix::averaging(n)).max_abs();
+        assert!(err > 1e-6, "n={n} skip={skip}: unexpectedly exact");
+    }
+}
+
+/// Mixing invariants on random stacks: mean preservation (column
+/// stochasticity) and contraction of consensus distance (‖Ŵ‖₂ ≤ 1).
+#[test]
+fn prop_mixing_preserves_mean_and_contracts() {
+    let mut rng = Pcg::seeded(0x3E);
+    for case in 0..30 {
+        let n = 2 + rng.below(24);
+        let dim = 1 + rng.below(80);
+        let kind = [
+            TopologyKind::Ring,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::RandomMatch,
+        ][rng.below(4)];
+        let mut sched = Schedule::new(kind, n, rng.next_u64());
+        let w = sched.weight_at(case);
+        let sw = SparseWeights::from_dense(&w);
+        let mut x = StackedParams::zeros(n, dim);
+        for v in x.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        let mean_before = x.mean();
+        let dist_before = x.consensus_distance();
+        let mut out = StackedParams::zeros(n, dim);
+        sw.mix(&x, &mut out);
+        let mean_after = out.mean();
+        for (a, b) in mean_before.iter().zip(mean_after.iter()) {
+            assert!((a - b).abs() < 1e-3, "case {case} {kind} n={n}: mean drift");
+        }
+        assert!(
+            out.consensus_distance() <= dist_before * (1.0 + 1e-5) + 1e-6,
+            "case {case} {kind} n={n}: consensus grew"
+        );
+    }
+}
+
+/// The consensus residue operator norm never exceeds 1 for any schedule
+/// realization (the `ρ_max ≤ 1` step of Lemma 6).
+#[test]
+fn prop_residue_norm_at_most_one() {
+    let mut rng = Pcg::seeded(0x4E);
+    for _ in 0..30 {
+        let n = 2 + rng.below(30);
+        let kind = [
+            TopologyKind::Ring,
+            TopologyKind::Grid2D,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::RandomMatch,
+            TopologyKind::HalfRandom,
+        ][rng.below(6)];
+        let mut sched = Schedule::new(kind, n, rng.next_u64());
+        let w = sched.weight_at(0);
+        let norm = power::consensus_norm(&w);
+        assert!(norm <= 1.0 + 1e-7, "{kind} n={n}: ‖Ŵ‖ = {norm}");
+    }
+}
+
+/// Gossip over any connected static topology drives residue to ~0.
+#[test]
+fn prop_gossip_converges_on_static_topologies() {
+    let mut rng = Pcg::seeded(0x5E);
+    for _ in 0..12 {
+        let n = 4 + rng.below(20);
+        for kind in [TopologyKind::Ring, TopologyKind::Torus2D, TopologyKind::StaticExp] {
+            let decay = consensus::residue_decay(kind, n, 600, rng.next_u64());
+            assert!(
+                decay[599] < 1e-4,
+                "{kind} n={n}: residue {} after 600 steps",
+                decay[599]
+            );
+        }
+    }
+}
+
+/// JSON fuzz: parser round-trips its own rendering of random documents.
+#[test]
+fn prop_json_roundtrip_random_documents() {
+    fn random_json(rng: &mut Pcg, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let len = rng.below(8);
+                Json::Str((0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect())
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut map = std::collections::BTreeMap::new();
+                for i in 0..rng.below(5) {
+                    map.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(map)
+            }
+        }
+    }
+    let mut rng = Pcg::seeded(0x6E);
+    for case in 0..200 {
+        let doc = random_json(&mut rng, 3);
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(parsed, doc, "case {case}: {text}");
+    }
+}
+
+/// Optimizer-state invariant: parallel SGD rows stay identical under any
+/// gradient stream.
+#[test]
+fn prop_parallel_consensus_invariant() {
+    use expograph::optim::Optimizer;
+    let mut rng = Pcg::seeded(0x7E);
+    for _ in 0..10 {
+        let n = 2 + rng.below(10);
+        let dim = 1 + rng.below(40);
+        let mut opt = expograph::optim::ParallelMSgd::new(
+            StackedParams::replicate(n, &vec![0.5; dim]),
+            0.9,
+        );
+        let w = SparseWeights::from_dense(&Matrix::averaging(n));
+        for _ in 0..8 {
+            let mut g = StackedParams::zeros(n, dim);
+            for v in g.data.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            opt.step(&w, &g, 0.1);
+            assert!(opt.params().consensus_distance() < 1e-10);
+        }
+    }
+}

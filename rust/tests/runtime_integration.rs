@@ -1,0 +1,141 @@
+//! Integration tests: the full python-AOT → rust-PJRT bridge.
+//!
+//! These require `make artifacts` to have run (they are skipped with a
+//! message otherwise, so `cargo test` stays green on a fresh checkout).
+
+use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::data::logreg::{generate, LogRegConfig};
+use expograph::runtime::{GossipExecutor, LogRegExecutor, Manifest, Runtime, TransformerExecutor};
+use expograph::topology::exponential::one_peer_exp_weights;
+use expograph::util::rng::Pcg;
+
+fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("PJRT runtime"))
+}
+
+#[test]
+fn logreg_artifact_matches_rust_gradient() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = LogRegExecutor::load(&rt).unwrap();
+    assert_eq!(exe.d, 10);
+    // Build a batch from the Appendix D.5 generator and compare against
+    // the pure-Rust gradient.
+    let problem = generate(&LogRegConfig {
+        nodes: 1,
+        samples_per_node: exe.batch,
+        dim: exe.d,
+        heterogeneous: false,
+        seed: 5,
+    });
+    let shard = &problem.shards[0];
+    let x64: Vec<f64> = (0..exe.d).map(|j| 0.05 * j as f64 - 0.2).collect();
+    let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+    let h32: Vec<f32> = shard.features.iter().map(|&v| v as f32).collect();
+    let y32: Vec<f32> = shard.labels.iter().map(|&v| v as f32).collect();
+    let (loss, grad) = exe.loss_and_grad(&x32, &h32, &y32).unwrap();
+
+    let batch: Vec<usize> = (0..exe.batch).collect();
+    let mut rust_grad = vec![0.0f64; exe.d];
+    shard.minibatch_grad(&x64, &batch, &mut rust_grad);
+    let rust_loss = shard.loss(&x64);
+
+    assert!((loss as f64 - rust_loss).abs() < 1e-4, "loss {loss} vs {rust_loss}");
+    for j in 0..exe.d {
+        assert!(
+            (grad[j] as f64 - rust_grad[j]).abs() < 1e-4,
+            "grad[{j}]: {} vs {}",
+            grad[j],
+            rust_grad[j]
+        );
+    }
+}
+
+#[test]
+fn gossip_artifact_matches_rust_mixing() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = GossipExecutor::load(&rt, "gossip_update_small").unwrap();
+    let (n, p) = (exe.n, exe.p);
+    let w = one_peer_exp_weights(n, 1);
+    let mut w_flat: Vec<f32> = Vec::with_capacity(n * n);
+    for i in 0..n {
+        for j in 0..n {
+            w_flat.push(w[(i, j)] as f32);
+        }
+    }
+    let mut rng = Pcg::seeded(3);
+    let mut mk = |_| {
+        let mut s = StackedParams::zeros(n, p);
+        for v in s.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        s
+    };
+    let (x, m, g) = (mk(0), mk(1), mk(2));
+    let (beta, gamma) = (0.9f32, 0.07f32);
+    // PJRT path (Pallas kernel lowered into the artifact).
+    let (x_new, m_new) = exe.update(&w_flat, &x.data, &m.data, &g.data, beta, gamma).unwrap();
+    // Rust hot-path.
+    let sw = SparseWeights::from_dense(&w);
+    let mut xr = x.clone();
+    let mut mr = m.clone();
+    let mut xb = StackedParams::zeros(n, p);
+    let mut mb = StackedParams::zeros(n, p);
+    sw.mix_dmsgd(&mut xr, &mut mr, &g, beta, gamma, &mut xb, &mut mb);
+    for i in 0..n * p {
+        assert!((x_new[i] - xr.data[i]).abs() < 1e-4, "x[{i}]");
+        assert!((m_new[i] - mr.data[i]).abs() < 1e-4, "m[{i}]");
+    }
+}
+
+#[test]
+fn transformer_artifact_evaluates_and_learns() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = TransformerExecutor::load(&rt, "transformer_step_small").unwrap();
+    // Init params deterministically in Rust (matching the flat contract —
+    // any init works; we check learning, not exact values).
+    let mut rng = Pcg::seeded(11);
+    let mut params: Vec<f32> = (0..exe.param_count).map(|_| 0.02 * rng.normal() as f32).collect();
+    let corpus = expograph::data::corpus::Corpus::alice();
+    let window = corpus.sample_batch(&mut rng, exe.batch, exe.seq);
+    let mut grad = vec![0.0f32; exe.param_count];
+    let loss0 = exe.loss_and_grad(&params, &window, &mut grad).unwrap();
+    assert!(loss0.is_finite() && loss0 > 3.0, "init loss {loss0}");
+    assert!(grad.iter().all(|g| g.is_finite()));
+    // A few SGD steps on the same window must reduce loss (overfit check).
+    let mut loss = loss0;
+    for _ in 0..20 {
+        loss = exe.loss_and_grad(&params, &window, &mut grad).unwrap();
+        for (p, g) in params.iter_mut().zip(grad.iter()) {
+            *p -= 0.5 * g;
+        }
+    }
+    assert!(loss < loss0 * 0.8, "loss {loss0} -> {loss}");
+}
+
+#[test]
+fn runtime_reports_cpu_platform() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let platform = rt.platform().to_lowercase();
+    assert!(platform.contains("cpu") || platform.contains("host"), "{platform}");
+}
+
+#[test]
+fn executable_rejects_wrong_shapes() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let exe = rt.load("logreg_grad").unwrap();
+    let bad = vec![0.0f32; 3];
+    let result = exe.run(&[
+        expograph::runtime::Input::F32(&bad),
+        expograph::runtime::Input::F32(&bad),
+        expograph::runtime::Input::F32(&bad),
+    ]);
+    match result {
+        Ok(_) => panic!("wrong shapes accepted"),
+        Err(err) => assert!(err.to_string().contains("expected"), "{err}"),
+    }
+}
