@@ -5,8 +5,8 @@
 //! compares against a naive two-pass implementation (the §Perf ablation).
 
 use expograph::bench::{bench_config, black_box};
-use expograph::coordinator::{SparseWeights, StackedParams};
-use expograph::topology::schedule::static_weights;
+use expograph::coordinator::StackedParams;
+use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 use expograph::util::rng::Pcg;
 
@@ -24,8 +24,8 @@ fn main() {
     println!("state bytes = 5 streams x n x P x 4B per update\n");
     for &(n, p) in &[(8usize, 865_024usize), (16, 865_024), (32, 100_000), (64, 100_000)] {
         for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring, TopologyKind::FullyConnected] {
-            let w = static_weights(kind, n, 1);
-            let sw = SparseWeights::from_dense(&w);
+            let mut sched = Schedule::new(kind, n, 1);
+            let sw = sched.plan_at(0).clone();
             let mut x = stack(n, p, 1);
             let mut m = stack(n, p, 2);
             let g = stack(n, p, 3);
@@ -47,8 +47,7 @@ fn main() {
 
     // Ablation: fused vs two-pass (separate premix + two mixes).
     let (n, p) = (8usize, 865_024usize);
-    let w = static_weights(TopologyKind::StaticExp, n, 1);
-    let sw = SparseWeights::from_dense(&w);
+    let sw = expograph::topology::exponential::static_exp_plan(n);
     let x0 = stack(n, p, 1);
     let m0 = stack(n, p, 2);
     let g = stack(n, p, 3);

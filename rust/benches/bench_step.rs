@@ -4,7 +4,7 @@
 
 use expograph::bench::{bench_config, black_box};
 use expograph::coordinator::trainer::{GradProvider, QuadraticProvider};
-use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::coordinator::StackedParams;
 use expograph::costmodel::CostModel;
 use expograph::data::classify::{generate, ClassifyConfig};
 use expograph::data::shard::{shard, Sharding};
@@ -26,15 +26,15 @@ fn bench_training_step(
     let mut sched = Schedule::new(kind, n, 1);
     let mut k = 0usize;
     let stats = bench_config(label, 2, 10, 512, 0.5, &mut || {
-        let w = sched.weight_at(k);
-        let sw = SparseWeights::from_dense(&w);
+        // Cached borrowed plan: per-iteration topology cost is O(1).
+        let plan = sched.plan_at(k);
         for i in 0..n {
             let row = unsafe {
                 std::slice::from_raw_parts_mut(grads.data.as_mut_ptr().add(i * dim), dim)
             };
             black_box(provider.grad(i, opt.params().row(i), k, 7, row));
         }
-        opt.step(&sw, &grads, 0.05);
+        opt.step(plan, &grads, 0.05);
         k += 1;
     });
     println!("{}", stats.report());

@@ -1,14 +1,60 @@
-//! Benchmark: weight-matrix generation and spectral-gap computation
-//! (the analysis path behind Table 5 / Fig. 3).
+//! Benchmark: per-iteration topology cost (the tentpole of the sparse-
+//! first refactor), weight generation, and spectral-gap computation.
+//!
+//! The headline comparison is `Schedule::plan_at` (cached borrowed
+//! `MixingPlan`, O(1) amortized) against the legacy per-iteration path
+//! (dense `n×n` materialization + `MixingPlan::from_dense`'s O(n²)
+//! scan) at n ∈ {64, 1024, 4096}. On the cached path the per-iteration
+//! cost must stay flat as n grows; the legacy path grows quadratically.
 
 use expograph::bench::{bench_config, black_box};
+use expograph::coordinator::MixingPlan;
 use expograph::linalg::power;
 use expograph::spectral;
+use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights};
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 
 fn main() {
     println!("== bench_topology ==\n");
+
+    // --- plan-cache vs per-iteration dense materialization --------------
+    println!("per-iteration topology cost: cached plan_at vs dense+from_dense");
+    for n in [64usize, 1024, 4096] {
+        for kind in [TopologyKind::StaticExp, TopologyKind::OnePeerExp] {
+            let mut sched = Schedule::new(kind, n, 1);
+            let mut k = 0usize;
+            let cached = bench_config(
+                &format!("plan_at (cached)        n={n} {}", kind.name()),
+                10, 50, 4096, 0.2,
+                &mut || {
+                    black_box(sched.plan_at(k).max_degree);
+                    k += 1;
+                },
+            );
+            println!("{}", cached.report());
+            let mut k = 0usize;
+            let legacy = bench_config(
+                &format!("dense+from_dense (legacy) n={n} {}", kind.name()),
+                2, 5, 64, 0.2,
+                &mut || {
+                    let w = match kind {
+                        TopologyKind::StaticExp => static_exp_weights(n),
+                        _ => one_peer_exp_weights(n, k),
+                    };
+                    black_box(MixingPlan::from_dense(&w));
+                    k += 1;
+                },
+            );
+            println!("{}", legacy.report());
+            println!(
+                "  -> speedup {:.0}x (flat-vs-n expected on the cached path)\n",
+                legacy.median / cached.median.max(1e-12)
+            );
+        }
+    }
+
+    // --- schedule construction (one-off cost the cache amortizes) -------
     for n in [64usize, 256] {
         for kind in [
             TopologyKind::Ring,
@@ -18,16 +64,16 @@ fn main() {
             TopologyKind::HalfRandom,
         ] {
             let stats = bench_config(
-                &format!("schedule_weight_at n={n} {}", kind.name()),
+                &format!("schedule_build+first_plan n={n} {}", kind.name()),
                 2, 10, 256, 0.3,
                 &mut || {
                     let mut s = Schedule::new(kind, n, 1);
-                    black_box(s.weight_at(0));
+                    black_box(s.plan_at(0).max_degree);
                 },
             );
             println!("{}", stats.report());
         }
-        // Spectral-gap methods.
+        // Spectral-gap methods (dense analysis path, via the escape hatch).
         let ring = Schedule::new(TopologyKind::Ring, n, 0).weight_at(0);
         let exp = Schedule::new(TopologyKind::StaticExp, n, 0).weight_at(0);
         let s1 = bench_config(&format!("rho jacobi (ring) n={n}"), 1, 3, 32, 0.3, &mut || {

@@ -15,7 +15,7 @@
 //!
 //! Run with: `cargo run --release --example symmetric_timevarying [n]`
 
-use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::coordinator::StackedParams;
 use expograph::optim::AlgorithmKind;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
@@ -55,8 +55,7 @@ fn main() {
                     g.row_mut(i)[j] = opt.params().row(i)[j] - targets.row(i)[j];
                 }
             }
-            let sw = SparseWeights::from_dense(&sched.weight_at(k));
-            opt.step(&sw, &g, lr);
+            opt.step(sched.plan_at(k), &g, lr);
         }
         let mse = opt.params().mean_sq_error_to(&t_mean);
         let cons = opt.params().consensus_distance();

@@ -7,12 +7,12 @@
 //!
 //! Workload: byte-level LM on the embedded public-domain corpus, n = 8
 //! simulated nodes, a few hundred steps, loss curve to
-//! `results/e2e_loss.csv` (recorded in EXPERIMENTS.md).
+//! `results/e2e_loss.csv` (perf notes in docs/DESIGN.md §Perf).
 //!
 //! Run with: `cargo run --release --example transformer_e2e [steps]`
 //! (requires `make artifacts`)
 
-use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::coordinator::{MixingPlan, StackedParams};
 use expograph::costmodel::CostModel;
 use expograph::data::corpus::Corpus;
 use expograph::runtime::{GossipExecutor, Manifest, Runtime, TransformerExecutor};
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
             *v = 0.01 * rng2.normal() as f32;
         }
         let (px, pm) = gossip.update(&w_flat, &x.data, &m.data, &gx.data, beta, base_lr)?;
-        let sw = SparseWeights::from_dense(&w);
+        let sw = MixingPlan::from_dense(&w);
         let mut xr = x.clone();
         let mut mr = m.clone();
         sw.mix_dmsgd(&mut xr, &mut mr, &gx, beta, base_lr, &mut x_buf, &mut m_buf);
@@ -113,13 +113,13 @@ fn main() -> anyhow::Result<()> {
             mean_loss += loss as f64 / n as f64;
         }
         grad_secs += tg.elapsed().as_secs_f64();
-        // Algorithm 1 update over this iteration's one-peer realization.
+        // Algorithm 1 update over this iteration's one-peer realization —
+        // a cached borrowed plan, no dense matrix on the training path.
         let tm = Instant::now();
-        let w = topo.weight_at(k);
-        let sw = SparseWeights::from_dense(&w);
-        sw.mix_dmsgd(&mut x, &mut m, &g, beta, lr, &mut x_buf, &mut m_buf);
+        let plan = topo.plan_at(k);
+        plan.mix_dmsgd(&mut x, &mut m, &g, beta, lr, &mut x_buf, &mut m_buf);
         mix_secs += tm.elapsed().as_secs_f64();
-        sim_comm += cost.partial_averaging_time(&w, msg_bytes);
+        sim_comm += cost.partial_averaging_time(plan, msg_bytes);
 
         if k % 10 == 0 || k + 1 == steps {
             let consensus = x.consensus_distance();

@@ -4,13 +4,22 @@
 //! vs one-peer exponential vs random matching), Fig. 10 (non-power-of-2
 //! sizes), Fig. 11 (sampling strategies) and Fig. 12 (`‖∏ Ŵ^{(i)}‖₂²`),
 //! plus the exact-averaging verification of Lemma 1.
+//!
+//! Gossip simulation is sparse-first: [`residue_decay`] walks the
+//! schedule's cached plans with `O(nnz)` sparse matvecs
+//! (`MixingPlan::matvec`), so large-`n` sweeps never touch a dense
+//! matrix. Only the spectral-norm study ([`residue_product_norms`])
+//! goes through the dense escape hatch (it needs full matrix products
+//! for `‖·‖₂`).
 
 use crate::linalg::{power, Matrix};
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
 use crate::util::rng::Pcg;
 
-/// One gossip step on a vector of node values: `x ← W x`.
+/// One gossip step on a vector of node values: `x ← W x` (dense form;
+/// kept as an escape hatch for ad-hoc matrices — the simulation loops
+/// use the sparse `MixingPlan::matvec` directly).
 pub fn gossip_step(w: &Matrix, x: &[f64]) -> Vec<f64> {
     w.matvec(x)
 }
@@ -32,8 +41,7 @@ pub fn residue_decay(kind: TopologyKind, n: usize, iters: usize, seed: u64) -> V
     let r0 = residue_norm(&x).max(f64::MIN_POSITIVE);
     let mut out = Vec::with_capacity(iters);
     for k in 0..iters {
-        let w = sched.weight_at(k);
-        x = gossip_step(&w, &x);
+        x = sched.plan_at(k).matvec(&x);
         out.push(residue_norm(&x) / r0);
     }
     out
@@ -46,6 +54,8 @@ pub fn residue_product_norms(kind: TopologyKind, n: usize, iters: usize, seed: u
     let mut prod = Matrix::eye(n);
     let mut out = Vec::with_capacity(iters);
     for k in 0..iters {
+        // Dense escape hatch (to_dense): spectral norms need the full
+        // matrix product — this is analysis, not the training path.
         let w_hat = sched.weight_at(k).consensus_residue();
         prod = w_hat.matmul(&prod);
         let norm = power::spectral_norm(&prod);

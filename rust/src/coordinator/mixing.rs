@@ -1,47 +1,25 @@
 //! Partial-averaging (neighbor all-reduce) over stacked node state — the
 //! coordinator's hot path.
 //!
-//! The dense `n × n` weight matrix is converted once per iteration into a
-//! sparse row form (`SparseWeights`); mixing an `n × P` state stack then
-//! costs `O(nnz(W) · P)` streaming flops. [`SparseWeights::mix_dmsgd`]
-//! fuses Algorithm 1's two mixes — `m⁺ = W(βm + g)` and
-//! `x⁺ = W(x − γm)` — into a single pass over the parameter dimension so
-//! each of `x`, `m`, `g` is read exactly once per nonzero (see DESIGN.md
-//! §Perf).
+//! The mixing kernels consume a [`MixingPlan`] (the sparse-first
+//! representation owned by [`crate::topology::plan`]; `Schedule::plan_at`
+//! hands out cached borrows, so no dense `n × n` matrix and no per-
+//! iteration `O(n²)` conversion exist anywhere on the training path).
+//! Mixing an `n × P` state stack costs `O(nnz(W) · P)` streaming flops.
+//! [`MixingPlan::mix_dmsgd`] fuses Algorithm 1's two mixes —
+//! `m⁺ = W(βm + g)` and `x⁺ = W(x − γm)` — into a single pass over the
+//! parameter dimension so each of `x`, `m`, `g` is read exactly once per
+//! nonzero (see docs/DESIGN.md §Perf).
 
 use super::state::StackedParams;
-use crate::linalg::Matrix;
+pub use crate::topology::plan::MixingPlan;
 
-/// Sparse row-major form of a doubly-stochastic weight matrix.
-#[derive(Clone, Debug)]
-pub struct SparseWeights {
-    pub n: usize,
-    /// For each output row `i`: the `(j, w_ij)` of its nonzero entries.
-    pub rows: Vec<Vec<(usize, f32)>>,
-    /// Max number of distinct off-diagonal partners of any node.
-    pub max_degree: usize,
-}
+/// Legacy name for the sparse mixing representation. The plan type now
+/// lives in [`crate::topology::plan`]; this alias keeps older call sites
+/// and downstream code compiling.
+pub type SparseWeights = MixingPlan;
 
-impl SparseWeights {
-    /// Convert from a dense weight matrix, dropping exact zeros.
-    pub fn from_dense(w: &Matrix) -> SparseWeights {
-        let n = w.rows();
-        assert_eq!(n, w.cols());
-        let mut rows = Vec::with_capacity(n);
-        for i in 0..n {
-            let mut row = Vec::new();
-            for j in 0..n {
-                let v = w[(i, j)];
-                if v != 0.0 {
-                    row.push((j, v as f32));
-                }
-            }
-            rows.push(row);
-        }
-        let max_degree = crate::topology::weight::max_comm_degree(w);
-        SparseWeights { n, rows, max_degree }
-    }
-
+impl MixingPlan {
     /// Compute `out` rows in `range` of `W · input`.
     #[inline]
     fn mix_rows(&self, range: std::ops::Range<usize>, input: &[f32], dim: usize, out: &mut [f32]) {
@@ -61,6 +39,7 @@ impl SparseWeights {
                 let c1 = (c0 + CHUNK).min(dim);
                 let orow = &mut out[off + c0..off + c1];
                 for (idx, &(j, wij)) in row.iter().enumerate() {
+                    let wij = wij as f32;
                     let irow = &input[j * dim + c0..j * dim + c1];
                     if idx == 0 {
                         for (o, v) in orow.iter_mut().zip(irow.iter()) {
@@ -115,6 +94,7 @@ impl SparseWeights {
     /// Compute fused output rows `i ∈ rows_range` into `xo`/`mo` slices
     /// covering exactly those rows.
     #[inline]
+    #[allow(clippy::too_many_arguments)]
     fn mix_dmsgd_rows(
         &self,
         rows_range: std::ops::Range<usize>,
@@ -132,7 +112,7 @@ impl SparseWeights {
         // in L1 across the nonzero accumulation (otherwise every extra
         // nonzero costs a full read-modify-write pass over DRAM — measured
         // −40% throughput for the 6-nonzero static-exp rows; see
-        // EXPERIMENTS.md §Perf).
+        // docs/DESIGN.md §Perf).
         const CHUNK: usize = 4096;
         for i in rows_range {
             let off = (i - base) * dim;
@@ -148,6 +128,7 @@ impl SparseWeights {
             if row.len() == 2 {
                 let (j0, w0) = row[0];
                 let (j1, w1) = row[1];
+                let (w0, w1) = (w0 as f32, w1 as f32);
                 let (x0, x1) = (&x[j0 * dim..(j0 + 1) * dim], &x[j1 * dim..(j1 + 1) * dim]);
                 let (m0, m1) = (&m[j0 * dim..(j0 + 1) * dim], &m[j1 * dim..(j1 + 1) * dim]);
                 let (g0, g1) = (&g[j0 * dim..(j0 + 1) * dim], &g[j1 * dim..(j1 + 1) * dim]);
@@ -166,6 +147,7 @@ impl SparseWeights {
                 let xo = &mut xo_rows[off + c0..off + c1];
                 let mo = &mut mo_rows[off + c0..off + c1];
                 for (idx, &(j, wij)) in row.iter().enumerate() {
+                    let wij = wij as f32;
                     let xj = &x[j * dim + c0..j * dim + c1];
                     let mj = &m[j * dim + c0..j * dim + c1];
                     let gj = &g[j * dim + c0..j * dim + c1];
@@ -198,7 +180,8 @@ impl SparseWeights {
     /// `x`/`m` are updated in place through double buffers owned here.
     /// Large states are processed on `available_parallelism` threads with
     /// output rows partitioned per thread (the update is row-parallel by
-    /// construction — see §Perf in DESIGN.md).
+    /// construction — see docs/DESIGN.md §Perf).
+    #[allow(clippy::too_many_arguments)]
     pub fn mix_dmsgd(
         &self,
         x: &mut StackedParams,
@@ -212,8 +195,8 @@ impl SparseWeights {
         let n = self.n;
         let dim = x.dim;
         assert!(x.n == n && m.n == n && g.n == n && x_buf.n == n && m_buf.n == n);
-        // Threading threshold: below ~2 MF of streamed state the spawn
-        // overhead dominates (measured in EXPERIMENTS.md §Perf).
+        // Threading threshold: below ~2 MB of streamed state the spawn
+        // overhead dominates (measured in docs/DESIGN.md §Perf).
         let total = n * dim;
         let threads = if total >= 1 << 19 {
             std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n)
@@ -253,7 +236,10 @@ impl SparseWeights {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::topology::exponential::{one_peer_exp_weights, static_exp_weights};
+    use crate::linalg::Matrix;
+    use crate::topology::exponential::{
+        one_peer_exp_plan, one_peer_exp_weights, static_exp_plan, static_exp_weights,
+    };
 
     fn stack(n: usize, dim: usize, seed: u64) -> StackedParams {
         let mut rng = crate::util::rng::Pcg::seeded(seed);
@@ -267,7 +253,7 @@ mod tests {
     #[test]
     fn sparse_matches_dense_matvec() {
         let w = static_exp_weights(8);
-        let sw = SparseWeights::from_dense(&w);
+        let sw = static_exp_plan(8);
         let input = stack(8, 5, 1);
         let mut out = StackedParams::zeros(8, 5);
         sw.mix(&input, &mut out);
@@ -284,8 +270,7 @@ mod tests {
     #[test]
     fn mixing_preserves_mean() {
         // Doubly-stochastic W: column sums 1 → the node-mean is invariant.
-        let w = one_peer_exp_weights(16, 2);
-        let sw = SparseWeights::from_dense(&w);
+        let sw = one_peer_exp_plan(16, 2);
         let input = stack(16, 7, 2);
         let before = input.mean();
         let mut out = StackedParams::zeros(16, 7);
@@ -300,8 +285,7 @@ mod tests {
     fn fused_dmsgd_matches_two_separate_mixes() {
         let n = 8;
         let dim = 6;
-        let w = static_exp_weights(n);
-        let sw = SparseWeights::from_dense(&w);
+        let sw = static_exp_plan(n);
         let (beta, gamma) = (0.9f32, 0.05f32);
         let x0 = stack(n, dim, 3);
         let m0 = stack(n, dim, 4);
@@ -334,10 +318,24 @@ mod tests {
     }
 
     #[test]
+    fn legacy_from_dense_alias_still_mixes() {
+        // The SparseWeights alias + from_dense escape hatch behave exactly
+        // like the direct plan constructors.
+        let sw: SparseWeights = SparseWeights::from_dense(&one_peer_exp_weights(16, 0));
+        let plan = one_peer_exp_plan(16, 0);
+        let input = stack(16, 3, 9);
+        let mut out_a = StackedParams::zeros(16, 3);
+        let mut out_b = StackedParams::zeros(16, 3);
+        sw.mix(&input, &mut out_a);
+        plan.mix(&input, &mut out_b);
+        assert_eq!(out_a.data, out_b.data);
+    }
+
+    #[test]
     fn sparse_degree_matches_topology() {
-        let sw = SparseWeights::from_dense(&one_peer_exp_weights(16, 0));
+        let sw = one_peer_exp_plan(16, 0);
         assert_eq!(sw.max_degree, 2); // sends to one, receives from one
-        let sw2 = SparseWeights::from_dense(&Matrix::averaging(16));
+        let sw2 = MixingPlan::from_dense(&Matrix::averaging(16));
         assert_eq!(sw2.max_degree, 15);
     }
 }

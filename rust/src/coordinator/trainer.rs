@@ -3,12 +3,14 @@
 //! Mirrors the paper's experimental protocol:
 //! * optional warm-up all-reduce so the first `τ` iterations start from
 //!   exact consensus (Corollary 3),
-//! * per-iteration: sample `W^{(k)}`, compute per-node stochastic
-//!   gradients (threads for large models), apply the optimizer update,
+//! * per-iteration: borrow this iteration's cached [`MixingPlan`] from
+//!   the schedule (`O(1)` amortized, zero allocation for deterministic
+//!   topologies — see docs/DESIGN.md §Plan cache), compute per-node
+//!   stochastic gradients (threads for large models), apply the
+//!   optimizer update,
 //! * metrics: mean training loss, consensus distance, simulated
 //!   communication time from the [`crate::costmodel`].
 
-use super::mixing::SparseWeights;
 use super::schedule_lr::LrSchedule;
 use super::state::StackedParams;
 use crate::costmodel::CostModel;
@@ -119,8 +121,9 @@ impl<'a> Trainer<'a> {
         }
 
         for k in 0..self.cfg.iters {
-            let w = self.topology.weight_at(k);
-            let sw = SparseWeights::from_dense(&w);
+            // Borrowed, cached sparse plan: no dense matrix, no O(n²)
+            // scan, no allocation for deterministic topologies.
+            let plan = self.topology.plan_at(k);
             let lr = self.cfg.lr.at(k);
 
             // Per-node stochastic gradients.
@@ -166,14 +169,14 @@ impl<'a> Trainer<'a> {
                 total / n as f64
             };
 
-            self.optimizer.step(&sw, &grads, lr);
+            self.optimizer.step(plan, &grads, lr);
 
             history.loss.push(mean_loss);
             if let Some(cost) = &self.cfg.cost {
                 let comm = if self.optimizer.is_parallel() {
                     cost.allreduce_time(n, msg_bytes)
                 } else {
-                    cost.partial_averaging_time(&w, msg_bytes)
+                    cost.partial_averaging_time(plan, msg_bytes)
                 };
                 let hidden = cost.compute.min(comm) * cost.overlap;
                 history.sim_time += cost.compute + comm - hidden;
@@ -230,8 +233,12 @@ impl GradProvider for QuadraticProvider {
     }
 
     fn grad(&self, node: usize, params: &[f32], iter: usize, seed: u64, out: &mut [f32]) -> f32 {
+        // Parenthesized on purpose: `<<` binds tighter than `^` in Rust,
+        // so this is the grouping the bare expression already had — made
+        // explicit so the intent (node in the high bits, iter in the low
+        // bits) is unambiguous.
         let mut rng = Pcg::new(
-            seed ^ (node as u64) << 32 ^ iter as u64,
+            seed ^ ((node as u64) << 32) ^ (iter as u64),
             0x9AD,
         );
         let mut loss = 0.0f32;

@@ -15,8 +15,7 @@
 //! ~0.1 ms latency. The *shape* of the resulting per-iteration times — not
 //! their absolute values — is what Tables 2–3 validate.
 
-use crate::linalg::Matrix;
-use crate::topology::weight::max_comm_degree;
+use crate::topology::plan::MixingPlan;
 use crate::topology::TopologyKind;
 
 /// Communication cost parameters.
@@ -45,11 +44,11 @@ impl CostModel {
         }
     }
 
-    /// Time for one partial-averaging round given the realized weight
-    /// matrix (degree = max distinct partners of any node) and message
-    /// size in bytes.
-    pub fn partial_averaging_time(&self, w: &Matrix, msg_bytes: f64) -> f64 {
-        let d = max_comm_degree(w) as f64;
+    /// Time for one partial-averaging round given the realized mixing
+    /// plan. The degree (max distinct partners of any node) is plan
+    /// metadata, so this is `O(1)` — no `O(n²)` matrix scan.
+    pub fn partial_averaging_time(&self, plan: &MixingPlan, msg_bytes: f64) -> f64 {
+        let d = plan.max_degree as f64;
         d * (self.alpha + msg_bytes * self.beta)
     }
 
@@ -162,8 +161,11 @@ mod tests {
     #[test]
     fn partial_averaging_uses_realized_degree() {
         let m = CostModel::paper_default(0.0);
-        let w = crate::topology::exponential::static_exp_weights(16);
-        let t = m.partial_averaging_time(&w, 1e6);
+        let plan = crate::topology::exponential::static_exp_plan(16);
+        let t = m.partial_averaging_time(&plan, 1e6);
         assert!(t > 0.0);
+        // Plan metadata must agree with the dense scan it replaced.
+        let w = crate::topology::exponential::static_exp_weights(16);
+        assert_eq!(plan.max_degree, crate::topology::weight::max_comm_degree(&w));
     }
 }

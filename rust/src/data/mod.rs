@@ -1,7 +1,7 @@
 //! Synthetic workloads.
 //!
 //! The paper's experiments run on ImageNet/VOC/COCO on a 256-GPU cluster;
-//! per DESIGN.md §Substitutions we reproduce the *relative* behaviour with
+//! per docs/DESIGN.md §Substitutions we reproduce the *relative* behaviour with
 //! synthetic workloads whose statistical structure matches what the theory
 //! depends on:
 //!

@@ -1,4 +1,4 @@
-//! Ablation studies for the design choices DESIGN.md calls out, plus the
+//! Ablation studies for the design choices docs/DESIGN.md calls out, plus the
 //! paper's future-work direction (symmetric time-varying graphs).
 
 use super::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};

@@ -2,7 +2,7 @@
 //! 4, 9, 10): an MLP-classification [`GradProvider`] over sharded
 //! Gaussian-mixture data, and a runner reporting validation accuracy plus
 //! the simulated wall-clock of the paper's actual workload (ImageNet /
-//! ResNet-50 message sizes through the α-β cost model — see DESIGN.md
+//! ResNet-50 message sizes through the α-β cost model — see docs/DESIGN.md
 //! §Substitutions).
 
 use crate::coordinator::trainer::{GradProvider, TrainConfig, Trainer};

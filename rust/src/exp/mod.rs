@@ -1,5 +1,5 @@
 //! Experiment harness: regenerates every table and figure of the paper's
-//! evaluation (see DESIGN.md §Per-experiment index).
+//! evaluation (see docs/DESIGN.md §Per-experiment index).
 //!
 //! Each experiment is a function `fn(ctx) -> Result<()>` that writes CSV
 //! series to `results/` and prints a paper-style table. Invoke via
@@ -79,6 +79,6 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
             }
             Ok(())
         }
-        other => bail!("unknown experiment id: {other} (see DESIGN.md index)"),
+        other => bail!("unknown experiment id: {other} (see docs/DESIGN.md index)"),
     }
 }

@@ -188,7 +188,7 @@ fn algo_grid_table(
 
 /// Table 3 — static vs one-peer exponential across models and algorithms
 /// (ImageNet/ResNet-MobileNet-EfficientNet substituted by MLP capacity
-/// variants; see DESIGN.md §Substitutions).
+/// variants; see docs/DESIGN.md §Substitutions).
 pub fn table3(ctx: &Ctx) -> Result<()> {
     let datasets = vec![("synth10", table_dataset(ctx.seed))];
     let models = [("mlp-64 (resnet50)", 64usize), ("mlp-16 (mobilenet)", 16), ("mlp-128 (efficientnet)", 128)];

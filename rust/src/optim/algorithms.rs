@@ -2,7 +2,7 @@
 //! [`crate::optim`] for the update rules and provenance).
 
 use super::Optimizer;
-use crate::coordinator::mixing::SparseWeights;
+use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 
 /// Decentralized SGD (no momentum): `x⁺ = W(x − γ g)`.
@@ -25,7 +25,7 @@ impl Optimizer for DSgd {
         "dsgd"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         // pre = x − γ g, then x = W·pre.
         for (p, (x, g)) in self
             .pre
@@ -77,7 +77,7 @@ impl Optimizer for DmSgd {
         "dmsgd"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         w.mix_dmsgd(
             &mut self.x,
             &mut self.m,
@@ -120,7 +120,7 @@ impl Optimizer for VanillaDmSgd {
         "vanilla_dmsgd"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         // Local momentum refresh.
         for (m, g) in self.m.data.iter_mut().zip(grads.data.iter()) {
             *m = self.beta * *m + g;
@@ -175,7 +175,7 @@ impl Optimizer for QgDmSgd {
         "qg_dmsgd"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         for (h, ((x, g), m)) in self.half.data.iter_mut().zip(
             self.x
                 .data
@@ -233,7 +233,7 @@ impl Optimizer for ParallelMSgd {
         "parallel_sgd"
     }
 
-    fn step(&mut self, _w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, _w: &MixingPlan, grads: &StackedParams, lr: f32) {
         grads.mean_into(&mut self.g_mean);
         for (m, g) in self.m.iter_mut().zip(self.g_mean.iter()) {
             *m = self.beta * *m + g;
@@ -268,7 +268,6 @@ impl Optimizer for ParallelMSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Matrix;
     use crate::util::rng::Pcg;
 
     fn grads(n: usize, dim: usize, seed: u64) -> StackedParams {
@@ -280,8 +279,8 @@ mod tests {
         g
     }
 
-    fn full_avg(n: usize) -> SparseWeights {
-        SparseWeights::from_dense(&Matrix::averaging(n))
+    fn full_avg(n: usize) -> MixingPlan {
+        MixingPlan::averaging(n)
     }
 
     #[test]
@@ -324,11 +323,7 @@ mod tests {
         // of the c_i.
         let n = 8;
         let dim = 4;
-        let w = SparseWeights::from_dense(&crate::topology::schedule::static_weights(
-            crate::topology::TopologyKind::Ring,
-            n,
-            0,
-        ));
+        let w = crate::topology::metropolis::metropolis_plan(&crate::topology::graphs::ring(n));
         let mut targets = StackedParams::zeros(n, dim);
         let mut rng = Pcg::seeded(5);
         for v in targets.data.iter_mut() {
@@ -359,13 +354,9 @@ mod tests {
     fn all_momentum_variants_descend_quadratic() {
         let n = 8;
         let dim = 4;
-        let w = SparseWeights::from_dense(&crate::topology::exponential::one_peer_exp_weights(n, 0));
-        let w_all: Vec<SparseWeights> = (0..3)
-            .map(|t| {
-                SparseWeights::from_dense(&crate::topology::exponential::one_peer_exp_weights(n, t))
-            })
+        let w_all: Vec<MixingPlan> = (0..3)
+            .map(|t| crate::topology::exponential::one_peer_exp_plan(n, t))
             .collect();
-        let _ = w;
         let mut targets = StackedParams::zeros(n, dim);
         let mut rng = Pcg::seeded(6);
         for v in targets.data.iter_mut() {

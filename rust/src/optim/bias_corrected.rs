@@ -18,7 +18,7 @@
 //! point is O(γ·b/(1−ρ)) away — the property tested below.
 
 use super::Optimizer;
-use crate::coordinator::mixing::SparseWeights;
+use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 
 /// D² / Exact-Diffusion:
@@ -72,7 +72,7 @@ impl Optimizer for D2 {
         "d2"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         if self.first {
             for (p, (x, g)) in self
                 .pre
@@ -153,7 +153,7 @@ impl Optimizer for GradientTracking {
         "gradient_tracking"
     }
 
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32) {
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
         if self.first {
             self.y.data.copy_from_slice(&grads.data);
             self.first = false;
@@ -217,8 +217,7 @@ mod tests {
                     g.row_mut(i)[j] = opt.params().row(i)[j] - targets.row(i)[j];
                 }
             }
-            let sw = SparseWeights::from_dense(&sched.weight_at(k));
-            opt.step(&sw, &g, lr);
+            opt.step(sched.plan_at(k), &g, lr);
         }
         let mean_t = targets.mean();
         opt.params().mean_sq_error_to(&mean_t) + opt.params().consensus_distance()
@@ -271,7 +270,7 @@ mod tests {
         // naive D² over the one-peer hypercube diverges — the per-mode
         // period map [[2−γ, −(1−γ)],[1,0]]²·[[0,0],[1,0]] has spectral
         // radius ≈ 1.57 > 1 at γ = 0.15. Pinning this behaviour documents
-        // why symmetry alone is not enough (see DESIGN.md §Extensions).
+        // why symmetry alone is not enough (see docs/DESIGN.md §Extensions).
         let n = 8;
         let dim = 4;
         let t = targets(n, dim, 3);
@@ -310,8 +309,7 @@ mod tests {
                     g.row_mut(i)[j] = gt.params().row(i)[j] - t.row(i)[j];
                 }
             }
-            let sw = SparseWeights::from_dense(&sched.weight_at(k));
-            gt.step(&sw, &g, 0.1);
+            gt.step(sched.plan_at(k), &g, 0.1);
             let ym = gt.tracker().mean();
             let gm = g.mean();
             for (a, b) in ym.iter().zip(gm.iter()) {

@@ -20,7 +20,7 @@
 //! Every optimizer exposes the same [`Optimizer`] interface so the
 //! coordinator and the experiment harness can swap them freely.
 
-use crate::coordinator::mixing::SparseWeights;
+use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 
 pub mod algorithms;
@@ -97,8 +97,9 @@ pub trait Optimizer: Send {
     fn name(&self) -> &'static str;
 
     /// One training iteration: per-node stochastic gradients `g^{(k)}` and
-    /// this iteration's weight matrix (sparse form), learning rate `γ_k`.
-    fn step(&mut self, w: &SparseWeights, grads: &StackedParams, lr: f32);
+    /// this iteration's mixing plan (the sparse representation of
+    /// `W^{(k)}`, borrowed from the schedule's cache), learning rate `γ_k`.
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32);
 
     /// Current stacked parameters.
     fn params(&self) -> &StackedParams;

@@ -13,6 +13,8 @@
 //! cyclic (the paper's default), random permutation (still exact-averaging),
 //! and uniform sampling with replacement (only asymptotically exact).
 
+use super::plan::MixingPlan;
+use super::TopologyKind;
 use crate::linalg::Matrix;
 use crate::util::rng::Pcg;
 
@@ -50,6 +52,44 @@ pub fn static_exp_weights(n: usize) -> Matrix {
         w[(0, 0)] = 1.0;
     }
     w
+}
+
+/// Direct sparse constructor for the static exponential graph (Eq. (5)):
+/// row `i` holds `1/(τ+1)` at `i` and at `i + 2^t (mod n)` for
+/// `t = 0..τ−1`. Never materializes the dense matrix — `O(n log n)`
+/// nonzeros total.
+pub fn static_exp_plan(n: usize) -> MixingPlan {
+    if n == 1 {
+        return MixingPlan::from_rows(vec![vec![(0, 1.0)]], Some(TopologyKind::StaticExp));
+    }
+    let t = tau(n);
+    let coeff = 1.0 / (t as f64 + 1.0);
+    let hops = hop_offsets(n);
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = Vec::with_capacity(t + 1);
+        row.push((i, coeff));
+        for &h in &hops {
+            row.push(((i + h) % n, coeff));
+        }
+        rows.push(row);
+    }
+    MixingPlan::from_rows(rows, Some(TopologyKind::StaticExp))
+}
+
+/// Direct sparse constructor for the one-peer exponential realization
+/// with hop exponent `t` (Eq. (7)): row `i` is `½` at `i` and `½` at
+/// `i + 2^{mod(t,τ)} (mod n)`. Exactly two nonzeros per row.
+pub fn one_peer_exp_plan(n: usize, t: usize) -> MixingPlan {
+    if n == 1 {
+        return MixingPlan::from_rows(vec![vec![(0, 1.0)]], Some(TopologyKind::OnePeerExp));
+    }
+    let period = tau(n);
+    let hop = 1usize << (t % period.max(1));
+    let rows = (0..n)
+        .map(|i| vec![(i, 0.5), ((i + hop) % n, 0.5)])
+        .collect();
+    MixingPlan::from_rows(rows, Some(TopologyKind::OnePeerExp))
 }
 
 /// Generating vector (first column) of the static exponential circulant:
@@ -137,10 +177,18 @@ impl OnePeerSequence {
         }
     }
 
-    /// Weight matrix for iteration `k`.
+    /// Weight matrix for iteration `k` (dense escape hatch; the training
+    /// path uses [`OnePeerSequence::plan_at`]).
     pub fn weight_at(&mut self, k: usize) -> Matrix {
         let t = self.exponent_at(k);
         one_peer_exp_weights(self.n, t)
+    }
+
+    /// Sparse plan for iteration `k` — built directly from the sampled
+    /// hop exponent, never through a dense matrix.
+    pub fn plan_at(&mut self, k: usize) -> MixingPlan {
+        let t = self.exponent_at(k);
+        one_peer_exp_plan(self.n, t)
     }
 }
 
@@ -260,6 +308,24 @@ mod tests {
                 prod = one_peer_exp_weights(n, t).matmul(&prod);
             }
             assert!(prod.sub(&Matrix::averaging(n)).max_abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn direct_plans_match_dense_builders() {
+        for n in [1usize, 2, 3, 4, 6, 8, 9, 16, 33, 64] {
+            let want = MixingPlan::from_dense(&static_exp_weights(n));
+            let got = static_exp_plan(n);
+            assert_eq!(got.rows, want.rows, "static exp n={n}");
+            assert_eq!(got.max_degree, want.max_degree, "static exp n={n}");
+            assert_eq!(got.symmetric, want.symmetric, "static exp n={n}");
+            for t in 0..tau(n).max(1) {
+                let want = MixingPlan::from_dense(&one_peer_exp_weights(n, t));
+                let got = one_peer_exp_plan(n, t);
+                assert_eq!(got.rows, want.rows, "one peer n={n} t={t}");
+                assert_eq!(got.max_degree, want.max_degree, "one peer n={n} t={t}");
+                assert_eq!(got.symmetric, want.symmetric, "one peer n={n} t={t}");
+            }
         }
     }
 

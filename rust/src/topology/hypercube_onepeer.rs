@@ -11,6 +11,8 @@
 //! Requires `n = 2^τ`.
 
 use super::exponential::tau;
+use super::plan::MixingPlan;
+use super::TopologyKind;
 use crate::linalg::Matrix;
 
 /// Weight matrix of the one-peer hypercube realization with bit `t`.
@@ -31,6 +33,20 @@ pub fn one_peer_hypercube_weights(n: usize, t: usize) -> Matrix {
     w
 }
 
+/// Direct sparse constructor for the one-peer hypercube realization with
+/// bit `t`: a symmetric ½–½ perfect matching along one bit-dimension —
+/// exactly two nonzeros per row, no dense matrix.
+pub fn one_peer_hypercube_plan(n: usize, t: usize) -> MixingPlan {
+    assert!(n.is_power_of_two(), "one-peer hypercube requires n = 2^tau");
+    if n == 1 {
+        return MixingPlan::from_rows(vec![vec![(0, 1.0)]], Some(TopologyKind::OnePeerHypercube));
+    }
+    let period = tau(n).max(1);
+    let bit = 1usize << (t % period);
+    let rows = (0..n).map(|i| vec![(i, 0.5), (i ^ bit, 0.5)]).collect();
+    MixingPlan::from_rows(rows, Some(TopologyKind::OnePeerHypercube))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -44,6 +60,19 @@ mod tests {
                 assert!(is_doubly_stochastic(&w, 1e-12), "n={n} t={t}");
                 assert!(w.is_symmetric(0.0), "n={n} t={t}");
                 assert_eq!(max_comm_degree(&w), 1, "n={n} t={t}: perfect matching");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_matches_dense_builder() {
+        for n in [1usize, 2, 4, 8, 16, 32] {
+            for t in 0..tau(n).max(1) {
+                let want = MixingPlan::from_dense(&one_peer_hypercube_weights(n, t));
+                let got = one_peer_hypercube_plan(n, t);
+                assert_eq!(got.rows, want.rows, "n={n} t={t}");
+                assert_eq!(got.max_degree, want.max_degree, "n={n} t={t}");
+                assert!(got.symmetric, "matchings are symmetric (n={n} t={t})");
             }
         }
     }

@@ -4,6 +4,8 @@
 //! the one-peer exponential graph — but without the periodic
 //! exact-averaging property (Fig. 4).
 
+use super::plan::MixingPlan;
+use super::TopologyKind;
 use crate::linalg::Matrix;
 use crate::util::rng::Pcg;
 
@@ -39,6 +41,27 @@ impl RandomMatching {
             w[(lone, lone)] = 1.0;
         }
         w
+    }
+
+    /// Sample the next matching directly as a sparse plan — two nonzeros
+    /// per matched row, one for the odd-n leftover — consuming the RNG
+    /// exactly like [`RandomMatching::next_weights`] (same seed ⇒ same
+    /// sequence of matchings on either path).
+    pub fn next_plan(&mut self) -> MixingPlan {
+        let n = self.n;
+        let perm = self.rng.permutation(n);
+        let mut rows: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for p in 0..n / 2 {
+            let a = perm[2 * p];
+            let b = perm[2 * p + 1];
+            rows[a] = vec![(a, 0.5), (b, 0.5)];
+            rows[b] = vec![(a, 0.5), (b, 0.5)];
+        }
+        if n % 2 == 1 {
+            let lone = perm[n - 1];
+            rows[lone] = vec![(lone, 1.0)];
+        }
+        MixingPlan::from_rows(rows, Some(TopologyKind::RandomMatch))
     }
 }
 
@@ -79,6 +102,21 @@ mod tests {
             }
         }
         assert!(differs, "matching never changed over 10 draws");
+    }
+
+    #[test]
+    fn plan_matches_dense_builder_draw_for_draw() {
+        for n in [7usize, 8, 16] {
+            let mut dense = RandomMatching::new(n, 21);
+            let mut sparse = RandomMatching::new(n, 21);
+            for draw in 0..6 {
+                let want = MixingPlan::from_dense(&dense.next_weights());
+                let got = sparse.next_plan();
+                assert_eq!(got.rows, want.rows, "n={n} draw={draw}");
+                assert_eq!(got.max_degree, want.max_degree, "n={n} draw={draw}");
+                assert!(got.symmetric, "n={n} draw={draw}");
+            }
+        }
     }
 
     #[test]

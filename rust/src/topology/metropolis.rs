@@ -8,6 +8,7 @@
 //! geometric random graphs.
 
 use super::graphs::Graph;
+use super::plan::MixingPlan;
 use crate::linalg::Matrix;
 
 /// Build the Metropolis weight matrix of an undirected graph.
@@ -24,6 +25,33 @@ pub fn metropolis_weights(g: &Graph) -> Matrix {
         w[(i, i)] = diag;
     }
     w
+}
+
+/// Direct sparse constructor: Metropolis weights straight from the
+/// adjacency lists — `O(Σ deg)` work and memory, no dense matrix. The
+/// arithmetic mirrors [`metropolis_weights`] operation-for-operation so
+/// the resulting plan is bitwise identical to
+/// `MixingPlan::from_dense(&metropolis_weights(g))`.
+pub fn metropolis_plan(g: &Graph) -> MixingPlan {
+    let n = g.n();
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row = Vec::with_capacity(g.degree(i) + 1);
+        let mut diag = 1.0;
+        for &j in g.neighbors(i) {
+            let wij = 1.0 / (1.0 + g.degree(i).max(g.degree(j)) as f64);
+            row.push((j, wij));
+            diag -= wij;
+        }
+        // Metropolis diagonals are strictly positive, but keep the exact-
+        // zero guard so the plan matches `from_dense` (which drops zeros)
+        // for any graph.
+        if diag != 0.0 {
+            row.push((i, diag));
+        }
+        rows.push(row);
+    }
+    MixingPlan::from_rows(rows, None)
 }
 
 #[cfg(test)]
@@ -50,6 +78,19 @@ mod tests {
         assert!((w[(0, 1)] - 1.0 / 3.0).abs() < 1e-15);
         assert!((w[(0, 0)] - 1.0 / 3.0).abs() < 1e-15);
         assert_eq!(w[(0, 2)], 0.0);
+    }
+
+    #[test]
+    fn plan_matches_dense_for_classic_graphs() {
+        for n in [2usize, 3, 5, 8, 16, 31] {
+            for g in [graphs::ring(n), graphs::star(n), graphs::grid2d(n), graphs::torus2d(n)] {
+                let want = MixingPlan::from_dense(&metropolis_weights(&g));
+                let got = metropolis_plan(&g);
+                assert_eq!(got.rows, want.rows, "n={n}");
+                assert_eq!(got.max_degree, want.max_degree, "n={n}");
+                assert!(got.symmetric, "Metropolis weights are symmetric (n={n})");
+            }
+        }
     }
 
     #[test]

@@ -13,17 +13,23 @@
 //! | one-peer exponential | [`exponential`] | Eq. (7): time-varying ½–½ |
 //!
 //! [`schedule`] exposes the uniform [`schedule::Schedule`] interface the
-//! coordinator consumes: a (possibly time-varying) sequence `W^{(k)}`.
+//! coordinator consumes: a (possibly time-varying) sequence `W^{(k)}`,
+//! represented sparsely as cached [`plan::MixingPlan`]s — every topology
+//! has a direct sparse constructor, and the dense [`crate::linalg::Matrix`]
+//! form survives only behind `to_dense()` for spectral analysis and tests
+//! (docs/DESIGN.md §Plan cache).
 
 pub mod exponential;
 pub mod graphs;
 pub mod hypercube_onepeer;
 pub mod matching;
 pub mod metropolis;
+pub mod plan;
 pub mod random;
 pub mod schedule;
 pub mod weight;
 
 pub use graphs::Graph;
+pub use plan::MixingPlan;
 pub use schedule::{Schedule, TopologyKind};
 pub use weight::{is_doubly_stochastic, max_comm_degree};

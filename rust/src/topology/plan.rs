@@ -1,0 +1,239 @@
+//! `MixingPlan` — the canonical sparse-first representation of a mixing
+//! matrix `W^{(k)}`.
+//!
+//! The paper's whole point is that exponential graphs need only
+//! `O(log n)` (static) or `O(1)` (one-peer) neighbors per node, so the
+//! training path never materializes a dense `n × n` matrix: every
+//! topology has a *direct sparse constructor* (neighbor lists + per-edge
+//! weights), and [`crate::topology::schedule::Schedule::plan_at`] hands
+//! out cached borrowed plans. Dense [`Matrix`] form survives only behind
+//! the [`MixingPlan::to_dense`] escape hatch for spectral analysis
+//! (eigen/ρ computations) and tests. See docs/DESIGN.md §Plan cache.
+//!
+//! The mixing kernels (`mix`, `mix_dmsgd`) that consume a plan live in
+//! [`crate::coordinator::mixing`]; this module owns construction and
+//! structural metadata (`max_degree`, symmetry, originating
+//! [`TopologyKind`]).
+
+use super::TopologyKind;
+use crate::linalg::Matrix;
+
+/// Sparse row-major mixing matrix plus structural metadata.
+///
+/// Row `i` holds the sorted `(j, w_ij)` nonzeros of `W`'s row `i` in
+/// `f64` (weights are exact rationals like `1/(τ+1)`; keeping them in
+/// `f64` preserves the exact-averaging property of Lemma 1 for the
+/// consensus simulations — the `f32` cast happens once per nonzero inside
+/// the training kernels).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MixingPlan {
+    /// Number of nodes (rows).
+    pub n: usize,
+    /// For each output row `i`: the `(j, w_ij)` of its nonzero entries,
+    /// sorted by `j`.
+    pub rows: Vec<Vec<(usize, f64)>>,
+    /// Max over nodes of the number of *distinct* off-diagonal partners
+    /// (union of in- and out-neighbors) — the paper's per-iteration
+    /// communication degree.
+    pub max_degree: usize,
+    /// Is `W` exactly symmetric? (What D²/Exact-Diffusion require.)
+    pub symmetric: bool,
+    /// The topology this plan was built from, when known.
+    pub kind: Option<TopologyKind>,
+}
+
+impl MixingPlan {
+    /// Build a plan from per-row nonzero lists. Rows are sorted by column
+    /// index; `max_degree` and symmetry are derived from the structure in
+    /// `O(nnz log nnz)`. Deterministic schedules pay this once at cache
+    /// build; stochastic schedules (random matching, sampled one-peer)
+    /// pay it per draw — if that ever shows up in a profile, give the
+    /// matching/one-peer constructors a variant taking their analytic
+    /// metadata (degree 1–2, symmetry by `n | 2·hop`) instead.
+    pub fn from_rows(mut rows: Vec<Vec<(usize, f64)>>, kind: Option<TopologyKind>) -> MixingPlan {
+        for row in rows.iter_mut() {
+            row.sort_unstable_by_key(|e| e.0);
+        }
+        let n = rows.len();
+        let max_degree = union_max_degree(&rows);
+        let symmetric = rows_symmetric(&rows);
+        MixingPlan { n, rows, max_degree, symmetric, kind }
+    }
+
+    /// Tag the plan with its originating topology kind.
+    pub fn with_kind(mut self, kind: TopologyKind) -> Self {
+        self.kind = Some(kind);
+        self
+    }
+
+    /// Convert from a dense weight matrix, dropping exact zeros. This is
+    /// the legacy path — kept for tests, ad-hoc matrices, and as the
+    /// reference the direct constructors are property-tested against.
+    pub fn from_dense(w: &Matrix) -> MixingPlan {
+        let n = w.rows();
+        assert_eq!(n, w.cols(), "mixing matrix must be square");
+        let mut rows = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut row = Vec::new();
+            for j in 0..n {
+                let v = w[(i, j)];
+                if v != 0.0 {
+                    row.push((j, v));
+                }
+            }
+            rows.push(row);
+        }
+        MixingPlan::from_rows(rows, None)
+    }
+
+    /// The exact-averaging plan `J = 11ᵀ/n` (parallel SGD baseline).
+    pub fn averaging(n: usize) -> MixingPlan {
+        let w = 1.0 / n as f64;
+        let rows = (0..n).map(|_| (0..n).map(|j| (j, w)).collect()).collect();
+        MixingPlan::from_rows(rows, Some(TopologyKind::FullyConnected))
+    }
+
+    /// Dense escape hatch for spectral analysis (eigen/ρ) and tests —
+    /// never called on the training path.
+    pub fn to_dense(&self) -> Matrix {
+        let mut m = Matrix::zeros(self.n, self.n);
+        for (i, row) in self.rows.iter().enumerate() {
+            for &(j, w) in row {
+                m[(i, j)] = w;
+            }
+        }
+        m
+    }
+
+    /// Total number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.rows.iter().map(Vec::len).sum()
+    }
+
+    /// Sparse matrix-vector product `W x` in `f64` (the consensus/gossip
+    /// simulation path). Accumulates in ascending-`j` order, matching the
+    /// dense [`Matrix::matvec`] bit-for-bit on the stored nonzeros.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.n, "matvec dimension mismatch");
+        self.rows
+            .iter()
+            .map(|row| row.iter().map(|&(j, w)| w * x[j]).sum())
+            .collect()
+    }
+
+    /// Is the plan doubly stochastic to tolerance `tol`?
+    pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
+        let mut col_sums = vec![0.0f64; self.n];
+        for row in &self.rows {
+            let mut rsum = 0.0;
+            for &(j, w) in row {
+                if w < -tol {
+                    return false;
+                }
+                rsum += w;
+                col_sums[j] += w;
+            }
+            if (rsum - 1.0).abs() > tol {
+                return false;
+            }
+        }
+        col_sums.iter().all(|c| (c - 1.0).abs() <= tol)
+    }
+}
+
+/// Max over nodes of distinct communication partners, matching
+/// [`crate::topology::weight::max_comm_degree`] on the dense form:
+/// `j` is a partner of `i` iff `w_ij ≠ 0` or `w_ji ≠ 0`, `i ≠ j`.
+fn union_max_degree(rows: &[Vec<(usize, f64)>]) -> usize {
+    let n = rows.len();
+    let mut partners: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, row) in rows.iter().enumerate() {
+        for &(j, w) in row {
+            if i != j && w != 0.0 {
+                partners[i].push(j);
+                partners[j].push(i);
+            }
+        }
+    }
+    partners
+        .iter_mut()
+        .map(|p| {
+            p.sort_unstable();
+            p.dedup();
+            p.len()
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Exact structural symmetry: every stored `(i, j, w)` has a matching
+/// `(j, i, w)` (bitwise-equal weight, mirroring
+/// `Matrix::is_symmetric(0.0)` on the dense form).
+fn rows_symmetric(rows: &[Vec<(usize, f64)>]) -> bool {
+    let lookup = |i: usize, j: usize| -> Option<f64> {
+        let row = &rows[i];
+        row.binary_search_by_key(&j, |e| e.0).ok().map(|p| row[p].1)
+    };
+    rows.iter()
+        .enumerate()
+        .all(|(i, row)| row.iter().all(|&(j, w)| lookup(j, i) == Some(w)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::topology::exponential::{one_peer_exp_weights, static_exp_weights};
+
+    #[test]
+    fn from_dense_roundtrips_to_dense() {
+        for w in [static_exp_weights(9), one_peer_exp_weights(8, 1), Matrix::averaging(5)] {
+            let plan = MixingPlan::from_dense(&w);
+            assert_eq!(plan.to_dense(), w);
+        }
+    }
+
+    #[test]
+    fn metadata_matches_dense_queries() {
+        let w = static_exp_weights(16);
+        let plan = MixingPlan::from_dense(&w);
+        assert_eq!(plan.max_degree, crate::topology::weight::max_comm_degree(&w));
+        assert_eq!(plan.symmetric, w.is_symmetric(0.0));
+        assert!(!plan.symmetric, "static exp is asymmetric for n > 2");
+        let j = MixingPlan::averaging(6);
+        assert!(j.symmetric);
+        assert_eq!(j.max_degree, 5);
+        assert_eq!(j.kind, Some(TopologyKind::FullyConnected));
+    }
+
+    #[test]
+    fn matvec_matches_dense_matvec() {
+        let w = static_exp_weights(12);
+        let plan = MixingPlan::from_dense(&w);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let sparse = plan.matvec(&x);
+        let dense = w.matvec(&x);
+        for (a, b) in sparse.iter().zip(dense.iter()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn doubly_stochastic_check() {
+        assert!(MixingPlan::averaging(7).is_doubly_stochastic(1e-12));
+        let mut bad = MixingPlan::averaging(3);
+        bad.rows[0][0].1 = 0.9;
+        assert!(!bad.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn from_rows_sorts_and_counts() {
+        let plan = MixingPlan::from_rows(
+            vec![vec![(1, 0.5), (0, 0.5)], vec![(0, 0.5), (1, 0.5)]],
+            None,
+        );
+        assert_eq!(plan.rows[0], vec![(0, 0.5), (1, 0.5)]);
+        assert_eq!(plan.max_degree, 1);
+        assert!(plan.symmetric);
+        assert_eq!(plan.nnz(), 4);
+    }
+}

@@ -13,7 +13,8 @@
 //! Table 6 reports).
 
 use super::graphs::Graph;
-use super::metropolis::metropolis_weights;
+use super::metropolis::{metropolis_plan, metropolis_weights};
+use super::plan::MixingPlan;
 use crate::linalg::Matrix;
 use crate::util::rng::Pcg;
 
@@ -52,6 +53,34 @@ pub fn max_degree_weights(g: &Graph) -> Matrix {
     w
 }
 
+/// Direct sparse constructor for the max-degree lazy-walk weights:
+/// `1/d_max` per edge plus the `1 − d_i/d_max` diagonal, straight from
+/// the adjacency lists (arithmetic mirrors [`max_degree_weights`], so
+/// the plan is bitwise identical to its `from_dense` — including the
+/// dropped exactly-zero diagonal of maximum-degree nodes).
+pub fn max_degree_plan(g: &Graph) -> MixingPlan {
+    let n = g.n();
+    let dmax = g.max_degree().max(1) as f64;
+    let mut rows = Vec::with_capacity(n);
+    for i in 0..n {
+        let mut row: Vec<(usize, f64)> = Vec::with_capacity(g.degree(i) + 1);
+        for &j in g.neighbors(i) {
+            row.push((j, 1.0 / dmax));
+        }
+        let diag = 1.0 - g.degree(i) as f64 / dmax;
+        if diag != 0.0 {
+            row.push((i, diag));
+        }
+        rows.push(row);
+    }
+    MixingPlan::from_rows(rows, None)
+}
+
+/// The paper's ½-random graph as a sparse plan.
+pub fn half_random_plan(n: usize, seed: u64) -> MixingPlan {
+    max_degree_plan(&gnp_graph(n, 0.5, seed))
+}
+
 /// Erdős–Rényi `G(n, p)` with the connectivity-threshold scaling
 /// `p = (1+c)·ln(n)/n`.
 pub fn erdos_renyi_graph(n: usize, c: f64, seed: u64) -> Graph {
@@ -87,6 +116,17 @@ pub fn geometric_weights(n: usize, c: f64, seed: u64) -> Matrix {
     metropolis_weights(&geometric_graph(n, c, seed))
 }
 
+/// Metropolis plan over an ER graph (sparse, same seed ⇒ same graph as
+/// [`erdos_renyi_weights`]).
+pub fn erdos_renyi_plan(n: usize, c: f64, seed: u64) -> MixingPlan {
+    metropolis_plan(&erdos_renyi_graph(n, c, seed))
+}
+
+/// Metropolis plan over a geometric graph.
+pub fn geometric_plan(n: usize, c: f64, seed: u64) -> MixingPlan {
+    metropolis_plan(&geometric_graph(n, c, seed))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +150,31 @@ mod tests {
             assert!(is_doubly_stochastic(&erdos_renyi_weights(n, 1.0, 3), 1e-12));
             assert!(is_doubly_stochastic(&geometric_weights(n, 1.0, 3), 1e-12));
         }
+    }
+
+    #[test]
+    fn plans_match_dense_builders_for_random_graphs() {
+        for (n, seed) in [(8usize, 42u64), (16, 7), (33, 19)] {
+            let want = MixingPlan::from_dense(&half_random_weights(n, seed));
+            let got = half_random_plan(n, seed);
+            assert_eq!(got.rows, want.rows, "half-random n={n}");
+            assert_eq!(got.max_degree, want.max_degree, "half-random n={n}");
+            assert_eq!(got.symmetric, want.symmetric, "half-random n={n}");
+            let want = MixingPlan::from_dense(&erdos_renyi_weights(n, 1.0, seed));
+            assert_eq!(erdos_renyi_plan(n, 1.0, seed).rows, want.rows, "er n={n}");
+            let want = MixingPlan::from_dense(&geometric_weights(n, 1.0, seed));
+            assert_eq!(geometric_plan(n, 1.0, seed).rows, want.rows, "geo n={n}");
+        }
+    }
+
+    #[test]
+    fn max_degree_plan_drops_zero_diagonal() {
+        // The hub of a star has degree d_max, so its diagonal is exactly 0
+        // and must not be stored (from_dense drops exact zeros).
+        let g = crate::topology::graphs::star(6);
+        let plan = max_degree_plan(&g);
+        assert!(plan.rows[0].iter().all(|&(j, _)| j != 0), "hub diagonal must be dropped");
+        assert!(plan.is_doubly_stochastic(1e-12));
     }
 
     #[test]

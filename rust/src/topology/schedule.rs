@@ -1,10 +1,27 @@
 //! The uniform topology-schedule interface consumed by the coordinator:
-//! a (possibly time-varying) sequence of weight matrices `W^{(k)}`.
+//! a (possibly time-varying) sequence of mixing plans `W^{(k)}`.
+//!
+//! Sparse-first: [`Schedule::plan_at`] hands out **cached borrowed
+//! plans** — static topologies cache one [`MixingPlan`]; periodic
+//! time-varying schedules (one-peer exponential with period
+//! `τ = ⌈log₂ n⌉`, Theorem 2; one-peer hypercube with period `log₂ n`)
+//! precompute the full period once and cycle; only genuinely stochastic
+//! schedules (random matching, permuted/uniform-sampled one-peer)
+//! regenerate per iteration — and those build sparsely from their
+//! matchings, never through a dense matrix. Amortized per-iteration
+//! topology cost on every deterministic schedule is `O(1)`.
+//! The dense [`Matrix`] form survives only behind
+//! [`Schedule::weight_at`] / [`MixingPlan::to_dense`] for spectral
+//! analysis and tests (docs/DESIGN.md §Plan cache).
 
-use super::exponential::{one_peer_exp_weights, static_exp_weights, OnePeerOrder, OnePeerSequence};
+use super::exponential::{
+    one_peer_exp_plan, one_peer_exp_weights, static_exp_plan, OnePeerOrder, OnePeerSequence,
+};
 use super::graphs;
+use super::hypercube_onepeer::one_peer_hypercube_plan;
 use super::matching::RandomMatching;
-use super::metropolis::metropolis_weights;
+use super::metropolis::metropolis_plan;
+use super::plan::MixingPlan;
 use super::random;
 use crate::linalg::Matrix;
 
@@ -96,6 +113,18 @@ impl TopologyKind {
         )
     }
 
+    /// Is the sequence a deterministic cycle (static, or periodic with
+    /// period `τ(n)`)? These kinds are fully precomputed by
+    /// [`Schedule::plan_at`] and never regenerate.
+    pub fn is_deterministic(&self) -> bool {
+        !matches!(
+            self,
+            TopologyKind::RandomMatch
+                | TopologyKind::OnePeerExpPerm
+                | TopologyKind::OnePeerExpUniform
+        )
+    }
+
     /// The six topologies of Table 1 / Table 2.
     pub fn table1() -> [TopologyKind; 6] {
         [
@@ -115,18 +144,29 @@ impl std::fmt::Display for TopologyKind {
     }
 }
 
-enum State {
-    Static(Matrix),
+/// Stochastic plan generators (the only schedules that regenerate).
+enum Gen {
     OnePeer(OnePeerSequence),
-    OnePeerHc { n: usize },
     Matching(RandomMatching),
 }
 
-/// A stream of weight matrices `W^{(0)}, W^{(1)}, …` for one topology.
+enum State {
+    /// One plan, every iteration (static topologies).
+    Static(MixingPlan),
+    /// A precomputed period of plans; iteration `k` uses `k mod τ`.
+    Periodic(Vec<MixingPlan>),
+    /// Stochastic: regenerate (sparsely) per iteration; the last plan is
+    /// cached so repeated `plan_at(k)` calls for the same `k` are
+    /// idempotent and do not advance the RNG.
+    Stochastic { gen: Gen, current: MixingPlan, at: Option<usize> },
+}
+
+/// A stream of mixing plans `W^{(0)}, W^{(1)}, …` for one topology.
 ///
-/// Static topologies return the same matrix each iteration; time-varying
-/// ones advance internal state. `weight_at` must be called with
-/// non-decreasing `k` for the stochastic schedules to stay reproducible.
+/// Static topologies return the same cached plan each iteration;
+/// periodic ones cycle through a precomputed period; stochastic ones
+/// advance internal RNG state and must be queried with non-decreasing
+/// `k` to stay reproducible.
 pub struct Schedule {
     kind: TopologyKind,
     n: usize,
@@ -137,29 +177,60 @@ impl Schedule {
     /// Build a schedule for `kind` on `n` nodes. `seed` feeds the random
     /// topologies (and is ignored by deterministic ones).
     pub fn new(kind: TopologyKind, n: usize, seed: u64) -> Schedule {
+        let period = super::exponential::tau(n).max(1);
         let state = match kind {
-            TopologyKind::Ring => State::Static(metropolis_weights(&graphs::ring(n))),
-            TopologyKind::Star => State::Static(metropolis_weights(&graphs::star(n))),
-            TopologyKind::Grid2D => State::Static(metropolis_weights(&graphs::grid2d(n))),
-            TopologyKind::Torus2D => State::Static(metropolis_weights(&graphs::torus2d(n))),
-            TopologyKind::Hypercube => State::Static(metropolis_weights(&graphs::hypercube(n))),
-            TopologyKind::HalfRandom => State::Static(random::half_random_weights(n, seed)),
-            TopologyKind::ErdosRenyi => State::Static(random::erdos_renyi_weights(n, 1.0, seed)),
-            TopologyKind::Geometric => State::Static(random::geometric_weights(n, 1.0, seed)),
-            TopologyKind::StaticExp => State::Static(static_exp_weights(n)),
-            TopologyKind::FullyConnected => State::Static(Matrix::averaging(n)),
-            TopologyKind::RandomMatch => State::Matching(RandomMatching::new(n, seed)),
+            TopologyKind::Ring => State::Static(metropolis_plan(&graphs::ring(n)).with_kind(kind)),
+            TopologyKind::Star => State::Static(metropolis_plan(&graphs::star(n)).with_kind(kind)),
+            TopologyKind::Grid2D => {
+                State::Static(metropolis_plan(&graphs::grid2d(n)).with_kind(kind))
+            }
+            TopologyKind::Torus2D => {
+                State::Static(metropolis_plan(&graphs::torus2d(n)).with_kind(kind))
+            }
+            TopologyKind::Hypercube => {
+                State::Static(metropolis_plan(&graphs::hypercube(n)).with_kind(kind))
+            }
+            TopologyKind::HalfRandom => {
+                State::Static(random::half_random_plan(n, seed).with_kind(kind))
+            }
+            TopologyKind::ErdosRenyi => {
+                State::Static(random::erdos_renyi_plan(n, 1.0, seed).with_kind(kind))
+            }
+            TopologyKind::Geometric => {
+                State::Static(random::geometric_plan(n, 1.0, seed).with_kind(kind))
+            }
+            TopologyKind::StaticExp => State::Static(static_exp_plan(n)),
+            TopologyKind::FullyConnected => State::Static(MixingPlan::averaging(n)),
             TopologyKind::OnePeerExp => {
-                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::Cyclic, seed))
+                State::Periodic((0..period).map(|t| one_peer_exp_plan(n, t)).collect())
             }
-            TopologyKind::OnePeerExpPerm => {
-                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, seed))
+            TopologyKind::OnePeerHypercube => {
+                State::Periodic((0..period).map(|t| one_peer_hypercube_plan(n, t)).collect())
             }
-            TopologyKind::OnePeerExpUniform => {
-                State::OnePeer(OnePeerSequence::new(n, OnePeerOrder::UniformSampling, seed))
-            }
-            TopologyKind::OnePeerHypercube => State::OnePeerHc { n },
+            // `current` starts as a trivial dummy for every stochastic
+            // kind — `at: None` forces the first `plan_at` call to draw
+            // the real plan.
+            TopologyKind::OnePeerExpPerm => State::Stochastic {
+                gen: Gen::OnePeer(OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, seed)),
+                current: MixingPlan::averaging(1),
+                at: None,
+            },
+            TopologyKind::OnePeerExpUniform => State::Stochastic {
+                gen: Gen::OnePeer(OnePeerSequence::new(n, OnePeerOrder::UniformSampling, seed)),
+                current: MixingPlan::averaging(1),
+                at: None,
+            },
+            TopologyKind::RandomMatch => State::Stochastic {
+                gen: Gen::Matching(RandomMatching::new(n, seed)),
+                current: MixingPlan::averaging(1),
+                at: None,
+            },
         };
+        debug_assert_eq!(
+            kind.is_deterministic(),
+            !matches!(state, State::Stochastic { .. }),
+            "TopologyKind::is_deterministic out of sync with Schedule state for {kind}"
+        );
         Schedule { kind, n, state }
     }
 
@@ -171,28 +242,55 @@ impl Schedule {
         self.n
     }
 
-    /// Weight matrix `W^{(k)}`.
-    pub fn weight_at(&mut self, k: usize) -> Matrix {
+    /// The mixing plan `W^{(k)}` — the training hot path. Deterministic
+    /// schedules return a cached borrow in `O(1)` with zero allocation;
+    /// stochastic ones regenerate sparsely (never through a dense
+    /// matrix) and must be queried with non-decreasing `k`.
+    pub fn plan_at(&mut self, k: usize) -> &MixingPlan {
         match &mut self.state {
-            State::Static(w) => w.clone(),
-            State::OnePeer(seq) => seq.weight_at(k),
-            State::OnePeerHc { n } => {
-                crate::topology::hypercube_onepeer::one_peer_hypercube_weights(*n, k)
+            State::Static(plan) => plan,
+            State::Periodic(period) => &period[k % period.len()],
+            State::Stochastic { gen, current, at } => {
+                if *at != Some(k) {
+                    *current = match gen {
+                        Gen::OnePeer(seq) => seq.plan_at(k),
+                        Gen::Matching(m) => m.next_plan(),
+                    };
+                    *at = Some(k);
+                }
+                current
             }
-            State::Matching(m) => m.next_weights(),
         }
     }
 
-    /// Borrow the static matrix without cloning (None for time-varying).
-    pub fn static_weights(&self) -> Option<&Matrix> {
+    /// Dense weight matrix `W^{(k)}` — escape hatch for spectral/ρ
+    /// analysis and tests; never used on the training path.
+    pub fn weight_at(&mut self, k: usize) -> Matrix {
+        self.plan_at(k).to_dense()
+    }
+
+    /// Borrow the cached plan of a static topology (None for
+    /// time-varying schedules).
+    pub fn static_plan(&self) -> Option<&MixingPlan> {
         match &self.state {
-            State::Static(w) => Some(w),
+            State::Static(plan) => Some(plan),
             _ => None,
+        }
+    }
+
+    /// Length of the deterministic cycle: 1 for static topologies, the
+    /// period `τ(n)` for periodic ones, `None` for stochastic schedules.
+    pub fn period(&self) -> Option<usize> {
+        match &self.state {
+            State::Static(_) => Some(1),
+            State::Periodic(period) => Some(period.len()),
+            State::Stochastic { .. } => None,
         }
     }
 }
 
-/// Convenience: the static weight matrix of a non-time-varying topology.
+/// Convenience: the static weight matrix of a non-time-varying topology
+/// (dense escape hatch; first realization for time-varying kinds).
 pub fn static_weights(kind: TopologyKind, n: usize, seed: u64) -> Matrix {
     let mut s = Schedule::new(kind, n, seed);
     s.weight_at(0)
@@ -206,6 +304,7 @@ pub fn one_peer_weights(n: usize, t: usize) -> Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::topology::exponential::tau;
     use crate::topology::weight::is_doubly_stochastic;
 
     #[test]
@@ -224,6 +323,7 @@ mod tests {
             TopologyKind::OnePeerExp,
             TopologyKind::OnePeerExpPerm,
             TopologyKind::OnePeerExpUniform,
+            TopologyKind::OnePeerHypercube,
             TopologyKind::FullyConnected,
         ];
         for kind in kinds {
@@ -232,6 +332,7 @@ mod tests {
             for k in 0..6 {
                 let w = s.weight_at(k);
                 assert!(is_doubly_stochastic(&w, 1e-12), "{kind} k={k}");
+                assert!(s.plan_at(k).is_doubly_stochastic(1e-12), "{kind} k={k} (plan)");
             }
         }
     }
@@ -240,7 +341,8 @@ mod tests {
     fn static_kinds_are_constant() {
         let mut s = Schedule::new(TopologyKind::Ring, 8, 0);
         assert_eq!(s.weight_at(0), s.weight_at(5));
-        assert!(s.static_weights().is_some());
+        assert!(s.static_plan().is_some());
+        assert_eq!(s.period(), Some(1));
     }
 
     #[test]
@@ -250,6 +352,48 @@ mod tests {
         let w3 = s.weight_at(3);
         assert_eq!(w0, w3); // τ(8) = 3
         assert_ne!(w0, s.weight_at(1));
+        assert_eq!(s.period(), Some(3));
+    }
+
+    #[test]
+    fn periodic_plan_cache_is_tau_periodic() {
+        // plan_at(k) == plan_at(k + τ) for the periodic kinds, across a
+        // full period and from both one schedule and a fresh one.
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::OnePeerHypercube] {
+            let n = 16;
+            let period = tau(n);
+            let mut s = Schedule::new(kind, n, 0);
+            for k in 0..period {
+                let a = s.plan_at(k).clone();
+                let b = s.plan_at(k + period).clone();
+                assert_eq!(a, b, "{kind} k={k}");
+                let mut fresh = Schedule::new(kind, n, 99);
+                assert_eq!(&a, fresh.plan_at(k + 2 * period), "{kind} k={k} (fresh)");
+            }
+            assert_eq!(s.period(), Some(period));
+        }
+    }
+
+    #[test]
+    fn stochastic_plan_at_is_idempotent_per_iteration() {
+        let mut s = Schedule::new(TopologyKind::RandomMatch, 12, 5);
+        let first = s.plan_at(0).clone();
+        assert_eq!(&first, s.plan_at(0), "same k must not re-draw");
+        let second = s.plan_at(1).clone();
+        let mut replay = Schedule::new(TopologyKind::RandomMatch, 12, 5);
+        assert_eq!(&first, replay.plan_at(0));
+        assert_eq!(&second, replay.plan_at(1));
+        assert_eq!(s.period(), None);
+    }
+
+    #[test]
+    fn deterministic_kind_classification() {
+        assert!(TopologyKind::StaticExp.is_deterministic());
+        assert!(TopologyKind::OnePeerExp.is_deterministic());
+        assert!(TopologyKind::OnePeerHypercube.is_deterministic());
+        assert!(!TopologyKind::RandomMatch.is_deterministic());
+        assert!(!TopologyKind::OnePeerExpPerm.is_deterministic());
+        assert!(!TopologyKind::OnePeerExpUniform.is_deterministic());
     }
 
     #[test]

@@ -6,10 +6,15 @@ use expograph::consensus;
 use expograph::coordinator::{SparseWeights, StackedParams};
 use expograph::linalg::{power, Matrix};
 use expograph::spectral;
-use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights, tau};
+use expograph::topology::exponential::{
+    one_peer_exp_weights, static_exp_weights, tau, OnePeerOrder, OnePeerSequence,
+};
+use expograph::topology::hypercube_onepeer::one_peer_hypercube_weights;
+use expograph::topology::matching::RandomMatching;
+use expograph::topology::plan::MixingPlan;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::weight::is_doubly_stochastic;
-use expograph::topology::TopologyKind;
+use expograph::topology::{graphs, metropolis, random, TopologyKind};
 use expograph::util::json::Json;
 use expograph::util::rng::Pcg;
 
@@ -46,6 +51,111 @@ fn prop_all_schedules_doubly_stochastic() {
                     "case {case}: {kind} n={n} seed={seed} k={k}"
                 );
             }
+        }
+    }
+}
+
+/// Tentpole invariant: for EVERY `TopologyKind`, the schedule's cached
+/// sparse plans are structurally identical (rows, weights, degree,
+/// symmetry) to `MixingPlan::from_dense` of the legacy dense builders,
+/// realization by realization. The legacy dense path is reconstructed
+/// here explicitly, with the same seeds/RNG discipline the schedule uses.
+#[test]
+fn prop_plans_match_legacy_dense_builders() {
+    let all_kinds = [
+        TopologyKind::Ring,
+        TopologyKind::Star,
+        TopologyKind::Grid2D,
+        TopologyKind::Torus2D,
+        TopologyKind::Hypercube,
+        TopologyKind::HalfRandom,
+        TopologyKind::ErdosRenyi,
+        TopologyKind::Geometric,
+        TopologyKind::RandomMatch,
+        TopologyKind::StaticExp,
+        TopologyKind::OnePeerExp,
+        TopologyKind::OnePeerExpPerm,
+        TopologyKind::OnePeerExpUniform,
+        TopologyKind::OnePeerHypercube,
+        TopologyKind::FullyConnected,
+    ];
+    let mut rng = Pcg::seeded(0x91A);
+    for case in 0..12 {
+        let n_any = 2 + rng.below(40);
+        let n_pow2 = 1usize << (1 + rng.below(6)); // 2..64
+        let seed = rng.next_u64();
+        for &kind in &all_kinds {
+            let n = match kind {
+                TopologyKind::Hypercube | TopologyKind::OnePeerHypercube => n_pow2,
+                _ => n_any,
+            };
+            let mut sched = Schedule::new(kind, n, seed);
+            // Stateful legacy generators for the stochastic kinds, seeded
+            // exactly like the schedule seeds its own.
+            let mut matching = RandomMatching::new(n, seed);
+            let mut perm_seq = OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, seed);
+            let mut unif_seq = OnePeerSequence::new(n, OnePeerOrder::UniformSampling, seed);
+            for k in 0..5usize {
+                let dense = match kind {
+                    TopologyKind::Ring => metropolis::metropolis_weights(&graphs::ring(n)),
+                    TopologyKind::Star => metropolis::metropolis_weights(&graphs::star(n)),
+                    TopologyKind::Grid2D => metropolis::metropolis_weights(&graphs::grid2d(n)),
+                    TopologyKind::Torus2D => metropolis::metropolis_weights(&graphs::torus2d(n)),
+                    TopologyKind::Hypercube => {
+                        metropolis::metropolis_weights(&graphs::hypercube(n))
+                    }
+                    TopologyKind::HalfRandom => random::half_random_weights(n, seed),
+                    TopologyKind::ErdosRenyi => random::erdos_renyi_weights(n, 1.0, seed),
+                    TopologyKind::Geometric => random::geometric_weights(n, 1.0, seed),
+                    TopologyKind::RandomMatch => matching.next_weights(),
+                    TopologyKind::StaticExp => static_exp_weights(n),
+                    TopologyKind::OnePeerExp => one_peer_exp_weights(n, k % tau(n).max(1)),
+                    TopologyKind::OnePeerExpPerm => perm_seq.weight_at(k),
+                    TopologyKind::OnePeerExpUniform => unif_seq.weight_at(k),
+                    TopologyKind::OnePeerHypercube => one_peer_hypercube_weights(n, k),
+                    TopologyKind::FullyConnected => Matrix::averaging(n),
+                };
+                let want = MixingPlan::from_dense(&dense);
+                let got = sched.plan_at(k);
+                assert_eq!(got.n, want.n, "case {case}: {kind} n={n} k={k}");
+                assert_eq!(got.rows, want.rows, "case {case}: {kind} n={n} seed={seed} k={k}");
+                assert_eq!(
+                    got.max_degree, want.max_degree,
+                    "case {case}: {kind} n={n} k={k} (degree)"
+                );
+                assert_eq!(
+                    got.symmetric, want.symmetric,
+                    "case {case}: {kind} n={n} k={k} (symmetry)"
+                );
+            }
+        }
+    }
+}
+
+/// Periodic plan caches cycle with period τ: `plan_at(k) == plan_at(k+τ)`
+/// for the one-peer exponential and one-peer hypercube schedules, at
+/// random offsets and sizes.
+#[test]
+fn prop_periodic_plan_cache_equivalence() {
+    let mut rng = Pcg::seeded(0x7A0);
+    for _ in 0..20 {
+        let n = 1usize << (1 + rng.below(7)); // 2..128
+        let period = tau(n).max(1);
+        let k = rng.below(4 * period);
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::OnePeerHypercube] {
+            let mut s = Schedule::new(kind, n, 1);
+            let a = s.plan_at(k).clone();
+            let b = s.plan_at(k + period).clone();
+            assert_eq!(a, b, "{kind} n={n} k={k}");
+            assert_eq!(s.period(), Some(period), "{kind} n={n}");
+            // And the cached plan is the direct constructor's output.
+            let direct = match kind {
+                TopologyKind::OnePeerExp => {
+                    expograph::topology::exponential::one_peer_exp_plan(n, k % period)
+                }
+                _ => expograph::topology::hypercube_onepeer::one_peer_hypercube_plan(n, k),
+            };
+            assert_eq!(a.rows, direct.rows, "{kind} n={n} k={k} (direct)");
         }
     }
 }

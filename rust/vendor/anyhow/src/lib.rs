@@ -1,0 +1,171 @@
+//! Minimal, offline stand-in for the [`anyhow`](https://docs.rs/anyhow)
+//! crate, vendored because the build sandbox has no network access.
+//!
+//! It implements exactly the surface this workspace uses:
+//!
+//! * [`Error`] — an opaque, `Display`-able error value,
+//! * [`Result<T>`] — `std::result::Result<T, Error>`,
+//! * blanket `From<E: std::error::Error>` so `?` converts std errors,
+//! * the [`Context`] trait (`.context(..)` / `.with_context(..)`) on both
+//!   `Result` and `Option`,
+//! * the [`anyhow!`] and [`bail!`] macros.
+//!
+//! Context messages are folded into the message string (`"<context>:
+//! <cause>"`), which preserves the `err.to_string().contains(..)`
+//! behaviour the tests rely on.
+
+use std::fmt;
+
+/// Opaque error value carrying a rendered message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like the real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion does not overlap the
+// reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Error {
+        Error::msg(err)
+    }
+}
+
+/// `Result` specialized to [`Error`], matching `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (`Result`) or missing values (`Option`).
+pub trait Context<T, E> {
+    /// Wrap the error/none case with a fixed context message.
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error/none case with a lazily-built context message.
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_err() -> Result<i32> {
+        let n: i32 = "nope".parse()?;
+        Ok(n)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(parse_err().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::num::ParseIntError> = "x".parse::<i32>().map(|_| ());
+        let err = r.context("reading count").unwrap_err();
+        assert!(err.to_string().contains("reading count"));
+        let missing: Option<u8> = None;
+        let err = missing.with_context(|| format!("key {}", "k")).unwrap_err();
+        assert!(err.to_string().contains("key k"));
+        assert_eq!(Some(3u8).context("fine").unwrap(), 3);
+    }
+
+    #[test]
+    fn macros_render_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let n = 7;
+        let e = anyhow!("value {n} bad");
+        assert_eq!(e.to_string(), "value 7 bad");
+        let e = anyhow!("value {} bad", 9);
+        assert_eq!(e.to_string(), "value 9 bad");
+        fn bails() -> Result<()> {
+            bail!("stop {}", "now")
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop now");
+    }
+}
