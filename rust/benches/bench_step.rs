@@ -1,16 +1,23 @@
 //! Benchmark: full end-to-end training iterations per topology and n —
 //! the wall-clock shape behind Table 2 (compute + mixing, simulated comm
-//! reported separately via the cost model).
+//! reported separately via the cost model) — plus the headline
+//! engine-vs-legacy comparison: the persistent worker pool
+//! (`expograph::engine`, zero per-iteration thread spawns) against the
+//! pre-engine protocol (a fresh scoped thread team per iteration for
+//! gradients + the spawn-per-call `mix_dmsgd` wrapper) at
+//! n ∈ {64, 1024, 4096} on the one-peer exponential schedule. Results
+//! are emitted to `BENCH_step.json` for the perf trajectory.
 
-use expograph::bench::{bench_config, black_box};
+use expograph::bench::{bench_config, black_box, BenchStats};
 use expograph::coordinator::trainer::{GradProvider, QuadraticProvider};
 use expograph::coordinator::StackedParams;
 use expograph::costmodel::CostModel;
 use expograph::data::classify::{generate, ClassifyConfig};
 use expograph::data::shard::{shard, Sharding};
+use expograph::engine::{shard_range, Engine};
 use expograph::exp::classify_runner::ClassifyProvider;
 use expograph::models::{Mlp, MlpConfig};
-use expograph::optim::AlgorithmKind;
+use expograph::optim::{AlgorithmKind, StepScratch};
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 
@@ -23,21 +30,97 @@ fn bench_training_step(
     let dim = provider.dim();
     let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
     let mut grads = StackedParams::zeros(n, dim);
+    let mut scratch = StepScratch::default();
     let mut sched = Schedule::new(kind, n, 1);
     let mut k = 0usize;
     let stats = bench_config(label, 2, 10, 512, 0.5, &mut || {
         // Cached borrowed plan: per-iteration topology cost is O(1).
         let plan = sched.plan_at(k);
-        for i in 0..n {
-            let row = unsafe {
-                std::slice::from_raw_parts_mut(grads.data.as_mut_ptr().add(i * dim), dim)
-            };
+        for (i, row) in grads.data.chunks_mut(dim).enumerate() {
             black_box(provider.grad(i, opt.params().row(i), k, 7, row));
         }
-        opt.step(plan, &grads, 0.05);
+        // Persistent scratch: the timed loop measures the kernel, not
+        // per-call allocation.
+        opt.step_with(plan, &grads, 0.05, &mut scratch);
         k += 1;
     });
     println!("{}", stats.report());
+}
+
+/// The legacy spawn-per-iteration protocol: a fresh scoped thread team
+/// for the gradients every iteration, then the spawn-per-call
+/// `mix_dmsgd` wrapper for the DmSGD update.
+fn bench_legacy(n: usize, dim: usize, threads: usize, provider: &QuadraticProvider) -> BenchStats {
+    let kind = TopologyKind::OnePeerExp;
+    let (beta, lr) = (0.9f32, 0.05f32);
+    let mut sched = Schedule::new(kind, n, 1);
+    let mut x = StackedParams::replicate(n, &vec![0.0f32; dim]);
+    let mut m = StackedParams::zeros(n, dim);
+    let mut xb = StackedParams::zeros(n, dim);
+    let mut mb = StackedParams::zeros(n, dim);
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut k = 0usize;
+    bench_config(
+        &format!("legacy spawn-per-iter   n={n} P={dim}"),
+        2,
+        5,
+        256,
+        0.25,
+        &mut || {
+            let plan = sched.plan_at(k);
+            {
+                let params = &x;
+                std::thread::scope(|scope| {
+                    let mut rest = grads.data.as_mut_slice();
+                    for t in 0..threads {
+                        let rows = shard_range(n, threads, t);
+                        let take = (rows.end - rows.start) * dim;
+                        let (head, tail) = rest.split_at_mut(take);
+                        rest = tail;
+                        scope.spawn(move || {
+                            for (off, i) in rows.enumerate() {
+                                black_box(provider.grad(
+                                    i,
+                                    params.row(i),
+                                    k,
+                                    7,
+                                    &mut head[off * dim..(off + 1) * dim],
+                                ));
+                            }
+                        });
+                    }
+                });
+            }
+            plan.mix_dmsgd(&mut x, &mut m, &grads, beta, lr, &mut xb, &mut mb);
+            k += 1;
+        },
+    )
+}
+
+/// The engine path: one persistent pool reused by every iteration's
+/// gradients and fused optimizer step.
+fn bench_engine(n: usize, dim: usize, threads: usize, provider: &QuadraticProvider) -> BenchStats {
+    let kind = TopologyKind::OnePeerExp;
+    let mut sched = Schedule::new(kind, n, 1);
+    let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let engine = Engine::new(threads);
+    let mut scratch = StepScratch::default();
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut losses = vec![0.0f64; n];
+    let mut k = 0usize;
+    bench_config(
+        &format!("engine persistent pool  n={n} P={dim}"),
+        2,
+        5,
+        256,
+        0.25,
+        &mut || {
+            let plan = sched.plan_at(k);
+            engine.compute_grads(provider, opt.params(), &mut grads, &mut losses, k, 7);
+            opt.step_engine(&engine, plan, &grads, 0.05, &mut scratch);
+            k += 1;
+        },
+    )
 }
 
 fn main() {
@@ -68,6 +151,40 @@ fn main() {
             &provider,
             kind,
         );
+    }
+
+    // --- engine vs legacy spawn-per-iteration ---------------------------
+    // The acceptance comparison of the sharded-execution-engine PR: the
+    // persistent pool must be at least as fast as spawn/join-per-iteration
+    // at n = 4096 with the one-peer exponential schedule.
+    println!("\nengine (persistent pool) vs legacy (spawn per iteration), one-peer exp:");
+    let dim = 256;
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let mut rows_json = Vec::new();
+    for n in [64usize, 1024, 4096] {
+        let t = threads.min(n);
+        let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+        let legacy = bench_legacy(n, dim, t, &provider);
+        let engine = bench_engine(n, dim, t, &provider);
+        println!("{}", legacy.report());
+        println!("{}", engine.report());
+        let speedup = legacy.median / engine.median.max(f64::MIN_POSITIVE);
+        println!("  -> engine speedup at n={n}: {speedup:.2}x\n");
+        rows_json.push(format!(
+            "    {{\"n\": {n}, \"threads\": {t}, \"legacy_s_per_iter\": {:.9}, \
+             \"engine_s_per_iter\": {:.9}, \"speedup\": {:.4}}}",
+            legacy.median, engine.median, speedup
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_step\",\n  \"comparison\": \"engine_vs_legacy_spawn_per_iter\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"algorithm\": \"dmsgd\",\n  \"dim\": {dim},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    match std::fs::write("BENCH_step.json", &json) {
+        Ok(()) => println!("wrote BENCH_step.json"),
+        Err(e) => eprintln!("could not write BENCH_step.json: {e}"),
     }
 
     // Simulated per-iteration comm time (the actual Table 2 TIME shape).

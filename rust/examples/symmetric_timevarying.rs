@@ -49,13 +49,14 @@ fn main() {
         let mut opt = algo.build(n, &vec![0.0f32; dim], 0.8);
         let mut sched = Schedule::new(kind, n, 1);
         let mut g = StackedParams::zeros(n, dim);
+        let mut scratch = expograph::optim::StepScratch::default();
         for k in 0..iters {
             for i in 0..n {
                 for j in 0..dim {
                     g.row_mut(i)[j] = opt.params().row(i)[j] - targets.row(i)[j];
                 }
             }
-            opt.step(sched.plan_at(k), &g, lr);
+            opt.step_with(sched.plan_at(k), &g, lr, &mut scratch);
         }
         let mse = opt.params().mean_sq_error_to(&t_mean);
         let cons = opt.params().consensus_distance();

@@ -5,13 +5,16 @@
 //! sizes), Fig. 11 (sampling strategies) and Fig. 12 (`‖∏ Ŵ^{(i)}‖₂²`),
 //! plus the exact-averaging verification of Lemma 1.
 //!
-//! Gossip simulation is sparse-first: [`residue_decay`] walks the
-//! schedule's cached plans with `O(nnz)` sparse matvecs
-//! (`MixingPlan::matvec`), so large-`n` sweeps never touch a dense
-//! matrix. Only the spectral-norm study ([`residue_product_norms`])
-//! goes through the dense escape hatch (it needs full matrix products
-//! for `‖·‖₂`).
+//! Gossip simulation is sparse-first and engine-routed:
+//! [`residue_decay`] walks the schedule's cached plans with `O(nnz)`
+//! sparse matvecs sharded over the same persistent worker pool the
+//! trainer uses ([`Engine::gossip_into`] — row-local, bitwise-identical
+//! for any lane count), so large-`n` sweeps never touch a dense matrix
+//! and never spawn per-step threads. Only the spectral-norm study
+//! ([`residue_product_norms`]) goes through the dense escape hatch (it
+//! needs full matrix products for `‖·‖₂`).
 
+use crate::engine::Engine;
 use crate::linalg::{power, Matrix};
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
@@ -34,14 +37,33 @@ pub fn residue_norm(x: &[f64]) -> f64 {
 /// Run `iters` gossip steps of a topology schedule starting from a random
 /// vector; return the residue norm after each step, normalized by the
 /// initial residue (this is the y-axis of Figs. 4/10/11).
+///
+/// Sizes a pool automatically ([`Engine::auto`]; single-lane below the
+/// threshold) and delegates to [`residue_decay_on`].
 pub fn residue_decay(kind: TopologyKind, n: usize, iters: usize, seed: u64) -> Vec<f64> {
+    residue_decay_on(&Engine::auto(n, 1), kind, n, iters, seed)
+}
+
+/// [`residue_decay`] on a caller-supplied engine: every gossip step is a
+/// sharded `W x` on the persistent pool (double-buffered — no per-step
+/// allocation, no per-step threads). Row-local sparse dot products make
+/// the trajectory bitwise-identical for any lane count.
+pub fn residue_decay_on(
+    engine: &Engine,
+    kind: TopologyKind,
+    n: usize,
+    iters: usize,
+    seed: u64,
+) -> Vec<f64> {
     let mut sched = Schedule::new(kind, n, seed);
     let mut rng = Pcg::new(seed ^ 0xD15C0, 1);
     let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut y = vec![0.0f64; n];
     let r0 = residue_norm(&x).max(f64::MIN_POSITIVE);
     let mut out = Vec::with_capacity(iters);
     for k in 0..iters {
-        x = sched.plan_at(k).matvec(&x);
+        engine.gossip_into(sched.plan_at(k), &x, &mut y);
+        std::mem::swap(&mut x, &mut y);
         out.push(residue_norm(&x) / r0);
     }
     out
@@ -104,6 +126,18 @@ mod tests {
         assert!(residue_norm(&[2.0, 2.0, 2.0]) < 1e-15);
         let r = residue_norm(&[1.0, -1.0]);
         assert!((r - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residue_decay_identical_across_lane_counts() {
+        // The engine-routed gossip is row-local: any pool size must
+        // reproduce the single-lane trajectory bit for bit.
+        let serial = residue_decay(TopologyKind::OnePeerExp, 16, 12, 3);
+        for lanes in [2usize, 4, 7] {
+            let pooled =
+                residue_decay_on(&Engine::new(lanes), TopologyKind::OnePeerExp, 16, 12, 3);
+            assert_eq!(serial, pooled, "lanes={lanes}");
+        }
     }
 
     #[test]

@@ -20,33 +20,49 @@ pub use crate::topology::plan::MixingPlan;
 pub type SparseWeights = MixingPlan;
 
 impl MixingPlan {
-    /// Compute `out` rows in `range` of `W · input`.
+    /// Fused sparse mix over output rows `rows`: accumulate `W·v` into
+    /// the shard view `out` (row `rows.start` at offset 0), where the
+    /// chunk `v_j[c0 .. c0+dst.len()]` is produced **on the fly** by
+    /// `src(j, c0, dst)` — this is what fuses an algorithm's pre-mix
+    /// element loop into the accumulation (one streaming pass per
+    /// nonzero). The source chunk lands in a stack buffer that stays
+    /// L1-resident, and both the fill and the accumulation are plain
+    /// slice zips (no per-element indexing in the hot loop). Nonzeros
+    /// accumulate in ascending-`j` order, so the result is identical for
+    /// any sharding (docs/DESIGN.md §Perf). This is the single kernel
+    /// behind `mix` and every non-DmSGD `Optimizer::step_shard`.
     #[inline]
-    fn mix_rows(&self, range: std::ops::Range<usize>, input: &[f32], dim: usize, out: &mut [f32]) {
-        let base = range.start;
-        const CHUNK: usize = 8192;
-        for i in range {
+    pub(crate) fn mix_fused_rows(
+        &self,
+        rows: std::ops::Range<usize>,
+        dim: usize,
+        out: &mut [f32],
+        src: impl Fn(usize, usize, &mut [f32]),
+    ) {
+        let base = rows.start;
+        const CHUNK: usize = 4096;
+        let mut buf = [0.0f32; CHUNK];
+        for i in rows {
             let off = (i - base) * dim;
             let row = &self.rows[i];
             if row.is_empty() {
                 out[off..off + dim].iter_mut().for_each(|v| *v = 0.0);
                 continue;
             }
-            // Dim-chunked accumulation: output chunk stays in L1 across
-            // the nonzeros (see mix_dmsgd_rows).
             let mut c0 = 0usize;
             while c0 < dim {
                 let c1 = (c0 + CHUNK).min(dim);
                 let orow = &mut out[off + c0..off + c1];
                 for (idx, &(j, wij)) in row.iter().enumerate() {
                     let wij = wij as f32;
-                    let irow = &input[j * dim + c0..j * dim + c1];
+                    src(j, c0, &mut buf[..c1 - c0]);
+                    let chunk = &buf[..c1 - c0];
                     if idx == 0 {
-                        for (o, v) in orow.iter_mut().zip(irow.iter()) {
+                        for (o, v) in orow.iter_mut().zip(chunk.iter()) {
                             *o = wij * v;
                         }
                     } else {
-                        for (o, v) in orow.iter_mut().zip(irow.iter()) {
+                        for (o, v) in orow.iter_mut().zip(chunk.iter()) {
                             *o += wij * v;
                         }
                     }
@@ -56,20 +72,28 @@ impl MixingPlan {
         }
     }
 
+    /// Compute `out` rows in `range` of `W · input`.
+    #[inline]
+    fn mix_rows(&self, range: std::ops::Range<usize>, input: &[f32], dim: usize, out: &mut [f32]) {
+        self.mix_fused_rows(range, dim, out, |j, c0, dst| {
+            let s = j * dim + c0;
+            dst.copy_from_slice(&input[s..s + dst.len()]);
+        });
+    }
+
     /// `out = W · input` over the stack (row i of out = Σ_j w_ij · row j).
-    /// Row-parallel on threads for large states (see `mix_dmsgd`).
+    /// Legacy spawn-per-call wrapper: row-parallel on freshly spawned
+    /// threads for large states. The training loop instead drives the
+    /// row-range kernels through the persistent [`crate::engine::Engine`]
+    /// pool (zero per-call spawns); this wrapper survives for ad-hoc
+    /// callers, tests, and the engine-vs-legacy benchmark.
     pub fn mix(&self, input: &StackedParams, out: &mut StackedParams) {
         assert_eq!(input.n, self.n);
         assert_eq!(out.n, self.n);
         assert_eq!(input.dim, out.dim);
         let n = self.n;
         let dim = input.dim;
-        let total = n * dim;
-        let threads = if total >= 1 << 19 {
-            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n)
-        } else {
-            1
-        };
+        let threads = crate::engine::auto_lanes(n, n * dim);
         if threads <= 1 {
             self.mix_rows(0..n, &input.data, dim, &mut out.data);
             return;
@@ -92,10 +116,12 @@ impl MixingPlan {
     }
 
     /// Compute fused output rows `i ∈ rows_range` into `xo`/`mo` slices
-    /// covering exactly those rows.
+    /// covering exactly those rows. This is DmSGD's shard-local fused
+    /// kernel — `DmSgd::step_shard` calls it directly with the engine's
+    /// row shards.
     #[inline]
     #[allow(clippy::too_many_arguments)]
-    fn mix_dmsgd_rows(
+    pub(crate) fn mix_dmsgd_rows(
         &self,
         rows_range: std::ops::Range<usize>,
         x: &[f32],
@@ -178,9 +204,10 @@ impl MixingPlan {
     /// ```
     ///
     /// `x`/`m` are updated in place through double buffers owned here.
-    /// Large states are processed on `available_parallelism` threads with
-    /// output rows partitioned per thread (the update is row-parallel by
-    /// construction — see docs/DESIGN.md §Perf).
+    /// Legacy spawn-per-call wrapper: large states are processed on
+    /// freshly spawned threads with output rows partitioned per thread.
+    /// The training loop instead shards [`MixingPlan::mix_dmsgd_rows`]
+    /// over the persistent engine pool (docs/DESIGN.md §Engine).
     #[allow(clippy::too_many_arguments)]
     pub fn mix_dmsgd(
         &self,
@@ -195,14 +222,10 @@ impl MixingPlan {
         let n = self.n;
         let dim = x.dim;
         assert!(x.n == n && m.n == n && g.n == n && x_buf.n == n && m_buf.n == n);
-        // Threading threshold: below ~2 MB of streamed state the spawn
-        // overhead dominates (measured in docs/DESIGN.md §Perf).
-        let total = n * dim;
-        let threads = if total >= 1 << 19 {
-            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1).min(n)
-        } else {
-            1
-        };
+        // Threading threshold: one shared constant with the engine
+        // (`engine::PARALLEL_MIN_ELEMS`) so legacy and pooled paths
+        // cannot drift — see docs/DESIGN.md §Engine.
+        let threads = crate::engine::auto_lanes(n, n * dim);
         if threads <= 1 {
             let (xd, md, gd) = (&x.data, &m.data, &g.data);
             self.mix_dmsgd_rows(0..n, xd, md, gd, beta, gamma, dim, &mut x_buf.data, &mut m_buf.data);

@@ -39,6 +39,14 @@ impl StackedParams {
         &mut self.data[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// Disjoint per-lane row-shard views for the engine's workers: lane
+    /// `t` covers rows [`crate::engine::shard_range`]`(n, lanes, t)`,
+    /// each shard behind its own (uncontended) mutex so a broadcast
+    /// closure can claim exactly its lane's rows in safe Rust.
+    pub fn lane_shards(&mut self, lanes: usize) -> crate::engine::Lanes<'_, f32> {
+        crate::engine::Lanes::split(&mut self.data, self.n, self.dim, lanes)
+    }
+
     /// Mean across nodes: `x̄ = (1/n) Σ_i x_i` into `out`.
     pub fn mean_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.dim);
@@ -118,6 +126,24 @@ mod tests {
         s.allreduce();
         assert!(s.consensus_distance() < 1e-15);
         assert_eq!(s.row(0)[0], 0.0);
+    }
+
+    #[test]
+    fn lane_shards_cover_rows_disjointly() {
+        let mut s = StackedParams::zeros(5, 3);
+        let shards = s.lane_shards(2);
+        for lane in 0..2usize {
+            let mut view = shards.lock(lane);
+            for v in view.iter_mut() {
+                *v = (lane + 1) as f32;
+            }
+        }
+        drop(shards);
+        for i in 0..5usize {
+            let r = crate::engine::shard_range(5, 2, 1);
+            let want = if r.contains(&i) { 2.0 } else { 1.0 };
+            assert_eq!(s.row(i)[0], want, "row {i}");
+        }
     }
 
     #[test]

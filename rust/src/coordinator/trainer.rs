@@ -6,15 +6,21 @@
 //! * per-iteration: borrow this iteration's cached [`MixingPlan`] from
 //!   the schedule (`O(1)` amortized, zero allocation for deterministic
 //!   topologies — see docs/DESIGN.md §Plan cache), compute per-node
-//!   stochastic gradients (threads for large models), apply the
-//!   optimizer update,
+//!   stochastic gradients, apply the optimizer's fused shard kernel,
 //! * metrics: mean training loss, consensus distance, simulated
 //!   communication time from the [`crate::costmodel`].
+//!
+//! All O(nP) work — gradients, the optimizer step, and the consensus
+//! probe — is driven through one persistent [`Engine`] pool created at
+//! the top of [`Trainer::run_with`]: **zero thread spawns per
+//! iteration** (docs/DESIGN.md §Engine). Results are bitwise-identical
+//! for any lane count.
 
 use super::schedule_lr::LrSchedule;
 use super::state::StackedParams;
 use crate::costmodel::CostModel;
-use crate::optim::Optimizer;
+use crate::engine::{auto_lanes, Engine};
+use crate::optim::{Optimizer, StepScratch};
 use crate::topology::schedule::Schedule;
 use crate::util::rng::Pcg;
 
@@ -44,9 +50,14 @@ pub struct TrainConfig {
     /// Record metrics every `record_every` iterations (loss is recorded
     /// every iteration; consensus distance is O(nP) so it is throttled).
     pub record_every: usize,
-    /// Compute per-node gradients on threads when `n·P` is large enough
-    /// to amortize spawning.
+    /// Force a multi-lane engine even for small states (gradient compute
+    /// may dominate long before the mixing threshold). With `false` the
+    /// lane count is sized automatically from `n·P`.
     pub parallel_grads: bool,
+    /// Explicit engine lane count (overrides `parallel_grads` and the
+    /// automatic sizing). `Some(1)` pins the single-threaded path —
+    /// bitwise-identical to any other lane count by construction.
+    pub lanes: Option<usize>,
     pub seed: u64,
     /// Message bytes per gossip round (for the simulated clock); default
     /// = 4·P.
@@ -63,6 +74,7 @@ impl Default for TrainConfig {
             warmup_allreduce: false,
             record_every: 10,
             parallel_grads: false,
+            lanes: None,
             seed: 0,
             msg_bytes: None,
             cost: None,
@@ -113,8 +125,22 @@ impl<'a> Trainer<'a> {
         assert_eq!(self.optimizer.params().n, n, "optimizer/provider node mismatch");
         assert_eq!(self.optimizer.params().dim, dim, "optimizer/provider dim mismatch");
         let mut grads = StackedParams::zeros(n, dim);
+        let mut losses = vec![0.0f64; n];
+        let mut scratch = StepScratch::default();
         let mut history = TrainingHistory::default();
         let msg_bytes = self.cfg.msg_bytes.unwrap_or(4.0 * dim as f64);
+
+        // The persistent worker pool: created once here, reused by every
+        // iteration's gradients, optimizer step, and consensus probe —
+        // zero thread spawns inside the loop.
+        let lanes = self.cfg.lanes.unwrap_or_else(|| {
+            if self.cfg.parallel_grads {
+                std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+            } else {
+                auto_lanes(n, n * dim)
+            }
+        });
+        let engine = Engine::new(lanes.clamp(1, n.max(1)));
 
         if self.cfg.warmup_allreduce {
             self.optimizer.params_mut().allreduce();
@@ -126,50 +152,21 @@ impl<'a> Trainer<'a> {
             let plan = self.topology.plan_at(k);
             let lr = self.cfg.lr.at(k);
 
-            // Per-node stochastic gradients.
-            let params = self.optimizer.params();
-            let seed = self.cfg.seed;
-            let provider = self.provider;
-            let mean_loss: f64 = if self.cfg.parallel_grads && n > 1 {
-                let chunks: Vec<(usize, &[f32], &mut [f32])> = {
-                    let mut out: Vec<(usize, &[f32], &mut [f32])> = Vec::with_capacity(n);
-                    let mut rest = grads.data.as_mut_slice();
-                    for i in 0..n {
-                        let (head, tail) = rest.split_at_mut(dim);
-                        out.push((i, params.row(i), head));
-                        rest = tail;
-                    }
-                    out
-                };
-                let losses = std::sync::Mutex::new(vec![0.0f64; n]);
-                std::thread::scope(|scope| {
-                    for (i, p, g) in chunks {
-                        let losses = &losses;
-                        scope.spawn(move || {
-                            let l = provider.grad(i, p, k, seed, g);
-                            losses.lock().unwrap()[i] = l as f64;
-                        });
-                    }
-                });
-                let l = losses.into_inner().unwrap();
-                l.iter().sum::<f64>() / n as f64
-            } else {
-                let mut total = 0.0f64;
-                for i in 0..n {
-                    let row = unsafe {
-                        // Safe: row i of grads and row i of params are
-                        // disjoint buffers.
-                        std::slice::from_raw_parts_mut(
-                            grads.data.as_mut_ptr().add(i * dim),
-                            dim,
-                        )
-                    };
-                    total += provider.grad(i, params.row(i), k, seed, row) as f64;
-                }
-                total / n as f64
-            };
+            // Per-node stochastic gradients, sharded over the pool. The
+            // per-node losses land in node order, so the mean below is
+            // lane-count-independent bit for bit.
+            engine.compute_grads(
+                self.provider,
+                self.optimizer.params(),
+                &mut grads,
+                &mut losses,
+                k,
+                self.cfg.seed,
+            );
+            let mean_loss: f64 = losses.iter().sum::<f64>() / n as f64;
 
-            self.optimizer.step(plan, &grads, lr);
+            // Fused shard-local optimizer step on the same pool.
+            self.optimizer.step_engine(&engine, plan, &grads, lr, &mut scratch);
 
             history.loss.push(mean_loss);
             if let Some(cost) = &self.cfg.cost {
@@ -182,7 +179,9 @@ impl<'a> Trainer<'a> {
                 history.sim_time += cost.compute + comm - hidden;
             }
             if k % self.cfg.record_every == 0 || k + 1 == self.cfg.iters {
-                history.consensus.push((k, self.optimizer.params().consensus_distance()));
+                history
+                    .consensus
+                    .push((k, engine.consensus_distance(self.optimizer.params())));
                 history.lr.push((k, lr));
                 probe(k, self.optimizer.params());
             }
@@ -242,12 +241,10 @@ impl GradProvider for QuadraticProvider {
             0x9AD,
         );
         let mut loss = 0.0f32;
-        for (j, (o, (p, t))) in out
+        for (o, (p, t)) in out
             .iter_mut()
             .zip(params.iter().zip(self.targets.row(node).iter()))
-            .enumerate()
         {
-            let _ = j;
             let d = p - t;
             loss += 0.5 * d * d;
             *o = d + self.noise * rng.normal() as f32;
@@ -281,6 +278,7 @@ mod tests {
                 warmup_allreduce: true,
                 record_every: 50,
                 parallel_grads,
+                lanes: None,
                 seed: 7,
                 msg_bytes: None,
                 cost: Some(CostModel::paper_default(0.01)),

@@ -1,0 +1,481 @@
+//! Sharded execution engine: a **persistent worker pool** driving the
+//! training hot path.
+//!
+//! PR 1 made per-iteration topology cost O(1); the remaining hot-path
+//! overhead was the compute orchestration itself — every iteration
+//! spawned and joined fresh OS threads up to three times (gradients in
+//! `Trainer::run_with`, then again inside `mix`/`mix_dmsgd`). This
+//! module replaces spawn/join with a pool created **once per run**:
+//!
+//! * [`Engine::new`] spawns `lanes − 1` workers (the caller's thread is
+//!   lane 0) that park on a reusable [`std::sync::Barrier`].
+//! * [`Engine::run`] broadcasts one shared closure to every lane; two
+//!   barrier waits (start, done) bound each round. Zero thread spawns
+//!   per iteration, regardless of how many iterations a run takes.
+//! * Each lane owns a **contiguous shard of node rows**
+//!   ([`shard_range`]): row-local kernels write disjoint row ranges of
+//!   the shared `n × P` stacks, handed out as per-lane views by
+//!   [`Lanes::split`] (one uncontended `Mutex` per lane keeps the
+//!   broadcast closure safe Rust).
+//!
+//! Determinism: every kernel routed through the engine computes output
+//! rows **row-locally in a fixed order** (ascending neighbor index), so
+//! results are bitwise-identical for any lane count — pinned by
+//! `tests/engine_determinism.rs`. See docs/DESIGN.md §Engine.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+
+use crate::coordinator::state::StackedParams;
+use crate::coordinator::trainer::GradProvider;
+use crate::topology::plan::MixingPlan;
+
+/// Threading threshold shared by the engine and the legacy spawn-per-call
+/// mixing wrappers: below ~2 MB of streamed f32 state (`n·P < 2^19`
+/// elements) the spawn/wake overhead dominates the row-parallel win
+/// (measured in docs/DESIGN.md §Engine). One named constant so the two
+/// paths cannot drift.
+pub const PARALLEL_MIN_ELEMS: usize = 1 << 19;
+
+/// Lane count for a row-parallel job over `n_rows` rows and
+/// `total_elems` streamed elements: 1 below [`PARALLEL_MIN_ELEMS`],
+/// otherwise `available_parallelism` capped at `n_rows`.
+pub fn auto_lanes(n_rows: usize, total_elems: usize) -> usize {
+    if total_elems >= PARALLEL_MIN_ELEMS {
+        std::thread::available_parallelism()
+            .map(|t| t.get())
+            .unwrap_or(1)
+            .min(n_rows)
+            .max(1)
+    } else {
+        1
+    }
+}
+
+/// The contiguous row shard lane `lane` owns out of `n` rows split
+/// across `lanes` lanes: `⌈n/lanes⌉`-sized blocks, last block short,
+/// surplus lanes empty.
+pub fn shard_range(n: usize, lanes: usize, lane: usize) -> Range<usize> {
+    let per = n.div_ceil(lanes.max(1));
+    let start = (lane * per).min(n);
+    let end = ((lane + 1) * per).min(n);
+    start..end
+}
+
+/// Disjoint per-lane mutable views of a row-major buffer, aligned to
+/// [`shard_range`]. Each shard sits behind its own `Mutex` so a shared
+/// broadcast closure can claim exactly its lane's rows in safe Rust;
+/// the locks are uncontended by construction (one lane per slot).
+pub struct Lanes<'a, T> {
+    slots: Vec<Mutex<&'a mut [T]>>,
+}
+
+impl<'a, T> Lanes<'a, T> {
+    /// Split `data` (`n_rows × row_len`, row-major) into `lanes` shards.
+    /// An empty `data` yields empty shards for every lane (used for
+    /// optimizers that skip the secondary scratch stack).
+    pub fn split(data: &'a mut [T], n_rows: usize, row_len: usize, lanes: usize) -> Self {
+        let mut slots = Vec::with_capacity(lanes);
+        if data.is_empty() {
+            for _ in 0..lanes {
+                let empty: &'a mut [T] = &mut [];
+                slots.push(Mutex::new(empty));
+            }
+            return Lanes { slots };
+        }
+        assert_eq!(data.len(), n_rows * row_len, "Lanes::split shape mismatch");
+        let mut rest = data;
+        for lane in 0..lanes {
+            let r = shard_range(n_rows, lanes, lane);
+            let (head, tail) = rest.split_at_mut((r.end - r.start) * row_len);
+            rest = tail;
+            slots.push(Mutex::new(head));
+        }
+        Lanes { slots }
+    }
+
+    /// Claim lane `lane`'s shard (uncontended).
+    pub fn lock(&self, lane: usize) -> MutexGuard<'_, &'a mut [T]> {
+        self.slots[lane].lock().unwrap()
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// The broadcast job slot: a type-erased pointer to the caller's closure,
+/// valid strictly between the start and done barriers of one round.
+type Job = *const (dyn Fn(usize) + Sync);
+
+struct JobSlot(std::cell::UnsafeCell<Option<Job>>);
+
+// Safety: the slot is written by the driving thread before the start
+// barrier and read by workers after it; the done barrier orders the
+// subsequent clear. Barrier waits synchronize (they are mutex/condvar
+// based), so there is never an unsynchronized concurrent access.
+unsafe impl Sync for JobSlot {}
+unsafe impl Send for JobSlot {}
+
+struct Shared {
+    start: Barrier,
+    done: Barrier,
+    job: JobSlot,
+    shutdown: AtomicBool,
+    panicked: AtomicBool,
+}
+
+/// Persistent worker pool. Created once per training run; iterations are
+/// driven by reusable barriers instead of spawn/join.
+pub struct Engine {
+    lanes: usize,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    /// Serializes concurrent `run` callers: the job slot and the barrier
+    /// pair assume exactly one driving thread per round, and `Engine` is
+    /// `Sync` — without this, two safe `&Engine` drivers could race the
+    /// slot and the barriers.
+    driver: Mutex<()>,
+}
+
+impl Engine {
+    /// Pool with `lanes` total lanes: the calling thread is lane 0,
+    /// `lanes − 1` workers are spawned **here, once** — the training
+    /// loop itself never spawns.
+    pub fn new(lanes: usize) -> Engine {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(Shared {
+            start: Barrier::new(lanes),
+            done: Barrier::new(lanes),
+            job: JobSlot(std::cell::UnsafeCell::new(None)),
+            shutdown: AtomicBool::new(false),
+            panicked: AtomicBool::new(false),
+        });
+        let workers = (1..lanes)
+            .map(|lane| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("engine-{lane}"))
+                    .spawn(move || worker_loop(lane, &shared))
+                    .expect("engine: failed to spawn worker")
+            })
+            .collect();
+        Engine { lanes, workers, shared, driver: Mutex::new(()) }
+    }
+
+    /// Pool sized by [`auto_lanes`] for an `n_rows × row_len` state.
+    pub fn auto(n_rows: usize, row_len: usize) -> Engine {
+        Engine::new(auto_lanes(n_rows, n_rows.saturating_mul(row_len)))
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Broadcast `f` to every lane and wait for completion. `f(lane)`
+    /// runs once per lane (lane 0 on the calling thread); the call
+    /// returns only after all lanes finished, so `f` may borrow local
+    /// state. Single-lane engines degrade to a plain call — no barrier
+    /// traffic at all.
+    pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        if self.lanes == 1 {
+            f(0);
+            return;
+        }
+        // One driving thread per round (see the `driver` field docs). A
+        // poisoned lock just means a previous driver panicked mid-round
+        // after the done barrier; the protocol state is still consistent.
+        let _round = self.driver.lock().unwrap_or_else(|p| p.into_inner());
+        // Safety: the pointer is only dereferenced by workers between
+        // the two barrier waits below, and we do not return until every
+        // worker has passed the done barrier — the closure outlives all
+        // uses. The transmute erases the borrow lifetime for storage.
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f)
+        };
+        unsafe {
+            *self.shared.job.0.get() = Some(f_erased as Job);
+        }
+        self.shared.start.wait();
+        let main = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(0)));
+        self.shared.done.wait();
+        unsafe {
+            *self.shared.job.0.get() = None;
+        }
+        // Clear the worker-panic latch *before* re-raising lane 0's own
+        // panic, so a round where both lanes fail cannot poison the next
+        // (healthy) round.
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::SeqCst);
+        if let Err(p) = main {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("engine: a worker lane panicked");
+        }
+    }
+
+    /// Per-node stochastic gradients for every row, sharded across the
+    /// pool: lane `t` computes rows [`shard_range`]`(n, lanes, t)` of
+    /// `grads` and the per-node `losses`. Bitwise-identical for any lane
+    /// count (each node's minibatch RNG is seeded by its node index).
+    pub fn compute_grads(
+        &self,
+        provider: &dyn GradProvider,
+        params: &StackedParams,
+        grads: &mut StackedParams,
+        losses: &mut [f64],
+        iter: usize,
+        seed: u64,
+    ) {
+        let n = params.n;
+        let dim = params.dim;
+        assert_eq!(grads.n, n);
+        assert_eq!(grads.dim, dim, "grads/params dim mismatch");
+        assert_eq!(losses.len(), n);
+        let lanes = self.lanes;
+        let g = grads.lane_shards(lanes);
+        let l = Lanes::split(losses, n, 1, lanes);
+        self.run(&|lane| {
+            let rows = shard_range(n, lanes, lane);
+            if rows.is_empty() {
+                return;
+            }
+            let mut gs = g.lock(lane);
+            let mut ls = l.lock(lane);
+            for (off, i) in rows.enumerate() {
+                let out = &mut gs[off * dim..(off + 1) * dim];
+                ls[off] = provider.grad(i, params.row(i), iter, seed, out) as f64;
+            }
+        });
+    }
+
+    /// Consensus distance `Σ_i ‖x_i − x̄‖²`, the O(nP) metrics probe.
+    /// The mean is the serial [`StackedParams::mean`] (so this probe and
+    /// the plain [`StackedParams::consensus_distance`] agree to f64
+    /// regrouping noise), and the sharded squared-distance pass writes
+    /// one partial **per node** that is reduced serially in node order —
+    /// so the value is bitwise-identical for any lane count, like
+    /// everything else the engine computes.
+    pub fn consensus_distance(&self, params: &StackedParams) -> f64 {
+        let n = params.n;
+        let lanes = self.lanes;
+        // Serial mean, identical to the plain probe's (lane-independent).
+        let mean = params.mean();
+        // Sharded per-node squared distances (row-local), then a serial
+        // node-ordered reduction.
+        let mut per_node = vec![0.0f64; n];
+        {
+            let p = Lanes::split(&mut per_node, n, 1, lanes);
+            self.run(&|lane| {
+                let rows = shard_range(n, lanes, lane);
+                if rows.is_empty() {
+                    return;
+                }
+                let mut ps = p.lock(lane);
+                for (off, i) in rows.enumerate() {
+                    let mut total = 0.0f64;
+                    for (v, m) in params.row(i).iter().zip(mean.iter()) {
+                        // Same f32 difference as the plain serial probe.
+                        let d = (*v - *m) as f64;
+                        total += d * d;
+                    }
+                    ps[off] = total;
+                }
+            });
+        }
+        per_node.iter().sum()
+    }
+
+    /// One sharded gossip step `out = W x` in f64 (the consensus
+    /// simulation path): row-local sparse dot products, matching
+    /// [`MixingPlan::matvec`] bitwise for any lane count.
+    pub fn gossip_into(&self, plan: &MixingPlan, x: &[f64], out: &mut [f64]) {
+        let n = plan.n;
+        assert_eq!(x.len(), n, "gossip dimension mismatch");
+        assert_eq!(out.len(), n, "gossip output mismatch");
+        let lanes = self.lanes;
+        let o = Lanes::split(out, n, 1, lanes);
+        self.run(&|lane| {
+            let rows = shard_range(n, lanes, lane);
+            if rows.is_empty() {
+                return;
+            }
+            let mut os = o.lock(lane);
+            for (off, i) in rows.enumerate() {
+                os[off] = plan.rows[i].iter().map(|&(j, w)| w * x[j]).sum();
+            }
+        });
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return;
+        }
+        self.shared.shutdown.store(true, Ordering::Release);
+        // Release the workers from their start barrier; they observe the
+        // shutdown flag and exit without touching the (empty) job slot.
+        self.shared.start.wait();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(lane: usize, shared: &Shared) {
+    loop {
+        shared.start.wait();
+        if shared.shutdown.load(Ordering::Acquire) {
+            break;
+        }
+        // Safety: the driving thread published the job before the start
+        // barrier and will not clear it until after the done barrier.
+        let job = unsafe { (*shared.job.0.get()).expect("engine: no job published") };
+        let f = unsafe { &*job };
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(lane))).is_err() {
+            shared.panicked.store(true, Ordering::SeqCst);
+        }
+        shared.done.wait();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn shard_range_partitions_rows() {
+        for (n, lanes) in [(8usize, 3usize), (1, 4), (16, 16), (10, 1), (5, 8)] {
+            let mut covered = Vec::new();
+            for lane in 0..lanes {
+                covered.extend(shard_range(n, lanes, lane));
+            }
+            assert_eq!(covered, (0..n).collect::<Vec<_>>(), "n={n} lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn auto_lanes_threshold() {
+        assert_eq!(auto_lanes(8, PARALLEL_MIN_ELEMS - 1), 1);
+        let big = auto_lanes(1024, PARALLEL_MIN_ELEMS);
+        assert!((1..=1024).contains(&big));
+        // Never more lanes than rows.
+        assert_eq!(auto_lanes(1, PARALLEL_MIN_ELEMS), 1);
+    }
+
+    #[test]
+    fn engine_reuses_workers_across_rounds() {
+        let engine = Engine::new(4);
+        let hits = AtomicUsize::new(0);
+        let lanes_seen = Mutex::new(vec![false; 4]);
+        for _ in 0..100 {
+            engine.run(&|lane| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                lanes_seen.lock().unwrap()[lane] = true;
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 400);
+        assert!(lanes_seen.lock().unwrap().iter().all(|&b| b));
+    }
+
+    #[test]
+    fn single_lane_engine_runs_inline() {
+        let engine = Engine::new(1);
+        let hit = AtomicBool::new(false);
+        engine.run(&|lane| {
+            assert_eq!(lane, 0);
+            hit.store(true, Ordering::SeqCst);
+        });
+        assert!(hit.load(Ordering::SeqCst));
+    }
+
+    #[test]
+    fn lanes_split_disjoint_row_views() {
+        let mut data = vec![0.0f32; 10 * 3];
+        let lanes = Lanes::split(&mut data, 10, 3, 4);
+        assert_eq!(lanes.lanes(), 4);
+        for lane in 0..4 {
+            let mut shard = lanes.lock(lane);
+            let r = shard_range(10, 4, lane);
+            assert_eq!(shard.len(), (r.end - r.start) * 3);
+            for v in shard.iter_mut() {
+                *v = lane as f32;
+            }
+        }
+        drop(lanes);
+        for lane in 0..4usize {
+            for i in shard_range(10, 4, lane) {
+                assert_eq!(data[i * 3], lane as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_split_empty_buffer() {
+        let mut data: Vec<f32> = Vec::new();
+        let lanes = Lanes::split(&mut data, 7, 5, 3);
+        for lane in 0..3 {
+            assert!(lanes.lock(lane).is_empty());
+        }
+    }
+
+    #[test]
+    fn gossip_matches_matvec_any_lane_count() {
+        let plan = crate::topology::exponential::static_exp_plan(12);
+        let x: Vec<f64> = (0..12).map(|i| (i as f64).sin()).collect();
+        let want = plan.matvec(&x);
+        for lanes in [1usize, 2, 3, 5] {
+            let engine = Engine::new(lanes);
+            let mut out = vec![0.0f64; 12];
+            engine.gossip_into(&plan, &x, &mut out);
+            assert_eq!(out, want, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn engine_consensus_distance_matches_serial() {
+        let mut s = StackedParams::zeros(9, 7);
+        let mut rng = crate::util::rng::Pcg::seeded(11);
+        for v in s.data.iter_mut() {
+            *v = rng.normal() as f32;
+        }
+        // Same f32 mean and f32 differences as the plain serial probe —
+        // only the f64 per-node regrouping can differ.
+        let want = s.consensus_distance();
+        let base = Engine::new(1).consensus_distance(&s);
+        assert!(
+            (base - want).abs() < 1e-12 * want.max(1.0),
+            "engine probe drifted from serial: {base} vs {want}"
+        );
+        // …and bitwise lane-count-invariant (per-node partials reduced
+        // in node order).
+        for lanes in [2usize, 3, 4, 9] {
+            let engine = Engine::new(lanes);
+            let got = engine.consensus_distance(&s);
+            assert_eq!(got.to_bits(), base.to_bits(), "lanes={lanes}: {got} vs {base}");
+        }
+    }
+
+    #[test]
+    fn engine_panic_in_worker_propagates() {
+        let engine = Engine::new(3);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run(&|lane| {
+                if lane == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        // Pool stays usable after a worker panic.
+        let hits = AtomicUsize::new(0);
+        engine.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+}

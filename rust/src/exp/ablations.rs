@@ -45,6 +45,7 @@ pub fn ablation_warmup(ctx: &Ctx) -> Result<()> {
                 warmup_allreduce: warmup,
                 record_every: 10,
                 parallel_grads: false,
+                lanes: None,
                 seed: ctx.seed,
                 msg_bytes: None,
                 cost: None,

@@ -112,6 +112,7 @@ pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult 
             warmup_allreduce: true,
             record_every: (spec.iters / 10).max(1),
             parallel_grads: false,
+            lanes: None,
             seed: spec.seed,
             msg_bytes: None,
             cost: None,

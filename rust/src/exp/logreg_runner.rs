@@ -110,6 +110,7 @@ pub fn run_logreg(problem: &LogRegProblem, x_star: &[f64], run: &LogRegRun) -> M
             warmup_allreduce: false,
             record_every: run.record_every,
             parallel_grads: false,
+            lanes: None,
             seed: run.seed,
             msg_bytes: None,
             cost: None,

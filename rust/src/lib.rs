@@ -21,6 +21,10 @@
 //!   vanilla DmSGD, QG-DmSGD, and the parallel (all-reduce) SGD baseline.
 //! * [`coordinator`] — the training orchestrator: node state, topology
 //!   schedule, warm-up all-reduce, metrics, transient-iteration detection.
+//! * [`engine`] — the sharded execution engine: a persistent worker pool
+//!   (created once per run, reusable barriers, zero per-iteration thread
+//!   spawns) that drives gradients, fused optimizer steps, consensus
+//!   probes, and gossip over contiguous row shards.
 //! * [`costmodel`] — the α-β per-iteration communication-time model used to
 //!   reproduce the wall-clock columns of Tables 2–3.
 //! * [`runtime`] — PJRT CPU client that loads the AOT artifacts
@@ -40,6 +44,7 @@ pub mod consensus;
 pub mod coordinator;
 pub mod costmodel;
 pub mod data;
+pub mod engine;
 pub mod exp;
 pub mod linalg;
 pub mod models;

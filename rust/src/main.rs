@@ -109,6 +109,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             warmup_allreduce: cfg.warmup_allreduce,
             record_every: (cfg.iters / 20).max(1),
             parallel_grads: false,
+            lanes: None,
             seed: cfg.seed,
             msg_bytes: None,
             cost: Some(CostModel::paper_default(0.01)),

@@ -17,7 +17,13 @@
 //! size on heterogeneous deterministic problems, unlike DSGD whose fixed
 //! point is O(γ·b/(1−ρ)) away — the property tested below.
 
-use super::Optimizer;
+// The shard kernels legitimately take the full step context (phase, row
+// range, plan, grads, lr, both scratch views).
+#![allow(clippy::too_many_arguments)]
+
+use std::ops::Range;
+
+use super::{Optimizer, StepScratch};
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 
@@ -27,12 +33,14 @@ use crate::coordinator::state::StackedParams;
 /// x^{1}   = W (x^0 − γ g^0)
 /// x^{k+1} = W (2 x^k − x^{k−1} − γ (g^k − g^{k−1}))        k ≥ 1
 /// ```
+///
+/// Shard kernel: the correction term `pre_j` is produced on the fly per
+/// nonzero (fused with the mixing accumulation); the secondary scratch
+/// carries the gradient copy that becomes `g_prev` at commit.
 pub struct D2 {
     x: StackedParams,
     x_prev: StackedParams,
     g_prev: StackedParams,
-    pre: StackedParams,
-    buf: StackedParams,
     first: bool,
     /// Mix with the lazy matrix `(I + W)/2` instead of `W` (the
     /// Exact-Diffusion convention [68]); guarantees `λ_min ≥ 0` so the
@@ -55,14 +63,29 @@ impl D2 {
 
     fn with_lazy(x: StackedParams, lazy: bool) -> Self {
         let z = StackedParams::zeros(x.n, x.dim);
-        D2 {
-            x_prev: x.clone(),
-            g_prev: z.clone(),
-            pre: z.clone(),
-            buf: z,
-            x,
-            first: true,
-            lazy,
+        D2 { x_prev: x.clone(), g_prev: z, x, first: true, lazy }
+    }
+
+    /// Fill `dst` with `pre_j[c0 .. c0+dst.len()]`, produced on the fly
+    /// inside the mixing accumulation.
+    #[inline]
+    fn pre_chunk(&self, grads: &StackedParams, lr: f32, j: usize, c0: usize, dst: &mut [f32]) {
+        let s = j * self.x.dim + c0;
+        let e = s + dst.len();
+        if self.first {
+            for ((d, xv), gv) in dst.iter_mut().zip(&self.x.data[s..e]).zip(&grads.data[s..e]) {
+                *d = xv - lr * gv;
+            }
+        } else {
+            for ((((d, xv), xp), gv), gp) in dst
+                .iter_mut()
+                .zip(&self.x.data[s..e])
+                .zip(&self.x_prev.data[s..e])
+                .zip(&grads.data[s..e])
+                .zip(&self.g_prev.data[s..e])
+            {
+                *d = 2.0 * xv - xp - lr * (gv - gp);
+            }
         }
     }
 }
@@ -72,34 +95,70 @@ impl Optimizer for D2 {
         "d2"
     }
 
-    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
-        if self.first {
-            for (p, (x, g)) in self
-                .pre
-                .data
-                .iter_mut()
-                .zip(self.x.data.iter().zip(grads.data.iter()))
-            {
-                *p = x - lr * g;
-            }
-            self.first = false;
-        } else {
-            for i in 0..self.pre.data.len() {
-                self.pre.data[i] = 2.0 * self.x.data[i] - self.x_prev.data[i]
-                    - lr * (grads.data[i] - self.g_prev.data[i]);
-            }
+    fn needs_secondary(&self) -> bool {
+        true
+    }
+
+    fn step_shard(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        // Stage the gradient copy that commit adopts as g_prev.
+        for i in rows.clone() {
+            let off = (i - base) * dim;
+            b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
         }
-        w.mix(&self.pre, &mut self.buf);
+        // a ← W·pre with the correction term produced on the fly.
+        w.mix_fused_rows(rows.clone(), dim, a, |j, c0, dst| self.pre_chunk(grads, lr, j, c0, dst));
         if self.lazy {
-            // buf ← ((I + W)/2)·pre
-            for (b, p) in self.buf.data.iter_mut().zip(self.pre.data.iter()) {
-                *b = 0.5 * (*b + *p);
+            // a ← ((I + W)/2)·pre, with pre_i recomputed row-locally.
+            for i in rows {
+                let off = (i - base) * dim;
+                let out = &mut a[off..off + dim];
+                let s = i * dim;
+                let e = s + dim;
+                if self.first {
+                    for ((ov, xv), gv) in
+                        out.iter_mut().zip(&self.x.data[s..e]).zip(&grads.data[s..e])
+                    {
+                        *ov = 0.5 * (*ov + (xv - lr * gv));
+                    }
+                } else {
+                    for ((((ov, xv), xp), gv), gp) in out
+                        .iter_mut()
+                        .zip(&self.x.data[s..e])
+                        .zip(&self.x_prev.data[s..e])
+                        .zip(&grads.data[s..e])
+                        .zip(&self.g_prev.data[s..e])
+                    {
+                        *ov = 0.5 * (*ov + (2.0 * xv - xp - lr * (gv - gp)));
+                    }
+                }
             }
         }
-        // x_prev ← x, x ← W̃·pre (recycle buffers without cloning).
+    }
+
+    fn commit(
+        &mut self,
+        _phase: usize,
+        _w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        scratch: &mut StepScratch,
+    ) {
+        // x_prev ← x, x ← W̃·pre, g_prev ← g (all buffer swaps).
         std::mem::swap(&mut self.x_prev.data, &mut self.x.data);
-        std::mem::swap(&mut self.x.data, &mut self.buf.data);
-        self.g_prev.data.copy_from_slice(&grads.data);
+        std::mem::swap(&mut self.x.data, &mut scratch.a.data);
+        std::mem::swap(&mut self.g_prev.data, &mut scratch.b.data);
+        self.first = false;
     }
 
     fn params(&self) -> &StackedParams {
@@ -120,26 +179,21 @@ impl Optimizer for D2 {
 ///
 /// `y⁰ = g⁰`. The caller supplies `g^{k}` each step; the tracker keeps
 /// `y` and the previous gradient. Mean(y) = mean(g) is an invariant.
+///
+/// The only two-phase algorithm in the zoo: the x-update mixes the
+/// *post-update* tracker, so phase 0 refreshes `y` (barrier), phase 1
+/// mixes `x` against the new `y` and stages the `g_prev` copy.
 pub struct GradientTracking {
     x: StackedParams,
     y: StackedParams,
     g_prev: StackedParams,
-    pre: StackedParams,
-    buf: StackedParams,
     first: bool,
 }
 
 impl GradientTracking {
     pub fn new(x: StackedParams) -> Self {
         let z = StackedParams::zeros(x.n, x.dim);
-        GradientTracking {
-            y: z.clone(),
-            g_prev: z.clone(),
-            pre: z.clone(),
-            buf: z,
-            x,
-            first: true,
-        }
+        GradientTracking { y: z.clone(), g_prev: z, x, first: true }
     }
 
     /// The tracking variable (for invariant tests).
@@ -153,29 +207,81 @@ impl Optimizer for GradientTracking {
         "gradient_tracking"
     }
 
-    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
-        if self.first {
-            self.y.data.copy_from_slice(&grads.data);
-            self.first = false;
-        } else {
-            // y ← W y + g − g_prev
-            w.mix(&self.y, &mut self.buf);
-            for i in 0..self.y.data.len() {
-                self.y.data[i] = self.buf.data[i] + grads.data[i] - self.g_prev.data[i];
+    fn phases(&self) -> usize {
+        2
+    }
+
+    fn needs_secondary(&self) -> bool {
+        true
+    }
+
+    fn step_shard(
+        &self,
+        phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        if phase == 0 {
+            // b ← W y + g − g_prev (the next tracker; y⁰ = g⁰).
+            if self.first {
+                for i in rows {
+                    let off = (i - base) * dim;
+                    b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
+                }
+                return;
             }
+            w.mix_fused_rows(rows.clone(), dim, b, |j, c0, dst| {
+                let s = j * dim + c0;
+                dst.copy_from_slice(&self.y.data[s..s + dst.len()]);
+            });
+            for i in rows {
+                let off = (i - base) * dim;
+                let out = &mut b[off..off + dim];
+                let gi = &grads.data[i * dim..(i + 1) * dim];
+                let gpi = &self.g_prev.data[i * dim..(i + 1) * dim];
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = (*o + gi[k]) - gpi[k];
+                }
+            }
+        } else {
+            // a ← W (x − γ y⁺) (y already swapped by the phase-0 commit);
+            // b ← g (staged g_prev).
+            for i in rows.clone() {
+                let off = (i - base) * dim;
+                b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
+            }
+            w.mix_fused_rows(rows, dim, a, |j, c0, dst| {
+                let s = j * dim + c0;
+                let e = s + dst.len();
+                for ((d, xv), yv) in dst.iter_mut().zip(&self.x.data[s..e]).zip(&self.y.data[s..e])
+                {
+                    *d = xv - lr * yv;
+                }
+            });
         }
-        self.g_prev.data.copy_from_slice(&grads.data);
-        // x ← W (x − γ y)
-        for (p, (x, y)) in self
-            .pre
-            .data
-            .iter_mut()
-            .zip(self.x.data.iter().zip(self.y.data.iter()))
-        {
-            *p = x - lr * y;
+    }
+
+    fn commit(
+        &mut self,
+        phase: usize,
+        _w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        scratch: &mut StepScratch,
+    ) {
+        if phase == 0 {
+            std::mem::swap(&mut self.y.data, &mut scratch.b.data);
+        } else {
+            std::mem::swap(&mut self.x.data, &mut scratch.a.data);
+            std::mem::swap(&mut self.g_prev.data, &mut scratch.b.data);
+            self.first = false;
         }
-        w.mix(&self.pre, &mut self.buf);
-        std::mem::swap(&mut self.x.data, &mut self.buf.data);
     }
 
     fn params(&self) -> &StackedParams {

@@ -20,8 +20,11 @@
 //! Every optimizer exposes the same [`Optimizer`] interface so the
 //! coordinator and the experiment harness can swap them freely.
 
+use std::ops::Range;
+
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
+use crate::engine::{shard_range, Engine, Lanes};
 
 pub mod algorithms;
 pub mod bias_corrected;
@@ -92,14 +95,172 @@ impl std::fmt::Display for AlgorithmKind {
     }
 }
 
+/// Caller-owned double-buffer scratch for one optimizer step. The shard
+/// kernels write their output rows here; `commit` adopts the buffers by
+/// swapping, so no optimizer state is copied. One `StepScratch` lives for
+/// a whole training run (the engine path) — the legacy `step` wrapper
+/// allocates a transient one per call.
+#[derive(Debug)]
+pub struct StepScratch {
+    /// Primary output stack (the next `x`).
+    pub a: StackedParams,
+    /// Secondary output stack (next momentum / tracker / gradient copy);
+    /// empty unless [`Optimizer::needs_secondary`].
+    pub b: StackedParams,
+}
+
+impl Default for StepScratch {
+    fn default() -> Self {
+        StepScratch { a: StackedParams::zeros(0, 0), b: StackedParams::zeros(0, 0) }
+    }
+}
+
+impl StepScratch {
+    /// Size the buffers for an `n × dim` optimizer (no-op when already
+    /// sized — the per-iteration fast path).
+    pub fn ensure(&mut self, n: usize, dim: usize, secondary: bool) {
+        if self.a.n != n || self.a.dim != dim {
+            self.a = StackedParams::zeros(n, dim);
+        }
+        let (bn, bdim) = if secondary { (n, dim) } else { (0, 0) };
+        if self.b.n != bn || self.b.dim != bdim {
+            self.b = StackedParams::zeros(bn, bdim);
+        }
+    }
+}
+
 /// Interface every decentralized optimizer implements.
-pub trait Optimizer: Send {
+///
+/// The contract is **shard-local**: a step is `prepare` (serial, once),
+/// then for each phase a fleet of [`Optimizer::step_shard`] calls over
+/// disjoint row ranges (safe to run concurrently — `&self` plus disjoint
+/// output slices), then a serial [`Optimizer::commit`] that adopts the
+/// scratch via buffer swaps. Every kernel computes output row `i` from
+/// the *pre-step* state in a fixed (ascending-neighbor) order, so results
+/// are bitwise-identical for any sharding — the engine exploits this to
+/// parallelize without changing a single bit of the trajectory
+/// (docs/DESIGN.md §Engine).
+pub trait Optimizer: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Number of sharded phases per step (a barrier plus `commit` runs
+    /// after each). Only gradient tracking needs two (its x-update mixes
+    /// the *post-update* tracker).
+    fn phases(&self) -> usize {
+        1
+    }
+
+    /// Does this algorithm write the secondary scratch stack
+    /// [`StepScratch::b`]?
+    fn needs_secondary(&self) -> bool {
+        false
+    }
+
+    /// Serial pre-step hook, run once before phase 0 (e.g. parallel
+    /// SGD's exact global gradient reduction).
+    fn prepare(&mut self, _w: &MixingPlan, _grads: &StackedParams, _lr: f32) {}
+
+    /// The fused shard-local kernel: compute output rows `rows` of phase
+    /// `phase` into the matching row slices `a`/`b` (shard views of the
+    /// caller's [`StepScratch`]), reading the pre-step state through
+    /// `&self`. One streaming pass per nonzero — the pre/post element
+    /// loops of the update rule are folded into the mixing accumulation.
+    #[allow(clippy::too_many_arguments)]
+    fn step_shard(
+        &self,
+        phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    );
+
+    /// Serial post-barrier commit for `phase`: adopt the scratch outputs
+    /// (buffer swaps) and advance any serial state.
+    fn commit(
+        &mut self,
+        phase: usize,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        scratch: &mut StepScratch,
+    );
 
     /// One training iteration: per-node stochastic gradients `g^{(k)}` and
     /// this iteration's mixing plan (the sparse representation of
     /// `W^{(k)}`, borrowed from the schedule's cache), learning rate `γ_k`.
-    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32);
+    ///
+    /// Thin single-shard wrapper over `prepare`/`step_shard`/`commit`,
+    /// kept so existing call sites work unchanged; the training loop
+    /// itself uses [`Optimizer::step_engine`].
+    fn step(&mut self, w: &MixingPlan, grads: &StackedParams, lr: f32) {
+        let mut scratch = StepScratch::default();
+        self.step_with(w, grads, lr, &mut scratch);
+    }
+
+    /// Single-shard step reusing caller-owned scratch (no allocation).
+    fn step_with(
+        &mut self,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        scratch: &mut StepScratch,
+    ) {
+        let n = self.params().n;
+        let dim = self.params().dim;
+        scratch.ensure(n, dim, self.needs_secondary());
+        self.prepare(w, grads, lr);
+        for phase in 0..self.phases() {
+            {
+                let a = &mut scratch.a.data[..];
+                let b = &mut scratch.b.data[..];
+                self.step_shard(phase, 0..n, w, grads, lr, a, b);
+            }
+            self.commit(phase, w, grads, lr, scratch);
+        }
+    }
+
+    /// Engine-driven step: each phase is broadcast over the persistent
+    /// worker pool (lane `t` computes its contiguous row shard), with the
+    /// serial `commit` between barriers. Bitwise-identical to
+    /// [`Optimizer::step`] for any lane count.
+    fn step_engine(
+        &mut self,
+        engine: &Engine,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        scratch: &mut StepScratch,
+    ) {
+        if engine.lanes() == 1 {
+            self.step_with(w, grads, lr, scratch);
+            return;
+        }
+        let n = self.params().n;
+        let dim = self.params().dim;
+        scratch.ensure(n, dim, self.needs_secondary());
+        self.prepare(w, grads, lr);
+        let lanes = engine.lanes();
+        for phase in 0..self.phases() {
+            {
+                let a = Lanes::split(&mut scratch.a.data, n, dim, lanes);
+                let b = Lanes::split(&mut scratch.b.data, n, dim, lanes);
+                let this: &Self = self;
+                engine.run(&|lane| {
+                    let rows = shard_range(n, lanes, lane);
+                    if rows.is_empty() {
+                        return;
+                    }
+                    let mut ga = a.lock(lane);
+                    let mut gb = b.lock(lane);
+                    this.step_shard(phase, rows, w, grads, lr, &mut ga[..], &mut gb[..]);
+                });
+            }
+            self.commit(phase, w, grads, lr, scratch);
+        }
+    }
 
     /// Current stacked parameters.
     fn params(&self) -> &StackedParams;

@@ -1,0 +1,132 @@
+//! Engine determinism: training driven by the persistent worker pool
+//! must be **bitwise identical** to the single-threaded path for any
+//! lane count — the core contract of the sharded execution engine
+//! (docs/DESIGN.md §Engine). Every optimizer kernel computes output
+//! rows row-locally in a fixed order, so sharding the rows across
+//! workers cannot change a single bit of the trajectory.
+
+use expograph::coordinator::schedule_lr::LrSchedule;
+use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer, TrainingHistory};
+use expograph::costmodel::CostModel;
+use expograph::optim::AlgorithmKind;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+const N: usize = 8;
+const DIM: usize = 16;
+const ITERS: usize = 60;
+
+fn run(kind: TopologyKind, algo: AlgorithmKind, lanes: usize) -> TrainingHistory {
+    let provider = QuadraticProvider::random(N, DIM, 0.2, 11);
+    let opt = algo.build(N, &vec![0.1; DIM], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, N, 5),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: ITERS,
+            lr: LrSchedule::Const(0.05),
+            warmup_allreduce: true,
+            record_every: 10,
+            parallel_grads: false,
+            lanes: Some(lanes),
+            seed: 19,
+            msg_bytes: None,
+            cost: Some(CostModel::paper_default(0.01)),
+        },
+    );
+    trainer.run()
+}
+
+/// Compare two loss curves bit for bit (f64 equality via to_bits so a
+/// NaN regression cannot slip through an `==`).
+fn assert_bitwise_equal(a: &[f64], b: &[f64], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: curve length");
+    for (k, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{label}: loss diverged at iter {k}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn engine_runs_match_single_thread_bitwise_for_all_algorithms() {
+    // The five algorithms of the paper's evaluation grid × the three
+    // headline topologies × several pool sizes (including lanes > n/2
+    // so some shards are a single row, and 7 so shards are uneven).
+    let algorithms = [
+        AlgorithmKind::DSgd,
+        AlgorithmKind::DmSgd,
+        AlgorithmKind::VanillaDmSgd,
+        AlgorithmKind::QgDmSgd,
+        AlgorithmKind::ParallelSgd,
+    ];
+    let topologies = [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring];
+    for algo in algorithms {
+        for kind in topologies {
+            let base = run(kind, algo, 1);
+            assert!(
+                base.loss.iter().all(|l| l.is_finite()),
+                "{algo}/{kind}: non-finite loss in baseline"
+            );
+            for lanes in [2usize, 3, 7] {
+                let pooled = run(kind, algo, lanes);
+                assert_bitwise_equal(
+                    &base.loss,
+                    &pooled.loss,
+                    &format!("{algo}/{kind} lanes={lanes}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bias_corrected_algorithms_also_deterministic() {
+    // D² (lazy, on a symmetric static topology) and gradient tracking
+    // (two-phase kernel) ride the same engine contract.
+    for (algo, kind) in [
+        (AlgorithmKind::D2, TopologyKind::Hypercube),
+        (AlgorithmKind::GradientTracking, TopologyKind::OnePeerExp),
+    ] {
+        let base = run(kind, algo, 1);
+        for lanes in [3usize, 8] {
+            let pooled = run(kind, algo, lanes);
+            assert_bitwise_equal(&base.loss, &pooled.loss, &format!("{algo}/{kind} lanes={lanes}"));
+        }
+    }
+}
+
+#[test]
+fn parallel_grads_flag_matches_explicit_lane_pin() {
+    // The legacy `parallel_grads` knob (auto-sized pool) and an explicit
+    // lane pin must agree with the single-thread path too.
+    let provider = QuadraticProvider::shared(N, DIM, 0.1, 3);
+    let mk = |parallel_grads: bool, lanes: Option<usize>| {
+        let opt = AlgorithmKind::DmSgd.build(N, &vec![0.0; DIM], 0.9);
+        let mut t = Trainer::new(
+            Schedule::new(TopologyKind::StaticExp, N, 1),
+            opt,
+            &provider,
+            TrainConfig {
+                iters: 40,
+                lr: LrSchedule::Const(0.05),
+                warmup_allreduce: true,
+                record_every: 10,
+                parallel_grads,
+                lanes,
+                seed: 7,
+                msg_bytes: None,
+                cost: None,
+            },
+        );
+        t.run()
+    };
+    let serial = mk(false, Some(1));
+    let auto = mk(true, None);
+    let pinned = mk(false, Some(4));
+    assert_bitwise_equal(&serial.loss, &auto.loss, "parallel_grads auto");
+    assert_bitwise_equal(&serial.loss, &pinned.loss, "lanes=4");
+}
