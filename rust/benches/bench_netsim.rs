@@ -1,0 +1,82 @@
+//! Benchmark: per-round overhead of the discrete-event network
+//! simulator vs the O(1) closed-form cost model it generalizes
+//! (docs/DESIGN.md §NetSim).
+//!
+//! The simulator walks one event per exchange slot, so a clean round is
+//! O(nnz log n) in the plan's partner count — the acceptance bar is
+//! that instrumenting a training run stays cheap next to the O(n·P)
+//! gradient/mixing work of the same iteration, and that the closed
+//! form remains dramatically cheaper (it is the fast path; the
+//! simulator is opt-in for heterogeneous/faulty studies).
+
+use expograph::bench::{bench_config, black_box};
+use expograph::costmodel::CostModel;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+fn main() {
+    println!("== bench_netsim ==\n");
+    let cost = CostModel::paper_default(0.4);
+    let msg = 1e8;
+
+    for n in [64usize, 1024, 4096] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+            let mut sched = Schedule::new(kind, n, 1);
+            let plan = sched.plan_at(0).clone();
+
+            let closed = bench_config(
+                &format!("costmodel closed form   n={n} {}", kind.name()),
+                10, 50, 4096, 0.2,
+                &mut || {
+                    black_box(cost.partial_averaging_time(&plan, msg));
+                },
+            );
+            println!("{}", closed.report());
+
+            let mut sim = NetSim::new(&cost, Scenario::clean(), 1);
+            let mut k = 0usize;
+            let clean = bench_config(
+                &format!("netsim clean round      n={n} {}", kind.name()),
+                5, 20, 1024, 0.2,
+                &mut || {
+                    black_box(sim.simulate_round(k, &plan, msg).comm);
+                    k += 1;
+                },
+            );
+            println!("{}", clean.report());
+
+            let mut sim = NetSim::new(&cost, Scenario::lossy(), 1);
+            let mut k = 0usize;
+            let lossy = bench_config(
+                &format!("netsim lossy round      n={n} {}", kind.name()),
+                5, 20, 1024, 0.2,
+                &mut || {
+                    black_box(sim.simulate_round(k, &plan, msg).degraded.is_some());
+                    k += 1;
+                },
+            );
+            println!("{}", lossy.report());
+            println!(
+                "  -> event-sim overhead {:.0}x over closed form; lossy/clean {:.1}x\n",
+                clean.median / closed.median.max(1e-12),
+                lossy.median / clean.median.max(1e-12)
+            );
+        }
+    }
+
+    // The collective baseline: 2(n−1) phases, uniform fast path.
+    for n in [64usize, 1024] {
+        let mut sim = NetSim::new(&cost, Scenario::clean(), 1);
+        let mut k = 0usize;
+        let s = bench_config(
+            &format!("netsim clean allreduce  n={n}"),
+            5, 20, 2048, 0.2,
+            &mut || {
+                black_box(sim.simulate_allreduce(k, n, msg).comm);
+                k += 1;
+            },
+        );
+        println!("{}", s.report());
+    }
+}

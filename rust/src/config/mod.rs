@@ -122,6 +122,135 @@ impl RunConfig {
     }
 }
 
+/// Configuration for the `netsim` subcommand: a topology × n ×
+/// scenario sweep measuring simulated time-to-target (the Table 2/3
+/// analogue under heterogeneous / faulty networks — docs/DESIGN.md
+/// §NetSim).
+#[derive(Clone, Debug)]
+pub struct NetSimRunConfig {
+    pub nodes: Vec<usize>,
+    pub topologies: Vec<TopologyKind>,
+    /// Scenario presets, parsed once here via
+    /// [`crate::netsim::Scenario::parse`] — the runner consumes them
+    /// directly, so an unknown name can only fail at the config surface.
+    pub scenarios: Vec<crate::netsim::Scenario>,
+    /// Iteration budget per run (runs that miss the target report the
+    /// full budget's simulated time).
+    pub iters: usize,
+    /// Parameter dimension of the synthetic heterogeneous quadratic.
+    pub dim: usize,
+    /// Target: mean squared distance to the global optimum below
+    /// `tol · err₀`.
+    pub tol: f64,
+    /// Gossip message size (defaults to ResNet-50-scale, like Table 2).
+    pub msg_bytes: f64,
+    /// Per-iteration local compute seconds.
+    pub compute: f64,
+    pub seed: u64,
+}
+
+impl Default for NetSimRunConfig {
+    fn default() -> Self {
+        NetSimRunConfig {
+            nodes: vec![16, 64],
+            topologies: vec![
+                TopologyKind::Ring,
+                TopologyKind::Grid2D,
+                TopologyKind::StaticExp,
+                TopologyKind::OnePeerExp,
+            ],
+            scenarios: vec![
+                crate::netsim::Scenario::clean(),
+                crate::netsim::Scenario::straggler(),
+                crate::netsim::Scenario::lossy(),
+            ],
+            iters: 1200,
+            dim: 32,
+            tol: 0.01,
+            msg_bytes: 25.5e6 * 4.0,
+            compute: 0.4,
+            seed: 1,
+        }
+    }
+}
+
+impl NetSimRunConfig {
+    /// Apply a `key=value` CLI override. List values are
+    /// comma-separated (`nodes=8,64`, `topologies=ring,one_peer_exp`,
+    /// `scenarios=clean,lossy`).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "nodes" => {
+                self.nodes = value
+                    .split(',')
+                    .map(|s| s.trim().parse::<usize>().map_err(|e| anyhow!("nodes: {e}")))
+                    .collect::<Result<Vec<_>>>()?;
+                if self.nodes.is_empty() || self.nodes.contains(&0) {
+                    bail!("nodes must be a non-empty list of positive sizes");
+                }
+            }
+            "topologies" => {
+                self.topologies = value
+                    .split(',')
+                    .map(|s| {
+                        TopologyKind::parse(s.trim())
+                            .ok_or_else(|| anyhow!("unknown topology {s}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if self.topologies.is_empty() {
+                    bail!("topologies must be non-empty");
+                }
+            }
+            "scenarios" => {
+                self.scenarios = value
+                    .split(',')
+                    .map(|s| {
+                        let s = s.trim();
+                        crate::netsim::Scenario::parse(s)
+                            .ok_or_else(|| anyhow!("unknown scenario {s} (clean|straggler|lossy)"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                if self.scenarios.is_empty() {
+                    bail!("scenarios must be non-empty");
+                }
+            }
+            "iters" => {
+                self.iters = value.parse()?;
+                if self.iters == 0 {
+                    bail!("iters must be positive");
+                }
+            }
+            "dim" => {
+                self.dim = value.parse()?;
+                if self.dim == 0 {
+                    bail!("dim must be positive");
+                }
+            }
+            "tol" => {
+                self.tol = value.parse()?;
+                if !self.tol.is_finite() || self.tol <= 0.0 {
+                    bail!("tol must be positive");
+                }
+            }
+            "msg_bytes" => {
+                self.msg_bytes = value.parse()?;
+                if !self.msg_bytes.is_finite() || self.msg_bytes <= 0.0 {
+                    bail!("msg_bytes must be positive");
+                }
+            }
+            "compute" => {
+                self.compute = value.parse()?;
+                if !self.compute.is_finite() || self.compute < 0.0 {
+                    bail!("compute must be non-negative");
+                }
+            }
+            "seed" => self.seed = value.parse()?,
+            other => bail!("unknown netsim config key: {other}"),
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -154,6 +283,29 @@ mod tests {
         assert!(RunConfig::from_json(&Json::parse(r#"{"nopes": 1}"#).unwrap()).is_err());
         assert!(RunConfig::from_json(&Json::parse(r#"{"topology": "mobius"}"#).unwrap()).is_err());
         assert!(RunConfig::from_json(&Json::parse(r#"{"nodes": 0}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn netsim_config_overrides_and_validation() {
+        use crate::netsim::Scenario;
+        let mut cfg = NetSimRunConfig::default();
+        cfg.set("nodes", "8,64").unwrap();
+        cfg.set("topologies", "ring,one_peer_exp").unwrap();
+        cfg.set("scenarios", "clean,lossy").unwrap();
+        cfg.set("iters", "300").unwrap();
+        cfg.set("tol", "0.02").unwrap();
+        assert_eq!(cfg.nodes, vec![8, 64]);
+        assert_eq!(cfg.topologies, vec![TopologyKind::Ring, TopologyKind::OnePeerExp]);
+        assert_eq!(cfg.scenarios, vec![Scenario::clean(), Scenario::lossy()]);
+        assert_eq!(cfg.iters, 300);
+        assert!(cfg.set("scenarios", "sunny").is_err());
+        assert!(cfg.set("topologies", "mobius").is_err());
+        assert!(cfg.set("nodes", "0").is_err());
+        assert!(cfg.set("iters", "0").is_err());
+        assert!(cfg.set("dim", "0").is_err());
+        assert!(cfg.set("tol", "-1").is_err());
+        assert!(cfg.set("msg_bytes", "nan").is_err());
+        assert!(cfg.set("bogus", "1").is_err());
     }
 
     #[test]

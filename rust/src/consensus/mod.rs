@@ -16,6 +16,7 @@
 
 use crate::engine::Engine;
 use crate::linalg::{power, Matrix};
+use crate::netsim::NetSim;
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
 use crate::util::rng::Pcg;
@@ -64,6 +65,34 @@ pub fn residue_decay_on(
     for k in 0..iters {
         engine.gossip_into(sched.plan_at(k), &x, &mut y);
         std::mem::swap(&mut x, &mut y);
+        out.push(residue_norm(&x) / r0);
+    }
+    out
+}
+
+/// [`residue_decay`] under a simulated faulty network: each gossip step
+/// mixes through the round's *degraded* plan when the simulator dropped
+/// exchanges or partitioned nodes (docs/DESIGN.md §NetSim), so the
+/// curve shows how much of a topology's averaging power survives a
+/// lossy fabric. With a faultless scenario this reproduces
+/// [`residue_decay`] exactly (the degraded plan is `None` every round).
+pub fn residue_decay_under_faults(
+    kind: TopologyKind,
+    n: usize,
+    iters: usize,
+    seed: u64,
+    sim: &mut NetSim,
+    msg_bytes: f64,
+) -> Vec<f64> {
+    let mut sched = Schedule::new(kind, n, seed);
+    let mut rng = Pcg::new(seed ^ 0xD15C0, 1);
+    let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let r0 = residue_norm(&x).max(f64::MIN_POSITIVE);
+    let mut out = Vec::with_capacity(iters);
+    for k in 0..iters {
+        let plan = sched.plan_at(k);
+        let outcome = sim.simulate_round(k, plan, msg_bytes);
+        x = outcome.degraded.as_ref().unwrap_or(plan).matvec(&x);
         out.push(residue_norm(&x) / r0);
     }
     out
@@ -179,6 +208,31 @@ mod tests {
         // Rate consistent with ρ = (τ−1)/(τ+1) = 0.6 for n=16... within slack.
         let rho = crate::spectral::static_exp_rho_bound(n);
         assert!(decay[11] < rho.powi(8), "decay too slow: {}", decay[11]);
+    }
+
+    #[test]
+    fn faulty_gossip_breaks_exact_averaging_clean_reproduces_it() {
+        use crate::costmodel::CostModel;
+        use crate::netsim::{NetSim, Scenario};
+        let n = 16;
+        let tau = crate::topology::exponential::tau(n);
+        // Faultless scenario: bit-for-bit the plain residue_decay curve.
+        let mut clean = NetSim::new(&CostModel::paper_default(0.1), Scenario::clean(), 3);
+        let plain = residue_decay(TopologyKind::OnePeerExp, n, 3 * tau, 3);
+        let cleaned =
+            residue_decay_under_faults(TopologyKind::OnePeerExp, n, 3 * tau, 3, &mut clean, 1e6);
+        assert_eq!(plain, cleaned);
+        // Heavy transient loss: exact averaging at k = τ cannot survive
+        // (at p = 0.5 over n/2 pairs per round, a drop fires with
+        // near-certainty under any healthy seed), but the renormalized
+        // plans still contract the residue.
+        let lossy_scen = Scenario { drop_prob: 0.5, dropout: Vec::new(), ..Scenario::lossy() };
+        let mut lossy = NetSim::new(&CostModel::paper_default(0.1), lossy_scen, 3);
+        let faulty =
+            residue_decay_under_faults(TopologyKind::OnePeerExp, n, 3 * tau, 3, &mut lossy, 1e6);
+        assert!(lossy.dropped_total > 0, "no drops fired at p=0.5");
+        assert!(faulty[tau - 1] > cleaned[tau - 1], "loss should delay consensus");
+        assert!(faulty[3 * tau - 1] < 1.0, "renormalized gossip should still contract");
     }
 
     #[test]

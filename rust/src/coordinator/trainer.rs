@@ -20,6 +20,7 @@ use super::schedule_lr::LrSchedule;
 use super::state::StackedParams;
 use crate::costmodel::CostModel;
 use crate::engine::{auto_lanes, Engine};
+use crate::netsim::NetSim;
 use crate::optim::{Optimizer, StepScratch};
 use crate::topology::schedule::Schedule;
 use crate::util::rng::Pcg;
@@ -90,8 +91,12 @@ pub struct TrainingHistory {
     /// (iter, consensus distance) samples.
     pub consensus: Vec<(usize, f64)>,
     /// Simulated wall-clock seconds accumulated over iterations (compute +
-    /// non-overlapped communication), if a cost model was supplied.
+    /// non-overlapped communication), if a cost model or [`NetSim`] was
+    /// supplied.
     pub sim_time: f64,
+    /// Per-iteration simulated seconds (empty unless a cost model or
+    /// [`NetSim`] was supplied) — `sim_time` is its running total.
+    pub round_times: Vec<f64>,
     /// Learning rate trace at `record_every` granularity.
     pub lr: Vec<(usize, f32)>,
 }
@@ -102,6 +107,13 @@ pub struct Trainer<'a> {
     pub optimizer: Box<dyn Optimizer>,
     pub provider: &'a dyn GradProvider,
     pub cfg: TrainConfig,
+    /// Optional network simulator (docs/DESIGN.md §NetSim). When set,
+    /// every iteration is priced by a discrete-event simulation of the
+    /// exchanges instead of the closed-form cost model, and a round
+    /// whose faults fired mixes through the *degraded* plan the
+    /// simulator returns. With faults disabled the trajectory is
+    /// bitwise identical to the plain path — only the clock changes.
+    pub netsim: Option<NetSim>,
 }
 
 impl<'a> Trainer<'a> {
@@ -111,7 +123,13 @@ impl<'a> Trainer<'a> {
         provider: &'a dyn GradProvider,
         cfg: TrainConfig,
     ) -> Self {
-        Trainer { topology, optimizer, provider, cfg }
+        Trainer { topology, optimizer, provider, cfg, netsim: None }
+    }
+
+    /// Attach a network simulator (builder style).
+    pub fn with_netsim(mut self, sim: NetSim) -> Self {
+        self.netsim = Some(sim);
+        self
     }
 
     /// Run to completion, calling `probe(iter, params)` every
@@ -165,18 +183,42 @@ impl<'a> Trainer<'a> {
             );
             let mean_loss: f64 = losses.iter().sum::<f64>() / n as f64;
 
+            // Network simulation (when attached): price the round by
+            // discrete events and pick up the degraded plan if a fault
+            // fired. `degraded = None` keeps the borrowed plan, so
+            // fault-free instrumented runs stay bitwise identical.
+            let parallel = self.optimizer.is_parallel();
+            let outcome = self.netsim.as_mut().map(|sim| {
+                if parallel {
+                    sim.simulate_allreduce(k, n, msg_bytes)
+                } else {
+                    sim.simulate_round(k, plan, msg_bytes)
+                }
+            });
+            let step_plan = outcome
+                .as_ref()
+                .and_then(|o| o.degraded.as_ref())
+                .unwrap_or(plan);
+
             // Fused shard-local optimizer step on the same pool.
-            self.optimizer.step_engine(&engine, plan, &grads, lr, &mut scratch);
+            self.optimizer.step_engine(&engine, step_plan, &grads, lr, &mut scratch);
 
             history.loss.push(mean_loss);
-            if let Some(cost) = &self.cfg.cost {
-                let comm = if self.optimizer.is_parallel() {
+            if let Some(outcome) = &outcome {
+                let overlap = self.netsim.as_ref().map(|s| s.cost.overlap).unwrap_or(0.0);
+                let t = outcome.iteration_time(overlap);
+                history.sim_time += t;
+                history.round_times.push(t);
+            } else if let Some(cost) = &self.cfg.cost {
+                let comm = if parallel {
                     cost.allreduce_time(n, msg_bytes)
                 } else {
                     cost.partial_averaging_time(plan, msg_bytes)
                 };
                 let hidden = cost.compute.min(comm) * cost.overlap;
-                history.sim_time += cost.compute + comm - hidden;
+                let t = cost.compute + comm - hidden;
+                history.sim_time += t;
+                history.round_times.push(t);
             }
             if k % self.cfg.record_every == 0 || k + 1 == self.cfg.iters {
                 history

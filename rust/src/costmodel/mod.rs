@@ -14,6 +14,11 @@
 //! Defaults approximate the paper's testbed: 25 Gbps TCP inter-node links,
 //! ~0.1 ms latency. The *shape* of the resulting per-iteration times — not
 //! their absolute values — is what Tables 2–3 validate.
+//!
+//! These closed forms are the **fast path** for a uniform, failure-free
+//! network. The discrete-event [`crate::netsim`] generalizes them to
+//! heterogeneous links, stragglers, and faults, and collapses onto them
+//! exactly in the clean case (pinned by `tests/netsim.rs`).
 
 use crate::topology::plan::MixingPlan;
 use crate::topology::TopologyKind;
@@ -44,18 +49,25 @@ impl CostModel {
         }
     }
 
+    /// One point-to-point message of `msg_bytes`: `α + S·β`. The unit
+    /// every other formula (and the [`crate::netsim`] exchange slots)
+    /// is built from — one expression so the two paths cannot drift.
+    #[inline]
+    pub fn link_time(&self, msg_bytes: f64) -> f64 {
+        self.alpha + msg_bytes * self.beta
+    }
+
     /// Time for one partial-averaging round given the realized mixing
     /// plan. The degree (max distinct partners of any node) is plan
     /// metadata, so this is `O(1)` — no `O(n²)` matrix scan.
     pub fn partial_averaging_time(&self, plan: &MixingPlan, msg_bytes: f64) -> f64 {
-        let d = plan.max_degree as f64;
-        d * (self.alpha + msg_bytes * self.beta)
+        plan.max_degree as f64 * self.link_time(msg_bytes)
     }
 
     /// Time for a ring-allreduce of `msg_bytes` across `n` nodes.
     pub fn allreduce_time(&self, n: usize, msg_bytes: f64) -> f64 {
         let n = n.max(1) as f64;
-        2.0 * (n - 1.0) * (self.alpha + msg_bytes / n * self.beta)
+        2.0 * (n - 1.0) * self.link_time(msg_bytes / n)
     }
 
     /// Per-iteration communication time of a topology at size `n`,
@@ -63,10 +75,7 @@ impl CostModel {
     pub fn comm_time(&self, kind: TopologyKind, n: usize, msg_bytes: f64) -> f64 {
         match kind {
             TopologyKind::FullyConnected => self.allreduce_time(n, msg_bytes),
-            _ => {
-                let d = analytic_degree(kind, n) as f64;
-                d * (self.alpha + msg_bytes * self.beta)
-            }
+            _ => analytic_degree(kind, n) as f64 * self.link_time(msg_bytes),
         }
     }
 

@@ -9,6 +9,7 @@ pub mod ablations;
 pub mod classify_runner;
 pub mod figures;
 pub mod logreg_runner;
+pub mod netsim_runner;
 pub mod tables;
 
 use anyhow::{bail, Result};
@@ -46,7 +47,7 @@ pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig10", "fig11", "fig12", "table1", "table5", "table6",
     "fig1", "fig13", "table7", "table8", "table2", "table3", "table4",
     "table9", "table10", "ablation_warmup", "ablation_sampling",
-    "ablation_symmetric",
+    "ablation_symmetric", "netsim",
 ];
 
 /// Dispatch one experiment by id.
@@ -72,6 +73,15 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "ablation_warmup" => ablations::ablation_warmup(ctx),
         "ablation_sampling" => ablations::ablation_sampling(ctx),
         "ablation_symmetric" => ablations::ablation_symmetric(ctx),
+        "netsim" => {
+            let base = crate::config::NetSimRunConfig::default();
+            let cfg = crate::config::NetSimRunConfig {
+                seed: ctx.seed,
+                iters: ctx.scaled(base.iters),
+                ..base
+            };
+            netsim_runner::netsim_table(&cfg, &ctx.out_dir).map(|_| ())
+        }
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

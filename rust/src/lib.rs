@@ -27,6 +27,10 @@
 //!   probes, and gossip over contiguous row shards.
 //! * [`costmodel`] — the α-β per-iteration communication-time model used to
 //!   reproduce the wall-clock columns of Tables 2–3.
+//! * [`netsim`] — deterministic discrete-event simulator of training rounds
+//!   over heterogeneous / faulty networks (stragglers, link jitter, message
+//!   drop, node dropout); collapses onto [`costmodel`]'s closed forms on a
+//!   clean uniform network.
 //! * [`runtime`] — PJRT CPU client that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) produced by the build-time JAX/Pallas layers.
 //! * [`data`], [`models`] — synthetic workloads (logistic regression per
@@ -48,6 +52,7 @@ pub mod engine;
 pub mod exp;
 pub mod linalg;
 pub mod models;
+pub mod netsim;
 pub mod optim;
 pub mod runtime;
 pub mod spectral;

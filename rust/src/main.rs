@@ -3,11 +3,12 @@
 //! Subcommands:
 //!   exp <id|all> [--scale S] [--seed N] [--out DIR]   regenerate paper tables/figures
 //!   train [--config FILE] [key=value ...]             one decentralized training run
+//!   netsim [--out DIR] [key=value ...]                simulated time-to-target sweep
 //!   spectral <topology> <n>                           spectral gap of a topology
 //!   info                                              artifact + runtime status
 
 use anyhow::{bail, Context, Result};
-use expograph::config::RunConfig;
+use expograph::config::{NetSimRunConfig, RunConfig};
 use expograph::coordinator::trainer::{TrainConfig, Trainer};
 use expograph::coordinator::LrSchedule;
 use expograph::costmodel::CostModel;
@@ -27,6 +28,11 @@ USAGE:
       --scale S   protocol scale factor (1.0 = paper protocol, 0.1 = smoke)
   expograph train [--config FILE] [key=value ...]
       keys: nodes topology algorithm iters lr beta batch heterogeneous seed
+  expograph netsim [--out DIR] [key=value ...]
+      discrete-event network simulation: topology x n x scenario
+      time-to-target table (writes netsim.json + netsim.csv)
+      keys: nodes topologies scenarios iters dim tol msg_bytes compute seed
+      e.g.: nodes=8,64 topologies=ring,one_peer_exp scenarios=clean,lossy
   expograph spectral <topology> <n>
   expograph info
 ";
@@ -36,6 +42,7 @@ fn main() -> Result<()> {
     match args.first().map(String::as_str) {
         Some("exp") => cmd_exp(&args[1..]),
         Some("train") => cmd_train(&args[1..]),
+        Some("netsim") => cmd_netsim(&args[1..]),
         Some("spectral") => cmd_spectral(&args[1..]),
         Some("info") => cmd_info(),
         Some("--help" | "-h" | "help") | None => {
@@ -127,6 +134,25 @@ fn cmd_train(args: &[String]) -> Result<()> {
         hist.sim_time,
         hist.consensus.last().unwrap().1
     );
+    Ok(())
+}
+
+fn cmd_netsim(args: &[String]) -> Result<()> {
+    let mut cfg = NetSimRunConfig::default();
+    let mut out = std::path::PathBuf::from("results");
+    let mut it = args.iter();
+    while let Some(arg) = it.next() {
+        if arg == "--out" {
+            out = it.next().context("--out needs a value")?.into();
+        } else if let Some((k, v)) = arg.split_once('=') {
+            cfg.set(k, v)?;
+        } else {
+            bail!("expected key=value or --out DIR, got {arg}");
+        }
+    }
+    let t0 = std::time::Instant::now();
+    expograph::exp::netsim_runner::netsim_table(&cfg, &out)?;
+    eprintln!("[netsim] done in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
 }
 

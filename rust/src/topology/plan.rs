@@ -32,9 +32,14 @@ pub struct MixingPlan {
     /// For each output row `i`: the `(j, w_ij)` of its nonzero entries,
     /// sorted by `j`.
     pub rows: Vec<Vec<(usize, f64)>>,
-    /// Max over nodes of the number of *distinct* off-diagonal partners
-    /// (union of in- and out-neighbors) — the paper's per-iteration
-    /// communication degree.
+    /// For each node, its *distinct* off-diagonal communication
+    /// partners (union of in- and out-neighbors), ascending. Built once
+    /// at construction; [`crate::netsim`] walks these lists directly
+    /// every simulated round instead of re-deriving them.
+    pub partners: Vec<Vec<usize>>,
+    /// Max over nodes of the number of distinct partners (the longest
+    /// `partners` list) — the paper's per-iteration communication
+    /// degree.
     pub max_degree: usize,
     /// Is `W` exactly symmetric? (What D²/Exact-Diffusion require.)
     pub symmetric: bool,
@@ -55,9 +60,10 @@ impl MixingPlan {
             row.sort_unstable_by_key(|e| e.0);
         }
         let n = rows.len();
-        let max_degree = union_max_degree(&rows);
+        let partners = partner_lists(&rows);
+        let max_degree = partners.iter().map(Vec::len).max().unwrap_or(0);
         let symmetric = rows_symmetric(&rows);
-        MixingPlan { n, rows, max_degree, symmetric, kind }
+        MixingPlan { n, rows, partners, max_degree, symmetric, kind }
     }
 
     /// Tag the plan with its originating topology kind.
@@ -121,6 +127,59 @@ impl MixingPlan {
             .collect()
     }
 
+    /// Fault-renormalized copy of the plan (the network simulator's
+    /// degraded-plan rule, docs/DESIGN.md §NetSim): an `offline` node
+    /// keeps only itself (`row u = {(u, 1)}`), and in every online row
+    /// `i` each off-diagonal entry `(j, w)` whose message was lost
+    /// (`offline[j]` or `dropped(i, j)`) is folded into the diagonal —
+    /// the self-weight absorbs the lost mass, so each row's sum is
+    /// preserved (row-stochasticity survives any fault pattern).
+    ///
+    /// `dropped` must be symmetric in its arguments for symmetric input
+    /// plans to stay symmetric (the simulator drops per unordered
+    /// pair). Returns `None` when no entry changed, so fault-free
+    /// rounds keep borrowing the original plan bit-for-bit.
+    pub fn degrade(
+        &self,
+        offline: &[bool],
+        mut dropped: impl FnMut(usize, usize) -> bool,
+    ) -> Option<MixingPlan> {
+        assert_eq!(offline.len(), self.n, "offline mask dimension mismatch");
+        let mut changed = false;
+        let mut rows = Vec::with_capacity(self.n);
+        for (i, row) in self.rows.iter().enumerate() {
+            if offline[i] {
+                if row.len() != 1 || row[0] != (i, 1.0) {
+                    changed = true;
+                }
+                rows.push(vec![(i, 1.0)]);
+                continue;
+            }
+            let mut out = Vec::with_capacity(row.len());
+            let mut absorbed = 0.0f64;
+            let mut diag = None;
+            for &(j, w) in row {
+                if j != i && (offline[j] || dropped(i, j)) {
+                    absorbed += w;
+                    changed = true;
+                } else {
+                    if j == i {
+                        diag = Some(out.len());
+                    }
+                    out.push((j, w));
+                }
+            }
+            if absorbed != 0.0 {
+                match diag {
+                    Some(p) => out[p].1 += absorbed,
+                    None => out.push((i, absorbed)),
+                }
+            }
+            rows.push(out);
+        }
+        changed.then(|| MixingPlan::from_rows(rows, self.kind))
+    }
+
     /// Is the plan doubly stochastic to tolerance `tol`?
     pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
         let mut col_sums = vec![0.0f64; self.n];
@@ -141,10 +200,11 @@ impl MixingPlan {
     }
 }
 
-/// Max over nodes of distinct communication partners, matching
-/// [`crate::topology::weight::max_comm_degree`] on the dense form:
-/// `j` is a partner of `i` iff `w_ij ≠ 0` or `w_ji ≠ 0`, `i ≠ j`.
-fn union_max_degree(rows: &[Vec<(usize, f64)>]) -> usize {
+/// Distinct communication partners per node, matching
+/// [`crate::topology::weight::max_comm_degree`]'s notion on the dense
+/// form: `j` is a partner of `i` iff `w_ij ≠ 0` or `w_ji ≠ 0`, `i ≠ j`.
+/// Ascending and deduplicated; the longest list is `max_degree`.
+fn partner_lists(rows: &[Vec<(usize, f64)>]) -> Vec<Vec<usize>> {
     let n = rows.len();
     let mut partners: Vec<Vec<usize>> = vec![Vec::new(); n];
     for (i, row) in rows.iter().enumerate() {
@@ -155,15 +215,11 @@ fn union_max_degree(rows: &[Vec<(usize, f64)>]) -> usize {
             }
         }
     }
+    for p in partners.iter_mut() {
+        p.sort_unstable();
+        p.dedup();
+    }
     partners
-        .iter_mut()
-        .map(|p| {
-            p.sort_unstable();
-            p.dedup();
-            p.len()
-        })
-        .max()
-        .unwrap_or(0)
 }
 
 /// Exact structural symmetry: every stored `(i, j, w)` has a matching
@@ -223,6 +279,45 @@ mod tests {
         let mut bad = MixingPlan::averaging(3);
         bad.rows[0][0].1 = 0.9;
         assert!(!bad.is_doubly_stochastic(1e-12));
+    }
+
+    #[test]
+    fn degrade_none_when_no_fault_fires() {
+        let plan = MixingPlan::from_dense(&static_exp_weights(16));
+        let offline = vec![false; 16];
+        assert!(plan.degrade(&offline, |_, _| false).is_none());
+    }
+
+    #[test]
+    fn degrade_folds_lost_mass_into_diagonal() {
+        let plan = MixingPlan::from_dense(&one_peer_exp_weights(8, 0));
+        let offline = vec![false; 8];
+        // Drop the {0, 1} exchange: rows 0 and 7 lose their partner.
+        let d = plan
+            .degrade(&offline, |a, b| (a.min(b), a.max(b)) == (0, 1))
+            .expect("a drop must degrade");
+        assert_eq!(d.rows[0], vec![(0, 1.0)]);
+        // Row 1 pulls from node 2, which was not dropped.
+        assert_eq!(d.rows[1], plan.rows[1]);
+        for (i, row) in d.rows.iter().enumerate() {
+            let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {i}");
+        }
+        assert_eq!(d.kind, plan.kind);
+    }
+
+    #[test]
+    fn degrade_offline_node_keeps_only_itself() {
+        let plan = MixingPlan::from_dense(&static_exp_weights(8));
+        let mut offline = vec![false; 8];
+        offline[3] = true;
+        let d = plan.degrade(&offline, |_, _| false).expect("offline degrades");
+        assert_eq!(d.rows[3], vec![(3, 1.0)]);
+        for (i, row) in d.rows.iter().enumerate() {
+            assert!(i == 3 || row.iter().all(|&(j, _)| j != 3), "row {i} still reads node 3");
+            let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+            assert!((sum - 1.0).abs() < 1e-12, "row {i}");
+        }
     }
 
     #[test]

@@ -63,6 +63,55 @@ fn exp_fig4_smoke_writes_csv() {
 }
 
 #[test]
+fn netsim_subcommand_emits_parseable_json_with_clean_beating_lossy() {
+    use expograph::util::json::Json;
+    let tmp = std::env::temp_dir().join(format!("expograph-cli-netsim-{}", std::process::id()));
+    let (stdout, stderr, ok) = run(&[
+        "netsim",
+        "nodes=8",
+        "topologies=one_peer_exp,ring",
+        "scenarios=clean,lossy",
+        "iters=300",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("NetSim"), "{stdout}");
+    let text = std::fs::read_to_string(tmp.join("netsim.json")).expect("netsim.json written");
+    let doc = Json::parse(&text).expect("netsim.json parses");
+    let rows = doc.get("rows").and_then(|r| r.as_array()).expect("rows array");
+    assert_eq!(rows.len(), 4, "2 topologies x 1 size x 2 scenarios");
+    let mut clean_total = 0.0;
+    let mut lossy_total = 0.0;
+    for row in rows {
+        let scenario = row.get("scenario").and_then(|s| s.as_str()).expect("scenario");
+        let t = row.get("time_to_target").and_then(|t| t.as_f64()).expect("time_to_target");
+        assert!(row.get("topology").and_then(|t| t.as_str()).is_some());
+        assert!(t > 0.0);
+        match scenario {
+            "clean" => clean_total += t,
+            "lossy" => lossy_total += t,
+            other => panic!("unexpected scenario {other}"),
+        }
+    }
+    assert!(
+        clean_total < lossy_total,
+        "clean {clean_total} should beat lossy {lossy_total}"
+    );
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+#[test]
+fn netsim_subcommand_rejects_bad_keys() {
+    let (_, stderr, ok) = run(&["netsim", "scenarios=sunny"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown scenario"), "{stderr}");
+    let (_, stderr, ok) = run(&["netsim", "warp_speed=9"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown netsim config key"), "{stderr}");
+}
+
+#[test]
 fn train_with_config_and_overrides() {
     let (stdout, stderr, ok) = run(&[
         "train",

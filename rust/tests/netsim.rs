@@ -1,0 +1,253 @@
+//! NetSim conformance and acceptance suite (docs/DESIGN.md §NetSim).
+//!
+//! * **Cost-model conformance**: on a uniform fault-free network the
+//!   discrete-event simulator reproduces the closed-form α-β formulas
+//!   (`partial_averaging_time` per Table 1 topology, the ring-allreduce
+//!   formula for the parallel baseline) to f64 round-off.
+//! * **Non-intrusiveness**: a `NetSim`-instrumented training run with
+//!   faults disabled is bitwise identical to the plain engine path.
+//! * **Table 2/3 acceptance**: in the clean scenario at n = 64 the
+//!   exponential graphs beat ring/grid on simulated time-to-target;
+//!   lossy networks cost real time; stragglers slow the clock without
+//!   touching the trajectory.
+
+use expograph::config::NetSimRunConfig;
+use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
+use expograph::coordinator::LrSchedule;
+use expograph::costmodel::CostModel;
+use expograph::exp::netsim_runner::time_to_target;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::AlgorithmKind;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * b.abs().max(1e-300)
+}
+
+/// Satellite: `NetSim` on a uniform, fault-free network reproduces
+/// `costmodel::partial_averaging_time` for every Table 1 topology at
+/// n ∈ {16, 256}, to f64 round-off.
+#[test]
+fn clean_netsim_reproduces_partial_averaging_closed_form() {
+    let cost = CostModel::paper_default(0.4);
+    let msg = 1e8;
+    for n in [16usize, 256] {
+        for kind in TopologyKind::table1() {
+            let mut sched = Schedule::new(kind, n, 7);
+            let mut sim = NetSim::new(&cost, Scenario::clean(), 7);
+            for k in 0..3 {
+                let plan = sched.plan_at(k);
+                let out = sim.simulate_round(k, plan, msg);
+                let want = cost.partial_averaging_time(plan, msg);
+                assert!(
+                    rel_close(out.comm, want, 1e-11),
+                    "{kind} n={n} k={k}: sim {} vs closed form {want}",
+                    out.comm
+                );
+                assert!(out.degraded.is_none(), "{kind} n={n}: clean run degraded a plan");
+                assert_eq!(out.compute, cost.compute, "{kind} n={n}");
+            }
+        }
+    }
+}
+
+/// Satellite (other half): the ring-allreduce closed form, same sizes.
+#[test]
+fn clean_netsim_reproduces_allreduce_closed_form() {
+    let cost = CostModel::paper_default(0.4);
+    let msg = 1e8;
+    for n in [16usize, 256] {
+        let mut sim = NetSim::new(&cost, Scenario::clean(), 7);
+        let out = sim.simulate_allreduce(0, n, msg);
+        let want = cost.allreduce_time(n, msg);
+        assert!(
+            rel_close(out.comm, want, 1e-11),
+            "n={n}: sim {} vs closed form {want}",
+            out.comm
+        );
+    }
+}
+
+fn quad_run(
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    netsim: Option<NetSim>,
+    cost: Option<CostModel>,
+) -> expograph::coordinator::trainer::TrainingHistory {
+    let n = 16;
+    let dim = 24;
+    let provider = QuadraticProvider::random(n, dim, 0.05, 11);
+    let opt = algo.build(n, &vec![0.0f32; dim], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, n, 2),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: 60,
+            lr: LrSchedule::Const(0.05),
+            warmup_allreduce: false,
+            record_every: 10,
+            parallel_grads: false,
+            lanes: None,
+            seed: 5,
+            msg_bytes: Some(1e8),
+            cost,
+        },
+    );
+    trainer.netsim = netsim;
+    trainer.run()
+}
+
+/// Acceptance: with faults disabled, a `NetSim`-instrumented run is
+/// bitwise identical to the plain engine path (losses and consensus
+/// probes), and its simulated time matches the closed-form cost-model
+/// accumulation to round-off.
+#[test]
+fn clean_instrumented_run_is_bitwise_identical_with_conformant_clock() {
+    let cost = CostModel::paper_default(0.01);
+    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring] {
+        for algo in [AlgorithmKind::DmSgd, AlgorithmKind::ParallelSgd] {
+            let plain = quad_run(kind, algo, None, Some(cost));
+            let simmed =
+                quad_run(kind, algo, Some(NetSim::new(&cost, Scenario::clean(), 9)), None);
+            assert_eq!(plain.loss.len(), simmed.loss.len());
+            for (k, (a, b)) in plain.loss.iter().zip(simmed.loss.iter()).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind}/{algo} loss diverged at iter {k}");
+            }
+            for ((ka, a), (kb, b)) in plain.consensus.iter().zip(simmed.consensus.iter()) {
+                assert_eq!(ka, kb);
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind}/{algo} consensus diverged");
+            }
+            assert!(
+                rel_close(simmed.sim_time, plain.sim_time, 1e-9),
+                "{kind}/{algo}: sim clock {} vs closed-form clock {}",
+                simmed.sim_time,
+                plain.sim_time
+            );
+            assert_eq!(plain.round_times.len(), simmed.round_times.len());
+        }
+    }
+}
+
+/// Stragglers slow the clock but cannot touch the trajectory: same
+/// losses bit for bit, strictly more simulated time.
+#[test]
+fn straggler_run_same_trajectory_slower_clock() {
+    let cost = CostModel::paper_default(0.01);
+    let clean = quad_run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        Some(NetSim::new(&cost, Scenario::clean(), 9)),
+        None,
+    );
+    let strag = quad_run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        Some(NetSim::new(&cost, Scenario::straggler(), 9)),
+        None,
+    );
+    for (a, b) in clean.loss.iter().zip(strag.loss.iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "straggler scenario altered the trajectory");
+    }
+    assert!(
+        strag.sim_time > clean.sim_time,
+        "straggler clock {} not slower than clean {}",
+        strag.sim_time,
+        clean.sim_time
+    );
+}
+
+/// A lossy network degrades plans and changes the trajectory — the
+/// simulator must report the faults it injected.
+#[test]
+fn lossy_run_degrades_plans_and_diverges() {
+    let cost = CostModel::paper_default(0.01);
+    let clean = quad_run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        Some(NetSim::new(&cost, Scenario::clean(), 9)),
+        None,
+    );
+    let n = 16;
+    let dim = 24;
+    let provider = QuadraticProvider::random(n, dim, 0.05, 11);
+    let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(TopologyKind::OnePeerExp, n, 2),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: 60,
+            lr: LrSchedule::Const(0.05),
+            warmup_allreduce: false,
+            record_every: 10,
+            parallel_grads: false,
+            lanes: None,
+            seed: 5,
+            msg_bytes: Some(1e8),
+            cost: None,
+        },
+    )
+    .with_netsim(NetSim::new(&cost, Scenario::lossy(), 9));
+    let lossy = trainer.run();
+    let sim = trainer.netsim.as_ref().unwrap();
+    assert!(sim.dropped_total > 0, "no exchange dropped at p = 0.3 over 60 rounds");
+    assert!(sim.degraded_rounds > 0);
+    assert!(
+        clean.loss.iter().zip(lossy.loss.iter()).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "lossy scenario should perturb the trajectory"
+    );
+}
+
+fn sweep_cfg(iters: usize) -> NetSimRunConfig {
+    NetSimRunConfig { iters, seed: 3, ..Default::default() }
+}
+
+/// Acceptance: Table 2/3-style headline — in the clean scenario at
+/// n = 64, both exponential graphs reach the target and do so in less
+/// simulated wall-clock than ring or grid (which pay either a huge
+/// iteration count from their tiny spectral gap or, for grid, a larger
+/// per-round cost too).
+#[test]
+fn clean_n64_exponential_graphs_beat_ring_and_grid_on_time_to_target() {
+    let cfg = sweep_cfg(1200);
+    let clean = Scenario::clean();
+    let t = |kind| time_to_target(&cfg, kind, 64, &clean);
+    let ring = t(TopologyKind::Ring);
+    let grid = t(TopologyKind::Grid2D);
+    let static_exp = t(TopologyKind::StaticExp);
+    let one_peer = t(TopologyKind::OnePeerExp);
+    assert!(static_exp.reached, "static exp missed the target at n=64");
+    assert!(one_peer.reached, "one-peer exp missed the target at n=64");
+    let exp_worst = static_exp.time_to_target.max(one_peer.time_to_target);
+    let classic_best = ring.time_to_target.min(grid.time_to_target);
+    assert!(
+        exp_worst < classic_best,
+        "exp graphs {exp_worst:.1}s should beat ring/grid {classic_best:.1}s at n=64"
+    );
+}
+
+/// Lossy networks cost real simulated time: aggregate time-to-target
+/// over the exponential graphs at n = 16 is strictly worse than clean
+/// (more iterations through degraded plans, slower heterogeneous links).
+#[test]
+fn lossy_time_to_target_exceeds_clean() {
+    let cfg = sweep_cfg(800);
+    let clean = Scenario::clean();
+    let lossy = Scenario::lossy();
+    let mut t_clean = 0.0;
+    let mut t_lossy = 0.0;
+    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+        let c = time_to_target(&cfg, kind, 16, &clean);
+        let l = time_to_target(&cfg, kind, 16, &lossy);
+        assert!(c.reached, "{kind} clean should reach the target at n=16");
+        assert!(l.dropped > 0, "{kind} lossy run dropped nothing");
+        t_clean += c.time_to_target;
+        t_lossy += l.time_to_target;
+    }
+    assert!(
+        t_clean < t_lossy,
+        "clean {t_clean:.1}s should beat lossy {t_lossy:.1}s"
+    );
+}

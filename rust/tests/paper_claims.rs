@@ -5,9 +5,11 @@ use expograph::consensus;
 use expograph::coordinator::{transient_iterations, LrSchedule};
 use expograph::costmodel::{analytic_degree, CostModel};
 use expograph::exp::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
+use expograph::linalg::Matrix;
 use expograph::optim::AlgorithmKind;
-use expograph::spectral;
-use expograph::topology::exponential::tau;
+use expograph::spectral::{self, RhoMethod};
+use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights, tau};
+use expograph::topology::schedule::{static_weights, Schedule};
 use expograph::topology::TopologyKind;
 
 /// Proposition 1, headline number: for n = 64, ρ = (τ−1)/(τ+1) = 5/7 and
@@ -38,6 +40,126 @@ fn claim_gap_shrinks_like_inverse_log() {
     let gr64 = spectral::topology_gap(TopologyKind::HalfRandom, 64, 3);
     let gr256 = spectral::topology_gap(TopologyKind::HalfRandom, 256, 3);
     assert!(gr256 > 0.3 && gr64 > 0.3, "half-random gap should be O(1): {gr64}, {gr256}");
+}
+
+/// Golden ρ values, ring (Table 1 / Lemma 2 family): Metropolis ring
+/// weights are circulant with eigenvalues `1/3 + (2/3)cos(2πk/n)`, so
+/// `ρ = (1 + 2cos(2π/n))/3`. Pinned at n ∈ {8, 16, 64} through the
+/// symmetric-eigensolver dispatch path.
+#[test]
+fn claim_golden_rho_ring() {
+    for n in [8usize, 16, 64] {
+        let w = static_weights(TopologyKind::Ring, n, 0);
+        let (rho, method) = spectral::rho_with_method(&w);
+        assert_eq!(method, RhoMethod::SymmetricEig, "n={n}");
+        let closed = (1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0;
+        assert!((rho - closed).abs() < 1e-9, "n={n}: rho={rho} closed={closed}");
+    }
+}
+
+/// Golden ρ values, 2-D grid (Metropolis weights, `grid_shape(n)`
+/// layout). The 2×4 grid at n = 8 has the closed form `(2 + √2)/4`;
+/// the 4×4 and 8×8 values are golden constants cross-checked against
+/// an independent dense eigensolver.
+#[test]
+fn claim_golden_rho_grid() {
+    let golden = [
+        (8usize, (2.0 + std::f64::consts::SQRT_2) / 4.0),
+        (16, 0.8686406182898112),
+        (64, 0.9677046368513393),
+    ];
+    for (n, want) in golden {
+        let w = static_weights(TopologyKind::Grid2D, n, 0);
+        let (rho, method) = spectral::rho_with_method(&w);
+        assert_eq!(method, RhoMethod::SymmetricEig, "n={n}");
+        assert!((rho - want).abs() < 1e-8, "n={n}: rho={rho} golden={want}");
+    }
+}
+
+/// Golden ρ values, static exponential graph (Proposition 1 / Lemma 2):
+/// `ρ = (τ−1)/(τ+1)` exactly for even n — 1/2, 3/5, 5/7 at
+/// n = 8, 16, 64 — through the circulant-DFT dispatch path.
+#[test]
+fn claim_golden_rho_static_exp() {
+    for (n, want) in [(8usize, 0.5), (16, 0.6), (64, 5.0 / 7.0)] {
+        let w = static_exp_weights(n);
+        let (rho, method) = spectral::rho_with_method(&w);
+        assert_eq!(method, RhoMethod::CirculantDft, "n={n}");
+        assert!((rho - want).abs() < 1e-10, "n={n}: rho={rho} golden={want}");
+    }
+}
+
+/// Golden ρ values, one-peer exponential realizations (Lemma 2): the
+/// hop-1 realization `½(I + P)` has `ρ = cos(π/n)`; every hop-2^t
+/// realization with t ≥ 1 has ρ = 1 exactly (a single realization does
+/// not contract — only the period product does, which collapses to J
+/// with ρ = 0).
+#[test]
+fn claim_golden_rho_one_peer_period() {
+    for n in [8usize, 16, 64] {
+        let (rho0, method0) = spectral::rho_with_method(&one_peer_exp_weights(n, 0));
+        assert_eq!(method0, RhoMethod::CirculantDft, "n={n} t=0");
+        let closed = (std::f64::consts::PI / n as f64).cos();
+        assert!((rho0 - closed).abs() < 1e-10, "n={n}: rho={rho0} closed={closed}");
+        for t in 1..tau(n) {
+            let rho = spectral::rho(&one_peer_exp_weights(n, t));
+            assert!((rho - 1.0).abs() < 1e-9, "n={n} t={t}: rho={rho} != 1");
+        }
+        // The τ-step period product is exactly J — spectral radius 0.
+        let mut prod = Matrix::eye(n);
+        for t in 0..tau(n) {
+            prod = one_peer_exp_weights(n, t).matmul(&prod);
+        }
+        let (rho_prod, method_prod) = spectral::rho_with_method(&prod);
+        assert_eq!(method_prod, RhoMethod::SymmetricEig, "n={n} (J is symmetric)");
+        assert!(rho_prod < 1e-10, "n={n}: period product rho={rho_prod}");
+    }
+}
+
+/// Golden ρ through the residue-norm fallback: permuting the rows of
+/// the static exponential matrix (swap rows 0 and 1) yields a doubly
+/// stochastic matrix that is neither symmetric nor circulant, forcing
+/// the `ResidueNorm` path — and since `‖P(W−J)‖₂ = ‖W−J‖₂ = ρ(W)` for
+/// a permutation `P`, its golden value is still (τ−1)/(τ+1) = 0.6 at
+/// n = 16.
+#[test]
+fn claim_golden_rho_residue_norm_path() {
+    let n = 16;
+    let w = static_exp_weights(n);
+    let mut p = w.clone();
+    for j in 0..n {
+        p[(0, j)] = w[(1, j)];
+        p[(1, j)] = w[(0, j)];
+    }
+    let (rho, method) = spectral::rho_with_method(&p);
+    assert_eq!(method, RhoMethod::ResidueNorm, "row swap must break symmetry+circulance");
+    assert!((rho - 0.6).abs() < 1e-5, "rho={rho} golden=0.6");
+}
+
+/// Theorem/Property 7 (periodic exactness), pinned through the
+/// schedule's own cached plans: for power-of-two n the product of the
+/// τ = log2(n) one-peer plans equals J = 11ᵀ/n to 1e-12, and for
+/// non-power-of-two n it does not.
+#[test]
+fn claim_exact_averaging_theorem_via_schedule_plans() {
+    for n in [8usize, 16, 64] {
+        let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 0);
+        let mut prod = Matrix::eye(n);
+        for k in 0..tau(n) {
+            prod = sched.plan_at(k).to_dense().matmul(&prod);
+        }
+        let err = prod.sub(&Matrix::averaging(n)).max_abs();
+        assert!(err < 1e-12, "n={n}: |prod - J| = {err}");
+    }
+    for n in [6usize, 12, 20, 48] {
+        let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 0);
+        let mut prod = Matrix::eye(n);
+        for k in 0..tau(n) {
+            prod = sched.plan_at(k).to_dense().matmul(&prod);
+        }
+        let err = prod.sub(&Matrix::averaging(n)).max_abs();
+        assert!(err > 1e-6, "n={n}: unexpectedly exact (err {err})");
+    }
 }
 
 /// Lemma 1: exact averaging after τ = log2(n) one-peer steps iff n is a

@@ -325,6 +325,135 @@ fn prop_json_roundtrip_random_documents() {
     }
 }
 
+/// NetSim fault-injection determinism: the same seed produces the
+/// identical event trace, identical degraded plans, and a bitwise-
+/// identical loss trajectory for ANY engine lane count — the simulator
+/// runs on the coordinator and nothing lane-dependent may leak into it.
+#[test]
+fn prop_netsim_trace_and_degraded_plans_lane_invariant() {
+    use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
+    use expograph::coordinator::LrSchedule;
+    use expograph::costmodel::CostModel;
+    use expograph::netsim::{NetSim, Scenario};
+    let mut rng = Pcg::seeded(0x8E);
+    for case in 0..6 {
+        let n = 4 + rng.below(12);
+        let kind = [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring]
+            [rng.below(3)];
+        let sim_seed = rng.next_u64();
+        let run = |lanes: usize| {
+            let provider = QuadraticProvider::random(n, 12, 0.1, 3);
+            let opt = expograph::optim::AlgorithmKind::DmSgd.build(n, &vec![0.0; 12], 0.9);
+            // The dropout window makes at least three degraded rounds
+            // certain; the 40% transient drops exercise the pair coins.
+            let scen = Scenario {
+                drop_prob: 0.4,
+                dropout: vec![(n - 1, 2, 5)],
+                ..Scenario::lossy()
+            };
+            let mut t = Trainer::new(
+                Schedule::new(kind, n, 1),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters: 12,
+                    lr: LrSchedule::Const(0.05),
+                    warmup_allreduce: false,
+                    record_every: 4,
+                    parallel_grads: false,
+                    lanes: Some(lanes),
+                    seed: 7,
+                    msg_bytes: Some(1e7),
+                    cost: None,
+                },
+            )
+            .with_netsim(NetSim::new(&CostModel::paper_default(0.05), scen, sim_seed).recording());
+            let hist = t.run();
+            let log = t.netsim.as_mut().unwrap().take_log();
+            (hist, log)
+        };
+        let (h1, l1) = run(1);
+        assert!(!l1.events.is_empty(), "case {case}: empty trace");
+        assert!(!l1.degraded.is_empty(), "case {case}: dropout window degraded nothing");
+        for lanes in [2usize, 3] {
+            let (h, l) = run(lanes);
+            assert_eq!(l1, l, "case {case} {kind} n={n}: trace diverged at lanes={lanes}");
+            for (k, (a, b)) in h1.loss.iter().zip(h.loss.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case} {kind} n={n}: loss diverged at iter {k}, lanes={lanes}"
+                );
+            }
+            assert_eq!(h1.sim_time.to_bits(), h.sim_time.to_bits(), "case {case}: clock diverged");
+        }
+    }
+}
+
+/// NetSim degraded-plan safety: whatever faults fire, every degraded
+/// row stays row-stochastic with non-negative weights, symmetric input
+/// plans stay (bitwise) symmetric — the pair-level drop rule — the
+/// communication degree never grows, and re-simulating the same round
+/// re-derives the identical degraded plan (the coins are pure hashes).
+#[test]
+fn prop_netsim_degraded_plans_row_stochastic_and_symmetry_preserving() {
+    use expograph::costmodel::CostModel;
+    use expograph::netsim::{NetSim, Scenario};
+    let mut rng = Pcg::seeded(0x9E);
+    for case in 0..30 {
+        let n = 3 + rng.below(30);
+        let kind = [
+            TopologyKind::Ring,
+            TopologyKind::Torus2D,
+            TopologyKind::RandomMatch,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::HalfRandom,
+        ][rng.below(6)];
+        let seed = rng.next_u64();
+        let scen = Scenario {
+            drop_prob: 0.5,
+            dropout: vec![(rng.below(n), 0, 3)],
+            ..Scenario::clean()
+        };
+        let mut sched = Schedule::new(kind, n, seed);
+        let mut sim = NetSim::new(&CostModel::paper_default(0.1), scen, seed);
+        for k in 0..4 {
+            let plan = sched.plan_at(k).clone();
+            let out = sim.simulate_round(k, &plan, 1e6);
+            if let Some(d) = &out.degraded {
+                assert_eq!(d.n, plan.n);
+                for (i, row) in d.rows.iter().enumerate() {
+                    let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-9,
+                        "case {case} {kind} n={n} k={k}: row {i} sum {sum}"
+                    );
+                    assert!(
+                        row.iter().all(|&(_, w)| w >= 0.0),
+                        "case {case} {kind} n={n} k={k}: negative weight in row {i}"
+                    );
+                }
+                if plan.symmetric {
+                    assert!(
+                        d.symmetric,
+                        "case {case} {kind} n={n} k={k}: degraded plan lost symmetry"
+                    );
+                }
+                assert!(
+                    d.max_degree <= plan.max_degree,
+                    "case {case} {kind} n={n} k={k}: degree grew under faults"
+                );
+            }
+            let replay = sim.simulate_round(k, &plan, 1e6);
+            assert_eq!(
+                out.degraded, replay.degraded,
+                "case {case} {kind} n={n} k={k}: degraded plan not reproducible"
+            );
+        }
+    }
+}
+
 /// Optimizer-state invariant: parallel SGD rows stay identical under any
 /// gradient stream.
 #[test]
