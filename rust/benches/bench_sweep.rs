@@ -1,0 +1,88 @@
+//! Benchmark: the sweep harness's parallel cell scheduler vs serial
+//! execution on a synthetic 32-cell quadratic training grid — the
+//! wall-clock shape of `exp all --jobs N` (docs/DESIGN.md §Sweep).
+//! Each cell is a real `Trainer` run (DmSGD over one-peer exponential),
+//! so the comparison measures end-to-end cell throughput including the
+//! lane-budgeted engine underneath. Results go to `BENCH_sweep.json`.
+
+use expograph::bench::{bench_config, black_box};
+use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
+use expograph::coordinator::LrSchedule;
+use expograph::engine::budget_lanes;
+use expograph::optim::AlgorithmKind;
+use expograph::sweep::{sched, Record, Sweep};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+const CELLS: usize = 32;
+const N: usize = 64;
+const DIM: usize = 256;
+const ITERS: usize = 150;
+
+/// One synthetic cell: train a heterogeneous quadratic and report the
+/// final mean loss.
+fn run_cell(cell: usize, lane_cap: usize) -> Vec<Record> {
+    let provider = QuadraticProvider::random(N, DIM, 0.05, 42 + cell as u64);
+    let opt = AlgorithmKind::DmSgd.build(N, &vec![0.0f32; DIM], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(TopologyKind::OnePeerExp, N, cell as u64),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: ITERS,
+            lr: LrSchedule::Const(0.05),
+            warmup_allreduce: false,
+            record_every: ITERS,
+            parallel_grads: false,
+            lanes: Some(budget_lanes(lane_cap, N, N * DIM)),
+            seed: cell as u64,
+            msg_bytes: None,
+            cost: None,
+        },
+    );
+    let hist = trainer.run();
+    vec![Record::new().with("cell", cell).with("final_loss", *hist.loss.last().unwrap())]
+}
+
+fn sweep_once(jobs: usize) {
+    let cells: Vec<usize> = (0..CELLS).collect();
+    let out = Sweep::new("bench", 1, 1.0).jobs(jobs).run(
+        &cells,
+        |c| format!("cell={c}"),
+        |&c, cc| run_cell(c, cc.lanes),
+    );
+    black_box(out.len());
+}
+
+fn main() {
+    println!("== bench_sweep ==\n");
+    let cores = sched::cores();
+    println!(
+        "{CELLS}-cell quadratic grid (n={N}, dim={DIM}, {ITERS} iters/cell), {cores} cores\n"
+    );
+
+    let serial = bench_config("sweep jobs=1 (serial baseline)", 1, 3, 16, 0.5, &mut || {
+        sweep_once(1);
+    });
+    println!("{}", serial.report());
+
+    let auto = bench_config("sweep jobs=auto (lane-budgeted)", 1, 3, 16, 0.5, &mut || {
+        sweep_once(0);
+    });
+    println!("{}", auto.report());
+
+    let speedup = serial.median / auto.median.max(f64::MIN_POSITIVE);
+    println!("\n  -> parallel sweep speedup: {speedup:.2}x (ideal ≤ {cores}x)");
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_sweep\",\n  \"comparison\": \"jobs1_vs_jobs_auto\",\n  \
+         \"cells\": {CELLS},\n  \"n\": {N},\n  \"dim\": {DIM},\n  \"iters_per_cell\": {ITERS},\n  \
+         \"cores\": {cores},\n  \"jobs1_s_per_sweep\": {:.9},\n  \
+         \"jobs_auto_s_per_sweep\": {:.9},\n  \"speedup\": {:.4}\n}}\n",
+        serial.median, auto.median, speedup
+    );
+    match std::fs::write("BENCH_sweep.json", &json) {
+        Ok(()) => println!("wrote BENCH_sweep.json"),
+        Err(e) => eprintln!("could not write BENCH_sweep.json: {e}"),
+    }
+}

@@ -1,0 +1,35 @@
+//! Emits `EXPOGRAPH_SRC_FINGERPRINT`: an FNV-1a hash over every `.rs`
+//! file under `src/`, folded into the sweep result-cache key
+//! (docs/DESIGN.md §Sweep). Any source change — a kernel fix, a new
+//! sink column — therefore invalidates `results/.cache/` automatically
+//! instead of silently serving numbers computed by an older binary.
+
+use std::fs;
+use std::path::Path;
+
+fn hash_dir(dir: &Path, h: &mut u64) {
+    let mut entries: Vec<_> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("build.rs: reading {}: {e}", dir.display()))
+        .map(|entry| entry.expect("build.rs: dir entry").path())
+        .collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            hash_dir(&path, h);
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            for b in fs::read(&path).unwrap_or_else(|e| {
+                panic!("build.rs: reading {}: {e}", path.display())
+            }) {
+                *h ^= u64::from(b);
+                *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+    }
+}
+
+fn main() {
+    println!("cargo:rerun-if-changed=src");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    hash_dir(Path::new("src"), &mut h);
+    println!("cargo:rustc-env=EXPOGRAPH_SRC_FINGERPRINT={h:016x}");
+}

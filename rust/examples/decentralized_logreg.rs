@@ -5,7 +5,9 @@
 //! Run with: `cargo run --release --example decentralized_logreg [nodes] [iters]`
 
 use expograph::coordinator::{transient_iterations, LrSchedule};
-use expograph::exp::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
+use expograph::exp::logreg_runner::{
+    final_mse, global_minimizer, paper_problem, run_logreg, LogRegRun,
+};
 use expograph::optim::AlgorithmKind;
 use expograph::topology::TopologyKind;
 
@@ -40,7 +42,7 @@ fn main() {
                 seed: 9,
             },
         );
-        println!("  {label}  final MSE to x*: {:.3e}", curve.mse.last().unwrap());
+        println!("  {label}  final MSE to x*: {:.3e}", final_mse(&curve));
         curves.push((label, curve));
     }
     let par = &curves[0].1;

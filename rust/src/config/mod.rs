@@ -22,6 +22,53 @@ use crate::topology::TopologyKind;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 
+/// Sweep scheduling knobs shared by every grid-running surface
+/// (`expograph exp --jobs/--cache`, `expograph netsim jobs=/cache=`):
+/// how many cells run concurrently, and whether completed cells are
+/// served from the on-disk result cache (docs/DESIGN.md §Sweep).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SweepConfig {
+    /// Parallel sweep jobs; 0 = auto (one per core). The per-cell
+    /// engine lane budget keeps `jobs × lanes ≤ cores` either way.
+    pub jobs: usize,
+    /// Serve completed cells from `<out>/.cache/` and persist new ones.
+    pub cache: bool,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig { jobs: 0, cache: true }
+    }
+}
+
+/// Parse an on/off-style boolean (`on|off|true|false|1|0`).
+pub fn parse_switch(value: &str) -> Result<bool> {
+    match value {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("expected on|off (or true|false), got {other}"),
+    }
+}
+
+impl SweepConfig {
+    /// Apply a `key=value` override if the key belongs to this config;
+    /// returns whether it was consumed (so host configs can fall back
+    /// to their own keys).
+    pub fn set(&mut self, key: &str, value: &str) -> Result<bool> {
+        match key {
+            "jobs" => {
+                self.jobs = value.parse().map_err(|e| anyhow!("jobs: {e}"))?;
+                Ok(true)
+            }
+            "cache" => {
+                self.cache = parse_switch(value).map_err(|e| anyhow!("cache: {e}"))?;
+                Ok(true)
+            }
+            _ => Ok(false),
+        }
+    }
+}
+
 /// One training-run configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -147,6 +194,8 @@ pub struct NetSimRunConfig {
     /// Per-iteration local compute seconds.
     pub compute: f64,
     pub seed: u64,
+    /// Sweep scheduling (jobs + result cache) for the cell grid.
+    pub sweep: SweepConfig,
 }
 
 impl Default for NetSimRunConfig {
@@ -170,6 +219,7 @@ impl Default for NetSimRunConfig {
             msg_bytes: 25.5e6 * 4.0,
             compute: 0.4,
             seed: 1,
+            sweep: SweepConfig::default(),
         }
     }
 }
@@ -245,7 +295,11 @@ impl NetSimRunConfig {
                 }
             }
             "seed" => self.seed = value.parse()?,
-            other => bail!("unknown netsim config key: {other}"),
+            other => {
+                if !self.sweep.set(other, value)? {
+                    bail!("unknown netsim config key: {other}");
+                }
+            }
         }
         Ok(())
     }
@@ -306,6 +360,23 @@ mod tests {
         assert!(cfg.set("tol", "-1").is_err());
         assert!(cfg.set("msg_bytes", "nan").is_err());
         assert!(cfg.set("bogus", "1").is_err());
+        // Sweep keys ride along on the netsim config surface.
+        cfg.set("jobs", "4").unwrap();
+        cfg.set("cache", "off").unwrap();
+        assert_eq!(cfg.sweep, SweepConfig { jobs: 4, cache: false });
+        assert!(cfg.set("cache", "sideways").is_err());
+    }
+
+    #[test]
+    fn sweep_config_switch_parsing() {
+        assert_eq!(SweepConfig::default(), SweepConfig { jobs: 0, cache: true });
+        for (s, want) in [("on", true), ("true", true), ("1", true), ("off", false)] {
+            assert_eq!(parse_switch(s).unwrap(), want, "{s}");
+        }
+        assert!(parse_switch("maybe").is_err());
+        let mut sw = SweepConfig::default();
+        assert!(!sw.set("nodes", "8").unwrap(), "foreign keys are not consumed");
+        assert!(sw.set("jobs", "x").is_err());
     }
 
     #[test]

@@ -54,6 +54,15 @@ pub fn auto_lanes(n_rows: usize, total_elems: usize) -> usize {
     }
 }
 
+/// Lane count for a job running under an external **lane cap** (the
+/// sweep scheduler's per-job budget, docs/DESIGN.md §Sweep): the
+/// automatic sizing of [`auto_lanes`] clamped to `cap`, so
+/// `sweep jobs × engine lanes` never exceeds the machine and small
+/// states still get the single-lane fast path.
+pub fn budget_lanes(cap: usize, n_rows: usize, total_elems: usize) -> usize {
+    auto_lanes(n_rows, total_elems).min(cap.max(1))
+}
+
 /// The contiguous row shard lane `lane` owns out of `n` rows split
 /// across `lanes` lanes: `⌈n/lanes⌉`-sized blocks, last block short,
 /// surplus lanes empty.
@@ -365,6 +374,17 @@ mod tests {
         assert!((1..=1024).contains(&big));
         // Never more lanes than rows.
         assert_eq!(auto_lanes(1, PARALLEL_MIN_ELEMS), 1);
+    }
+
+    #[test]
+    fn budget_lanes_caps_auto_sizing() {
+        // Below the threshold the cap is irrelevant: one lane.
+        assert_eq!(budget_lanes(16, 8, PARALLEL_MIN_ELEMS - 1), 1);
+        // Above it, the cap clamps whatever auto sizing picked.
+        assert_eq!(budget_lanes(1, 1024, PARALLEL_MIN_ELEMS), 1);
+        assert!(budget_lanes(2, 1024, PARALLEL_MIN_ELEMS) <= 2);
+        // A zero cap still yields a runnable single lane.
+        assert_eq!(budget_lanes(0, 1024, PARALLEL_MIN_ELEMS), 1);
     }
 
     #[test]

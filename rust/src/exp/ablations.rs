@@ -1,70 +1,122 @@
 //! Ablation studies for the design choices docs/DESIGN.md calls out, plus the
-//! paper's future-work direction (symmetric time-varying graphs).
+//! paper's future-work direction (symmetric time-varying graphs) — all
+//! declared as sweep grids (docs/DESIGN.md §Sweep).
 
-use super::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
+use super::logreg_runner::{
+    final_mse, global_minimizer, paper_problem, run_logreg_with, LogRegRun,
+};
 use super::Ctx;
 use crate::coordinator::trainer::{TrainConfig, Trainer};
 use crate::coordinator::LrSchedule;
+use crate::data::logreg::LogRegProblem;
+use crate::engine::budget_lanes;
 use crate::optim::AlgorithmKind;
+use crate::sweep::{table_num, Col, NumFmt, Record, Sink};
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
-use crate::util::csv::CsvWriter;
 use crate::util::table::TextTable;
 use anyhow::Result;
+use std::sync::OnceLock;
+
+/// Shared problem setup memoized across an ablation's cells: cold runs
+/// solve (problem, x*) once for the whole grid, warm (cached) runs
+/// never solve it.
+type ProblemSetup = OnceLock<(LogRegProblem, Vec<f64>)>;
 
 /// Corollary 3 ablation: warm-up all-reduce zeroes the initial-phase
 /// consensus term. Measures the consensus distance over the first periods
-/// and the final MSE with/without warm-up.
+/// and the final MSE with/without warm-up. Each cell's record stream is
+/// its consensus samples plus one final-MSE summary row.
 pub fn ablation_warmup(ctx: &Ctx) -> Result<()> {
     let n = 32;
     let iters = ctx.scaled(2000);
-    let problem = paper_problem(n, 1000, true, ctx.seed);
-    let x_star = global_minimizer(&problem, 400);
-    let x_star32: Vec<f32> = x_star.iter().map(|&v| v as f32).collect();
-    let mut csv = CsvWriter::new(&["warmup", "iter", "consensus", "mse"]);
-    let mut finals = Vec::new();
-    for warmup in [true, false] {
-        let provider =
-            super::logreg_runner::LogRegProvider { problem: &problem, batch: 8 };
-        // Different random init per node when warm-up is off, so the
-        // ablation actually has something to reduce.
-        let mut init = crate::coordinator::StackedParams::zeros(n, problem.d);
-        let mut rng = crate::util::rng::Pcg::seeded(ctx.seed ^ 0xAB1);
-        for v in init.data.iter_mut() {
-            *v = rng.normal() as f32;
+    let seed = ctx.seed;
+    let cells = [true, false];
+    let setup: ProblemSetup = OnceLock::new();
+    let out = ctx.runner("ablation_warmup").run(
+        &cells,
+        |warmup| format!("warmup={warmup} n={n} iters={iters}"),
+        |&warmup, cc| {
+            let (problem, x_star) = setup.get_or_init(|| {
+                let problem = paper_problem(n, 1000, true, seed);
+                let x_star = global_minimizer(&problem, 400);
+                (problem, x_star)
+            });
+            let x_star32: Vec<f32> = x_star.iter().map(|&v| v as f32).collect();
+            let provider = super::logreg_runner::LogRegProvider { problem, batch: 8 };
+            // Different random init per node when warm-up is off, so the
+            // ablation actually has something to reduce.
+            let mut init = crate::coordinator::StackedParams::zeros(n, problem.d);
+            let mut rng = crate::util::rng::Pcg::seeded(seed ^ 0xAB1);
+            for v in init.data.iter_mut() {
+                *v = rng.normal() as f32;
+            }
+            let opt: Box<dyn crate::optim::Optimizer> =
+                Box::new(crate::optim::DmSgd::new(init, 0.8));
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, seed),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters,
+                    lr: LrSchedule::HalveEvery { init: 0.1, every: (iters / 3).max(1) },
+                    warmup_allreduce: warmup,
+                    record_every: 10,
+                    parallel_grads: false,
+                    lanes: Some(budget_lanes(cc.lanes, n, n * problem.d)),
+                    seed,
+                    msg_bytes: None,
+                    cost: None,
+                },
+            );
+            let mut last_mse = 0.0;
+            let hist = trainer.run_with(|_, params| {
+                last_mse = params.mean_sq_error_to(&x_star32);
+            });
+            let mut records: Vec<Record> = hist
+                .consensus
+                .iter()
+                .map(|&(k, c)| {
+                    Record::new()
+                        .with("warmup", usize::from(warmup))
+                        .with("iter", k)
+                        .with("consensus", c)
+                        .with("mse", f64::NAN)
+                })
+                .collect();
+            // Summary row: final MSE to x* (empty consensus field).
+            records.push(
+                Record::new()
+                    .with("warmup", usize::from(warmup))
+                    .with("iter", iters)
+                    .with("consensus", f64::NAN)
+                    .with("mse", last_mse),
+            );
+            records
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("warmup"),
+        Col::auto("iter"),
+        Col::auto("consensus"),
+        Col::auto("mse"),
+    ]);
+    for cell in &out {
+        for rec in &cell.records {
+            sink.push(rec);
         }
-        let opt: Box<dyn crate::optim::Optimizer> =
-            Box::new(crate::optim::DmSgd::new(init, 0.8));
-        let mut trainer = Trainer::new(
-            Schedule::new(TopologyKind::OnePeerExp, n, ctx.seed),
-            opt,
-            &provider,
-            TrainConfig {
-                iters,
-                lr: LrSchedule::HalveEvery { init: 0.1, every: iters / 3 },
-                warmup_allreduce: warmup,
-                record_every: 10,
-                parallel_grads: false,
-                lanes: None,
-                seed: ctx.seed,
-                msg_bytes: None,
-                cost: None,
-            },
-        );
-        let mut last_mse = 0.0;
-        let hist = trainer.run_with(|_, params| {
-            last_mse = params.mean_sq_error_to(&x_star32);
-        });
-        for (k, c) in &hist.consensus {
-            csv.row_f64(&[warmup as usize as f64, *k as f64, *c, f64::NAN]);
-        }
-        finals.push((warmup, hist.consensus[0].1, last_mse));
     }
-    csv.write(ctx.csv_path("ablation_warmup"))?;
+    sink.write(&ctx.out_dir, "ablation_warmup")?;
     println!("Ablation — warm-up all-reduce (Corollary 3), n={n}");
     let mut t = TextTable::new(&["warmup", "initial consensus", "final MSE"]);
-    for (w, c0, mse) in finals {
-        t.row(vec![w.to_string(), format!("{c0:.3e}"), format!("{mse:.3e}")]);
+    for (cell, &warmup) in out.iter().zip(&cells) {
+        let initial = cell.records.first().map_or(f64::NAN, |r| r.num("consensus"));
+        let last = cell.records.last().map_or(f64::NAN, |r| r.num("mse"));
+        t.row(vec![
+            warmup.to_string(),
+            table_num(initial, NumFmt::Sci(3)),
+            table_num(last, NumFmt::Sci(3)),
+        ]);
     }
     println!("{}", t.render());
     println!("  csv: {}", ctx.csv_path("ablation_warmup").display());
@@ -76,45 +128,66 @@ pub fn ablation_warmup(ctx: &Ctx) -> Result<()> {
 pub fn ablation_sampling(ctx: &Ctx) -> Result<()> {
     let n = 32;
     let iters = ctx.scaled(3000);
-    let problem = paper_problem(n, 2000, true, ctx.seed);
-    let x_star = global_minimizer(&problem, 400);
-    let orders = [
+    let seed = ctx.seed;
+    let cells = [
         TopologyKind::OnePeerExp,
         TopologyKind::OnePeerExpPerm,
         TopologyKind::OnePeerExpUniform,
     ];
+    let setup: ProblemSetup = OnceLock::new();
+    let out = ctx.runner("ablation_sampling").run(
+        &cells,
+        |kind| format!("{kind:?} n={n} iters={iters}"),
+        |&kind, cc| {
+            let (problem, x_star) = setup.get_or_init(|| {
+                let problem = paper_problem(n, 2000, true, seed);
+                let x_star = global_minimizer(&problem, 400);
+                (problem, x_star)
+            });
+            let curve = run_logreg_with(
+                problem,
+                x_star,
+                &LogRegRun {
+                    topology: kind,
+                    algorithm: AlgorithmKind::DmSgd,
+                    beta: 0.8,
+                    lr: LrSchedule::HalveEvery { init: 0.2, every: 1000 },
+                    iters,
+                    batch: 8,
+                    record_every: 50,
+                    seed: seed + 2,
+                },
+                Some(cc.lanes),
+            );
+            let tail = if curve.mse.is_empty() {
+                f64::NAN
+            } else {
+                let q = curve.mse.len() * 3 / 4;
+                curve.mse[q..].iter().sum::<f64>() / (curve.mse.len() - q) as f64
+            };
+            vec![Record::new()
+                .with("order", kind.name())
+                .with("final_mse", final_mse(&curve))
+                .with("tail_mse", tail)]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("order"),
+        Col::auto("final_mse"),
+        Col::auto("tail_mse"),
+    ]);
     let mut t = TextTable::new(&["order", "final MSE", "mean MSE (last quarter)"]);
-    let mut csv = CsvWriter::new(&["order", "final_mse", "tail_mse"]);
     println!("Ablation — one-peer sampling order, DmSGD, n={n}, {iters} iters");
-    for kind in orders {
-        let curve = run_logreg(
-            &problem,
-            &x_star,
-            &LogRegRun {
-                topology: kind,
-                algorithm: AlgorithmKind::DmSgd,
-                beta: 0.8,
-                lr: LrSchedule::HalveEvery { init: 0.2, every: 1000 },
-                iters,
-                batch: 8,
-                record_every: 50,
-                seed: ctx.seed + 2,
-            },
-        );
-        let q = curve.mse.len() * 3 / 4;
-        let tail = curve.mse[q..].iter().sum::<f64>() / (curve.mse.len() - q) as f64;
+    for cell in &out {
+        let rec = &cell.records[0];
+        sink.push(rec);
         t.row(vec![
-            kind.name().into(),
-            format!("{:.3e}", curve.mse.last().unwrap()),
-            format!("{tail:.3e}"),
-        ]);
-        csv.row(&[
-            kind.name().into(),
-            format!("{}", curve.mse.last().unwrap()),
-            format!("{tail}"),
+            rec.text("order").to_string(),
+            table_num(rec.num("final_mse"), NumFmt::Sci(3)),
+            table_num(rec.num("tail_mse"), NumFmt::Sci(3)),
         ]);
     }
-    csv.write(ctx.csv_path("ablation_sampling"))?;
+    sink.write(&ctx.out_dir, "ablation_sampling")?;
     println!("{}", t.render());
     println!("  expected: cyclic ≈ random-perm ≤ uniform-sampling (exactness of Lemma 1)");
     println!("  csv: {}", ctx.csv_path("ablation_sampling").display());
@@ -129,9 +202,8 @@ pub fn ablation_sampling(ctx: &Ctx) -> Result<()> {
 pub fn ablation_symmetric(ctx: &Ctx) -> Result<()> {
     let n = 32; // power of two: hypercube variants valid
     let iters = ctx.scaled(3000);
-    let problem = paper_problem(n, 2000, true, ctx.seed + 5);
-    let x_star = global_minimizer(&problem, 400);
-    let runs = [
+    let seed = ctx.seed;
+    let cells = [
         ("dmsgd/one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::DmSgd),
         ("dmsgd/one_peer_hypercube", TopologyKind::OnePeerHypercube, AlgorithmKind::DmSgd),
         ("tracking/one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::GradientTracking),
@@ -139,34 +211,61 @@ pub fn ablation_symmetric(ctx: &Ctx) -> Result<()> {
         ("d2_lazy/one_peer_hypercube", TopologyKind::OnePeerHypercube, AlgorithmKind::D2),
         ("parallel", TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
     ];
+    let setup: ProblemSetup = OnceLock::new();
+    let out = ctx.runner("ablation_symmetric").run(
+        &cells,
+        |cell| format!("{cell:?} n={n} iters={iters}"),
+        |&(label, kind, algo), cc| {
+            let (problem, x_star) = setup.get_or_init(|| {
+                let problem = paper_problem(n, 2000, true, seed + 5);
+                let x_star = global_minimizer(&problem, 400);
+                (problem, x_star)
+            });
+            let curve = run_logreg_with(
+                problem,
+                x_star,
+                &LogRegRun {
+                    topology: kind,
+                    algorithm: algo,
+                    beta: 0.8,
+                    lr: LrSchedule::HalveEvery { init: 0.1, every: 1000 },
+                    iters,
+                    batch: 8,
+                    record_every: 50,
+                    seed: seed + 6,
+                },
+                Some(cc.lanes),
+            );
+            vec![Record::new()
+                .with("method", algo.name())
+                .with("topology", kind.name())
+                .with("label", label)
+                .with("final_mse", final_mse(&curve))]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("method"),
+        Col::auto("topology"),
+        Col::auto("final_mse"),
+    ]);
     let mut t = TextTable::new(&["method/topology", "final MSE", "per-iter comm"]);
-    let mut csv = CsvWriter::new(&["method", "topology", "final_mse"]);
     println!("Ablation — symmetric time-varying graphs (future work), n={n}, hetero data");
-    for (label, kind, algo) in runs {
-        let curve = run_logreg(
-            &problem,
-            &x_star,
-            &LogRegRun {
-                topology: kind,
-                algorithm: algo,
-                beta: 0.8,
-                lr: LrSchedule::HalveEvery { init: 0.1, every: 1000 },
-                iters,
-                batch: 8,
-                record_every: 50,
-                seed: ctx.seed + 6,
-            },
-        );
-        let final_mse = *curve.mse.last().unwrap();
+    for (cell, &(_, kind, _)) in out.iter().zip(&cells) {
+        let rec = &cell.records[0];
+        sink.push(rec);
+        let mse = rec.num("final_mse");
         let comm = crate::costmodel::analytic_degree(kind, n);
         t.row(vec![
-            label.into(),
-            if final_mse.is_finite() { format!("{final_mse:.3e}") } else { "DIVERGED".into() },
-            if kind == TopologyKind::FullyConnected { "n-1 (allreduce)".into() } else { comm.to_string() },
+            rec.text("label").to_string(),
+            if mse.is_finite() { table_num(mse, NumFmt::Sci(3)) } else { "DIVERGED".into() },
+            if kind == TopologyKind::FullyConnected {
+                "n-1 (allreduce)".into()
+            } else {
+                comm.to_string()
+            },
         ]);
-        csv.row(&[algo.name().into(), kind.name().into(), format!("{final_mse}")]);
     }
-    csv.write(ctx.csv_path("ablation_symmetric"))?;
+    sink.write(&ctx.out_dir, "ablation_symmetric")?;
     println!("{}", t.render());
     println!("  reading: on *deterministic* heterogeneous problems lazy D² over the");
     println!("  one-peer hypercube is exact (see examples/symmetric_timevarying.rs), but");

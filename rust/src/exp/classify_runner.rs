@@ -10,8 +10,10 @@ use crate::coordinator::LrSchedule;
 use crate::costmodel::CostModel;
 use crate::data::classify::{generate, ClassifyConfig, ClassifyData};
 use crate::data::shard::{shard, Sharding, Shards};
+use crate::engine::budget_lanes;
 use crate::models::{Mlp, MlpConfig};
 use crate::optim::AlgorithmKind;
+use crate::sweep::Record;
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
 use crate::util::rng::Pcg;
@@ -83,6 +85,18 @@ pub fn simulated_imagenet_hours(kind: TopologyKind, n: usize) -> f64 {
 
 /// Run one specification on the given dataset.
 pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult {
+    run_classify_with(data, spec, None)
+}
+
+/// [`run_classify`] under an explicit engine **lane cap** (the sweep
+/// scheduler's per-job budget — docs/DESIGN.md §Sweep). `None` keeps
+/// the trainer's automatic lane sizing; the trajectory is bitwise
+/// identical either way (§Engine determinism).
+pub fn run_classify_with(
+    data: &ClassifyData,
+    spec: &ClassifySpec,
+    lane_cap: Option<usize>,
+) -> ClassifyResult {
     let mode = if spec.heterogeneous {
         Sharding::Heterogeneous { alpha: 0.3 }
     } else {
@@ -94,6 +108,7 @@ pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult 
         hidden: spec.hidden,
         classes: data.train.classes,
     });
+    let dim = mlp.cfg.param_count();
     let provider = ClassifyProvider { data, shards: &shards, mlp, batch: spec.batch };
     let init = mlp.init(spec.seed ^ 0xAB);
     let opt = spec.algorithm.build(spec.nodes, &init, spec.beta);
@@ -112,7 +127,7 @@ pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult 
             warmup_allreduce: true,
             record_every: (spec.iters / 10).max(1),
             parallel_grads: false,
-            lanes: None,
+            lanes: lane_cap.map(|cap| budget_lanes(cap, spec.nodes, spec.nodes * dim)),
             seed: spec.seed,
             msg_bytes: None,
             cost: None,
@@ -131,6 +146,20 @@ pub fn run_classify(data: &ClassifyData, spec: &ClassifySpec) -> ClassifyResult 
         sim_hours: simulated_imagenet_hours(spec.topology, spec.nodes),
         consensus: hist.consensus.last().map(|c| c.1).unwrap_or(0.0),
     }
+}
+
+/// The uniform sweep record for one classification cell — every table
+/// experiment (2/3/4/9/10) emits this shape and lets its sink select
+/// the columns it needs.
+pub fn classify_record(spec: &ClassifySpec, r: &ClassifyResult) -> Record {
+    Record::new()
+        .with("topology", spec.topology.name())
+        .with("algorithm", spec.algorithm.name())
+        .with("nodes", spec.nodes)
+        .with("val_acc", r.val_acc)
+        .with("sim_hours", r.sim_hours)
+        .with("final_loss", r.final_loss)
+        .with("consensus", r.consensus)
 }
 
 /// The shared dataset for the table experiments.

@@ -1,17 +1,45 @@
-//! Figure experiments (Figs. 1, 3, 4, 10, 11, 12, 13).
+//! Figure experiments (Figs. 1, 3, 4, 10, 11, 12, 13), declared as
+//! sweep grids: the cell axis is the figure's series (topology,
+//! sampling order, n, trial …), each cell's records are its iteration
+//! series, and the wide per-figure CSV/JSON is assembled from the
+//! grid-ordered results (docs/DESIGN.md §Sweep).
 
 use super::logreg_runner::{
-    average_curves, global_minimizer, paper_problem, run_logreg, LogRegRun, MseCurve,
+    average_curves, curve_records, final_mse, global_minimizer, paper_problem, records_curve,
+    run_logreg_with, LogRegRun, MseCurve,
 };
-use super::Ctx;
+use super::{Ctx, TRANSIENT_KINDS};
 use crate::consensus;
 use crate::coordinator::{transient_iterations, LrSchedule};
+use crate::data::logreg::LogRegProblem;
 use crate::optim::AlgorithmKind;
 use crate::spectral;
+use crate::sweep::{table_num, Col, NumFmt, Record, Sink, Value};
 use crate::topology::TopologyKind;
-use crate::util::csv::CsvWriter;
 use crate::util::table::TextTable;
 use anyhow::Result;
+use std::sync::OnceLock;
+
+/// Shared problem setup memoized across the cells that use it: cold
+/// runs solve each (problem, x*) pair exactly once no matter how many
+/// cells share it, and a fully warm (cached) sweep never solves it at
+/// all.
+type ProblemSetup = OnceLock<(LogRegProblem, Vec<f64>)>;
+
+/// Assemble the wide per-figure sink — first column `first`, one column
+/// per series — from equal-length series in grid order.
+fn wide_sink(first: &str, labels: &[String], series: &[Vec<f64>]) -> Sink {
+    let mut cols = vec![Col::auto(first)];
+    cols.extend(labels.iter().map(|l| Col::auto(l.as_str())));
+    let mut sink = Sink::new(cols);
+    let len = series.first().map_or(0, Vec::len);
+    for k in 0..len {
+        let mut row = vec![Value::Num(k as f64 + 1.0)];
+        row.extend(series.iter().map(|s| Value::Num(s[k])));
+        sink.push_values(row);
+    }
+    sink
+}
 
 /// Fig. 1 — transient-iteration illustration: DSGD vs parallel SGD on
 /// homogeneous logistic regression; the curves merge after the transient
@@ -19,31 +47,49 @@ use anyhow::Result;
 pub fn fig1(ctx: &Ctx) -> Result<()> {
     let n = 32;
     let iters = ctx.scaled(6000);
-    let problem = paper_problem(n, 2000, false, ctx.seed);
-    let x_star = global_minimizer(&problem, 600);
-    let lr = LrSchedule::HalveEvery { init: 0.1, every: iters / 5 };
-    let mk_run = |topology, algorithm| LogRegRun {
-        topology,
-        algorithm,
-        beta: 0.0,
-        lr: lr.clone(),
-        iters,
-        batch: 8,
-        record_every: 25,
-        seed: ctx.seed,
-    };
-    let dec = run_logreg(&problem, &x_star, &mk_run(TopologyKind::Ring, AlgorithmKind::DSgd));
-    let par = run_logreg(
-        &problem,
-        &x_star,
-        &mk_run(TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+    let seed = ctx.seed;
+    let cells = [
+        (TopologyKind::Ring, AlgorithmKind::DSgd),
+        (TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
+    ];
+    let setup: ProblemSetup = OnceLock::new();
+    let out = ctx.runner("fig1").run(
+        &cells,
+        |cell| format!("{cell:?} n={n} iters={iters}"),
+        |&(kind, algo), cc| {
+            let (problem, x_star) = setup.get_or_init(|| {
+                let problem = paper_problem(n, 2000, false, seed);
+                let x_star = global_minimizer(&problem, 600);
+                (problem, x_star)
+            });
+            let run = LogRegRun {
+                topology: kind,
+                algorithm: algo,
+                beta: 0.0,
+                lr: LrSchedule::HalveEvery { init: 0.1, every: (iters / 5).max(1) },
+                iters,
+                batch: 8,
+                record_every: 25,
+                seed,
+            };
+            curve_records(&run_logreg_with(problem, x_star, &run, Some(cc.lanes)))
+        },
     );
-
-    let mut csv = CsvWriter::new(&["iter", "dsgd_ring_mse", "parallel_mse"]);
+    let dec = records_curve(&out[0].records);
+    let par = records_curve(&out[1].records);
+    let mut sink = Sink::new(vec![
+        Col::auto("iter"),
+        Col::auto("dsgd_ring_mse"),
+        Col::auto("parallel_mse"),
+    ]);
     for i in 0..dec.iters.len() {
-        csv.row_f64(&[dec.iters[i] as f64, dec.mse[i], par.mse[i]]);
+        sink.push_values(vec![
+            Value::Num(dec.iters[i] as f64),
+            Value::Num(dec.mse[i]),
+            Value::Num(par.mse[i]),
+        ]);
     }
-    csv.write(ctx.csv_path("fig1"))?;
+    sink.write(&ctx.out_dir, "fig1")?;
 
     let t = transient_iterations(&dec.mse, &par.mse, 2.0, 4);
     println!("Fig. 1 — transient iterations (DSGD/ring vs parallel SGD, n={n})");
@@ -54,35 +100,57 @@ pub fn fig1(ctx: &Ctx) -> Result<()> {
         ),
         None => println!("  curves did not merge within {iters} iterations"),
     }
-    println!("  final MSE: dsgd={:.3e} parallel={:.3e}", dec.mse.last().unwrap(), par.mse.last().unwrap());
+    println!(
+        "  final MSE: dsgd={} parallel={}",
+        table_num(final_mse(&dec), NumFmt::Sci(3)),
+        table_num(final_mse(&par), NumFmt::Sci(3))
+    );
     println!("  csv: {}", ctx.csv_path("fig1").display());
     Ok(())
 }
 
 /// Fig. 3 — spectral gap `1 − ρ` vs n for ring / grid / static exp,
-/// against the Proposition 1 line `2/(1+⌈log₂n⌉)`.
+/// against the Proposition 1 line `2/(1+⌈log₂n⌉)`. The grid axis is n.
 pub fn fig3(ctx: &Ctx) -> Result<()> {
-    let mut csv = CsvWriter::new(&["n", "ring", "grid", "static_exp", "prop1_theory"]);
+    let ns: Vec<usize> = (4..=290).step_by(2).collect();
+    let out = ctx.runner("fig3").run(
+        &ns,
+        |n| format!("n={n}"),
+        |&n, _| {
+            vec![Record::new()
+                .with("n", n)
+                .with("ring", spectral::topology_gap(TopologyKind::Ring, n, 0))
+                .with("grid", spectral::topology_gap(TopologyKind::Grid2D, n, 0))
+                .with("static_exp", spectral::topology_gap(TopologyKind::StaticExp, n, 0))
+                .with("prop1_theory", 1.0 - spectral::static_exp_rho_bound(n))],
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("n"),
+        Col::auto("ring"),
+        Col::auto("grid"),
+        Col::auto("static_exp"),
+        Col::auto("prop1_theory"),
+    ]);
     let mut max_dev_even = 0.0f64;
-    for n in (4..=290).step_by(2) {
-        let ring = spectral::topology_gap(TopologyKind::Ring, n, 0);
-        let grid = spectral::topology_gap(TopologyKind::Grid2D, n, 0);
-        let exp = spectral::topology_gap(TopologyKind::StaticExp, n, 0);
-        let theory = 1.0 - spectral::static_exp_rho_bound(n);
-        max_dev_even = max_dev_even.max((exp - theory).abs());
-        csv.row_f64(&[n as f64, ring, grid, exp, theory]);
+    for cell in &out {
+        let rec = &cell.records[0];
+        max_dev_even = max_dev_even.max((rec.num("static_exp") - rec.num("prop1_theory")).abs());
+        sink.push(rec);
     }
-    csv.write(ctx.csv_path("fig3"))?;
+    sink.write(&ctx.out_dir, "fig3")?;
     println!("Fig. 3 — spectral gaps for n = 4..290 (even n)");
     println!("  max |measured − Prop.1| over even n: {max_dev_even:.2e} (paper: exact match)");
     let mut t = TextTable::new(&["n", "1-rho ring", "1-rho grid", "1-rho static exp", "theory"]);
     for n in [8usize, 32, 64, 128, 256] {
+        let idx = ns.iter().position(|&m| m == n).expect("n is on the even grid");
+        let rec = &out[idx].records[0];
         t.row(vec![
             n.to_string(),
-            format!("{:.4}", spectral::topology_gap(TopologyKind::Ring, n, 0)),
-            format!("{:.4}", spectral::topology_gap(TopologyKind::Grid2D, n, 0)),
-            format!("{:.4}", spectral::topology_gap(TopologyKind::StaticExp, n, 0)),
-            format!("{:.4}", 1.0 - spectral::static_exp_rho_bound(n)),
+            table_num(rec.num("ring"), NumFmt::Fixed(4)),
+            table_num(rec.num("grid"), NumFmt::Fixed(4)),
+            table_num(rec.num("static_exp"), NumFmt::Fixed(4)),
+            table_num(rec.num("prop1_theory"), NumFmt::Fixed(4)),
         ]);
     }
     println!("{}", t.render());
@@ -90,26 +158,31 @@ pub fn fig3(ctx: &Ctx) -> Result<()> {
     Ok(())
 }
 
-fn residue_decay_csv(
+/// Run a residue-decay style sweep: one cell per labelled series, each
+/// producing `iters` records of `{k, residue}` (clamped away from exact
+/// zero for log plots), and return the series in grid order.
+fn residue_series(
     ctx: &Ctx,
-    name: &str,
-    series: &[(String, Vec<f64>)],
+    id: &str,
+    cells: &[(String, TopologyKind, usize)],
     iters: usize,
-) -> Result<()> {
-    let mut header: Vec<&str> = vec!["iter"];
-    for (label, _) in series {
-        header.push(label);
-    }
-    let mut csv = CsvWriter::new(&header);
-    for k in 0..iters {
-        let mut row = vec![k as f64 + 1.0];
-        for (_, decay) in series {
-            row.push(decay[k].max(1e-300));
-        }
-        csv.row_f64(&row);
-    }
-    csv.write(ctx.csv_path(name))?;
-    Ok(())
+    decay: impl Fn(TopologyKind, usize, usize, u64) -> Vec<f64> + Sync,
+) -> Vec<Vec<f64>> {
+    let seed = ctx.seed;
+    let out = ctx.runner(id).run(
+        cells,
+        |cell| format!("{cell:?} iters={iters}"),
+        |(_, kind, n), _| {
+            decay(*kind, *n, iters, seed)
+                .into_iter()
+                .enumerate()
+                .map(|(k, v)| Record::new().with("k", k + 1).with("residue", v.max(1e-300)))
+                .collect()
+        },
+    );
+    out.iter()
+        .map(|cell| cell.records.iter().map(|r| r.num("residue")).collect())
+        .collect()
 }
 
 /// Fig. 4 — consensus residue decay: one-peer exp hits exact averaging at
@@ -117,15 +190,17 @@ fn residue_decay_csv(
 pub fn fig4(ctx: &Ctx) -> Result<()> {
     let n = 16;
     let iters = 24;
-    let series: Vec<(String, Vec<f64>)> = [
+    let cells: Vec<(String, TopologyKind, usize)> = [
         ("one_peer_exp", TopologyKind::OnePeerExp),
         ("static_exp", TopologyKind::StaticExp),
         ("random_match", TopologyKind::RandomMatch),
     ]
     .into_iter()
-    .map(|(label, kind)| (label.to_string(), consensus::residue_decay(kind, n, iters, ctx.seed)))
+    .map(|(label, kind)| (label.to_string(), kind, n))
     .collect();
-    residue_decay_csv(ctx, "fig4", &series, iters)?;
+    let series = residue_series(ctx, "fig4", &cells, iters, consensus::residue_decay);
+    let labels: Vec<String> = cells.iter().map(|c| c.0.clone()).collect();
+    wide_sink("iter", &labels, &series).write(&ctx.out_dir, "fig4")?;
 
     let tau = crate::topology::exponential::tau(n);
     println!("Fig. 4 — consensus residue decay, n = {n} (τ = {tau})");
@@ -133,15 +208,15 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
     for k in 0..10 {
         t.row(vec![
             (k + 1).to_string(),
-            format!("{:.3e}", series[0].1[k]),
-            format!("{:.3e}", series[1].1[k]),
-            format!("{:.3e}", series[2].1[k]),
+            table_num(series[0][k], NumFmt::Sci(3)),
+            table_num(series[1][k], NumFmt::Sci(3)),
+            table_num(series[2][k], NumFmt::Sci(3)),
         ]);
     }
     println!("{}", t.render());
     println!(
-        "  one-peer residue at k=τ: {:.1e} (exact averaging, Lemma 1)",
-        series[0].1[tau - 1]
+        "  one-peer residue at k=τ: {} (exact averaging, Lemma 1)",
+        table_num(series[0][tau - 1], NumFmt::Sci(1))
     );
     println!("  csv: {}", ctx.csv_path("fig4").display());
     Ok(())
@@ -152,20 +227,20 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
 pub fn fig10(ctx: &Ctx) -> Result<()> {
     let sizes = [5usize, 6, 9, 12];
     let iters = 30;
-    let series: Vec<(String, Vec<f64>)> = sizes
+    let cells: Vec<(String, TopologyKind, usize)> = sizes
         .iter()
-        .map(|&n| {
-            (format!("n{n}"), consensus::residue_decay(TopologyKind::OnePeerExp, n, iters, ctx.seed))
-        })
+        .map(|&n| (format!("n{n}"), TopologyKind::OnePeerExp, n))
         .collect();
-    residue_decay_csv(ctx, "fig10", &series, iters)?;
+    let series = residue_series(ctx, "fig10", &cells, iters, consensus::residue_decay);
+    let labels: Vec<String> = cells.iter().map(|c| c.0.clone()).collect();
+    wide_sink("iter", &labels, &series).write(&ctx.out_dir, "fig10")?;
     println!("Fig. 10 — one-peer exp with n not a power of 2 (no exact averaging)");
     for (i, &n) in sizes.iter().enumerate() {
         let tau = crate::topology::exponential::tau(n);
         println!(
-            "  n={n}: residue at k=τ={tau}: {:.2e} (>0), at k=30: {:.2e}",
-            series[i].1[tau - 1],
-            series[i].1[iters - 1]
+            "  n={n}: residue at k=τ={tau}: {} (>0), at k=30: {}",
+            table_num(series[i][tau - 1], NumFmt::Sci(2)),
+            table_num(series[i][iters - 1], NumFmt::Sci(2))
         );
     }
     println!("  csv: {}", ctx.csv_path("fig10").display());
@@ -177,20 +252,29 @@ pub fn fig10(ctx: &Ctx) -> Result<()> {
 pub fn fig11(ctx: &Ctx) -> Result<()> {
     let n = 16;
     let iters = 24;
-    let series: Vec<(String, Vec<f64>)> = [
+    let cells: Vec<(String, TopologyKind, usize)> = [
         ("cyclic", TopologyKind::OnePeerExp),
         ("random_perm", TopologyKind::OnePeerExpPerm),
         ("uniform_sampling", TopologyKind::OnePeerExpUniform),
     ]
     .into_iter()
-    .map(|(label, kind)| (label.to_string(), consensus::residue_decay(kind, n, iters, ctx.seed)))
+    .map(|(label, kind)| (label.to_string(), kind, n))
     .collect();
-    residue_decay_csv(ctx, "fig11", &series, iters)?;
+    let series = residue_series(ctx, "fig11", &cells, iters, consensus::residue_decay);
+    let labels: Vec<String> = cells.iter().map(|c| c.0.clone()).collect();
+    wide_sink("iter", &labels, &series).write(&ctx.out_dir, "fig11")?;
     let tau = crate::topology::exponential::tau(n);
     println!("Fig. 11 — one-peer sampling strategies, n = {n}");
-    println!("  residue at k=τ: cyclic={:.1e} perm={:.1e} uniform={:.1e}",
-        series[0].1[tau - 1], series[1].1[tau - 1], series[2].1[tau - 1]);
-    println!("  residue at k={iters}: uniform={:.1e} (asymptotic only)", series[2].1[iters - 1]);
+    println!(
+        "  residue at k=τ: cyclic={} perm={} uniform={}",
+        table_num(series[0][tau - 1], NumFmt::Sci(1)),
+        table_num(series[1][tau - 1], NumFmt::Sci(1)),
+        table_num(series[2][tau - 1], NumFmt::Sci(1))
+    );
+    println!(
+        "  residue at k={iters}: uniform={} (asymptotic only)",
+        table_num(series[2][iters - 1], NumFmt::Sci(1))
+    );
     println!("  csv: {}", ctx.csv_path("fig11").display());
     Ok(())
 }
@@ -200,35 +284,45 @@ pub fn fig11(ctx: &Ctx) -> Result<()> {
 pub fn fig12(ctx: &Ctx) -> Result<()> {
     let sizes = [8usize, 16, 32, 64];
     let iters = 8;
-    let mut header = vec!["k".to_string()];
-    header.extend(sizes.iter().map(|n| format!("n{n}")));
-    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut csv = CsvWriter::new(&href);
-    let norms: Vec<Vec<f64>> = sizes
+    let cells: Vec<(String, TopologyKind, usize)> = sizes
         .iter()
-        .map(|&n| consensus::residue_product_norms(TopologyKind::OnePeerExp, n, iters, ctx.seed))
+        .map(|&n| (format!("n{n}"), TopologyKind::OnePeerExp, n))
         .collect();
-    for k in 0..iters {
-        let mut row = vec![k as f64 + 1.0];
-        for series in &norms {
-            row.push(series[k]);
-        }
-        csv.row_f64(&row);
-    }
-    csv.write(ctx.csv_path("fig12"))?;
+    // Product norms can be exactly zero (the whole point of the figure),
+    // so they bypass the log-plot clamp of `residue_series`.
+    let seed = ctx.seed;
+    let out = ctx.runner("fig12").run(
+        &cells,
+        |cell| format!("{cell:?} iters={iters}"),
+        |(_, kind, n), _| {
+            consensus::residue_product_norms(*kind, *n, iters, seed)
+                .into_iter()
+                .enumerate()
+                .map(|(k, v)| Record::new().with("k", k + 1).with("residue", v))
+                .collect()
+        },
+    );
+    let series: Vec<Vec<f64>> = out
+        .iter()
+        .map(|cell| cell.records.iter().map(|r| r.num("residue")).collect())
+        .collect();
+    let labels: Vec<String> = cells.iter().map(|c| c.0.clone()).collect();
+    wide_sink("k", &labels, &series).write(&ctx.out_dir, "fig12")?;
     println!("Fig. 12 — ‖∏ Ŵ^(i)‖₂² vs k for one-peer exponential");
-    let mut t = TextTable::new(&["k", "n=8", "n=16", "n=32", "n=64"]);
+    let mut header = vec!["k".to_string()];
+    header.extend(sizes.iter().map(|n| format!("n={n}")));
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
     for k in 0..iters {
         t.row(
             std::iter::once((k + 1).to_string())
-                .chain(norms.iter().map(|s| format!("{:.2e}", s[k])))
+                .chain(series.iter().map(|s| table_num(s[k], NumFmt::Sci(2))))
                 .collect(),
         );
     }
     println!("{}", t.render());
     for (i, &n) in sizes.iter().enumerate() {
         let tau = crate::topology::exponential::tau(n);
-        println!("  n={n}: zero at k=τ={tau}? {}", norms[i][tau - 1] < 1e-18);
+        println!("  n={n}: zero at k=τ={tau}? {}", series[i][tau - 1] < 1e-18);
     }
     println!("  csv: {}", ctx.csv_path("fig12").display());
     Ok(())
@@ -236,55 +330,85 @@ pub fn fig12(ctx: &Ctx) -> Result<()> {
 
 /// Fig. 13 — DmSGD convergence curves (MSE to x*) across topologies on
 /// heterogeneous logistic regression: n=64, d=10, β=0.8, γ=0.2 halved
-/// every 1000 iterations, averaged over trials.
+/// every 1000 iterations, averaged over trials. The grid is
+/// (series × trial), so every trial of every curve is its own parallel,
+/// cacheable cell.
 pub fn fig13(ctx: &Ctx) -> Result<()> {
     let n = 64;
     let iters = ctx.scaled(6000);
     let trials = ctx.scaled(5);
     let samples = ctx.scaled(14_000).min(14_000).max(500);
-    let kinds = [
-        ("parallel", TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
-        ("ring", TopologyKind::Ring, AlgorithmKind::DmSgd),
-        ("grid", TopologyKind::Grid2D, AlgorithmKind::DmSgd),
-        ("static_exp", TopologyKind::StaticExp, AlgorithmKind::DmSgd),
-        ("one_peer_exp", TopologyKind::OnePeerExp, AlgorithmKind::DmSgd),
-    ];
-    let mut curves: Vec<(String, MseCurve)> = Vec::new();
-    for (label, kind, algo) in kinds {
-        let mut trials_curves = Vec::new();
+    let kinds: Vec<(&'static str, TopologyKind, AlgorithmKind)> = std::iter::once((
+        "parallel",
+        TopologyKind::FullyConnected,
+        AlgorithmKind::ParallelSgd,
+    ))
+    .chain(
+        TRANSIENT_KINDS
+            .into_iter()
+            .map(|kind| (kind.name(), kind, AlgorithmKind::DmSgd)),
+    )
+    .collect();
+
+    #[derive(Clone, Debug)]
+    struct Fig13Cell {
+        kind: TopologyKind,
+        algo: AlgorithmKind,
+        trial: usize,
+    }
+    let mut cells = Vec::new();
+    for &(_, kind, algo) in &kinds {
         for trial in 0..trials {
-            let problem = paper_problem(n, samples, true, ctx.seed + trial as u64);
-            let x_star = global_minimizer(&problem, 500);
+            cells.push(Fig13Cell { kind, algo, trial });
+        }
+    }
+    let seed = ctx.seed;
+    // One shared (problem, x*) per trial — the five topology series of a
+    // trial reuse it instead of re-solving the minimizer per cell.
+    let setups: Vec<ProblemSetup> = (0..trials).map(|_| OnceLock::new()).collect();
+    let out = ctx.runner("fig13").run(
+        &cells,
+        |cell| format!("{cell:?} n={n} iters={iters} samples={samples}"),
+        |cell, cc| {
+            let (problem, x_star) = setups[cell.trial].get_or_init(|| {
+                let problem = paper_problem(n, samples, true, seed + cell.trial as u64);
+                let x_star = global_minimizer(&problem, 500);
+                (problem, x_star)
+            });
             let run = LogRegRun {
-                topology: kind,
-                algorithm: algo,
+                topology: cell.kind,
+                algorithm: cell.algo,
                 beta: 0.8,
                 lr: LrSchedule::HalveEvery { init: 0.2, every: 1000 },
                 iters,
                 batch: 8,
                 record_every: 50,
-                seed: ctx.seed + 1000 + trial as u64,
+                seed: seed + 1000 + cell.trial as u64,
             };
-            trials_curves.push(run_logreg(&problem, &x_star, &run));
-        }
-        curves.push((label.to_string(), average_curves(&trials_curves)));
+            curve_records(&run_logreg_with(problem, x_star, &run, Some(cc.lanes)))
+        },
+    );
+    let mut curves: Vec<(String, MseCurve)> = Vec::new();
+    for (si, (label, _, _)) in kinds.iter().enumerate() {
+        let trial_curves: Vec<MseCurve> = (0..trials)
+            .map(|t| records_curve(&out[si * trials + t].records))
+            .collect();
+        curves.push((label.to_string(), average_curves(&trial_curves)));
         println!(
-            "  {label:<14} final MSE {:.3e}",
-            curves.last().unwrap().1.mse.last().unwrap()
+            "  {label:<14} final MSE {}",
+            table_num(final_mse(&curves.last().unwrap().1), NumFmt::Sci(3))
         );
     }
-    let mut header = vec!["iter".to_string()];
-    header.extend(curves.iter().map(|(l, _)| l.clone()));
-    let href: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
-    let mut csv = CsvWriter::new(&href);
+    let labels: Vec<String> = curves.iter().map(|(l, _)| l.clone()).collect();
+    let mut cols = vec![Col::auto("iter")];
+    cols.extend(labels.iter().map(|l| Col::auto(l.as_str())));
+    let mut sink = Sink::new(cols);
     for i in 0..curves[0].1.iters.len() {
-        let mut row = vec![curves[0].1.iters[i] as f64];
-        for (_, c) in &curves {
-            row.push(c.mse[i]);
-        }
-        csv.row_f64(&row);
+        let mut row = vec![Value::Num(curves[0].1.iters[i] as f64)];
+        row.extend(curves.iter().map(|(_, c)| Value::Num(c.mse[i])));
+        sink.push_values(row);
     }
-    csv.write(ctx.csv_path("fig13"))?;
+    sink.write(&ctx.out_dir, "fig13")?;
 
     // Transient iterations relative to the parallel baseline.
     println!("Fig. 13 — DmSGD convergence, n={n}, {trials} trial(s), {iters} iters");

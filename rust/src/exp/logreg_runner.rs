@@ -6,7 +6,9 @@
 use crate::coordinator::trainer::{GradProvider, TrainConfig, Trainer};
 use crate::coordinator::LrSchedule;
 use crate::data::logreg::{generate, LogRegConfig, LogRegProblem};
+use crate::engine::budget_lanes;
 use crate::optim::AlgorithmKind;
+use crate::sweep::Record;
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
 use crate::util::rng::Pcg;
@@ -97,6 +99,19 @@ pub struct LogRegRun {
 /// Run one (topology, algorithm) combination; `x_star` is the global
 /// minimizer to measure against.
 pub fn run_logreg(problem: &LogRegProblem, x_star: &[f64], run: &LogRegRun) -> MseCurve {
+    run_logreg_with(problem, x_star, run, None)
+}
+
+/// [`run_logreg`] under an explicit engine **lane cap** (the sweep
+/// scheduler's per-job budget — docs/DESIGN.md §Sweep). `None` keeps
+/// the trainer's automatic lane sizing; the trajectory is bitwise
+/// identical either way (§Engine determinism).
+pub fn run_logreg_with(
+    problem: &LogRegProblem,
+    x_star: &[f64],
+    run: &LogRegRun,
+    lane_cap: Option<usize>,
+) -> MseCurve {
     let n = problem.shards.len();
     let provider = LogRegProvider { problem, batch: run.batch };
     let opt = run.algorithm.build(n, &vec![0.0f32; problem.d], run.beta);
@@ -110,7 +125,7 @@ pub fn run_logreg(problem: &LogRegProblem, x_star: &[f64], run: &LogRegRun) -> M
             warmup_allreduce: false,
             record_every: run.record_every,
             parallel_grads: false,
-            lanes: None,
+            lanes: lane_cap.map(|cap| budget_lanes(cap, n, n * problem.d)),
             seed: run.seed,
             msg_bytes: None,
             cost: None,
@@ -124,6 +139,39 @@ pub fn run_logreg(problem: &LogRegProblem, x_star: &[f64], run: &LogRegRun) -> M
         mse.push(params.mean_sq_error_to(&x_star32));
     });
     MseCurve { iters, mse }
+}
+
+/// The curve's final MSE sample, or NaN (with a stderr warning) when
+/// the history is empty — tiny `--scale` runs must render a `-`, not
+/// crash on `.last().unwrap()`. NaN flows through the sweep sink's
+/// unified non-finite policy (docs/DESIGN.md §Sweep).
+pub fn final_mse(curve: &MseCurve) -> f64 {
+    match curve.mse.last() {
+        Some(&v) => v,
+        None => {
+            eprintln!("[exp] warning: empty MSE history (scale too small?); reporting NaN");
+            f64::NAN
+        }
+    }
+}
+
+/// Serialize a curve as sweep cell records (`iter`, `mse` per sample) —
+/// the cacheable form of one training cell's output.
+pub fn curve_records(curve: &MseCurve) -> Vec<Record> {
+    curve
+        .iters
+        .iter()
+        .zip(&curve.mse)
+        .map(|(&k, &mse)| Record::new().with("iter", k).with("mse", mse))
+        .collect()
+}
+
+/// Inverse of [`curve_records`] (used when a cell is served from cache).
+pub fn records_curve(records: &[Record]) -> MseCurve {
+    MseCurve {
+        iters: records.iter().map(|r| r.num("iter") as usize).collect(),
+        mse: records.iter().map(|r| r.num("mse")).collect(),
+    }
 }
 
 /// Average several seeds' MSE curves pointwise.
@@ -184,5 +232,21 @@ mod tests {
         let c2 = MseCurve { iters: vec![0, 1], mse: vec![3.0, 1.5] };
         let avg = average_curves(&[c1, c2]);
         assert_eq!(avg.mse, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn final_mse_is_nan_not_panic_on_empty_history() {
+        let full = MseCurve { iters: vec![0, 25], mse: vec![1.0, 0.25] };
+        assert_eq!(final_mse(&full), 0.25);
+        let empty = MseCurve { iters: vec![], mse: vec![] };
+        assert!(final_mse(&empty).is_nan());
+    }
+
+    #[test]
+    fn curve_record_roundtrip() {
+        let c = MseCurve { iters: vec![0, 25, 50], mse: vec![1.0, 0.5, 0.125] };
+        let back = records_curve(&curve_records(&c));
+        assert_eq!(back.iters, c.iters);
+        assert_eq!(back.mse, c.mse);
     }
 }

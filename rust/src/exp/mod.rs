@@ -1,9 +1,12 @@
 //! Experiment harness: regenerates every table and figure of the paper's
 //! evaluation (see docs/DESIGN.md §Per-experiment index).
 //!
-//! Each experiment is a function `fn(ctx) -> Result<()>` that writes CSV
-//! series to `results/` and prints a paper-style table. Invoke via
-//! `expograph exp <id>` (or `expograph exp all`).
+//! Every experiment is declared as a [`crate::sweep`] grid: a typed cell
+//! list run by the lane-budgeted parallel scheduler (cache-aware, output
+//! byte-identical for any `--jobs`), with results streamed through one
+//! [`crate::sweep::Sink`] schema to `results/<id>.csv` + `.json` and a
+//! paper-style text table. Invoke via `expograph exp <id>` (or
+//! `expograph exp all`).
 
 pub mod ablations;
 pub mod classify_runner;
@@ -12,22 +15,54 @@ pub mod logreg_runner;
 pub mod netsim_runner;
 pub mod tables;
 
+use crate::config::SweepConfig;
+use crate::optim::AlgorithmKind;
+use crate::sweep::Sweep;
+use crate::topology::TopologyKind;
 use anyhow::{bail, Result};
 use std::path::PathBuf;
 
+/// The static-vs-one-peer exponential pair at the heart of Tables 3/4/9
+/// (the paper's headline comparison).
+pub const EXP_PAIR: [TopologyKind; 2] = [TopologyKind::StaticExp, TopologyKind::OnePeerExp];
+
+/// The algorithm rows of the Tables 3/4 grids.
+pub const GRID_ALGOS: [AlgorithmKind; 4] = [
+    AlgorithmKind::ParallelSgd,
+    AlgorithmKind::VanillaDmSgd,
+    AlgorithmKind::DmSgd,
+    AlgorithmKind::QgDmSgd,
+];
+
+/// The decentralized topology rows of Tables 7/8 and Fig. 13 (the
+/// parallel all-reduce baseline rides along as an extra grid row).
+pub const TRANSIENT_KINDS: [TopologyKind; 4] = [
+    TopologyKind::Ring,
+    TopologyKind::Grid2D,
+    TopologyKind::StaticExp,
+    TopologyKind::OnePeerExp,
+];
+
 /// Shared experiment context.
 pub struct Ctx {
-    /// Output directory for CSVs (default `results/`).
+    /// Output directory for CSV/JSON (default `results/`).
     pub out_dir: PathBuf,
     /// Global scale factor for iteration counts / trials: 1.0 = paper-
     /// faithful protocol, lower = quick smoke run.
     pub scale: f64,
     pub seed: u64,
+    /// Sweep scheduling: parallel jobs + on-disk result cache.
+    pub sweep: SweepConfig,
 }
 
 impl Default for Ctx {
     fn default() -> Self {
-        Ctx { out_dir: PathBuf::from("results"), scale: 1.0, seed: 1 }
+        Ctx {
+            out_dir: PathBuf::from("results"),
+            scale: 1.0,
+            seed: 1,
+            sweep: SweepConfig::default(),
+        }
     }
 }
 
@@ -40,9 +75,22 @@ impl Ctx {
     pub fn csv_path(&self, name: &str) -> PathBuf {
         self.out_dir.join(format!("{name}.csv"))
     }
+
+    /// The configured sweep runner for one experiment id: seed + scale
+    /// key the cache, jobs come from `--jobs`, and the cache lives under
+    /// `<out_dir>/.cache/` when enabled.
+    pub fn runner<'a>(&self, id: &'a str) -> Sweep<'a> {
+        let sweep = Sweep::new(id, self.seed, self.scale).jobs(self.sweep.jobs);
+        if self.sweep.cache {
+            sweep.cache_under(&self.out_dir)
+        } else {
+            sweep
+        }
+    }
 }
 
-/// All experiment ids, in run order.
+/// All experiment ids, in run order. This is the single source of truth
+/// for dispatch **and** the `expograph exp` usage text.
 pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig10", "fig11", "fig12", "table1", "table5", "table6",
     "fig1", "fig13", "table7", "table8", "table2", "table3", "table4",
@@ -78,6 +126,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
             let cfg = crate::config::NetSimRunConfig {
                 seed: ctx.seed,
                 iters: ctx.scaled(base.iters),
+                sweep: ctx.sweep,
                 ..base
             };
             netsim_runner::netsim_table(&cfg, &ctx.out_dir).map(|_| ())

@@ -5,14 +5,16 @@
 //! target; the global optimum is the mean target, so a topology only
 //! wins by actually averaging).
 //!
-//! Emits `netsim.json` (machine-parseable, consumed by the CLI
-//! integration test), `netsim.csv`, and a paper-style text table. The
-//! headline (pinned by `tests/netsim.rs`): in the clean scenario at
-//! n = 64 the exponential graphs reach the target in less simulated
-//! wall-clock than ring/grid — the paper's Table 2 trade-off — while
-//! the straggler scenario slows every topology's clock without
-//! touching its trajectory and the lossy scenario costs extra
-//! iterations through degraded plans.
+//! The sweep runs through the declarative harness (docs/DESIGN.md
+//! §Sweep): cells are scheduled in parallel under the lane budget and
+//! served from the result cache on re-runs. Emits `netsim.json`
+//! (machine-parseable, consumed by the CLI integration test),
+//! `netsim.csv`, and a paper-style text table. The headline (pinned by
+//! `tests/netsim.rs`): in the clean scenario at n = 64 the exponential
+//! graphs reach the target in less simulated wall-clock than ring/grid
+//! — the paper's Table 2 trade-off — while the straggler scenario slows
+//! every topology's clock without touching its trajectory and the lossy
+//! scenario costs extra iterations through degraded plans.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -21,14 +23,15 @@ use crate::config::NetSimRunConfig;
 use crate::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
 use crate::coordinator::LrSchedule;
 use crate::costmodel::CostModel;
+use crate::engine::budget_lanes;
 use crate::netsim::{NetSim, Scenario};
 use crate::optim::AlgorithmKind;
+use crate::sweep::{Axis, Col, Grid, Record, Sink, Sweep};
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
-use crate::util::csv::CsvWriter;
 use crate::util::json::Json;
 use crate::util::table::TextTable;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 /// One cell of the sweep.
 #[derive(Clone, Debug)]
@@ -52,12 +55,62 @@ pub struct NetSimCell {
     pub degraded_rounds: usize,
 }
 
+impl NetSimCell {
+    /// The cacheable sweep record of one cell.
+    fn record(&self) -> Record {
+        Record::new()
+            .with("topology", self.topology.name())
+            .with("n", self.n)
+            .with("scenario", self.scenario.as_str())
+            .with("reached", self.reached)
+            .with("iters_to_target", self.iters_to_target)
+            .with("time_to_target", self.time_to_target)
+            .with("total_time", self.total_time)
+            .with("final_err", self.final_err)
+            .with("err0", self.err0)
+            .with("dropped", self.dropped)
+            .with("degraded_rounds", self.degraded_rounds)
+    }
+
+    /// Inverse of [`NetSimCell::record`] (cache-served cells).
+    fn from_record(rec: &Record) -> Result<NetSimCell> {
+        let name = rec.text("topology");
+        Ok(NetSimCell {
+            topology: TopologyKind::parse(name)
+                .ok_or_else(|| anyhow!("cached cell has unknown topology {name}"))?,
+            n: rec.num("n") as usize,
+            scenario: rec.text("scenario").to_string(),
+            reached: rec.flag("reached"),
+            iters_to_target: rec.num("iters_to_target") as usize,
+            time_to_target: rec.num("time_to_target"),
+            total_time: rec.num("total_time"),
+            final_err: rec.num("final_err"),
+            err0: rec.num("err0"),
+            dropped: rec.num("dropped") as usize,
+            degraded_rounds: rec.num("degraded_rounds") as usize,
+        })
+    }
+}
+
 /// Run one (topology, n, scenario) cell.
 pub fn time_to_target(
     cfg: &NetSimRunConfig,
     kind: TopologyKind,
     n: usize,
     scenario: &Scenario,
+) -> NetSimCell {
+    time_to_target_with(cfg, kind, n, scenario, None)
+}
+
+/// [`time_to_target`] under an explicit engine lane cap (the sweep
+/// scheduler's per-job budget); `None` keeps automatic sizing. The
+/// trajectory is bitwise identical either way (§Engine determinism).
+pub fn time_to_target_with(
+    cfg: &NetSimRunConfig,
+    kind: TopologyKind,
+    n: usize,
+    scenario: &Scenario,
+    lane_cap: Option<usize>,
 ) -> NetSimCell {
     // Same problem for every topology/scenario at a given n: node i
     // pulls toward its own random target, optimum = mean target.
@@ -79,7 +132,7 @@ pub fn time_to_target(
             warmup_allreduce: false,
             record_every: 1,
             parallel_grads: false,
-            lanes: None,
+            lanes: lane_cap.map(|cap| budget_lanes(cap, n, n * cfg.dim)),
             seed: cfg.seed,
             msg_bytes: Some(cfg.msg_bytes),
             cost: None,
@@ -113,20 +166,47 @@ pub fn time_to_target(
     }
 }
 
-/// Run the full sweep, print the table, and write `netsim.json` +
-/// `netsim.csv` under `out_dir`. Returns every cell for programmatic
-/// assertions (tests) on top of the emitted artifacts.
+/// Run the full sweep (parallel, cache-aware), print the table, and
+/// write `netsim.json` + `netsim.csv` under `out_dir`. Returns every
+/// cell for programmatic assertions (tests) on top of the emitted
+/// artifacts.
 pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimCell>> {
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
-    let mut cells = Vec::new();
-    for scenario in &cfg.scenarios {
-        for &kind in &cfg.topologies {
-            for &n in &cfg.nodes {
-                cells.push(time_to_target(cfg, kind, n, scenario));
-            }
-        }
+    #[derive(Clone, Debug)]
+    struct Spec {
+        scenario: Scenario,
+        kind: TopologyKind,
+        n: usize,
     }
+    let grid = Grid::product3(
+        &Axis::new("scenario", cfg.scenarios.clone()),
+        &Axis::new("topology", cfg.topologies.clone()),
+        &Axis::new("n", cfg.nodes.clone()),
+        |scenario, &kind, &n| Spec { scenario: scenario.clone(), kind, n },
+    );
+    let mut sweep = Sweep::new("netsim", cfg.seed, 1.0).jobs(cfg.sweep.jobs);
+    if cfg.sweep.cache {
+        sweep = sweep.cache_under(out_dir);
+    }
+    let out = sweep.run(
+        grid.cells(),
+        |spec| {
+            format!(
+                "{:?} {:?} n={} iters={} dim={} tol={} msg_bytes={} compute={}",
+                spec.kind, spec.scenario, spec.n, cfg.iters, cfg.dim, cfg.tol, cfg.msg_bytes,
+                cfg.compute
+            )
+        },
+        |spec, cc| {
+            vec![time_to_target_with(cfg, spec.kind, spec.n, &spec.scenario, Some(cc.lanes))
+                .record()]
+        },
+    );
+    let cells = out
+        .iter()
+        .map(|cell| NetSimCell::from_record(&cell.records[0]))
+        .collect::<Result<Vec<_>>>()?;
 
     // Text table: one row per topology × n, one column pair per scenario.
     let mut header = vec!["topology".to_string(), "n".to_string()];
@@ -154,25 +234,24 @@ pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimC
         }
     }
 
-    let mut csv = CsvWriter::new(&[
-        "topology", "n", "scenario", "reached", "iters_to_target", "time_to_target",
-        "total_time", "final_err", "dropped", "degraded_rounds",
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("n"),
+        Col::auto("scenario"),
+        Col::auto("reached"),
+        Col::auto("iters_to_target"),
+        Col::auto("time_to_target"),
+        Col::auto("total_time"),
+        Col::auto("final_err"),
+        Col::auto("dropped"),
+        Col::auto("degraded_rounds"),
     ]);
-    for c in &cells {
-        csv.row(&[
-            c.topology.name().into(),
-            c.n.to_string(),
-            c.scenario.clone(),
-            c.reached.to_string(),
-            c.iters_to_target.to_string(),
-            format!("{}", c.time_to_target),
-            format!("{}", c.total_time),
-            format!("{}", c.final_err),
-            c.dropped.to_string(),
-            c.degraded_rounds.to_string(),
-        ]);
+    for cell in &out {
+        sink.push(&cell.records[0]);
     }
-    csv.write(out_dir.join("netsim.csv"))?;
+    // CSV through the sink schema; the JSON keeps its bespoke row-object
+    // shape (the CLI integration test and external consumers parse it).
+    sink.write_csv(out_dir, "netsim")?;
 
     let json = cells_to_json(cfg, &cells);
     std::fs::write(out_dir.join("netsim.json"), json.to_string())
@@ -245,6 +324,15 @@ mod tests {
         assert_eq!(clean.iters_to_target, strag.iters_to_target);
         assert!(strag.time_to_target > clean.time_to_target);
         assert_eq!(strag.degraded_rounds, 0);
+        // A warm second sweep (served from `<out>/.cache/`) reproduces
+        // the cells and artifacts byte-for-byte.
+        let csv_cold = std::fs::read(tmp.join("netsim.csv")).unwrap();
+        let json_cold = std::fs::read(tmp.join("netsim.json")).unwrap();
+        let again = netsim_table(&cfg, &tmp).unwrap();
+        assert_eq!(again.len(), 2);
+        assert_eq!(again[0].time_to_target, clean.time_to_target);
+        assert_eq!(std::fs::read(tmp.join("netsim.csv")).unwrap(), csv_cold);
+        assert_eq!(std::fs::read(tmp.join("netsim.json")).unwrap(), json_cold);
         std::fs::remove_dir_all(&tmp).ok();
     }
 }

@@ -1,58 +1,97 @@
-//! Table experiments (Tables 1–10).
+//! Table experiments (Tables 1–10), declared as sweep grids: each table
+//! is a typed cell list run by the lane-budgeted parallel scheduler
+//! (docs/DESIGN.md §Sweep), with one `Record` schema streaming to
+//! `results/<id>.csv` + `.json` and the paper-style pivot printed from
+//! the grid-ordered results.
 
-use super::classify_runner::{run_classify, table_dataset, ClassifySpec};
 #[cfg(test)]
 use super::classify_runner::simulated_imagenet_hours;
-use super::logreg_runner::{global_minimizer, paper_problem, run_logreg, LogRegRun};
-use super::Ctx;
+use super::classify_runner::{classify_record, run_classify_with, table_dataset, ClassifySpec};
+use super::logreg_runner::{
+    curve_records, global_minimizer, paper_problem, records_curve, run_logreg_with, LogRegRun,
+};
+use super::{Ctx, EXP_PAIR, GRID_ALGOS, TRANSIENT_KINDS};
 use crate::coordinator::{transient_iterations, LrSchedule};
 use crate::costmodel::analytic_degree;
-use crate::data::classify::{generate, ClassifyConfig};
+use crate::data::classify::{generate, ClassifyConfig, ClassifyData};
+use crate::data::logreg::LogRegProblem;
 use crate::optim::AlgorithmKind;
 use crate::spectral;
+use crate::sweep::{table_num, Axis, CellResult, Col, Grid, NumFmt, Record, Sink};
 use crate::topology::exponential::tau;
 use crate::topology::graphs;
 use crate::topology::random;
 use crate::topology::schedule::static_weights;
 use crate::topology::weight::degree_spread;
 use crate::topology::TopologyKind;
-use crate::util::csv::CsvWriter;
 use crate::util::table::TextTable;
 use anyhow::Result;
+use std::sync::OnceLock;
+
+/// The single record of a single-record cell.
+fn only(cell: &CellResult) -> &Record {
+    &cell.records[0]
+}
 
 /// Table 1 — per-iteration communication and transient-iteration
 /// complexity summary for the six headline topologies (homogeneous data).
 pub fn table1(ctx: &Ctx) -> Result<()> {
     let n = 32;
+    let seed = ctx.seed;
+    let cells: Vec<TopologyKind> = TopologyKind::table1().to_vec();
+    let out = ctx.runner("table1").run(
+        &cells,
+        |kind| format!("{kind:?} n={n}"),
+        |&kind, _| {
+            let gap = if kind.is_time_varying() {
+                // Spectral gap of a single realization is not the right
+                // object for time-varying schedules — rendered `-`/empty
+                // by the sink's non-finite policy.
+                f64::NAN
+            } else {
+                spectral::topology_gap(kind, n, seed)
+            };
+            let theory = match kind {
+                TopologyKind::Ring => "O(n^7)",
+                TopologyKind::Grid2D => "O(n^5 log^2 n)",
+                TopologyKind::HalfRandom => "O(n^3)",
+                TopologyKind::RandomMatch => "N.A.",
+                TopologyKind::StaticExp | TopologyKind::OnePeerExp => "O(n^3 log^2 n)",
+                _ => "-",
+            };
+            vec![Record::new()
+                .with("topology", kind.name())
+                .with("degree", analytic_degree(kind, n))
+                .with("gap", gap)
+                .with("transient_theory", theory)]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("degree"),
+        Col::fixed("gap", 4),
+        Col::auto("transient_theory"),
+    ]);
+    for cell in &out {
+        sink.push(only(cell));
+    }
+    sink.write(&ctx.out_dir, "table1")?;
     let mut t = TextTable::new(&[
         "topology", "per-iter comm", "1-rho (n=32)", "transient iters (theory)",
     ]);
-    let mut csv = CsvWriter::new(&["topology", "degree", "gap", "transient_theory"]);
-    for kind in TopologyKind::table1() {
-        let deg = analytic_degree(kind, n);
-        let (gap, gap_s) = if kind.is_time_varying() {
-            (f64::NAN, "N.A. (time-varying)".to_string())
-        } else {
-            let g = spectral::topology_gap(kind, n, ctx.seed);
-            (g, format!("{g:.4}"))
-        };
-        let theory = match kind {
-            TopologyKind::Ring => "O(n^7)",
-            TopologyKind::Grid2D => "O(n^5 log^2 n)",
-            TopologyKind::HalfRandom => "O(n^3)",
-            TopologyKind::RandomMatch => "N.A.",
-            TopologyKind::StaticExp | TopologyKind::OnePeerExp => "O(n^3 log^2 n)",
-            _ => "-",
-        };
-        t.row(vec![kind.name().into(), format!("{deg}"), gap_s, theory.into()]);
-        csv.row(&[
-            kind.name().into(),
-            deg.to_string(),
-            format!("{gap}"),
-            theory.into(),
+    for (cell, kind) in out.iter().zip(&cells) {
+        let rec = only(cell);
+        t.row(vec![
+            rec.text("topology").to_string(),
+            table_num(rec.num("degree"), NumFmt::Auto),
+            if kind.is_time_varying() {
+                "N.A. (time-varying)".to_string()
+            } else {
+                table_num(rec.num("gap"), NumFmt::Fixed(4))
+            },
+            rec.text("transient_theory").to_string(),
         ]);
     }
-    csv.write(ctx.csv_path("table1"))?;
     println!("Table 1 — communication vs transient complexity (n = {n})");
     println!("{}", t.render());
     println!("  csv: {}", ctx.csv_path("table1").display());
@@ -62,46 +101,66 @@ pub fn table1(ctx: &Ctx) -> Result<()> {
 /// Table 2 — top-1 validation accuracy and (simulated) training time per
 /// topology, n ∈ {{4, 8, 16, 32}}.
 pub fn table2(ctx: &Ctx) -> Result<()> {
-    let data = table_dataset(ctx.seed);
+    let seed = ctx.seed;
+    // Generated lazily by the first cold cell; a fully warm (cached)
+    // run never synthesizes the dataset.
+    let data: OnceLock<ClassifyData> = OnceLock::new();
     let sizes = [4usize, 8, 16, 32];
     let kinds = TopologyKind::table1();
     let iters = ctx.scaled(1500);
-    let mut t = TextTable::new(&[
-        "topology", "n=4 acc", "n=4 h", "n=8 acc", "n=8 h", "n=16 acc", "n=16 h", "n=32 acc",
-        "n=32 h",
+    let grid = Grid::product2(
+        &Axis::new("topology", kinds.to_vec()),
+        &Axis::new("n", sizes.to_vec()),
+        |&kind, &n| ClassifySpec {
+            nodes: n,
+            topology: kind,
+            algorithm: AlgorithmKind::DmSgd,
+            hidden: 32,
+            iters,
+            batch: 32,
+            // β = 0.9 ⇒ effective step γ/(1−β); 0.03 keeps it ≈ 0.3
+            // (the Goyal-protocol momentum scaling).
+            lr: 0.03,
+            beta: 0.9,
+            heterogeneous: false,
+            seed: ctx.seed,
+        },
+    );
+    let out = ctx.runner("table2").run(
+        grid.cells(),
+        |spec| format!("{spec:?}"),
+        |spec, cc| {
+            let data = data.get_or_init(|| table_dataset(seed));
+            vec![classify_record(spec, &run_classify_with(data, spec, Some(cc.lanes)))]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("nodes"),
+        Col::auto("val_acc"),
+        Col::auto("sim_hours"),
+        Col::auto("final_loss"),
     ]);
-    let mut csv = CsvWriter::new(&["topology", "nodes", "val_acc", "sim_hours", "final_loss"]);
-    for kind in kinds {
+    for cell in &out {
+        sink.push(only(cell));
+    }
+    sink.write(&ctx.out_dir, "table2")?;
+
+    let mut header = vec!["topology".to_string()];
+    for &n in &sizes {
+        header.push(format!("n={n} acc"));
+        header.push(format!("n={n} h"));
+    }
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (ki, kind) in kinds.iter().enumerate() {
         let mut row = vec![kind.name().to_string()];
-        for &n in &sizes {
-            let spec = ClassifySpec {
-                nodes: n,
-                topology: kind,
-                algorithm: AlgorithmKind::DmSgd,
-                hidden: 32,
-                iters,
-                batch: 32,
-                // β = 0.9 ⇒ effective step γ/(1−β); 0.03 keeps it ≈ 0.3
-                // (the Goyal-protocol momentum scaling).
-                lr: 0.03,
-                beta: 0.9,
-                heterogeneous: false,
-                seed: ctx.seed,
-            };
-            let r = run_classify(&data, &spec);
-            row.push(format!("{:.2}", 100.0 * r.val_acc));
-            row.push(format!("{:.1}", r.sim_hours));
-            csv.row(&[
-                kind.name().into(),
-                n.to_string(),
-                format!("{:.4}", r.val_acc),
-                format!("{:.3}", r.sim_hours),
-                format!("{:.4}", r.final_loss),
-            ]);
+        for ni in 0..sizes.len() {
+            let rec = only(&out[ki * sizes.len() + ni]);
+            row.push(table_num(rec.num("val_acc"), NumFmt::Pct(2)));
+            row.push(table_num(rec.num("sim_hours"), NumFmt::Fixed(1)));
         }
         t.row(row);
     }
-    csv.write(ctx.csv_path("table2"))?;
     println!("Table 2 — DmSGD accuracy (%) and simulated 90-epoch hours per topology");
     println!("{}", t.render());
     println!("  (time column: α-β cost model with ResNet-50/ImageNet message sizes)");
@@ -109,70 +168,107 @@ pub fn table2(ctx: &Ctx) -> Result<()> {
     Ok(())
 }
 
+/// One cell of the Tables 3/4 grid: dataset × model × algorithm ×
+/// topology at n = 8 (`di` indexes the experiment's dataset list).
+#[derive(Clone, Debug)]
+struct AlgoGridCell {
+    dataset: String,
+    di: usize,
+    model: String,
+    hidden: usize,
+    algo: AlgorithmKind,
+    topo: TopologyKind,
+}
+
+/// Shared Tables 3/4 runner: the static-vs-one-peer exponential pair
+/// ([`EXP_PAIR`]) against the algorithm rows ([`GRID_ALGOS`]), over the
+/// given datasets and model capacities. Parallel SGD ignores the
+/// topology, so its one-peer cell is declared but never trained — its
+/// NaN record renders as the paper's dashed column.
 fn algo_grid_table(
     ctx: &Ctx,
     name: &str,
     title: &str,
-    datasets: &[(&str, crate::data::classify::ClassifyData)],
+    datasets: &[(&str, ClassifyData)],
     models: &[(&str, usize)],
     iters: usize,
 ) -> Result<()> {
-    let algos = [
-        AlgorithmKind::ParallelSgd,
-        AlgorithmKind::VanillaDmSgd,
-        AlgorithmKind::DmSgd,
-        AlgorithmKind::QgDmSgd,
-    ];
-    let topologies = [TopologyKind::StaticExp, TopologyKind::OnePeerExp];
-    let mut csv = CsvWriter::new(&[
-        "dataset", "model", "algorithm", "topology", "val_acc", "sim_hours",
-    ]);
-    println!("{title}");
-    for (dname, data) in datasets {
+    let mut cells = Vec::new();
+    for (di, (dname, _)) in datasets.iter().enumerate() {
         for (mname, hidden) in models {
-            let mut t = TextTable::new(&["algorithm", "static acc", "one-peer acc", "diff"]);
-            for algo in algos {
-                let mut accs = Vec::new();
-                for topo in topologies {
-                    // Parallel SGD ignores the topology; run it once under
-                    // "static" and dash the one-peer column like the paper.
-                    if algo == AlgorithmKind::ParallelSgd && topo == TopologyKind::OnePeerExp {
-                        accs.push(f64::NAN);
-                        continue;
-                    }
-                    let spec = ClassifySpec {
-                        nodes: 8,
-                        topology: topo,
-                        algorithm: algo,
+            for algo in GRID_ALGOS {
+                for topo in EXP_PAIR {
+                    cells.push(AlgoGridCell {
+                        dataset: dname.to_string(),
+                        di,
+                        model: mname.to_string(),
                         hidden: *hidden,
-                        iters,
-                        batch: 32,
-                        lr: 0.03, // momentum-scaled (see table2)
-                        beta: 0.9,
-                        heterogeneous: false,
-                        seed: ctx.seed,
-                    };
-                    let r = run_classify(data, &spec);
-                    accs.push(r.val_acc);
-                    csv.row(&[
-                        dname.to_string(),
-                        mname.to_string(),
-                        algo.name().into(),
-                        topo.name().into(),
-                        format!("{:.4}", r.val_acc),
-                        format!("{:.3}", r.sim_hours),
-                    ]);
+                        algo,
+                        topo,
+                    });
                 }
-                let diff = if accs[1].is_nan() {
-                    "-".to_string()
-                } else {
-                    format!("{:+.2}", 100.0 * (accs[1] - accs[0]))
-                };
+            }
+        }
+    }
+    let out = ctx.runner(name).run(
+        &cells,
+        |cell| format!("{cell:?} iters={iters}"),
+        |cell, cc| {
+            if cell.algo == AlgorithmKind::ParallelSgd && cell.topo == TopologyKind::OnePeerExp {
+                // Dashed in the paper: parallel SGD ran once under
+                // "static"; the one-peer column has no measurement.
+                return vec![Record::new()
+                    .with("dataset", cell.dataset.as_str())
+                    .with("model", cell.model.as_str())
+                    .with("algorithm", cell.algo.name())
+                    .with("topology", cell.topo.name())
+                    .with("val_acc", f64::NAN)
+                    .with("sim_hours", f64::NAN)];
+            }
+            let spec = ClassifySpec {
+                nodes: 8,
+                topology: cell.topo,
+                algorithm: cell.algo,
+                hidden: cell.hidden,
+                iters,
+                batch: 32,
+                lr: 0.03, // momentum-scaled (see table2)
+                beta: 0.9,
+                heterogeneous: false,
+                seed: ctx.seed,
+            };
+            let r = run_classify_with(&datasets[cell.di].1, &spec, Some(cc.lanes));
+            vec![classify_record(&spec, &r)
+                .with("dataset", cell.dataset.as_str())
+                .with("model", cell.model.as_str())]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("dataset"),
+        Col::auto("model"),
+        Col::auto("algorithm"),
+        Col::auto("topology"),
+        Col::auto("val_acc"),
+        Col::auto("sim_hours"),
+    ]);
+    for cell in &out {
+        sink.push(only(cell));
+    }
+    sink.write(&ctx.out_dir, name)?;
+
+    println!("{title}");
+    for (di, (dname, _)) in datasets.iter().enumerate() {
+        for (mi, (mname, _)) in models.iter().enumerate() {
+            let mut t = TextTable::new(&["algorithm", "static acc", "one-peer acc", "diff"]);
+            for (ai, algo) in GRID_ALGOS.iter().enumerate() {
+                let base = ((di * models.len() + mi) * GRID_ALGOS.len() + ai) * EXP_PAIR.len();
+                let stat = only(&out[base]).num("val_acc");
+                let one = only(&out[base + 1]).num("val_acc");
                 t.row(vec![
                     algo.name().into(),
-                    format!("{:.2}", 100.0 * accs[0]),
-                    if accs[1].is_nan() { "-".into() } else { format!("{:.2}", 100.0 * accs[1]) },
-                    diff,
+                    table_num(stat, NumFmt::Pct(2)),
+                    table_num(one, NumFmt::Pct(2)),
+                    table_num(one - stat, NumFmt::PctSigned(2)),
                 ]);
             }
             println!("\n  dataset={dname} model={mname}");
@@ -181,7 +277,6 @@ fn algo_grid_table(
             }
         }
     }
-    csv.write(ctx.csv_path(name))?;
     println!("  csv: {}", ctx.csv_path(name).display());
     Ok(())
 }
@@ -254,28 +349,53 @@ pub fn table5(ctx: &Ctx) -> Result<()> {
         TopologyKind::StaticExp,
     ];
     let sizes = [16usize, 64, 144, 256];
-    let mut csv = CsvWriter::new(&["topology", "n", "gap", "max_degree"]);
-    let mut t = TextTable::new(&[
-        "topology", "gap n=16", "gap n=64", "gap n=144", "gap n=256", "max deg (n=64)", "theory",
+    let seed = ctx.seed;
+    let grid = Grid::product2(
+        &Axis::new("topology", kinds.to_vec()),
+        &Axis::new("n", sizes.to_vec()),
+        |&kind, &n| (kind, n),
+    );
+    let out = ctx.runner("table5").run(
+        grid.cells(),
+        |cell| format!("{cell:?}"),
+        |&(kind, n), _| {
+            let gap = if kind.is_time_varying() {
+                f64::NAN
+            } else {
+                spectral::topology_gap(kind, n, seed)
+            };
+            vec![Record::new()
+                .with("topology", kind.name())
+                .with("n", n)
+                .with("gap", gap)
+                .with("max_degree", analytic_degree(kind, n))]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("n"),
+        Col::auto("gap"),
+        Col::auto("max_degree"),
     ]);
-    for kind in kinds {
+    for cell in &out {
+        sink.push(only(cell));
+    }
+    sink.write(&ctx.out_dir, "table5")?;
+
+    let mut header = vec!["topology".to_string()];
+    header.extend(sizes.iter().map(|n| format!("gap n={n}")));
+    header.push("max deg (n=64)".to_string());
+    header.push("theory".to_string());
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (ki, kind) in kinds.iter().enumerate() {
         let mut row = vec![kind.name().to_string()];
-        for &n in &sizes {
-            if kind.is_time_varying() {
-                row.push("N.A.".into());
-                csv.row(&[kind.name().into(), n.to_string(), "nan".into(), "1".into()]);
-                continue;
-            }
-            let gap = spectral::topology_gap(kind, n, ctx.seed);
-            let deg = analytic_degree(kind, n);
-            row.push(format!("{gap:.2e}"));
-            csv.row(&[kind.name().into(), n.to_string(), format!("{gap}"), deg.to_string()]);
+        for ni in 0..sizes.len() {
+            row.push(table_num(only(&out[ki * sizes.len() + ni]).num("gap"), NumFmt::Sci(2)));
         }
-        row.push(analytic_degree(kind, 64).to_string());
-        row.push(spectral::table5_theory(kind, 64).0);
+        row.push(analytic_degree(*kind, 64).to_string());
+        row.push(spectral::table5_theory(*kind, 64).0);
         t.row(row);
     }
-    csv.write(ctx.csv_path("table5"))?;
     println!("Table 5 — spectral gap & max degree across topologies");
     println!("{}", t.render());
     println!("  csv: {}", ctx.csv_path("table5").display());
@@ -283,46 +403,93 @@ pub fn table5(ctx: &Ctx) -> Result<()> {
 }
 
 /// Table 6 — exponential graphs vs ER / geometric random graphs:
-/// connectivity, degree balance, expected communication.
+/// connectivity, degree balance, expected communication. The grid is the
+/// trial axis; connectivity fractions and degree spreads are aggregated
+/// from the per-trial records.
 pub fn table6(ctx: &Ctx) -> Result<()> {
     let n = 64;
     let trials = ctx.scaled(50);
-    let mut connected_er = 0usize;
-    let mut connected_geo = 0usize;
-    let mut er_spread = (usize::MAX, 0usize);
-    let mut geo_spread = (usize::MAX, 0usize);
-    for trial in 0..trials {
-        let seed = ctx.seed + trial as u64;
-        let er = random::erdos_renyi_graph(n, 1.0, seed);
-        let geo = random::geometric_graph(n, 1.0, seed);
-        connected_er += er.is_connected() as usize;
-        connected_geo += geo.is_connected() as usize;
-        let ds = |g: &graphs::Graph| {
-            let degs: Vec<usize> = (0..n).map(|i| g.degree(i)).collect();
-            (*degs.iter().min().unwrap(), *degs.iter().max().unwrap())
-        };
-        let (lo, hi) = ds(&er);
-        er_spread = (er_spread.0.min(lo), er_spread.1.max(hi));
-        let (lo, hi) = ds(&geo);
-        geo_spread = (geo_spread.0.min(lo), geo_spread.1.max(hi));
-    }
+    let seed = ctx.seed;
+    let cells: Vec<usize> = (0..trials).collect();
+    let out = ctx.runner("table6").run(
+        &cells,
+        |trial| format!("trial={trial} n={n}"),
+        |&trial, _| {
+            let trial_seed = seed + trial as u64;
+            let er = random::erdos_renyi_graph(n, 1.0, trial_seed);
+            let geo = random::geometric_graph(n, 1.0, trial_seed);
+            let spread = |g: &graphs::Graph| {
+                let degs: Vec<usize> = (0..n).map(|i| g.degree(i)).collect();
+                (*degs.iter().min().unwrap(), *degs.iter().max().unwrap())
+            };
+            let (er_lo, er_hi) = spread(&er);
+            let (geo_lo, geo_hi) = spread(&geo);
+            vec![Record::new()
+                .with("trial", trial)
+                .with("er_connected", er.is_connected())
+                .with("geo_connected", geo.is_connected())
+                .with("er_deg_min", er_lo)
+                .with("er_deg_max", er_hi)
+                .with("geo_deg_min", geo_lo)
+                .with("geo_deg_max", geo_hi)],
+        },
+    );
+    let frac = |field: &str| {
+        out.iter().map(|c| only(c).num(field)).sum::<f64>() / trials as f64
+    };
+    let agg = |field: &str, max: bool| {
+        let it = out.iter().map(|c| only(c).num(field) as usize);
+        if max { it.max().unwrap() } else { it.min().unwrap() }
+    };
+    let (er_lo, er_hi) = (agg("er_deg_min", false), agg("er_deg_max", true));
+    let (geo_lo, geo_hi) = (agg("geo_deg_min", false), agg("geo_deg_max", true));
     let exp_w = static_weights(TopologyKind::StaticExp, n, 0);
     let (exp_lo, exp_hi) = degree_spread(&exp_w);
+
+    let mut sink = Sink::new(vec![
+        Col::auto("graph"),
+        Col::auto("connected_frac"),
+        Col::auto("deg_min"),
+        Col::auto("deg_max"),
+    ]);
+    sink.push(
+        &Record::new()
+            .with("graph", "erdos_renyi")
+            .with("connected_frac", frac("er_connected"))
+            .with("deg_min", er_lo)
+            .with("deg_max", er_hi),
+    );
+    sink.push(
+        &Record::new()
+            .with("graph", "geometric")
+            .with("connected_frac", frac("geo_connected"))
+            .with("deg_min", geo_lo)
+            .with("deg_max", geo_hi),
+    );
+    sink.push(
+        &Record::new()
+            .with("graph", "static_exp")
+            .with("connected_frac", 1.0)
+            .with("deg_min", exp_lo)
+            .with("deg_max", exp_hi),
+    );
+    sink.write(&ctx.out_dir, "table6")?;
+
     let mut t = TextTable::new(&[
         "graph", "per-iter comm", "connected (frac)", "degree min..max", "transient (theory)",
     ]);
     t.row(vec![
         "erdos_renyi".into(),
         format!("~{} (expected)", analytic_degree(TopologyKind::ErdosRenyi, n)),
-        format!("{:.2}", connected_er as f64 / trials as f64),
-        format!("{}..{}", er_spread.0, er_spread.1),
+        table_num(frac("er_connected"), NumFmt::Fixed(2)),
+        format!("{er_lo}..{er_hi}"),
         "O(n^3) (if connected)".into(),
     ]);
     t.row(vec![
         "geometric".into(),
         format!("~{} (expected)", analytic_degree(TopologyKind::Geometric, n)),
-        format!("{:.2}", connected_geo as f64 / trials as f64),
-        format!("{}..{}", geo_spread.0, geo_spread.1),
+        table_num(frac("geo_connected"), NumFmt::Fixed(2)),
+        format!("{geo_lo}..{geo_hi}"),
         "O(n^5)".into(),
     ]);
     t.row(vec![
@@ -341,71 +508,99 @@ pub fn table6(ctx: &Ctx) -> Result<()> {
     ]);
     println!("Table 6 — exponential vs random graphs, n = {n}, {trials} trials");
     println!("{}", t.render());
-    let mut csv = CsvWriter::new(&["graph", "connected_frac", "deg_min", "deg_max"]);
-    csv.row(&[
-        "erdos_renyi".into(),
-        format!("{}", connected_er as f64 / trials as f64),
-        er_spread.0.to_string(),
-        er_spread.1.to_string(),
-    ]);
-    csv.row(&[
-        "geometric".into(),
-        format!("{}", connected_geo as f64 / trials as f64),
-        geo_spread.0.to_string(),
-        geo_spread.1.to_string(),
-    ]);
-    csv.row(&["static_exp".into(), "1".into(), exp_lo.to_string(), exp_hi.to_string()]);
-    csv.write(ctx.csv_path("table6"))?;
     println!("  csv: {}", ctx.csv_path("table6").display());
     Ok(())
 }
 
+/// One Tables 7/8 grid cell: a full training run whose MSE curve is the
+/// cell record stream (the parallel-SGD baseline is its own grid row,
+/// trained **once per n** instead of once per topology × n as the old
+/// hand-rolled loop did).
+#[derive(Clone, Debug)]
+struct TransientCell {
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    n: usize,
+}
+
 fn transient_table(ctx: &Ctx, name: &str, heterogeneous: bool) -> Result<()> {
     let sizes = [8usize, 16, 32];
-    let kinds = [
-        TopologyKind::Ring,
-        TopologyKind::Grid2D,
-        TopologyKind::StaticExp,
-        TopologyKind::OnePeerExp,
-    ];
+    let kinds = TRANSIENT_KINDS;
     let iters = ctx.scaled(5000);
     let samples = ctx.scaled(4000).max(500);
-    let mut t = TextTable::new(&["topology", "n=8", "n=16", "n=32"]);
-    let mut csv = CsvWriter::new(&["topology", "nodes", "transient_iters"]);
-    let mut measured: Vec<Vec<i64>> = Vec::new();
+    let seed = ctx.seed;
+    // A ragged grid: baseline rows first (one per n — trained once,
+    // where the old loops re-ran it per topology), then the product.
+    let mut cells: Vec<TransientCell> = sizes
+        .iter()
+        .map(|&n| TransientCell {
+            kind: TopologyKind::FullyConnected,
+            algo: AlgorithmKind::ParallelSgd,
+            n,
+        })
+        .collect();
     for kind in kinds {
-        let mut row = vec![kind.name().to_string()];
-        let mut per_kind = Vec::new();
         for &n in &sizes {
-            let problem = paper_problem(n, samples, heterogeneous, ctx.seed + n as u64);
-            let x_star = global_minimizer(&problem, 500);
-            let mk = |topology, algorithm| LogRegRun {
-                topology,
-                algorithm,
+            cells.push(TransientCell { kind, algo: AlgorithmKind::DmSgd, n });
+        }
+    }
+    let grid = Grid::from_cells(cells);
+    // One shared (problem, x*) per n — every topology row of a size
+    // reuses it instead of re-solving the minimizer per cell; warm
+    // (cached) sweeps never solve it at all.
+    let setups: Vec<OnceLock<(LogRegProblem, Vec<f64>)>> =
+        sizes.iter().map(|_| OnceLock::new()).collect();
+    let out = ctx.runner(name).run(
+        grid.cells(),
+        |cell| format!("{cell:?} iters={iters} samples={samples} hetero={heterogeneous}"),
+        |cell, cc| {
+            let ni = sizes.iter().position(|&m| m == cell.n).expect("cell n is on the size axis");
+            let (problem, x_star) = setups[ni].get_or_init(|| {
+                let problem =
+                    paper_problem(cell.n, samples, heterogeneous, seed + cell.n as u64);
+                let x_star = global_minimizer(&problem, 500);
+                (problem, x_star)
+            });
+            let run = LogRegRun {
+                topology: cell.kind,
+                algorithm: cell.algo,
                 beta: 0.8,
-                lr: LrSchedule::HalveEvery { init: 0.1, every: iters / 4 },
+                lr: LrSchedule::HalveEvery { init: 0.1, every: (iters / 4).max(1) },
                 iters,
                 batch: 8,
                 record_every: 25,
-                seed: ctx.seed + 7 * n as u64,
+                seed: seed + 7 * cell.n as u64,
             };
-            let dec = run_logreg(&problem, &x_star, &mk(kind, AlgorithmKind::DmSgd));
-            let par = run_logreg(
-                &problem,
-                &x_star,
-                &mk(TopologyKind::FullyConnected, AlgorithmKind::ParallelSgd),
-            );
+            curve_records(&run_logreg_with(problem, x_star, &run, Some(cc.lanes)))
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("nodes"),
+        Col::auto("transient_iters"),
+    ]);
+    let mut header = vec!["topology".to_string()];
+    header.extend(sizes.iter().map(|n| format!("n={n}")));
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (ki, kind) in kinds.iter().enumerate() {
+        let mut row = vec![kind.name().to_string()];
+        for (ni, &n) in sizes.iter().enumerate() {
+            let dec = records_curve(&out[sizes.len() + ki * sizes.len() + ni].records);
+            let par = records_curve(&out[ni].records);
             let transient = transient_iterations(&dec.mse, &par.mse, 1.5, 4)
                 .map(|i| dec.iters[i] as i64)
                 .unwrap_or(-1);
-            per_kind.push(transient);
             row.push(if transient < 0 { ">iters".into() } else { transient.to_string() });
-            csv.row(&[kind.name().into(), n.to_string(), transient.to_string()]);
+            sink.push(
+                &Record::new()
+                    .with("topology", kind.name())
+                    .with("nodes", n)
+                    .with("transient_iters", transient),
+            );
         }
-        measured.push(per_kind);
         t.row(row);
     }
-    csv.write(ctx.csv_path(name))?;
+    sink.write(&ctx.out_dir, name)?;
     let label = if heterogeneous { "heterogeneous" } else { "homogeneous" };
     println!("Table {} — measured transient iterations ({label} data)", &name[5..]);
     println!("{}", t.render());
@@ -424,72 +619,115 @@ pub fn table8(ctx: &Ctx) -> Result<()> {
     transient_table(ctx, "table8", true)
 }
 
-/// Table 9 — exponential graphs when n is not a power of 2.
-pub fn table9(ctx: &Ctx) -> Result<()> {
-    let data = table_dataset(ctx.seed + 9);
-    let sizes = [6usize, 9, 12, 15];
-    let iters = ctx.scaled(1200);
-    let mut t = TextTable::new(&["topology", "n=6", "n=9", "n=12", "n=15"]);
-    let mut csv = CsvWriter::new(&["topology", "nodes", "val_acc"]);
-    for kind in [TopologyKind::StaticExp, TopologyKind::OnePeerExp] {
+/// Shared Tables 9/10 declaration: a topology × n accuracy grid at one
+/// algorithm, printed as the paper's pivot.
+struct AccGrid<'a> {
+    name: &'a str,
+    title: &'a str,
+    kinds: &'a [TopologyKind],
+    sizes: &'a [usize],
+    algorithm: AlgorithmKind,
+    lr: f32,
+    beta: f32,
+    iters: usize,
+}
+
+fn acc_grid_table(
+    ctx: &Ctx,
+    make_data: impl Fn() -> ClassifyData + Sync,
+    g: &AccGrid,
+) -> Result<()> {
+    // Generated lazily by the first cold cell; a fully warm (cached)
+    // run never synthesizes the dataset.
+    let data: OnceLock<ClassifyData> = OnceLock::new();
+    let grid = Grid::product2(
+        &Axis::new("topology", g.kinds.to_vec()),
+        &Axis::new("n", g.sizes.to_vec()),
+        |&kind, &n| ClassifySpec {
+            nodes: n,
+            topology: kind,
+            algorithm: g.algorithm,
+            hidden: 32,
+            iters: g.iters,
+            batch: 32,
+            lr: g.lr,
+            beta: g.beta,
+            heterogeneous: false,
+            seed: ctx.seed,
+        },
+    );
+    let out = ctx.runner(g.name).run(
+        grid.cells(),
+        |spec| format!("{spec:?}"),
+        |spec, cc| {
+            let data = data.get_or_init(&make_data);
+            vec![classify_record(spec, &run_classify_with(data, spec, Some(cc.lanes)))]
+        },
+    );
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("nodes"),
+        Col::auto("val_acc"),
+    ]);
+    for cell in &out {
+        sink.push(only(cell));
+    }
+    sink.write(&ctx.out_dir, g.name)?;
+
+    let mut header = vec!["topology".to_string()];
+    header.extend(g.sizes.iter().map(|n| format!("n={n}")));
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for (ki, kind) in g.kinds.iter().enumerate() {
         let mut row = vec![kind.name().to_string()];
-        for &n in &sizes {
-            let spec = ClassifySpec {
-                nodes: n,
-                topology: kind,
-                algorithm: AlgorithmKind::DmSgd,
-                hidden: 32,
-                iters,
-                batch: 32,
-                lr: 0.03, // momentum-scaled (see table2)
-                beta: 0.9,
-                heterogeneous: false,
-                seed: ctx.seed,
-            };
-            let r = run_classify(&data, &spec);
-            row.push(format!("{:.2}", 100.0 * r.val_acc));
-            csv.row(&[kind.name().into(), n.to_string(), format!("{:.4}", r.val_acc)]);
+        for ni in 0..g.sizes.len() {
+            row.push(table_num(
+                only(&out[ki * g.sizes.len() + ni]).num("val_acc"),
+                NumFmt::Pct(2),
+            ));
         }
         t.row(row);
     }
-    csv.write(ctx.csv_path("table9"))?;
-    println!("Table 9 — accuracy (%) with n not a power of 2 (DmSGD)");
+    println!("{}", g.title);
     println!("{}", t.render());
+    Ok(())
+}
+
+/// Table 9 — exponential graphs when n is not a power of 2.
+pub fn table9(ctx: &Ctx) -> Result<()> {
+    acc_grid_table(
+        ctx,
+        || table_dataset(ctx.seed + 9),
+        &AccGrid {
+            name: "table9",
+            title: "Table 9 — accuracy (%) with n not a power of 2 (DmSGD)",
+            kinds: &EXP_PAIR,
+            sizes: &[6, 9, 12, 15],
+            algorithm: AlgorithmKind::DmSgd,
+            lr: 0.03, // momentum-scaled (see table2)
+            beta: 0.9,
+            iters: ctx.scaled(1200),
+        },
+    )?;
     println!("  csv: {}", ctx.csv_path("table9").display());
     Ok(())
 }
 
 /// Table 10 — DSGD (β = 0) across topologies.
 pub fn table10(ctx: &Ctx) -> Result<()> {
-    let data = table_dataset(ctx.seed + 10);
-    let sizes = [4usize, 8, 16];
-    let iters = ctx.scaled(1200);
-    let mut t = TextTable::new(&["topology", "n=4", "n=8", "n=16"]);
-    let mut csv = CsvWriter::new(&["topology", "nodes", "val_acc"]);
-    for kind in [TopologyKind::Ring, TopologyKind::StaticExp, TopologyKind::OnePeerExp] {
-        let mut row = vec![kind.name().to_string()];
-        for &n in &sizes {
-            let spec = ClassifySpec {
-                nodes: n,
-                topology: kind,
-                algorithm: AlgorithmKind::DSgd,
-                hidden: 32,
-                iters,
-                batch: 32,
-                lr: 0.1,
-                beta: 0.0,
-                heterogeneous: false,
-                seed: ctx.seed,
-            };
-            let r = run_classify(&data, &spec);
-            row.push(format!("{:.2}", 100.0 * r.val_acc));
-            csv.row(&[kind.name().into(), n.to_string(), format!("{:.4}", r.val_acc)]);
-        }
-        t.row(row);
-    }
-    csv.write(ctx.csv_path("table10"))?;
-    println!("Table 10 — DSGD (no momentum) accuracy (%)");
-    println!("{}", t.render());
+    acc_grid_table(
+        ctx,
+        || table_dataset(ctx.seed + 10),
+        &AccGrid {
+            name: "table10",
+            title: "Table 10 — DSGD (no momentum) accuracy (%)",
+            kinds: &[TopologyKind::Ring, TopologyKind::StaticExp, TopologyKind::OnePeerExp],
+            sizes: &[4, 8, 16],
+            algorithm: AlgorithmKind::DSgd,
+            lr: 0.1,
+            beta: 0.0,
+            iters: ctx.scaled(1200),
+        },
+    )?;
     println!("  (expect: lower than the DmSGD rows of Table 2 — momentum matters)");
     println!("  csv: {}", ctx.csv_path("table10").display());
     Ok(())
@@ -498,17 +736,25 @@ pub fn table10(ctx: &Ctx) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::SweepConfig;
 
     #[test]
     fn quick_smoke_of_light_experiments() {
         // fig/table functions that are cheap enough for unit tests.
         let tmp = std::env::temp_dir().join(format!("expograph-exp-{}", std::process::id()));
-        let ctx = Ctx { out_dir: tmp.clone(), scale: 0.02, seed: 3 };
+        let ctx = Ctx {
+            out_dir: tmp.clone(),
+            scale: 0.02,
+            seed: 3,
+            sweep: SweepConfig { jobs: 2, cache: true },
+        };
         table1(&ctx).unwrap();
         table5(&ctx).unwrap();
         table6(&ctx).unwrap();
         assert!(tmp.join("table1.csv").exists());
+        assert!(tmp.join("table1.json").exists());
         assert!(tmp.join("table5.csv").exists());
+        assert!(tmp.join(".cache").is_dir(), "sweep cache populated");
         std::fs::remove_dir_all(&tmp).ok();
     }
 

@@ -36,8 +36,12 @@
 //! * [`data`], [`models`] — synthetic workloads (logistic regression per
 //!   Appendix D.5, classification, tiny-corpus LM) and pure-Rust reference
 //!   models for laptop-scale sweeps.
+//! * [`sweep`] — the declarative sweep harness: `Axis`/`Grid` experiment
+//!   grids, a lane-budgeted parallel cell scheduler with deterministic
+//!   grid-order collection, a `Record`/`Sink` output schema (CSV + JSON +
+//!   text table from one definition), and an on-disk result cache.
 //! * [`exp`] — the experiment harness regenerating every table and figure
-//!   of the paper's evaluation.
+//!   of the paper's evaluation, declared as [`sweep`] grids.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request/training path is pure Rust.
@@ -56,5 +60,6 @@ pub mod netsim;
 pub mod optim;
 pub mod runtime;
 pub mod spectral;
+pub mod sweep;
 pub mod topology;
 pub mod util;

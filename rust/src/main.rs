@@ -8,7 +8,7 @@
 //!   info                                              artifact + runtime status
 
 use anyhow::{bail, Context, Result};
-use expograph::config::{NetSimRunConfig, RunConfig};
+use expograph::config::{parse_switch, NetSimRunConfig, RunConfig};
 use expograph::coordinator::trainer::{TrainConfig, Trainer};
 use expograph::coordinator::LrSchedule;
 use expograph::costmodel::CostModel;
@@ -17,25 +17,44 @@ use expograph::spectral;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 
-const USAGE: &str = "\
+/// The `exp` id list, generated from [`exp::ALL`] (the dispatch table)
+/// so the usage text can never omit an experiment again — wrapped to
+/// readable lines.
+fn exp_id_lines() -> String {
+    exp::ALL
+        .chunks(7)
+        .map(|chunk| chunk.join(" "))
+        .collect::<Vec<_>>()
+        .join("\n           ")
+}
+
+fn usage() -> String {
+    format!(
+        "\
 expograph — decentralized deep training over exponential graphs
   (reproduction of Ying et al., NeurIPS 2021)
 
 USAGE:
-  expograph exp <id|all> [--scale S] [--seed N] [--out DIR]
-      ids: fig1 fig3 fig4 fig10 fig11 fig12 fig13
-           table1 table2 table3 table4 table5 table6 table7 table8 table9 table10
+  expograph exp <id|all> [--scale S] [--seed N] [--out DIR] [--jobs N] [--cache on|off]
+      ids: {ids}
       --scale S   protocol scale factor (1.0 = paper protocol, 0.1 = smoke)
+      --jobs N    parallel sweep cells (0 = auto, one per core; engine
+                  lanes are budgeted so jobs x lanes <= cores)
+      --cache     on|off: serve completed cells from <out>/.cache/ (default on)
   expograph train [--config FILE] [key=value ...]
       keys: nodes topology algorithm iters lr beta batch heterogeneous seed
   expograph netsim [--out DIR] [key=value ...]
       discrete-event network simulation: topology x n x scenario
       time-to-target table (writes netsim.json + netsim.csv)
       keys: nodes topologies scenarios iters dim tol msg_bytes compute seed
+            jobs cache
       e.g.: nodes=8,64 topologies=ring,one_peer_exp scenarios=clean,lossy
   expograph spectral <topology> <n>
   expograph info
-";
+",
+        ids = exp_id_lines()
+    )
+}
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -46,10 +65,10 @@ fn main() -> Result<()> {
         Some("spectral") => cmd_spectral(&args[1..]),
         Some("info") => cmd_info(),
         Some("--help" | "-h" | "help") | None => {
-            print!("{USAGE}");
+            print!("{}", usage());
             Ok(())
         }
-        Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
+        Some(other) => bail!("unknown subcommand {other}\n{}", usage()),
     }
 }
 
@@ -67,6 +86,12 @@ fn cmd_exp(args: &[String]) -> Result<()> {
             }
             "--out" => {
                 ctx.out_dir = it.next().context("--out needs a value")?.into();
+            }
+            "--jobs" => {
+                ctx.sweep.jobs = it.next().context("--jobs needs a value")?.parse()?;
+            }
+            "--cache" => {
+                ctx.sweep.cache = parse_switch(it.next().context("--cache needs on|off")?)?;
             }
             other if id.is_none() => id = Some(other),
             other => bail!("unexpected argument {other}"),

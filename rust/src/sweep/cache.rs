@@ -1,0 +1,129 @@
+//! On-disk sweep result cache: completed cells persist their records
+//! under `<out_dir>/.cache/` keyed by (experiment id, cell-spec hash,
+//! seed, scale), so re-running `exp all` skips every completed training
+//! cell. A cache entry embeds its full key string, so a hash collision
+//! or a stale entry from an older spec shape degrades to a miss, never
+//! to wrong data.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::sink::Record;
+use crate::util::json::Json;
+
+/// FNV-1a, the classic 64-bit string hash — stable across runs and
+/// platforms (cache file names must not depend on `DefaultHasher`'s
+/// per-process seed).
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Cache format tag folded into every key (alongside the automatic
+/// source fingerprint below); bump it if the on-disk entry *encoding*
+/// itself ever changes shape.
+pub const FORMAT: &str = "sweep-v1";
+
+/// FNV-1a over every `.rs` file under `rust/src/`, computed by
+/// `build.rs`. Folding it into the key means **any source change
+/// invalidates the whole cache** — a fixed optimizer kernel or a new
+/// sink column can never be silently papered over by results computed
+/// with an older binary (the failure mode that matters most in a
+/// paper-reproduction repo).
+pub const SRC_FINGERPRINT: &str = env!("EXPOGRAPH_SRC_FINGERPRINT");
+
+/// The full cache key: format tag, source fingerprint, experiment id,
+/// seed, and scale prefix the cell-spec key, so changing any of them
+/// invalidates every cell.
+pub fn full_key(id: &str, seed: u64, scale: f64, cell_key: &str) -> String {
+    format!("{FORMAT}|src={SRC_FINGERPRINT}|{id}|seed={seed}|scale={scale}|{cell_key}")
+}
+
+/// Handle on one sweep cache directory.
+#[derive(Clone, Debug)]
+pub struct Cache {
+    dir: PathBuf,
+}
+
+impl Cache {
+    /// Cache under `<out_dir>/.cache/` (created lazily on first store).
+    pub fn under(out_dir: &Path) -> Cache {
+        Cache { dir: out_dir.join(".cache") }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn path(&self, id: &str, full_key: &str) -> PathBuf {
+        self.dir.join(format!("{id}-{:016x}.json", fnv1a(full_key)))
+    }
+
+    /// Look a cell up; any failure (absent, unparseable, key mismatch)
+    /// is a miss.
+    pub fn load(&self, id: &str, full_key: &str) -> Option<Vec<Record>> {
+        let text = std::fs::read_to_string(self.path(id, full_key)).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("key")?.as_str()? != full_key {
+            return None;
+        }
+        doc.get("records")?.as_array()?.iter().map(Record::from_json).collect()
+    }
+
+    /// Persist a completed cell. Failure is a warning, never an error —
+    /// a read-only results directory must not fail the sweep itself.
+    pub fn store(&self, id: &str, full_key: &str, records: &[Record]) {
+        let mut root = BTreeMap::new();
+        root.insert("key".to_string(), Json::Str(full_key.to_string()));
+        root.insert(
+            "records".to_string(),
+            Json::Arr(records.iter().map(Record::to_json).collect()),
+        );
+        let path = self.path(id, full_key);
+        let written = std::fs::create_dir_all(&self.dir)
+            .and_then(|()| std::fs::write(&path, format!("{}\n", Json::Obj(root))));
+        if let Err(e) = written {
+            eprintln!("[sweep] warning: cache write {} failed: {e}", path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_then_load_roundtrips_records() {
+        let tmp = std::env::temp_dir().join(format!("expograph-cache-{}", std::process::id()));
+        let cache = Cache::under(&tmp);
+        let key = full_key("t", 1, 0.5, "cell a");
+        let records = vec![
+            Record::new().with("x", 1.5).with("label", "a"),
+            Record::new().with("x", f64::NAN).with("label", "b"),
+        ];
+        assert!(cache.load("t", &key).is_none());
+        cache.store("t", &key, &records);
+        let back = cache.load("t", &key).expect("hit after store");
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].num("x"), 1.5);
+        assert!(back[1].num("x").is_nan());
+        assert_eq!(back[1].text("label"), "b");
+        // Different seed/scale/cell key ⇒ miss.
+        assert!(cache.load("t", &full_key("t", 2, 0.5, "cell a")).is_none());
+        assert!(cache.load("t", &full_key("t", 1, 0.25, "cell a")).is_none());
+        assert!(cache.load("t", &full_key("t", 1, 0.5, "cell b")).is_none());
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn fnv1a_is_stable() {
+        // Known FNV-1a vectors (the empty string is the offset basis).
+        assert_eq!(fnv1a(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a("a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a("cell a"), fnv1a("cell b"));
+    }
+}

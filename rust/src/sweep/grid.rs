@@ -1,0 +1,121 @@
+//! Declarative experiment grids: named [`Axis`] values combined by
+//! cartesian product into a [`Grid`] of typed cell specs, in a fixed
+//! **grid order** (outer axis slowest) that the scheduler's collection
+//! step preserves — output is byte-identical for any `--jobs`.
+
+/// One named dimension of a sweep (`topology`, `n`, `algorithm`, …).
+///
+/// The name exists to make grid declarations self-documenting at the
+/// call site; it deliberately does **not** flow into cache keys or
+/// sink columns — those come from the typed cell spec the product
+/// constructor builds, which is the single source of truth.
+#[derive(Clone, Debug)]
+pub struct Axis<T> {
+    pub name: &'static str,
+    pub values: Vec<T>,
+}
+
+impl<T> Axis<T> {
+    pub fn new(name: &'static str, values: impl Into<Vec<T>>) -> Axis<T> {
+        Axis { name: name.into(), values: values.into() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+/// A flat list of typed cell specs in grid order. The index arithmetic
+/// (`product2` ⇒ `i·|b| + j`) is part of the contract: experiments use
+/// it to pivot collected results back into paper-style tables.
+#[derive(Clone, Debug)]
+pub struct Grid<S> {
+    cells: Vec<S>,
+}
+
+impl<S> Grid<S> {
+    /// Escape hatch for ragged (non-product) grids — e.g. a sweep whose
+    /// cell list includes a baseline row outside the product.
+    pub fn from_cells(cells: Vec<S>) -> Grid<S> {
+        Grid { cells }
+    }
+
+    /// Cartesian product of two axes; cell `(i, j)` lands at `i·|b| + j`.
+    pub fn product2<A, B>(a: &Axis<A>, b: &Axis<B>, mk: impl Fn(&A, &B) -> S) -> Grid<S> {
+        let mut cells = Vec::with_capacity(a.len() * b.len());
+        for x in &a.values {
+            for y in &b.values {
+                cells.push(mk(x, y));
+            }
+        }
+        Grid { cells }
+    }
+
+    /// Cartesian product of three axes; cell `(i, j, k)` lands at
+    /// `(i·|b| + j)·|c| + k`.
+    pub fn product3<A, B, C>(
+        a: &Axis<A>,
+        b: &Axis<B>,
+        c: &Axis<C>,
+        mk: impl Fn(&A, &B, &C) -> S,
+    ) -> Grid<S> {
+        let mut cells = Vec::with_capacity(a.len() * b.len() * c.len());
+        for x in &a.values {
+            for y in &b.values {
+                for z in &c.values {
+                    cells.push(mk(x, y, z));
+                }
+            }
+        }
+        Grid { cells }
+    }
+
+    pub fn cells(&self) -> &[S] {
+        &self.cells
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn product2_is_row_major() {
+        let g = Grid::product2(
+            &Axis::new("a", vec!["x", "y"]),
+            &Axis::new("b", vec![1usize, 2, 3]),
+            |&s, &n| (s, n),
+        );
+        assert_eq!(g.len(), 6);
+        assert_eq!(g.cells()[0], ("x", 1));
+        assert_eq!(g.cells()[2], ("x", 3));
+        // (i, j) lands at i·|b| + j.
+        let (i, j) = (1usize, 2usize);
+        assert_eq!(g.cells()[i * 3 + j], ("y", 3));
+    }
+
+    #[test]
+    fn product3_nests_last_axis_fastest() {
+        let g = Grid::product3(
+            &Axis::new("a", vec![0usize, 1]),
+            &Axis::new("b", vec![0usize, 1]),
+            &Axis::new("c", vec![0usize, 1, 2]),
+            |&a, &b, &c| (a, b, c),
+        );
+        assert_eq!(g.len(), 12);
+        let (i, j, k) = (1usize, 0usize, 2usize);
+        assert_eq!(g.cells()[(i * 2 + j) * 3 + k], (1, 0, 2));
+    }
+}

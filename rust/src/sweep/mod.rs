@@ -1,0 +1,183 @@
+//! Declarative sweep harness (docs/DESIGN.md §Sweep).
+//!
+//! The paper's whole evaluation is one grid — topology × algorithm ×
+//! n × dataset × scenario — and every runner in [`crate::exp`] used to
+//! hand-roll it as nested `for` loops with per-runner CSV plumbing and
+//! strictly serial cell execution. This module replaces those loops:
+//!
+//! * [`Axis`]/[`Grid`] — declare the cartesian product over typed cell
+//!   specs once; grid order is the output order.
+//! * [`Sweep::run`] — a bounded scheduler fans independent cells out
+//!   across a thread pool (`--jobs`, 0 = auto) under a **lane budget**
+//!   (`jobs × engine lanes ≤ cores`, [`sched::lane_budget`]) so outer
+//!   jobs and each cell's inner [`crate::engine::Engine`] compose
+//!   without oversubscription. Collection is **deterministic in grid
+//!   order**: training is bitwise lane-invariant (§Engine), so CSV /
+//!   JSON / table output is byte-identical for any job count.
+//! * [`Record`]/[`Sink`] — one schema per experiment streams to CSV +
+//!   JSON + paper-style text table, with the unified non-finite policy
+//!   (empty CSV field, `-` in tables, `null` in JSON).
+//! * [`Cache`] — completed cells persist under `<out>/.cache/` keyed by
+//!   (experiment id, cell-spec hash, seed, scale); a warm re-run of
+//!   `exp all` executes zero training cells.
+
+pub mod cache;
+pub mod grid;
+pub mod sched;
+pub mod sink;
+
+pub use cache::Cache;
+pub use grid::{Axis, Grid};
+pub use sink::{table_num, Col, NumFmt, Record, Sink, Value};
+
+use std::path::Path;
+
+/// Per-cell execution context handed to the run closure.
+pub struct CellCtx {
+    /// Index of this cell in grid order.
+    pub index: usize,
+    /// Engine lane cap for this cell (the lane budget): the cell may
+    /// use up to this many lanes without oversubscribing the sweep.
+    pub lanes: usize,
+}
+
+/// One collected cell: its records, and whether they came from cache.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub records: Vec<Record>,
+    pub cached: bool,
+}
+
+/// A configured sweep over one experiment id. Build via
+/// [`Sweep::new`] (or `exp::Ctx::runner`), then [`Sweep::run`] a grid.
+pub struct Sweep<'a> {
+    id: &'a str,
+    seed: u64,
+    scale: f64,
+    jobs: usize,
+    cache: Option<Cache>,
+}
+
+impl<'a> Sweep<'a> {
+    /// A sweep with no cache and auto job count. `seed` and `scale`
+    /// prefix every cell's cache key — changing either invalidates all
+    /// cells.
+    pub fn new(id: &'a str, seed: u64, scale: f64) -> Sweep<'a> {
+        Sweep { id, seed, scale, jobs: 0, cache: None }
+    }
+
+    /// Requested parallel jobs (0 = auto: one per core).
+    pub fn jobs(mut self, jobs: usize) -> Sweep<'a> {
+        self.jobs = jobs;
+        self
+    }
+
+    /// Enable the on-disk result cache under `<out_dir>/.cache/`.
+    pub fn cache_under(mut self, out_dir: &Path) -> Sweep<'a> {
+        self.cache = Some(Cache::under(out_dir));
+        self
+    }
+
+    /// Run every cell (cache-aware, lane-budgeted, parallel) and return
+    /// results in grid order. `key` must be a stable, injective
+    /// description of the cell spec (derived `Debug` of the spec struct
+    /// is the usual choice); `run_cell` produces the cell's records.
+    ///
+    /// The cache is probed up front and the job count is sized by the
+    /// **misses** — a nearly-warm sweep hands its few cold cells the
+    /// whole lane budget instead of a `cores/jobs` sliver sized for
+    /// cells that never execute.
+    pub fn run<S, K, F>(&self, cells: &[S], key: K, run_cell: F) -> Vec<CellResult>
+    where
+        S: Sync,
+        K: Fn(&S) -> String + Sync,
+        F: Fn(&S, &CellCtx) -> Vec<Record> + Sync,
+    {
+        let t0 = std::time::Instant::now();
+        let keys: Vec<String> = cells
+            .iter()
+            .map(|cell| cache::full_key(self.id, self.seed, self.scale, &key(cell)))
+            .collect();
+        let preloaded: Vec<Option<Vec<Record>>> = match &self.cache {
+            Some(cache) => keys.iter().map(|k| cache.load(self.id, k)).collect(),
+            None => cells.iter().map(|_| None).collect(),
+        };
+        let misses = preloaded.iter().filter(|r| r.is_none()).count();
+        let jobs = sched::effective_jobs(self.jobs, misses);
+        let lanes = sched::lane_budget(jobs);
+        let results = sched::run_parallel(cells, jobs, &|index, cell| {
+            if let Some(records) = &preloaded[index] {
+                return CellResult { records: records.clone(), cached: true };
+            }
+            let records = run_cell(cell, &CellCtx { index, lanes });
+            if let Some(cache) = &self.cache {
+                cache.store(self.id, &keys[index], &records);
+            }
+            CellResult { records, cached: false }
+        });
+        // Stderr on purpose: stdout is the deterministic report surface.
+        eprintln!(
+            "[sweep {}] {} cells ({} run, {} cached) in {:.1}s — jobs={jobs}, lane cap={lanes}",
+            self.id,
+            cells.len(),
+            misses,
+            cells.len() - misses,
+            t0.elapsed().as_secs_f64()
+        );
+        results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn uncached_sweep_runs_every_cell_in_order() {
+        let sweep = Sweep::new("unit", 1, 1.0).jobs(3);
+        let cells: Vec<usize> = (0..10).collect();
+        let out = sweep.run(
+            &cells,
+            |c| format!("{c}"),
+            |&c, cc| {
+                assert!(cc.lanes >= 1);
+                vec![Record::new().with("v", c * 2)]
+            },
+        );
+        assert_eq!(out.len(), 10);
+        for (i, cell) in out.iter().enumerate() {
+            assert!(!cell.cached);
+            assert_eq!(cell.records[0].num("v"), (i * 2) as f64);
+        }
+    }
+
+    #[test]
+    fn cache_skips_reruns_and_seed_invalidates() {
+        let tmp = std::env::temp_dir().join(format!("expograph-sweep-{}", std::process::id()));
+        let cells: Vec<usize> = (0..4).collect();
+        let runs = AtomicUsize::new(0);
+        let run_all = |seed: u64| {
+            Sweep::new("unit", seed, 1.0).jobs(2).cache_under(&tmp).run(
+                &cells,
+                |c| format!("{c}"),
+                |&c, _| {
+                    runs.fetch_add(1, Ordering::Relaxed);
+                    vec![Record::new().with("v", c)]
+                },
+            )
+        };
+        let cold = run_all(7);
+        assert_eq!(runs.load(Ordering::Relaxed), 4);
+        assert!(cold.iter().all(|c| !c.cached));
+        let warm = run_all(7);
+        assert_eq!(runs.load(Ordering::Relaxed), 4, "warm run must execute zero cells");
+        assert!(warm.iter().all(|c| c.cached));
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.records, b.records);
+        }
+        run_all(8);
+        assert_eq!(runs.load(Ordering::Relaxed), 8, "new seed must invalidate");
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

@@ -1,0 +1,121 @@
+//! Bounded job scheduler for sweep cells: fans independent cells out
+//! across a thread pool, with a **lane budget** so the outer sweep jobs
+//! and each cell's inner [`crate::engine::Engine`] never oversubscribe
+//! the machine (`jobs × lanes ≤ cores`), and **deterministic collection
+//! in grid order** so output is byte-identical for any job count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Host parallelism (≥ 1).
+pub fn cores() -> usize {
+    std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+}
+
+/// Resolve a requested job count: `0` means auto (one job per core),
+/// and no point spawning more jobs than cells.
+pub fn effective_jobs(requested: usize, cells: usize) -> usize {
+    let jobs = if requested == 0 { cores() } else { requested };
+    jobs.clamp(1, cells.max(1))
+}
+
+/// Pure lane-budget arithmetic (separated from [`cores`] so tests can
+/// pin it for any machine shape): the largest per-job engine lane count
+/// with `jobs × lanes ≤ cores`, floored at 1 lane.
+pub fn lane_budget_for(cores: usize, jobs: usize) -> usize {
+    (cores / jobs.max(1)).max(1)
+}
+
+/// Per-job engine lane cap on this host.
+pub fn lane_budget(jobs: usize) -> usize {
+    lane_budget_for(cores(), jobs)
+}
+
+/// Run `run(index, cell)` for every cell on a pool of `jobs` worker
+/// threads (work-stealing via a shared cursor) and return the results
+/// **in cell order** — the caller cannot observe the execution order.
+///
+/// A panicking cell propagates to the caller once every in-flight cell
+/// has finished (the panic surfaces when the thread scope joins).
+pub fn run_parallel<S, R>(cells: &[S], jobs: usize, run: &(dyn Fn(usize, &S) -> R + Sync)) -> Vec<R>
+where
+    S: Sync,
+    R: Send,
+{
+    let jobs = effective_jobs(jobs, cells.len());
+    if jobs <= 1 || cells.len() <= 1 {
+        return cells.iter().enumerate().map(|(i, c)| run(i, c)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = cells.iter().map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= cells.len() {
+                    break;
+                }
+                let result = run(i, &cells[i]);
+                *slots[i].lock().unwrap() = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| slot.into_inner().unwrap().expect("every cell completed"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_come_back_in_cell_order_for_any_job_count() {
+        let cells: Vec<usize> = (0..37).collect();
+        let want: Vec<usize> = cells.iter().map(|c| c * c).collect();
+        for jobs in [1usize, 2, 4, 16] {
+            let got = run_parallel(&cells, jobs, &|_, &c| c * c);
+            assert_eq!(got, want, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn lane_budget_never_oversubscribes() {
+        for cores in [1usize, 2, 4, 8, 96] {
+            for jobs in 1..=cores {
+                let lanes = lane_budget_for(cores, jobs);
+                assert!(lanes >= 1);
+                assert!(
+                    jobs * lanes <= cores,
+                    "jobs={jobs} × lanes={lanes} > cores={cores}"
+                );
+            }
+            // More jobs than cores: the budget floors at one lane each —
+            // the engine never *multiplies* the user's oversubscription.
+            assert_eq!(lane_budget_for(cores, cores * 3), 1);
+        }
+    }
+
+    #[test]
+    fn effective_jobs_resolves_auto_and_caps_at_cells() {
+        assert_eq!(effective_jobs(0, 1000), cores());
+        assert_eq!(effective_jobs(5, 3), 3);
+        assert_eq!(effective_jobs(5, 0), 1);
+        assert_eq!(effective_jobs(2, 100), 2);
+    }
+
+    #[test]
+    fn cell_panic_propagates() {
+        let cells: Vec<usize> = (0..8).collect();
+        let caught = std::panic::catch_unwind(|| {
+            run_parallel(&cells, 4, &|_, &c| {
+                if c == 5 {
+                    panic!("boom");
+                }
+                c
+            })
+        });
+        assert!(caught.is_err());
+    }
+}

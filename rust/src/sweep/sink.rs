@@ -1,0 +1,408 @@
+//! The sweep **sink layer**: one [`Record`] schema per experiment that
+//! streams to CSV, JSON, and paper-style text tables from a single
+//! definition (docs/DESIGN.md §Sweep).
+//!
+//! This is also the one place that decides how non-finite numbers are
+//! rendered: an **empty field** in CSV (via [`crate::util::csv::num_cell`]),
+//! a **`-`** in text tables ([`table_num`]), and **`null`** in JSON —
+//! experiments no longer hand-roll `is_nan` checks per call site.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::csv::{num_cell, CsvWriter};
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+use anyhow::{Context, Result};
+
+/// One cell value of a record: everything an experiment emits is a
+/// string, a number, or a flag. Non-finite numbers are legal — the
+/// renderers map them to the unified empty/`-`/`null` forms.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl Value {
+    /// Numeric view: `Num` as-is, `Bool` as 0/1 (handy for aggregation),
+    /// `Str` is NaN.
+    pub fn num(&self) -> f64 {
+        match self {
+            Value::Num(v) => *v,
+            Value::Bool(b) => f64::from(u8::from(*b)),
+            Value::Str(_) => f64::NAN,
+        }
+    }
+
+    /// Canonical CSV cell (full precision, non-finite ⇒ empty).
+    pub fn csv_cell(&self) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Num(v) => num_cell(*v),
+            Value::Bool(b) => b.to_string(),
+        }
+    }
+
+    /// Canonical text-table cell (non-finite ⇒ `-`).
+    pub fn table_cell(&self, fmt: NumFmt) -> String {
+        match self {
+            Value::Str(s) => s.clone(),
+            Value::Num(v) => table_num(*v, fmt),
+            Value::Bool(b) => b.to_string(),
+        }
+    }
+
+    /// JSON form (non-finite ⇒ `null` — `NaN`/`inf` are not JSON).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Value::Str(s) => Json::Str(s.clone()),
+            Value::Num(v) if v.is_finite() => Json::Num(*v),
+            Value::Num(_) => Json::Null,
+            Value::Bool(b) => Json::Bool(*b),
+        }
+    }
+
+    /// Inverse of [`Value::to_json`]; `null` comes back as NaN (the
+    /// non-finite distinction is collapsed — renderers treat all
+    /// non-finite values alike, so cached output stays byte-identical).
+    pub fn from_json(j: &Json) -> Option<Value> {
+        match j {
+            Json::Str(s) => Some(Value::Str(s.clone())),
+            Json::Num(v) => Some(Value::Num(*v)),
+            Json::Bool(b) => Some(Value::Bool(*b)),
+            Json::Null => Some(Value::Num(f64::NAN)),
+            _ => None,
+        }
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<String> for Value {
+    fn from(s: String) -> Value {
+        Value::Str(s)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::Num(v)
+    }
+}
+
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::Num(v as f64)
+    }
+}
+
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::Num(v as f64)
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+/// One named row of experiment output — what a sweep cell returns and
+/// what the result cache serializes. Field *names* address the values
+/// (sinks select by schema); fields are kept **name-sorted**, so
+/// equality and `Debug` are insertion-order-insensitive and records
+/// compare equal across a cache round-trip (which alphabetizes fields
+/// through the JSON object encoding) regardless of builder order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Record {
+    fields: Vec<(String, Value)>,
+}
+
+impl Record {
+    pub fn new() -> Record {
+        Record::default()
+    }
+
+    /// Builder-style field insert (name-sorted position). Panics on a
+    /// duplicate name: the JSON object encoding of the cache would
+    /// silently collapse duplicates, breaking warm/cold byte identity.
+    pub fn with(mut self, name: &str, value: impl Into<Value>) -> Record {
+        let pos = self.fields.partition_point(|(n, _)| n.as_str() < name);
+        if self.fields.get(pos).is_some_and(|(n, _)| n == name) {
+            panic!("record already has a field named '{name}'");
+        }
+        self.fields.insert(pos, (name.to_string(), value.into()));
+        self
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Value> {
+        self.fields.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    /// Numeric field accessor; panics on a missing field (a schema bug,
+    /// not a data condition — absent *values* are NaN, not absent fields).
+    pub fn num(&self, name: &str) -> f64 {
+        self.get(name).unwrap_or_else(|| panic!("record has no field '{name}'")).num()
+    }
+
+    /// String field accessor; panics unless the field is a `Str`.
+    pub fn text(&self, name: &str) -> &str {
+        match self.get(name) {
+            Some(Value::Str(s)) => s,
+            other => panic!("record field '{name}' is not a string: {other:?}"),
+        }
+    }
+
+    /// Boolean field accessor; panics unless the field is a `Bool`.
+    pub fn flag(&self, name: &str) -> bool {
+        match self.get(name) {
+            Some(Value::Bool(b)) => *b,
+            other => panic!("record field '{name}' is not a bool: {other:?}"),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        for (name, value) in &self.fields {
+            obj.insert(name.clone(), value.to_json());
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn from_json(j: &Json) -> Option<Record> {
+        let obj = j.as_object()?;
+        let mut rec = Record::new();
+        for (name, value) in obj {
+            rec.fields.push((name.clone(), Value::from_json(value)?));
+        }
+        Some(rec)
+    }
+}
+
+/// Text-table display format for numeric cells. CSV and JSON always get
+/// full precision; only the human-facing table rounds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NumFmt {
+    /// Shortest round-trip representation.
+    Auto,
+    /// Fixed decimals: `{:.p}`.
+    Fixed(usize),
+    /// Scientific: `{:.p e}` (the paper's residue/MSE style).
+    Sci(usize),
+    /// Percentage: `100·v` at fixed decimals (accuracy columns).
+    Pct(usize),
+    /// Signed percentage: `{:+.p}` of `100·v` (diff columns).
+    PctSigned(usize),
+}
+
+/// The canonical numeric **text-table** cell: non-finite renders as `-`
+/// (the satellite of docs/DESIGN.md §Sweep: one NaN policy, one place).
+pub fn table_num(v: f64, fmt: NumFmt) -> String {
+    if !v.is_finite() {
+        return "-".to_string();
+    }
+    match fmt {
+        NumFmt::Auto => num_cell(v),
+        NumFmt::Fixed(p) => format!("{v:.p$}"),
+        NumFmt::Sci(p) => format!("{v:.p$e}"),
+        NumFmt::Pct(p) => {
+            let x = 100.0 * v;
+            format!("{x:.p$}")
+        }
+        NumFmt::PctSigned(p) => {
+            let x = 100.0 * v;
+            format!("{x:+.p$}")
+        }
+    }
+}
+
+/// One output column: a record field name plus its table format.
+#[derive(Clone, Debug)]
+pub struct Col {
+    pub name: String,
+    pub fmt: NumFmt,
+}
+
+impl Col {
+    pub fn auto(name: impl Into<String>) -> Col {
+        Col { name: name.into(), fmt: NumFmt::Auto }
+    }
+
+    pub fn fixed(name: impl Into<String>, prec: usize) -> Col {
+        Col { name: name.into(), fmt: NumFmt::Fixed(prec) }
+    }
+
+    pub fn sci(name: impl Into<String>, prec: usize) -> Col {
+        Col { name: name.into(), fmt: NumFmt::Sci(prec) }
+    }
+}
+
+/// Collects records against a fixed column schema and renders all three
+/// output surfaces — `<name>.csv`, `<name>.json`, and a [`TextTable`] —
+/// from that one definition.
+pub struct Sink {
+    cols: Vec<Col>,
+    rows: Vec<Vec<Value>>,
+}
+
+impl Sink {
+    pub fn new(cols: Vec<Col>) -> Sink {
+        Sink { cols, rows: Vec::new() }
+    }
+
+    /// Append one record, selecting the schema's fields by name.
+    /// Panics on a missing field (schema/record mismatch is a bug).
+    pub fn push(&mut self, rec: &Record) {
+        let row = self
+            .cols
+            .iter()
+            .map(|c| {
+                rec.get(&c.name)
+                    .unwrap_or_else(|| panic!("record missing sink field '{}'", c.name))
+                    .clone()
+            })
+            .collect();
+        self.rows.push(row);
+    }
+
+    /// Append a raw row (for sinks fed by reshaped, cross-cell data —
+    /// e.g. the wide iteration-series CSVs of the figure experiments).
+    /// Panics on arity mismatch.
+    pub fn push_values(&mut self, row: Vec<Value>) {
+        assert_eq!(row.len(), self.cols.len(), "sink row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[Vec<Value>] {
+        &self.rows
+    }
+
+    pub fn csv(&self) -> CsvWriter {
+        let names: Vec<&str> = self.cols.iter().map(|c| c.name.as_str()).collect();
+        let mut w = CsvWriter::new(&names);
+        for row in &self.rows {
+            w.row(&row.iter().map(Value::csv_cell).collect::<Vec<_>>());
+        }
+        w
+    }
+
+    /// `{"columns": [...], "rows": [[...], ...]}` — column-ordered, so
+    /// the document round-trips the schema as well as the data.
+    pub fn json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert(
+            "columns".to_string(),
+            Json::Arr(self.cols.iter().map(|c| Json::Str(c.name.clone())).collect()),
+        );
+        root.insert(
+            "rows".to_string(),
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|row| Json::Arr(row.iter().map(Value::to_json).collect()))
+                    .collect(),
+            ),
+        );
+        Json::Obj(root)
+    }
+
+    pub fn table(&self) -> TextTable {
+        let names: Vec<&str> = self.cols.iter().map(|c| c.name.as_str()).collect();
+        let mut t = TextTable::new(&names);
+        for row in &self.rows {
+            t.row(row.iter().zip(&self.cols).map(|(v, c)| v.table_cell(c.fmt)).collect());
+        }
+        t
+    }
+
+    pub fn write_csv(&self, dir: &Path, name: &str) -> Result<()> {
+        let path = dir.join(format!("{name}.csv"));
+        self.csv().write(&path).with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, dir: &Path, name: &str) -> Result<()> {
+        let path = dir.join(format!("{name}.json"));
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {}", dir.display()))?;
+        std::fs::write(&path, format!("{}\n", self.json()))
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Write both machine-readable surfaces (`<name>.csv` + `<name>.json`).
+    pub fn write(&self, dir: &Path, name: &str) -> Result<()> {
+        self.write_csv(dir, name)?;
+        self.write_json(dir, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_roundtrips_through_json() {
+        let rec = Record::new()
+            .with("topology", "ring")
+            .with("n", 32usize)
+            .with("gap", 0.123456789)
+            .with("reached", true)
+            .with("missing", f64::NAN);
+        let back = Record::from_json(&Json::parse(&rec.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back.text("topology"), "ring");
+        assert_eq!(back.num("n"), 32.0);
+        assert_eq!(back.num("gap").to_bits(), 0.123456789f64.to_bits());
+        assert!(back.flag("reached"));
+        assert!(back.num("missing").is_nan());
+    }
+
+    #[test]
+    fn record_equality_is_builder_order_insensitive() {
+        // Cache round-trips alphabetize fields (JSON object encoding);
+        // name-sorted storage keeps cold == warm for any builder order.
+        let a = Record::new().with("value", 1.5).with("cell", 2usize);
+        let b = Record::new().with("cell", 2usize).with("value", 1.5);
+        assert_eq!(a, b);
+        let warm = Record::from_json(&Json::parse(&a.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(warm, a);
+    }
+
+    #[test]
+    fn nan_policy_empty_csv_dash_table_null_json() {
+        let mut sink = Sink::new(vec![Col::auto("name"), Col::fixed("v", 2)]);
+        sink.push(&Record::new().with("name", "a").with("v", 0.5));
+        sink.push(&Record::new().with("name", "b").with("v", f64::NAN));
+        let csv = sink.csv().render();
+        assert_eq!(csv, "name,v\na,0.5\nb,\n");
+        let table = sink.table().render();
+        assert!(table.contains("0.50"), "{table}");
+        assert!(table.lines().last().unwrap().trim_end().ends_with('-'), "{table}");
+        let json = sink.json().to_string();
+        assert!(json.contains("null"), "{json}");
+    }
+
+    #[test]
+    fn table_num_formats() {
+        assert_eq!(table_num(0.004321, NumFmt::Sci(2)), "4.32e-3");
+        assert_eq!(table_num(0.8512, NumFmt::Pct(2)), "85.12");
+        assert_eq!(table_num(0.0123, NumFmt::PctSigned(2)), "+1.23");
+        assert_eq!(table_num(-0.0123, NumFmt::PctSigned(2)), "-1.23");
+        assert_eq!(table_num(1.5, NumFmt::Fixed(3)), "1.500");
+        assert_eq!(table_num(f64::INFINITY, NumFmt::Fixed(3)), "-");
+        assert_eq!(table_num(f64::NAN, NumFmt::Auto), "-");
+    }
+
+    #[test]
+    fn sink_selects_schema_fields_by_name() {
+        let mut sink = Sink::new(vec![Col::auto("b"), Col::auto("a")]);
+        sink.push(&Record::new().with("a", 1usize).with("b", 2usize).with("extra", 3usize));
+        assert_eq!(sink.csv().render(), "b,a\n2,1\n");
+    }
+}

@@ -5,6 +5,23 @@ use std::fs;
 use std::io::Write;
 use std::path::Path;
 
+/// The canonical numeric CSV cell: shortest round-trip representation,
+/// negative zero normalized to `0`, and **non-finite values as an empty
+/// field** — the sink-layer NaN policy (docs/DESIGN.md §Sweep) shared by
+/// [`CsvWriter::row_f64`] and [`crate::sweep::Sink`]. Empty-vs-`0`
+/// matters: an absent measurement must not plot as a data point.
+pub fn num_cell(v: f64) -> String {
+    if !v.is_finite() {
+        return String::new();
+    }
+    if v == 0.0 {
+        // Collapses -0.0 so cached (JSON round-tripped) results render
+        // byte-identically to cold runs.
+        return "0".to_string();
+    }
+    format!("{v}")
+}
+
 /// A CSV writer with a fixed header.
 pub struct CsvWriter {
     header: Vec<String>,
@@ -22,9 +39,10 @@ impl CsvWriter {
         self.rows.push(cells.to_vec());
     }
 
-    /// Append a row of f64 values (formatted with full precision).
+    /// Append a row of f64 values (full precision; non-finite values
+    /// render as empty fields via [`num_cell`]).
     pub fn row_f64(&mut self, cells: &[f64]) {
-        self.row(&cells.iter().map(|v| format!("{v}")).collect::<Vec<_>>());
+        self.row(&cells.iter().map(|v| num_cell(*v)).collect::<Vec<_>>());
     }
 
     pub fn len(&self) -> usize {
@@ -85,6 +103,18 @@ mod tests {
         w.row(&["a,b".into()]);
         w.row(&["say \"hi\"".into()]);
         assert_eq!(w.render(), "name\n\"a,b\"\n\"say \"\"hi\"\"\"\n");
+    }
+
+    #[test]
+    fn num_cell_policy() {
+        assert_eq!(num_cell(0.5), "0.5");
+        assert_eq!(num_cell(32.0), "32");
+        assert_eq!(num_cell(-0.0), "0");
+        assert_eq!(num_cell(f64::NAN), "");
+        assert_eq!(num_cell(f64::INFINITY), "");
+        let mut w = CsvWriter::new(&["a", "b"]);
+        w.row_f64(&[1.0, f64::NAN]);
+        assert_eq!(w.render(), "a,b\n1,\n");
     }
 
     #[test]

@@ -24,6 +24,20 @@ fn help_lists_subcommands() {
 }
 
 #[test]
+fn help_lists_every_experiment_id() {
+    // The id list is generated from `exp::ALL`, so the usage text can
+    // never omit an experiment (the hand-written list used to drop the
+    // ablation_* and netsim ids).
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    for id in expograph::exp::ALL {
+        assert!(stdout.contains(id), "usage missing experiment id {id}");
+    }
+    assert!(stdout.contains("--jobs"), "usage missing --jobs\n{stdout}");
+    assert!(stdout.contains("--cache"), "usage missing --cache\n{stdout}");
+}
+
+#[test]
 fn spectral_static_exp_reports_prop1() {
     let (stdout, _, ok) = run(&["spectral", "static_exp", "64"]);
     assert!(ok, "{stdout}");

@@ -1,0 +1,139 @@
+//! Sweep-harness acceptance suite (docs/DESIGN.md §Sweep), run by name
+//! in CI:
+//!
+//! * **grid-order determinism** — CSV/JSON output bytes are identical
+//!   for `jobs ∈ {1, 4}`, on both an analysis grid and a real training
+//!   grid (training is bitwise lane-invariant, §Engine);
+//! * **cache semantics** — a warm re-run executes zero cells and
+//!   reproduces the output byte-for-byte; changing seed or scale
+//!   invalidates;
+//! * **lane budget** — `jobs × engine lanes` never exceeds the core
+//!   count.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use expograph::config::SweepConfig;
+use expograph::exp::{self, Ctx};
+use expograph::sweep::{sched, Record, Sweep};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("expograph-sweeptest-{tag}-{}", std::process::id()))
+}
+
+fn run_exp(id: &str, out: &Path, jobs: usize, cache: bool, seed: u64) {
+    let ctx = Ctx {
+        out_dir: out.to_path_buf(),
+        scale: 0.02,
+        seed,
+        sweep: SweepConfig { jobs, cache },
+    };
+    exp::run(id, &ctx).unwrap_or_else(|e| panic!("exp {id} failed: {e}"));
+}
+
+fn read(out: &Path, name: &str) -> Vec<u8> {
+    std::fs::read(out.join(name)).unwrap_or_else(|e| panic!("reading {name}: {e}"))
+}
+
+/// (a) Grid-order determinism: byte-identical CSV + JSON for jobs 1 vs 4
+/// across an analysis grid (table1), a consensus grid (fig4), and a real
+/// training grid (table10 — full DSGD runs per cell).
+#[test]
+fn output_bytes_identical_for_jobs_1_and_4() {
+    for id in ["table1", "fig4", "table10"] {
+        let serial = tmp_dir(&format!("{id}-j1"));
+        let parallel = tmp_dir(&format!("{id}-j4"));
+        run_exp(id, &serial, 1, false, 3);
+        run_exp(id, &parallel, 4, false, 3);
+        for ext in ["csv", "json"] {
+            let name = format!("{id}.{ext}");
+            assert_eq!(
+                read(&serial, &name),
+                read(&parallel, &name),
+                "{name} differs between --jobs 1 and --jobs 4"
+            );
+        }
+        std::fs::remove_dir_all(&serial).ok();
+        std::fs::remove_dir_all(&parallel).ok();
+    }
+}
+
+/// (b) Cache hit/miss semantics on the harness API: a warm run executes
+/// zero cells and returns equal records; seed and scale changes each
+/// invalidate every cell.
+#[test]
+fn cache_hits_skip_execution_and_seed_or_scale_invalidate() {
+    let tmp = tmp_dir("cache");
+    let cells: Vec<usize> = (0..6).collect();
+    let executions = AtomicUsize::new(0);
+    let sweep_once = |seed: u64, scale: f64| {
+        Sweep::new("cachetest", seed, scale).jobs(3).cache_under(&tmp).run(
+            &cells,
+            |c| format!("cell={c}"),
+            |&c, _| {
+                executions.fetch_add(1, Ordering::Relaxed);
+                // A little synthetic "experiment": quadratic decay values.
+                vec![Record::new().with("cell", c).with("value", 1.0 / (1 + c * c) as f64)]
+            },
+        )
+    };
+    let cold = sweep_once(1, 1.0);
+    assert_eq!(executions.load(Ordering::Relaxed), 6);
+    assert!(cold.iter().all(|c| !c.cached));
+
+    let warm = sweep_once(1, 1.0);
+    assert_eq!(executions.load(Ordering::Relaxed), 6, "warm run must execute zero cells");
+    assert!(warm.iter().all(|c| c.cached));
+    for (a, b) in cold.iter().zip(&warm) {
+        assert_eq!(a.records, b.records, "cache must reproduce records exactly");
+    }
+
+    sweep_once(2, 1.0);
+    assert_eq!(executions.load(Ordering::Relaxed), 12, "seed change must invalidate");
+    sweep_once(2, 0.5);
+    assert_eq!(executions.load(Ordering::Relaxed), 18, "scale change must invalidate");
+    // ... and both earlier configurations are still warm.
+    sweep_once(1, 1.0);
+    sweep_once(2, 1.0);
+    assert_eq!(executions.load(Ordering::Relaxed), 18);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// (b′) End-to-end warm cache on a real experiment: the second `exp`
+/// invocation reproduces CSV + JSON byte-for-byte from cache.
+#[test]
+fn warm_experiment_rerun_is_byte_identical() {
+    let tmp = tmp_dir("warm");
+    run_exp("fig4", &tmp, 2, true, 5);
+    let csv = read(&tmp, "fig4.csv");
+    let json = read(&tmp, "fig4.json");
+    assert!(tmp.join(".cache").is_dir(), "cache directory populated");
+    run_exp("fig4", &tmp, 2, true, 5);
+    assert_eq!(read(&tmp, "fig4.csv"), csv);
+    assert_eq!(read(&tmp, "fig4.json"), json);
+    std::fs::remove_dir_all(&tmp).ok();
+}
+
+/// (c) Lane-budget arithmetic: `jobs × lanes ≤ cores` for every job
+/// count up to the core count, on synthetic shapes and this host.
+#[test]
+fn lane_budget_never_exceeds_core_count() {
+    for cores in [1usize, 2, 3, 4, 6, 8, 12, 16, 32, 96, 128] {
+        for jobs in 1..=cores {
+            let lanes = sched::lane_budget_for(cores, jobs);
+            assert!(lanes >= 1, "cores={cores} jobs={jobs}");
+            assert!(
+                jobs * lanes <= cores,
+                "oversubscribed: jobs={jobs} × lanes={lanes} > cores={cores}"
+            );
+        }
+        // Oversubscribed job counts floor at one lane per job.
+        for jobs in [cores + 1, 2 * cores, 10 * cores] {
+            assert_eq!(sched::lane_budget_for(cores, jobs), 1);
+        }
+    }
+    // The host-facing wrapper agrees with the pure arithmetic.
+    for jobs in 1..=sched::cores() {
+        assert!(jobs * sched::lane_budget(jobs) <= sched::cores());
+    }
+}
