@@ -12,6 +12,7 @@ use expograph::coordinator::MixingPlan;
 use expograph::linalg::power;
 use expograph::spectral;
 use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights};
+use expograph::topology::family;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 
@@ -89,5 +90,51 @@ fn main() {
         });
         println!("{}", s3.report());
         println!();
+    }
+
+    // --- finite-time families (open registry): cycle construction +
+    // sparse matvec, tracked in BENCH_topology.json --------------------
+    println!("finite-time families: cycle construction + plan_at matvec");
+    let mut rows_json = Vec::new();
+    for n in [48usize, 1024] {
+        for name in ["base4", "ceca"] {
+            let topo = family::find(name).expect("finite-time family registered");
+            let build = bench_config(
+                &format!("cycle build ({name})         n={n}"),
+                2, 10, 256, 0.2,
+                &mut || {
+                    let mut s = Schedule::from_family(topo, n, 1);
+                    black_box(s.plan_at(0).max_degree);
+                },
+            );
+            println!("{}", build.report());
+            let mut sched = Schedule::from_family(topo, n, 1);
+            let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            let mut k = 0usize;
+            let matvec = bench_config(
+                &format!("plan_at + matvec ({name})    n={n}"),
+                10, 50, 4096, 0.2,
+                &mut || {
+                    black_box(sched.plan_at(k).matvec(&x));
+                    k += 1;
+                },
+            );
+            println!("{}", matvec.report());
+            rows_json.push(format!(
+                "    {{\"family\": \"{name}\", \"n\": {n}, \"build_s\": {:.9}, \
+                 \"matvec_s\": {:.9}}}",
+                build.median, matvec.median
+            ));
+        }
+    }
+    println!();
+    let json = format!(
+        "{{\n  \"bench\": \"bench_topology\",\n  \"comparison\": \"finite_time_families\",\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    match std::fs::write("BENCH_topology.json", &json) {
+        Ok(()) => println!("wrote BENCH_topology.json"),
+        Err(e) => eprintln!("could not write BENCH_topology.json: {e}"),
     }
 }

@@ -18,9 +18,18 @@
 //! ```
 
 use crate::optim::AlgorithmKind;
-use crate::topology::TopologyKind;
+use crate::topology::{family, Topology, TopologyKind};
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
+
+/// Resolve a topology name through the open family registry; the error
+/// lists every registered name (generated from the registry, never
+/// hand-written — the same bug class as the old `exp` usage list).
+pub fn parse_topology(s: &str) -> Result<Topology> {
+    family::find(s).ok_or_else(|| {
+        anyhow!("unknown topology {s} (registered: {})", family::names().join(" "))
+    })
+}
 
 /// Sweep scheduling knobs shared by every grid-running surface
 /// (`expograph exp --jobs/--cache`, `expograph netsim jobs=/cache=`):
@@ -69,11 +78,13 @@ impl SweepConfig {
     }
 }
 
-/// One training-run configuration.
+/// One training-run configuration. `topology` is an open-registry
+/// handle, so config files and CLI overrides accept the finite-time
+/// families (`base4`, `ceca`, …) alongside the paper zoo.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub nodes: usize,
-    pub topology: TopologyKind,
+    pub topology: Topology,
     pub algorithm: AlgorithmKind,
     pub iters: usize,
     pub lr: f32,
@@ -88,7 +99,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             nodes: 16,
-            topology: TopologyKind::OnePeerExp,
+            topology: TopologyKind::OnePeerExp.family(),
             algorithm: AlgorithmKind::DmSgd,
             iters: 2000,
             lr: 0.05,
@@ -120,8 +131,7 @@ impl RunConfig {
                 }
                 "topology" => {
                     let s = val.as_str().context("topology")?;
-                    cfg.topology =
-                        TopologyKind::parse(s).ok_or_else(|| anyhow!("unknown topology {s}"))?;
+                    cfg.topology = parse_topology(s)?;
                 }
                 "algorithm" => {
                     let s = val.as_str().context("algorithm")?;
@@ -134,7 +144,17 @@ impl RunConfig {
         if cfg.nodes == 0 {
             bail!("nodes must be positive");
         }
+        cfg.validate()?;
         Ok(cfg)
+    }
+
+    /// Cross-field validation (called after CLI overrides too, since
+    /// `set` is per-key and order-independent).
+    pub fn validate(&self) -> Result<()> {
+        if self.topology.requires_pow2() && !self.nodes.is_power_of_two() {
+            bail!("topology {} requires a power-of-two node count, got {}", self.topology, self.nodes);
+        }
+        Ok(())
     }
 
     /// Load from a file path.
@@ -155,10 +175,7 @@ impl RunConfig {
             "beta" => self.beta = value.parse()?,
             "heterogeneous" => self.heterogeneous = value.parse()?,
             "warmup_allreduce" => self.warmup_allreduce = value.parse()?,
-            "topology" => {
-                self.topology =
-                    TopologyKind::parse(value).ok_or_else(|| anyhow!("unknown topology {value}"))?
-            }
+            "topology" => self.topology = parse_topology(value)?,
             "algorithm" => {
                 self.algorithm = AlgorithmKind::parse(value)
                     .ok_or_else(|| anyhow!("unknown algorithm {value}"))?
@@ -243,8 +260,13 @@ impl NetSimRunConfig {
                 self.topologies = value
                     .split(',')
                     .map(|s| {
-                        TopologyKind::parse(s.trim())
-                            .ok_or_else(|| anyhow!("unknown topology {s}"))
+                        let s = s.trim();
+                        TopologyKind::parse(s).ok_or_else(|| {
+                            anyhow!(
+                                "unknown topology {s} (netsim sweeps the paper zoo: {})",
+                                family::kind_names().join(" ")
+                            )
+                        })
                     })
                     .collect::<Result<Vec<_>>>()?;
                 if self.topologies.is_empty() {
@@ -387,5 +409,44 @@ mod tests {
         assert_eq!(cfg.topology, TopologyKind::Ring);
         assert_eq!(cfg.lr, 0.25);
         assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn topology_override_accepts_open_registry_families() {
+        let mut cfg = RunConfig::default();
+        cfg.set("topology", "base4").unwrap();
+        assert_eq!(cfg.topology.name(), "base4");
+        assert_eq!(cfg.topology.kind(), None);
+        cfg.set("topology", "ceca").unwrap();
+        assert_eq!(cfg.topology.name(), "ceca");
+        // Aliases resolve through the same registry lookup.
+        cfg.set("topology", "base_k").unwrap();
+        assert_eq!(cfg.topology.name(), "base4");
+        cfg.set("topology", "parallel").unwrap();
+        assert_eq!(cfg.topology, TopologyKind::FullyConnected);
+    }
+
+    #[test]
+    fn unknown_topology_error_lists_registered_names() {
+        let err = RunConfig::default().set("topology", "mobius").unwrap_err().to_string();
+        for name in crate::topology::family::names() {
+            assert!(err.contains(name), "error listing missing {name}: {err}");
+        }
+    }
+
+    #[test]
+    fn validate_rejects_pow2_families_on_other_sizes() {
+        let doc = Json::parse(r#"{"nodes": 12, "topology": "hypercube"}"#).unwrap();
+        assert!(RunConfig::from_json(&doc).is_err());
+        let mut cfg = RunConfig::default();
+        cfg.set("topology", "one_peer_hypercube").unwrap();
+        cfg.set("nodes", "12").unwrap();
+        assert!(cfg.validate().is_err());
+        cfg.set("nodes", "16").unwrap();
+        assert!(cfg.validate().is_ok());
+        // Finite-time families accept any n by construction.
+        cfg.set("topology", "ceca").unwrap();
+        cfg.set("nodes", "12").unwrap();
+        assert!(cfg.validate().is_ok());
     }
 }

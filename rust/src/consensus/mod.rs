@@ -18,7 +18,7 @@ use crate::engine::Engine;
 use crate::linalg::{power, Matrix};
 use crate::netsim::NetSim;
 use crate::topology::schedule::Schedule;
-use crate::topology::TopologyKind;
+use crate::topology::{Topology, TopologyKind};
 use crate::util::rng::Pcg;
 
 /// One gossip step on a vector of node values: `x ← W x` (dense form;
@@ -45,6 +45,12 @@ pub fn residue_decay(kind: TopologyKind, n: usize, iters: usize, seed: u64) -> V
     residue_decay_on(&Engine::auto(n, 1), kind, n, iters, seed)
 }
 
+/// [`residue_decay`] for any registered topology family (the open
+/// registry — finite-time base-(k+1)/CECA included).
+pub fn residue_decay_topo(topo: Topology, n: usize, iters: usize, seed: u64) -> Vec<f64> {
+    residue_decay_on_topo(&Engine::auto(n, 1), topo, n, iters, seed)
+}
+
 /// [`residue_decay`] on a caller-supplied engine: every gossip step is a
 /// sharded `W x` on the persistent pool (double-buffered — no per-step
 /// allocation, no per-step threads). Row-local sparse dot products make
@@ -56,7 +62,18 @@ pub fn residue_decay_on(
     iters: usize,
     seed: u64,
 ) -> Vec<f64> {
-    let mut sched = Schedule::new(kind, n, seed);
+    residue_decay_on_topo(engine, kind.family(), n, iters, seed)
+}
+
+/// [`residue_decay_on`] for any registered topology family.
+pub fn residue_decay_on_topo(
+    engine: &Engine,
+    topo: Topology,
+    n: usize,
+    iters: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut sched = Schedule::from_family(topo, n, seed);
     let mut rng = Pcg::new(seed ^ 0xD15C0, 1);
     let mut x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let mut y = vec![0.0f64; n];
@@ -113,6 +130,27 @@ pub fn residue_product_norms(kind: TopologyKind, n: usize, iters: usize, seed: u
         out.push(norm * norm);
     }
     out
+}
+
+/// Max-abs error `‖∏_{k0 ≤ k < k0+period} W^{(k)} − J‖_∞` through a
+/// family's schedule plans — the generalized exact-averaging probe.
+/// (The CECA-style merge rounds do not commute, so only offsets that
+/// are multiples of the period average exactly; the circulant families
+/// are offset-invariant.)
+pub fn schedule_period_error(topo: Topology, n: usize, period: usize, k0: usize) -> f64 {
+    let mut sched = Schedule::from_family(topo, n, 0);
+    let mut prod = Matrix::eye(n);
+    for k in k0..k0 + period.max(1) {
+        prod = sched.plan_at(k).to_dense().matmul(&prod);
+    }
+    prod.sub(&Matrix::averaging(n)).max_abs()
+}
+
+/// [`schedule_period_error`] at the family's declared exact-averaging
+/// period (`None` when the family declares none at this `n` — e.g.
+/// one-peer exponential off powers of two).
+pub fn exact_period_error(topo: Topology, n: usize, k0: usize) -> Option<f64> {
+    topo.exact_period(n).map(|period| schedule_period_error(topo, n, period, k0))
 }
 
 /// Lemma 1 check: max-abs error `‖∏_{t} W^{(t)} − J‖_∞` over one period of
@@ -258,6 +296,23 @@ mod tests {
         for n in [4usize, 8, 16, 64] {
             let r = one_peer_rho_max(n);
             assert!(r <= 1.0 + 1e-9 && r > 0.5, "n={n} rho_max={r}");
+        }
+    }
+
+    #[test]
+    fn finite_time_families_average_exactly_for_any_n() {
+        // The registry's finite-time families (base-(k+1), CECA-style)
+        // hit exact consensus at their declared period for arbitrary n —
+        // exactly where Fig. 10 shows one-peer exp cannot.
+        for name in ["base4", "ceca"] {
+            let topo = crate::topology::family::find(name).unwrap();
+            for n in [6usize, 12, 24] {
+                let period = topo.exact_period(n).expect("finite-time family declares a period");
+                let decay = residue_decay_topo(topo, n, 2 * period, 9);
+                assert!(decay[period - 1] < 1e-12, "{name} n={n}: {decay:?}");
+                let err = exact_period_error(topo, n, 0).unwrap();
+                assert!(err < 1e-12, "{name} n={n}: |prod - J| = {err}");
+            }
         }
     }
 

@@ -14,11 +14,6 @@
 use super::state::StackedParams;
 pub use crate::topology::plan::MixingPlan;
 
-/// Legacy name for the sparse mixing representation. The plan type now
-/// lives in [`crate::topology::plan`]; this alias keeps older call sites
-/// and downstream code compiling.
-pub type SparseWeights = MixingPlan;
-
 impl MixingPlan {
     /// Fused sparse mix over output rows `rows`: accumulate `W·v` into
     /// the shard view `out` (row `rows.start` at offset 0), where the
@@ -341,10 +336,10 @@ mod tests {
     }
 
     #[test]
-    fn legacy_from_dense_alias_still_mixes() {
-        // The SparseWeights alias + from_dense escape hatch behave exactly
-        // like the direct plan constructors.
-        let sw: SparseWeights = SparseWeights::from_dense(&one_peer_exp_weights(16, 0));
+    fn from_dense_escape_hatch_still_mixes() {
+        // The from_dense escape hatch behaves exactly like the direct
+        // plan constructors.
+        let sw = MixingPlan::from_dense(&one_peer_exp_weights(16, 0));
         let plan = one_peer_exp_plan(16, 0);
         let input = stack(16, 3, 9);
         let mut out_a = StackedParams::zeros(16, 3);

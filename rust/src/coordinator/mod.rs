@@ -14,7 +14,7 @@ pub mod state;
 pub mod trainer;
 pub mod transient;
 
-pub use mixing::{MixingPlan, SparseWeights};
+pub use mixing::MixingPlan;
 pub use schedule_lr::LrSchedule;
 pub use state::StackedParams;
 pub use trainer::{GradProvider, TrainConfig, Trainer, TrainingHistory};

@@ -21,7 +21,7 @@
 //! exactly in the clean case (pinned by `tests/netsim.rs`).
 
 use crate::topology::plan::MixingPlan;
-use crate::topology::TopologyKind;
+use crate::topology::{Topology, TopologyKind};
 
 /// Communication cost parameters.
 #[derive(Clone, Copy, Debug)]
@@ -73,9 +73,18 @@ impl CostModel {
     /// Per-iteration communication time of a topology at size `n`,
     /// without drawing an actual matrix (uses the analytic degree).
     pub fn comm_time(&self, kind: TopologyKind, n: usize, msg_bytes: f64) -> f64 {
-        match kind {
-            TopologyKind::FullyConnected => self.allreduce_time(n, msg_bytes),
-            _ => analytic_degree(kind, n) as f64 * self.link_time(msg_bytes),
+        self.comm_time_topo(kind.family(), n, msg_bytes)
+    }
+
+    /// [`CostModel::comm_time`] for any registered family: the family
+    /// declares its own cost-model dispatch (collective all-reduce for
+    /// the parallel baseline, per-neighbor α-β exchanges otherwise) —
+    /// no per-kind `match` here (docs/DESIGN.md §Topology registry).
+    pub fn comm_time_topo(&self, topo: Topology, n: usize, msg_bytes: f64) -> f64 {
+        if topo.uses_allreduce() {
+            self.allreduce_time(n, msg_bytes)
+        } else {
+            topo.analytic_degree(n) as f64 * self.link_time(msg_bytes)
         }
     }
 
@@ -88,27 +97,10 @@ impl CostModel {
 }
 
 /// Analytic per-iteration communication degree per topology (the
-/// "Per-iter Comm." column of Tables 1/7/8).
+/// "Per-iter Comm." column of Tables 1/7/8). Declared per family in the
+/// registry; this wrapper keeps the historical kind-based signature.
 pub fn analytic_degree(kind: TopologyKind, n: usize) -> usize {
-    use crate::topology::exponential::tau;
-    match kind {
-        TopologyKind::Ring => 2.min(n.saturating_sub(1)),
-        TopologyKind::Star => n.saturating_sub(1),
-        TopologyKind::Grid2D | TopologyKind::Torus2D => 4.min(n.saturating_sub(1)),
-        TopologyKind::Hypercube => tau(n),
-        TopologyKind::HalfRandom => (n.saturating_sub(1)) / 2,
-        TopologyKind::ErdosRenyi | TopologyKind::Geometric => {
-            // expected degree ≈ (1+c)·ln n at c=1
-            (2.0 * (n as f64).ln()).ceil() as usize
-        }
-        TopologyKind::RandomMatch => 1,
-        TopologyKind::StaticExp => tau(n),
-        TopologyKind::OnePeerExp
-        | TopologyKind::OnePeerExpPerm
-        | TopologyKind::OnePeerExpUniform
-        | TopologyKind::OnePeerHypercube => 1,
-        TopologyKind::FullyConnected => n.saturating_sub(1),
-    }
+    kind.family().analytic_degree(n)
 }
 
 #[cfg(test)]
@@ -165,6 +157,21 @@ mod tests {
         m.overlap = 0.0;
         let t0 = m.iteration_time(TopologyKind::Ring, 16, 1e6);
         assert!(t0 > t);
+    }
+
+    #[test]
+    fn comm_time_routes_through_the_family_registry() {
+        let m = CostModel::paper_default(0.0);
+        let n = 48;
+        let msg = 1e6;
+        let ceca = crate::topology::family::find("ceca").unwrap();
+        assert!((m.comm_time_topo(ceca, n, msg) - 2.0 * m.link_time(msg)).abs() < 1e-15);
+        let base4 = crate::topology::family::find("base4").unwrap();
+        assert!(m.comm_time_topo(base4, n, msg) > 0.0);
+        // The parallel baseline is still priced as a collective.
+        let full = TopologyKind::FullyConnected.family();
+        assert_eq!(m.comm_time_topo(full, n, msg), m.allreduce_time(n, msg));
+        assert_eq!(m.comm_time(TopologyKind::FullyConnected, n, msg), m.allreduce_time(n, msg));
     }
 
     #[test]

@@ -11,7 +11,14 @@
 //! * [`topology`] — the full topology zoo of the paper (ring, star, grid,
 //!   torus, hypercube, random graphs, bipartite random match, static and
 //!   one-peer exponential graphs) with doubly-stochastic weight-matrix
-//!   generation.
+//!   generation, behind an **open family registry**
+//!   ([`topology::family`]): per-family plan construction, analytic
+//!   degree/ρ, and exact-averaging periods are declared once per
+//!   [`topology::TopologyFamily`], and the finite-time families
+//!   ([`topology::finite_time`]: base-(k+1) after Takezawa et al.,
+//!   CECA-style one/two-peer after Ding et al.) extend the paper's
+//!   log₂(n)-step exact averaging to **arbitrary n** — not just powers
+//!   of two.
 //! * [`spectral`] — spectral-gap analysis (Proposition 1) built on the
 //!   in-crate [`linalg`] substrate (DFT over circulants, Jacobi symmetric
 //!   eigensolver, power iteration).

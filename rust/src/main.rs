@@ -8,12 +8,13 @@
 //!   info                                              artifact + runtime status
 
 use anyhow::{bail, Context, Result};
-use expograph::config::{parse_switch, NetSimRunConfig, RunConfig};
+use expograph::config::{parse_switch, parse_topology, NetSimRunConfig, RunConfig};
 use expograph::coordinator::trainer::{TrainConfig, Trainer};
 use expograph::coordinator::LrSchedule;
 use expograph::costmodel::CostModel;
 use expograph::exp::{self, Ctx};
 use expograph::spectral;
+use expograph::topology::family;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 
@@ -26,6 +27,16 @@ fn exp_id_lines() -> String {
         .map(|chunk| chunk.join(" "))
         .collect::<Vec<_>>()
         .join("\n           ")
+}
+
+/// The topology name list, generated from the open family registry so
+/// the usage text tracks registered families automatically.
+fn topology_name_lines() -> String {
+    family::names()
+        .chunks(6)
+        .map(|chunk| chunk.join(" "))
+        .collect::<Vec<_>>()
+        .join("\n                  ")
 }
 
 fn usage() -> String {
@@ -43,6 +54,9 @@ USAGE:
       --cache     on|off: serve completed cells from <out>/.cache/ (default on)
   expograph train [--config FILE] [key=value ...]
       keys: nodes topology algorithm iters lr beta batch heterogeneous seed
+      topologies (from the registry — includes the finite-time
+      arbitrary-n families):
+                  {topologies}
   expograph netsim [--out DIR] [key=value ...]
       discrete-event network simulation: topology x n x scenario
       time-to-target table (writes netsim.json + netsim.csv)
@@ -52,7 +66,8 @@ USAGE:
   expograph spectral <topology> <n>
   expograph info
 ",
-        ids = exp_id_lines()
+        ids = exp_id_lines(),
+        topologies = topology_name_lines()
     )
 }
 
@@ -117,6 +132,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             bail!("expected key=value, got {arg}");
         }
     }
+    cfg.validate()?;
     println!("config: {cfg:?}");
 
     // Logistic-regression workload (the Appendix D.5 protocol) — the
@@ -132,7 +148,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         expograph::exp::logreg_runner::LogRegProvider { problem: &problem, batch: cfg.batch };
     let opt = cfg.algorithm.build(cfg.nodes, &vec![0.0f32; problem.d], cfg.beta);
     let mut trainer = Trainer::new(
-        Schedule::new(cfg.topology, cfg.nodes, cfg.seed),
+        Schedule::from_family(cfg.topology, cfg.nodes, cfg.seed),
         opt,
         &provider,
         TrainConfig {
@@ -182,11 +198,25 @@ fn cmd_netsim(args: &[String]) -> Result<()> {
 }
 
 fn cmd_spectral(args: &[String]) -> Result<()> {
-    let kind = args
-        .first()
-        .and_then(|s| TopologyKind::parse(s))
-        .context("spectral <topology> <n>")?;
+    let topo = parse_topology(args.first().context("spectral <topology> <n>")?)?;
     let n: usize = args.get(1).context("spectral <topology> <n>")?.parse()?;
+    let Some(kind) = topo.kind() else {
+        // Open-registry family (no closed-enum kind): report the
+        // finite-time exact-averaging stats the family declares.
+        println!("topology={topo} n={n} (open-registry family)");
+        match topo.exact_period(n) {
+            Some(tau) => {
+                println!("  exact-averaging period tau = {tau}");
+                println!(
+                    "  residue after tau steps: {:.3e}",
+                    expograph::consensus::schedule_period_error(topo, n, tau, 0)
+                );
+            }
+            None => println!("  no finite-time exact-averaging period declared at n={n}"),
+        }
+        println!("  analytic per-iteration degree: {}", topo.analytic_degree(n));
+        return Ok(());
+    };
     if kind.is_time_varying() {
         println!("{kind} is time-varying; per-realization ‖Ŵ‖₂ and exact-averaging stats:");
         println!("  rho_max = {:.6}", expograph::consensus::one_peer_rho_max(n));
@@ -201,6 +231,9 @@ fn cmd_spectral(args: &[String]) -> Result<()> {
     let (rho, method) = spectral::rho_with_method(&w);
     println!("topology={kind} n={n}");
     println!("  rho = {rho:.6}  (method: {method:?})");
+    if let Some(closed) = topo.analytic_rho(n) {
+        println!("  closed form rho = {closed:.6} (registry)");
+    }
     println!("  spectral gap 1-rho = {:.6}", 1.0 - rho);
     if kind == TopologyKind::StaticExp {
         println!(

@@ -95,26 +95,19 @@ pub fn verify_proposition1(n: usize) -> (f64, f64, f64) {
 
 /// Theory rows of Table 5 (Appendix A.3.2): asymptotic `1−ρ` and max
 /// degree per topology, as closed-form functions of `n` where the paper
-/// gives them.
+/// gives them. Declared per family in the registry
+/// (docs/DESIGN.md §Topology registry); this wrapper keeps the
+/// historical kind-based signature.
 pub fn table5_theory(kind: TopologyKind, n: usize) -> (String, String) {
-    let nf = n as f64;
-    let log2n = (nf.log2()).max(1.0);
-    match kind {
-        TopologyKind::Ring => (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), "2".into()),
-        TopologyKind::Star => (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), format!("{}", n - 1)),
-        TopologyKind::Grid2D => {
-            (format!("O(1/(n log n)) ~ {:.2e}", 1.0 / (nf * log2n)), "4".into())
-        }
-        TopologyKind::Torus2D => (format!("O(1/n) ~ {:.2e}", 1.0 / nf), "4".into()),
-        TopologyKind::HalfRandom => ("O(1)".into(), format!("{}", (n - 1) / 2)),
-        TopologyKind::RandomMatch => ("N.A.".into(), "1".into()),
-        TopologyKind::StaticExp => (
-            format!("2/(1+ceil(log2 n)) = {:.4}", 2.0 / (1.0 + tau(n) as f64)),
-            format!("{}", tau(n)),
-        ),
-        TopologyKind::OnePeerExp => ("N.A. (time-varying)".into(), "1".into()),
-        _ => ("-".into(), "-".into()),
-    }
+    kind.family().theory_row(n)
+}
+
+/// Closed-form ρ of a registered family when one exists (ring,
+/// even-`n` static exp, hypercube, the all-reduce baseline) — the
+/// registry's `analytic_rho` declaration, exposed next to the numeric
+/// dispatch so callers can cross-check the two.
+pub fn analytic_rho(topo: crate::topology::Topology, n: usize) -> Option<f64> {
+    topo.analytic_rho(n)
 }
 
 #[cfg(test)]
@@ -180,6 +173,22 @@ mod tests {
     #[test]
     fn fully_connected_gap_is_one() {
         assert!((topology_gap(TopologyKind::FullyConnected, 8, 0) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_rho_matches_numeric_dispatch() {
+        for (name, n) in
+            [("ring", 16usize), ("static_exp", 16), ("hypercube", 16), ("fully_connected", 8)]
+        {
+            let topo = crate::topology::family::find(name).unwrap();
+            let want = analytic_rho(topo, n).expect("closed form declared");
+            let w = schedule::static_weights(topo.kind().unwrap(), n, 0);
+            let (got, _) = rho_with_method(&w);
+            assert!((got - want).abs() < 1e-9, "{name}: numeric {got} vs closed form {want}");
+        }
+        // No closed form declared ⇒ None (numeric dispatch is the path).
+        assert!(analytic_rho(crate::topology::family::find("grid").unwrap(), 16).is_none());
+        assert!(analytic_rho(crate::topology::family::find("static_exp").unwrap(), 15).is_none());
     }
 
     #[test]

@@ -1,0 +1,886 @@
+//! The open topology-family registry (docs/DESIGN.md §Topology registry).
+//!
+//! [`TopologyFamily`] is the trait a topology implements **once**: its
+//! config/CLI names, how to build its plan stream ([`FamilySchedule`]),
+//! its analytic per-iteration communication degree, its closed-form ρ
+//! when one exists, its finite-time exact-averaging period when it has
+//! one, and its cost-model dispatch. Every per-kind `match` that used to
+//! be re-implemented across schedule / spectral / costmodel / config /
+//! exp now routes through [`find`] / [`of_kind`] — adding a topology
+//! family is one `impl` plus one entry in [`FAMILIES`], not eight-module
+//! surgery.
+//!
+//! The paper zoo ([`TopologyKind`]) survives as a closed enum whose
+//! per-kind behavior is declared here as data ([`KindFamily`] statics);
+//! the finite-time families for arbitrary `n`
+//! ([`crate::topology::finite_time`]) are the first open extensions.
+
+use super::exponential::{self, one_peer_exp_plan, static_exp_plan, OnePeerOrder, OnePeerSequence};
+use super::finite_time;
+use super::graphs;
+use super::hypercube_onepeer::one_peer_hypercube_plan;
+use super::matching::RandomMatching;
+use super::metropolis::metropolis_plan;
+use super::plan::MixingPlan;
+use super::random;
+use super::schedule::TopologyKind;
+use std::fmt;
+
+/// A stateful generator for genuinely stochastic plan streams (the only
+/// schedules that regenerate per iteration). Must be queried with
+/// non-decreasing `k`; the idempotence cache lives in
+/// [`crate::topology::schedule::Schedule`].
+pub trait PlanGen: Send {
+    fn plan_at(&mut self, k: usize) -> MixingPlan;
+}
+
+impl PlanGen for OnePeerSequence {
+    fn plan_at(&mut self, k: usize) -> MixingPlan {
+        OnePeerSequence::plan_at(self, k)
+    }
+}
+
+impl PlanGen for RandomMatching {
+    fn plan_at(&mut self, _k: usize) -> MixingPlan {
+        self.next_plan()
+    }
+}
+
+/// What a family's [`TopologyFamily::build`] returns: one cached plan,
+/// a finite cycle (period τ — the exact-averaging period for the
+/// finite-time families), or a stochastic generator. The schedule cache
+/// serves the first two as borrowed plans with zero per-iteration
+/// allocation (docs/DESIGN.md §Plan cache).
+pub enum FamilySchedule {
+    /// One plan, every iteration.
+    Static(MixingPlan),
+    /// A precomputed cycle; iteration `k` uses `k mod τ`.
+    Periodic(Vec<MixingPlan>),
+    /// Regenerates (sparsely) per iteration.
+    Stochastic(Box<dyn PlanGen>),
+}
+
+/// One topology family: everything the rest of the codebase needs to
+/// know about a topology, declared in one place.
+pub trait TopologyFamily: Sync {
+    /// Config/CLI names — canonical first, then aliases. All are
+    /// accepted by [`find`]; listings use the canonical name.
+    fn names(&self) -> &'static [&'static str];
+
+    /// The paper-zoo enum variant, when this family belongs to the
+    /// closed set ([`None`] for open extensions).
+    fn kind(&self) -> Option<TopologyKind> {
+        None
+    }
+
+    /// Construct the plan stream for `n` nodes. `seed` feeds stochastic
+    /// families and is ignored by deterministic ones.
+    fn build(&self, n: usize, seed: u64) -> FamilySchedule;
+
+    /// Analytic per-iteration communication degree (the "Per-iter
+    /// Comm." column of Tables 1/7/8; the cost model's fast path).
+    fn analytic_degree(&self, n: usize) -> usize;
+
+    /// Hard upper bound on any realized plan's `max_degree` (distinct
+    /// communication partners), when the family guarantees one. `None`
+    /// for the random-graph families, where the analytic degree is only
+    /// an expectation.
+    fn max_degree_bound(&self, n: usize) -> Option<usize>;
+
+    /// Closed-form ρ (second largest eigenvalue magnitude) when the
+    /// paper gives one, e.g. ring `(1 + 2cos(2π/n))/3` or static exp
+    /// `(τ−1)/(τ+1)` for even n.
+    fn analytic_rho(&self, _n: usize) -> Option<f64> {
+        None
+    }
+
+    /// Finite-time exact averaging: the period τ with
+    /// `∏_{k<τ} W^{(k)} = J` exactly, when the family achieves it at
+    /// this `n` (periods are aligned to `k = 0`; order matters for the
+    /// non-commuting families).
+    fn exact_period(&self, _n: usize) -> Option<usize> {
+        None
+    }
+
+    /// Theory columns of Table 5: (asymptotic `1−ρ`, max degree).
+    fn theory_row(&self, _n: usize) -> (String, String) {
+        ("-".into(), "-".into())
+    }
+
+    /// Is the weight-matrix sequence time-varying?
+    fn is_time_varying(&self) -> bool;
+
+    /// Does the family require `n` to be a power of two?
+    fn requires_pow2(&self) -> bool {
+        false
+    }
+
+    /// Cost-model dispatch: priced as a ring-allreduce collective
+    /// instead of per-neighbor exchanges (the parallel baseline).
+    fn uses_allreduce(&self) -> bool {
+        false
+    }
+
+    /// Canonical name.
+    fn name(&self) -> &'static str {
+        self.names()[0]
+    }
+}
+
+/// Copyable handle to a registered family — what flows through configs,
+/// schedules, and experiment grids. Equality/hash/`Display` are by
+/// canonical name (unique across the registry); `Debug` prints the
+/// paper-zoo variant when there is one, so existing `{:?}` output (CLI,
+/// cache keys) is unchanged for the closed set.
+#[derive(Clone, Copy)]
+pub struct Topology(&'static dyn TopologyFamily);
+
+impl Topology {
+    pub fn family(&self) -> &'static dyn TopologyFamily {
+        self.0
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    pub fn kind(&self) -> Option<TopologyKind> {
+        self.0.kind()
+    }
+
+    pub fn build(&self, n: usize, seed: u64) -> FamilySchedule {
+        self.0.build(n, seed)
+    }
+
+    pub fn analytic_degree(&self, n: usize) -> usize {
+        self.0.analytic_degree(n)
+    }
+
+    pub fn max_degree_bound(&self, n: usize) -> Option<usize> {
+        self.0.max_degree_bound(n)
+    }
+
+    pub fn analytic_rho(&self, n: usize) -> Option<f64> {
+        self.0.analytic_rho(n)
+    }
+
+    pub fn exact_period(&self, n: usize) -> Option<usize> {
+        self.0.exact_period(n)
+    }
+
+    pub fn theory_row(&self, n: usize) -> (String, String) {
+        self.0.theory_row(n)
+    }
+
+    pub fn is_time_varying(&self) -> bool {
+        self.0.is_time_varying()
+    }
+
+    pub fn requires_pow2(&self) -> bool {
+        self.0.requires_pow2()
+    }
+
+    pub fn uses_allreduce(&self) -> bool {
+        self.0.uses_allreduce()
+    }
+}
+
+impl PartialEq for Topology {
+    fn eq(&self, other: &Self) -> bool {
+        self.name() == other.name()
+    }
+}
+
+impl Eq for Topology {}
+
+impl std::hash::Hash for Topology {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        self.name().hash(state);
+    }
+}
+
+impl PartialEq<TopologyKind> for Topology {
+    fn eq(&self, other: &TopologyKind) -> bool {
+        self.kind() == Some(*other)
+    }
+}
+
+impl PartialEq<Topology> for TopologyKind {
+    fn eq(&self, other: &Topology) -> bool {
+        other.kind() == Some(*self)
+    }
+}
+
+impl fmt::Debug for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.kind() {
+            Some(kind) => write!(f, "{kind:?}"),
+            None => f.write_str(self.name()),
+        }
+    }
+}
+
+impl fmt::Display for Topology {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A paper-zoo family declared as data: per-kind behavior lives in the
+/// function pointers below, so the closed set stays compact while going
+/// through the exact same trait surface as the open extensions.
+pub struct KindFamily {
+    kind: TopologyKind,
+    names: &'static [&'static str],
+    build: fn(usize, u64) -> FamilySchedule,
+    degree: fn(usize) -> usize,
+    max_degree: fn(usize) -> Option<usize>,
+    rho: fn(usize) -> Option<f64>,
+    theory: fn(usize) -> (String, String),
+    exact_period: fn(usize) -> Option<usize>,
+    time_varying: bool,
+    requires_pow2: bool,
+    uses_allreduce: bool,
+}
+
+impl TopologyFamily for KindFamily {
+    fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    fn kind(&self) -> Option<TopologyKind> {
+        Some(self.kind)
+    }
+
+    fn build(&self, n: usize, seed: u64) -> FamilySchedule {
+        (self.build)(n, seed)
+    }
+
+    fn analytic_degree(&self, n: usize) -> usize {
+        (self.degree)(n)
+    }
+
+    fn max_degree_bound(&self, n: usize) -> Option<usize> {
+        (self.max_degree)(n)
+    }
+
+    fn analytic_rho(&self, n: usize) -> Option<f64> {
+        (self.rho)(n)
+    }
+
+    fn exact_period(&self, n: usize) -> Option<usize> {
+        (self.exact_period)(n)
+    }
+
+    fn theory_row(&self, n: usize) -> (String, String) {
+        (self.theory)(n)
+    }
+
+    fn is_time_varying(&self) -> bool {
+        self.time_varying
+    }
+
+    fn requires_pow2(&self) -> bool {
+        self.requires_pow2
+    }
+
+    fn uses_allreduce(&self) -> bool {
+        self.uses_allreduce
+    }
+}
+
+// ---- paper-zoo builders (moved from the old Schedule::new match) ------
+
+fn build_ring(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(metropolis_plan(&graphs::ring(n)).with_kind(TopologyKind::Ring))
+}
+
+fn build_star(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(metropolis_plan(&graphs::star(n)).with_kind(TopologyKind::Star))
+}
+
+fn build_grid2d(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(metropolis_plan(&graphs::grid2d(n)).with_kind(TopologyKind::Grid2D))
+}
+
+fn build_torus2d(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(metropolis_plan(&graphs::torus2d(n)).with_kind(TopologyKind::Torus2D))
+}
+
+fn build_hypercube(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(metropolis_plan(&graphs::hypercube(n)).with_kind(TopologyKind::Hypercube))
+}
+
+fn build_half_random(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(random::half_random_plan(n, seed).with_kind(TopologyKind::HalfRandom))
+}
+
+fn build_erdos_renyi(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(random::erdos_renyi_plan(n, 1.0, seed).with_kind(TopologyKind::ErdosRenyi))
+}
+
+fn build_geometric(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(random::geometric_plan(n, 1.0, seed).with_kind(TopologyKind::Geometric))
+}
+
+fn build_static_exp(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(static_exp_plan(n))
+}
+
+fn build_fully_connected(n: usize, _seed: u64) -> FamilySchedule {
+    FamilySchedule::Static(MixingPlan::averaging(n))
+}
+
+fn build_one_peer_exp(n: usize, _seed: u64) -> FamilySchedule {
+    let period = exponential::tau(n).max(1);
+    FamilySchedule::Periodic((0..period).map(|t| one_peer_exp_plan(n, t)).collect())
+}
+
+fn build_one_peer_hypercube(n: usize, _seed: u64) -> FamilySchedule {
+    let period = exponential::tau(n).max(1);
+    FamilySchedule::Periodic((0..period).map(|t| one_peer_hypercube_plan(n, t)).collect())
+}
+
+fn build_one_peer_exp_perm(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Stochastic(Box::new(OnePeerSequence::new(
+        n,
+        OnePeerOrder::RandomPermutation,
+        seed,
+    )))
+}
+
+fn build_one_peer_exp_uniform(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Stochastic(Box::new(OnePeerSequence::new(
+        n,
+        OnePeerOrder::UniformSampling,
+        seed,
+    )))
+}
+
+fn build_random_match(n: usize, seed: u64) -> FamilySchedule {
+    FamilySchedule::Stochastic(Box::new(RandomMatching::new(n, seed)))
+}
+
+// ---- analytic degrees (moved from the old costmodel match) ------------
+
+fn deg_two(n: usize) -> usize {
+    2.min(n.saturating_sub(1))
+}
+
+fn deg_four(n: usize) -> usize {
+    4.min(n.saturating_sub(1))
+}
+
+fn deg_full(n: usize) -> usize {
+    n.saturating_sub(1)
+}
+
+fn deg_half(n: usize) -> usize {
+    n.saturating_sub(1) / 2
+}
+
+fn deg_expected_log(n: usize) -> usize {
+    // expected degree ≈ (1+c)·ln n at c=1
+    (2.0 * (n as f64).ln()).ceil() as usize
+}
+
+fn deg_one(_n: usize) -> usize {
+    1
+}
+
+fn deg_tau(n: usize) -> usize {
+    exponential::tau(n)
+}
+
+// ---- realized-degree bounds -------------------------------------------
+
+fn bound_two(n: usize) -> Option<usize> {
+    Some(2.min(n.saturating_sub(1)))
+}
+
+fn bound_four(n: usize) -> Option<usize> {
+    Some(4.min(n.saturating_sub(1)))
+}
+
+fn bound_full(n: usize) -> Option<usize> {
+    Some(n.saturating_sub(1))
+}
+
+fn bound_one(n: usize) -> Option<usize> {
+    Some(1.min(n.saturating_sub(1)))
+}
+
+fn bound_tau(n: usize) -> Option<usize> {
+    Some(exponential::tau(n))
+}
+
+fn bound_static_exp(n: usize) -> Option<usize> {
+    // Directed: τ out-neighbors plus τ in-neighbors (the comm degree
+    // counts distinct partners, direction-agnostic).
+    Some((2 * exponential::tau(n)).min(n.saturating_sub(1)))
+}
+
+fn bound_none(_n: usize) -> Option<usize> {
+    None
+}
+
+// ---- closed-form ρ ----------------------------------------------------
+
+fn rho_none(_n: usize) -> Option<f64> {
+    None
+}
+
+fn rho_ring(n: usize) -> Option<f64> {
+    // Metropolis ring weights are circulant with eigenvalues
+    // 1/3 + (2/3)cos(2πk/n), so ρ = (1 + 2cos(2π/n))/3 for n ≥ 4.
+    if n >= 4 {
+        Some((1.0 + 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos()) / 3.0)
+    } else {
+        None
+    }
+}
+
+fn rho_static_exp(n: usize) -> Option<f64> {
+    // Proposition 1 with equality for even n.
+    if n >= 2 && n % 2 == 0 {
+        let t = exponential::tau(n) as f64;
+        Some((t - 1.0) / (t + 1.0))
+    } else {
+        None
+    }
+}
+
+fn rho_hypercube(n: usize) -> Option<f64> {
+    // Remark 2: gap 2/(1 + log2 n), i.e. ρ = (τ−1)/(τ+1).
+    if n >= 2 && n.is_power_of_two() {
+        let t = exponential::tau(n) as f64;
+        Some((t - 1.0) / (t + 1.0))
+    } else {
+        None
+    }
+}
+
+fn rho_zero(_n: usize) -> Option<f64> {
+    Some(0.0)
+}
+
+// ---- exact-averaging periods ------------------------------------------
+
+fn ep_none(_n: usize) -> Option<usize> {
+    None
+}
+
+fn ep_pow2_tau(n: usize) -> Option<usize> {
+    // Lemma 1: exact averaging after τ = log2(n) steps iff n = 2^τ.
+    if n.is_power_of_two() {
+        Some(exponential::tau(n).max(1))
+    } else {
+        None
+    }
+}
+
+fn ep_one(_n: usize) -> Option<usize> {
+    Some(1)
+}
+
+// ---- Table 5 theory rows (moved from the old spectral match) ----------
+
+fn theory_default(_n: usize) -> (String, String) {
+    ("-".into(), "-".into())
+}
+
+fn theory_ring(n: usize) -> (String, String) {
+    let nf = n as f64;
+    (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), "2".into())
+}
+
+fn theory_star(n: usize) -> (String, String) {
+    let nf = n as f64;
+    (format!("O(1/n^2) ~ {:.2e}", 1.0 / (nf * nf)), format!("{}", n - 1))
+}
+
+fn theory_grid(n: usize) -> (String, String) {
+    let nf = n as f64;
+    let log2n = nf.log2().max(1.0);
+    (format!("O(1/(n log n)) ~ {:.2e}", 1.0 / (nf * log2n)), "4".into())
+}
+
+fn theory_torus(n: usize) -> (String, String) {
+    let nf = n as f64;
+    (format!("O(1/n) ~ {:.2e}", 1.0 / nf), "4".into())
+}
+
+fn theory_half_random(n: usize) -> (String, String) {
+    ("O(1)".into(), format!("{}", (n - 1) / 2))
+}
+
+fn theory_random_match(_n: usize) -> (String, String) {
+    ("N.A.".into(), "1".into())
+}
+
+fn theory_static_exp(n: usize) -> (String, String) {
+    let t = exponential::tau(n);
+    (
+        format!("2/(1+ceil(log2 n)) = {:.4}", 2.0 / (1.0 + t as f64)),
+        format!("{t}"),
+    )
+}
+
+fn theory_one_peer_exp(_n: usize) -> (String, String) {
+    ("N.A. (time-varying)".into(), "1".into())
+}
+
+// ---- the paper zoo, declared ------------------------------------------
+
+static RING: KindFamily = KindFamily {
+    kind: TopologyKind::Ring,
+    names: &["ring"],
+    build: build_ring,
+    degree: deg_two,
+    max_degree: bound_two,
+    rho: rho_ring,
+    theory: theory_ring,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static STAR: KindFamily = KindFamily {
+    kind: TopologyKind::Star,
+    names: &["star"],
+    build: build_star,
+    degree: deg_full,
+    max_degree: bound_full,
+    rho: rho_none,
+    theory: theory_star,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static GRID2D: KindFamily = KindFamily {
+    kind: TopologyKind::Grid2D,
+    names: &["grid"],
+    build: build_grid2d,
+    degree: deg_four,
+    max_degree: bound_four,
+    rho: rho_none,
+    theory: theory_grid,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static TORUS2D: KindFamily = KindFamily {
+    kind: TopologyKind::Torus2D,
+    names: &["torus"],
+    build: build_torus2d,
+    degree: deg_four,
+    max_degree: bound_four,
+    rho: rho_none,
+    theory: theory_torus,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static HYPERCUBE: KindFamily = KindFamily {
+    kind: TopologyKind::Hypercube,
+    names: &["hypercube"],
+    build: build_hypercube,
+    degree: deg_tau,
+    max_degree: bound_tau,
+    rho: rho_hypercube,
+    theory: theory_default,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: true,
+    uses_allreduce: false,
+};
+
+static HALF_RANDOM: KindFamily = KindFamily {
+    kind: TopologyKind::HalfRandom,
+    names: &["half_random"],
+    build: build_half_random,
+    degree: deg_half,
+    max_degree: bound_none,
+    rho: rho_none,
+    theory: theory_half_random,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static ERDOS_RENYI: KindFamily = KindFamily {
+    kind: TopologyKind::ErdosRenyi,
+    names: &["erdos_renyi"],
+    build: build_erdos_renyi,
+    degree: deg_expected_log,
+    max_degree: bound_none,
+    rho: rho_none,
+    theory: theory_default,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static GEOMETRIC: KindFamily = KindFamily {
+    kind: TopologyKind::Geometric,
+    names: &["geometric"],
+    build: build_geometric,
+    degree: deg_expected_log,
+    max_degree: bound_none,
+    rho: rho_none,
+    theory: theory_default,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static RANDOM_MATCH: KindFamily = KindFamily {
+    kind: TopologyKind::RandomMatch,
+    names: &["random_match"],
+    build: build_random_match,
+    degree: deg_one,
+    max_degree: bound_one,
+    rho: rho_none,
+    theory: theory_random_match,
+    exact_period: ep_none,
+    time_varying: true,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static STATIC_EXP: KindFamily = KindFamily {
+    kind: TopologyKind::StaticExp,
+    names: &["static_exp"],
+    build: build_static_exp,
+    degree: deg_tau,
+    max_degree: bound_static_exp,
+    rho: rho_static_exp,
+    theory: theory_static_exp,
+    exact_period: ep_none,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static ONE_PEER_EXP: KindFamily = KindFamily {
+    kind: TopologyKind::OnePeerExp,
+    names: &["one_peer_exp"],
+    build: build_one_peer_exp,
+    degree: deg_one,
+    max_degree: bound_two,
+    rho: rho_none,
+    theory: theory_one_peer_exp,
+    exact_period: ep_pow2_tau,
+    time_varying: true,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static ONE_PEER_EXP_PERM: KindFamily = KindFamily {
+    kind: TopologyKind::OnePeerExpPerm,
+    names: &["one_peer_exp_perm"],
+    build: build_one_peer_exp_perm,
+    degree: deg_one,
+    max_degree: bound_two,
+    rho: rho_none,
+    theory: theory_default,
+    // App. B.3.2: a per-period permutation of the τ distinct hops keeps
+    // periodic exact averaging (the realizations commute).
+    exact_period: ep_pow2_tau,
+    time_varying: true,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static ONE_PEER_EXP_UNIFORM: KindFamily = KindFamily {
+    kind: TopologyKind::OnePeerExpUniform,
+    names: &["one_peer_exp_uniform"],
+    build: build_one_peer_exp_uniform,
+    degree: deg_one,
+    max_degree: bound_two,
+    rho: rho_none,
+    theory: theory_default,
+    exact_period: ep_none,
+    time_varying: true,
+    requires_pow2: false,
+    uses_allreduce: false,
+};
+
+static ONE_PEER_HYPERCUBE: KindFamily = KindFamily {
+    kind: TopologyKind::OnePeerHypercube,
+    names: &["one_peer_hypercube"],
+    build: build_one_peer_hypercube,
+    degree: deg_one,
+    max_degree: bound_one,
+    rho: rho_none,
+    theory: theory_default,
+    exact_period: ep_pow2_tau,
+    time_varying: true,
+    requires_pow2: true,
+    uses_allreduce: false,
+};
+
+static FULLY_CONNECTED: KindFamily = KindFamily {
+    kind: TopologyKind::FullyConnected,
+    names: &["fully_connected", "parallel"],
+    build: build_fully_connected,
+    degree: deg_full,
+    max_degree: bound_full,
+    rho: rho_zero,
+    theory: theory_default,
+    exact_period: ep_one,
+    time_varying: false,
+    requires_pow2: false,
+    uses_allreduce: true,
+};
+
+/// Every registered family: the paper zoo first, then the finite-time
+/// extensions for arbitrary `n`. **This list is the single source of
+/// truth** — config parsing, CLI error listings, the registry proptests,
+/// and Table-style sweeps all iterate it. Adding a family = one impl +
+/// one entry here.
+pub static FAMILIES: &[&dyn TopologyFamily] = &[
+    &RING,
+    &STAR,
+    &GRID2D,
+    &TORUS2D,
+    &HYPERCUBE,
+    &HALF_RANDOM,
+    &ERDOS_RENYI,
+    &GEOMETRIC,
+    &RANDOM_MATCH,
+    &STATIC_EXP,
+    &ONE_PEER_EXP,
+    &ONE_PEER_EXP_PERM,
+    &ONE_PEER_EXP_UNIFORM,
+    &ONE_PEER_HYPERCUBE,
+    &FULLY_CONNECTED,
+    &finite_time::BASE2,
+    &finite_time::BASE3,
+    &finite_time::BASE4,
+    &finite_time::CECA,
+];
+
+/// Iterate every registered family as a handle.
+pub fn families() -> impl Iterator<Item = Topology> {
+    FAMILIES.iter().map(|f| Topology(*f))
+}
+
+/// Look a family up by any of its registered names.
+pub fn find(name: &str) -> Option<Topology> {
+    FAMILIES
+        .iter()
+        .find(|f| f.names().iter().any(|&alias| alias == name))
+        .map(|f| Topology(*f))
+}
+
+/// The family behind a paper-zoo kind.
+pub fn of_kind(kind: TopologyKind) -> Topology {
+    FAMILIES
+        .iter()
+        .find(|f| f.kind() == Some(kind))
+        .map(|f| Topology(*f))
+        .expect("every TopologyKind has a registered family")
+}
+
+/// Canonical names of every registered family, registry order. Error
+/// messages and usage text are generated from this — never hand-listed
+/// (the hand-written `exp` id list bug class).
+pub fn names() -> Vec<&'static str> {
+    FAMILIES.iter().map(|f| f.name()).collect()
+}
+
+/// Canonical names of the paper-zoo (closed-enum) families only — what
+/// surfaces restricted to `TopologyKind` (e.g. the netsim sweep) accept.
+pub fn kind_names() -> Vec<&'static str> {
+    FAMILIES.iter().filter(|f| f.kind().is_some()).map(|f| f.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_resolve() {
+        let mut seen = std::collections::BTreeSet::new();
+        for fam in FAMILIES {
+            for name in fam.names() {
+                assert!(seen.insert(*name), "duplicate registered name {name}");
+                let found = find(name).unwrap_or_else(|| panic!("{name} not findable"));
+                assert_eq!(found.name(), fam.name(), "{name} resolves to the wrong family");
+            }
+        }
+        assert!(find("mobius").is_none());
+    }
+
+    #[test]
+    fn every_kind_has_a_family_and_roundtrips() {
+        for kind in [
+            TopologyKind::Ring,
+            TopologyKind::Star,
+            TopologyKind::Grid2D,
+            TopologyKind::Torus2D,
+            TopologyKind::Hypercube,
+            TopologyKind::HalfRandom,
+            TopologyKind::ErdosRenyi,
+            TopologyKind::Geometric,
+            TopologyKind::RandomMatch,
+            TopologyKind::StaticExp,
+            TopologyKind::OnePeerExp,
+            TopologyKind::OnePeerExpPerm,
+            TopologyKind::OnePeerExpUniform,
+            TopologyKind::OnePeerHypercube,
+            TopologyKind::FullyConnected,
+        ] {
+            let topo = of_kind(kind);
+            assert_eq!(topo.kind(), Some(kind));
+            assert_eq!(topo.name(), kind.name(), "canonical name drifted for {kind:?}");
+            assert_eq!(topo.is_time_varying(), kind.is_time_varying(), "{kind:?}");
+            assert_eq!(topo, kind, "cross-type equality");
+        }
+    }
+
+    #[test]
+    fn handle_equality_and_display() {
+        let a = find("one_peer_exp").unwrap();
+        let b = of_kind(TopologyKind::OnePeerExp);
+        assert_eq!(a, b);
+        assert_ne!(a, find("static_exp").unwrap());
+        assert_eq!(format!("{a}"), "one_peer_exp");
+        assert_eq!(format!("{a:?}"), "OnePeerExp");
+        let base = find("base4").unwrap();
+        assert_eq!(format!("{base:?}"), "base4", "open families debug as their name");
+        assert_eq!(find("parallel").unwrap(), of_kind(TopologyKind::FullyConnected));
+    }
+
+    #[test]
+    fn degrees_match_legacy_costmodel_values() {
+        let n = 32;
+        assert_eq!(of_kind(TopologyKind::Ring).analytic_degree(n), 2);
+        assert_eq!(of_kind(TopologyKind::Grid2D).analytic_degree(n), 4);
+        assert_eq!(of_kind(TopologyKind::HalfRandom).analytic_degree(n), 15);
+        assert_eq!(of_kind(TopologyKind::RandomMatch).analytic_degree(n), 1);
+        assert_eq!(of_kind(TopologyKind::StaticExp).analytic_degree(n), 5);
+        assert_eq!(of_kind(TopologyKind::OnePeerExp).analytic_degree(n), 1);
+        assert_eq!(of_kind(TopologyKind::FullyConnected).analytic_degree(n), 31);
+    }
+
+    #[test]
+    fn exact_periods_follow_lemma1() {
+        let one_peer = of_kind(TopologyKind::OnePeerExp);
+        assert_eq!(one_peer.exact_period(16), Some(4));
+        assert_eq!(one_peer.exact_period(12), None, "no exact averaging off powers of two");
+        assert_eq!(of_kind(TopologyKind::FullyConnected).exact_period(7), Some(1));
+        assert_eq!(of_kind(TopologyKind::StaticExp).exact_period(16), None);
+    }
+}

@@ -1,0 +1,382 @@
+//! Finite-time exact-averaging topology families for **arbitrary n** —
+//! the first open extensions of the [`crate::topology::family`]
+//! registry (docs/DESIGN.md §Topology registry).
+//!
+//! The paper's headline exact-averaging property (Lemma 1: τ one-peer
+//! exponential realizations multiply to `J`) holds only for `n = 2^τ`.
+//! Two follow-up lines remove that restriction, and both are reproduced
+//! here as τ-period plan cycles:
+//!
+//! * **Base-(k+1) graphs** (after Takezawa et al., *Beyond Exponential
+//!   Graph*, 2023): [`BaseKFamily`] factors `n` into mixed-radix
+//!   factors `f_1 · f_2 ⋯ f_τ = n` with each `f_t ≤ k+1` whenever `n`
+//!   is `(k+1)`-smooth, and round `t` averages each node `i` with
+//!   `i + j·s_t (mod n)` for `j < f_t` at weight `1/f_t`
+//!   (stride `s_t = f_1⋯f_{t−1}`). Every round is circulant and doubly
+//!   stochastic, and the mixed-radix decomposition makes the period
+//!   product **exactly** `J`: the product's generating symbol is
+//!   `(1/n)·Σ_d ω^d`, which vanishes at every non-unit root of unity.
+//!   For `n = 2^τ` with radix 2 this *is* the one-peer exponential
+//!   schedule, weight for weight. Documented substitution: when `n` has
+//!   a prime factor `p > k+1` (e.g. `n = 5`), that factor becomes one
+//!   higher-degree round instead of Takezawa et al.'s more intricate
+//!   uneven-group construction.
+//! * **CECA-style one/two-peer schedules** (after Ding et al.,
+//!   *DSGD-CECA*, 2023): [`CecaFamily`] runs a balanced merge tree —
+//!   each round merges disjoint node groups `A`, `B` (sizes within 1 of
+//!   each other) by the convex combination `|A|/(|A|+|B|)` ·
+//!   `|B|/(|A|+|B|)`, every node contacting at most **2** partners per
+//!   round — reaching the exact global average in `⌈log₂ n⌉` rounds for
+//!   ANY `n`. Documented substitution: rounds are **row**-stochastic
+//!   (columns only balance over the full period, whose product is
+//!   exactly `J`); the published CECA achieves per-round double
+//!   stochasticity with `p` or `p+1` rounds via a subtler weighting.
+//!   Unlike the (commuting, circulant) base-(k+1) rounds, the merge
+//!   rounds do not commute — exactness holds for periods aligned to
+//!   `k = 0`, which is how [`crate::topology::schedule::Schedule`]
+//!   serves them.
+
+use super::exponential::tau;
+use super::family::{FamilySchedule, TopologyFamily};
+use super::plan::MixingPlan;
+
+/// The single-node (and `n = 1`) schedule: the identity plan.
+fn identity_plan() -> MixingPlan {
+    MixingPlan::from_rows(vec![vec![(0, 1.0)]], None)
+}
+
+/// Smallest prime factor of `m ≥ 2` (trial division — `m` here is a
+/// cluster size, not a cryptographic modulus).
+fn smallest_prime_factor(m: usize) -> usize {
+    let mut d = 2;
+    while d * d <= m {
+        if m % d == 0 {
+            return d;
+        }
+        d += 1;
+    }
+    m
+}
+
+/// Mixed-radix factorization of `n` with factors capped at `radix`
+/// (largest cap-respecting factor first). When the remainder has no
+/// divisor `≤ radix`, its smallest prime factor (necessarily `> radix`)
+/// is peeled instead, so the factorization always multiplies back to
+/// `n` and the schedule stays exact for every `n`.
+pub fn mixed_radix_factors(n: usize, radix: usize) -> Vec<usize> {
+    assert!(radix >= 2, "radix must be at least 2");
+    let mut m = n.max(1);
+    let mut factors = Vec::new();
+    while m > 1 {
+        match (2..=radix.min(m)).rev().find(|f| m % f == 0) {
+            Some(f) => {
+                factors.push(f);
+                m /= f;
+            }
+            None => {
+                let p = smallest_prime_factor(m);
+                factors.push(p);
+                m /= p;
+            }
+        }
+    }
+    factors
+}
+
+/// The τ-round base-(k+1) plan cycle for `n` nodes: round `t` is the
+/// circulant `(1/f_t)·Σ_{j<f_t} C^{j·s_t}` with stride
+/// `s_t = f_1⋯f_{t−1}` (`C` = cyclic shift). `∏_t W^{(t)} = J` exactly
+/// by the mixed-radix covering argument (every residue `0..n` is hit by
+/// exactly one exponent combination `Σ_t j_t s_t`).
+pub fn base_k_cycle(n: usize, radix: usize) -> Vec<MixingPlan> {
+    let factors = mixed_radix_factors(n, radix);
+    let mut plans = Vec::with_capacity(factors.len().max(1));
+    if factors.is_empty() {
+        plans.push(identity_plan());
+        return plans;
+    }
+    let mut stride = 1usize;
+    for &f in &factors {
+        let w = 1.0 / f as f64;
+        let rows = (0..n)
+            .map(|i| (0..f).map(|j| ((i + j * stride) % n, w)).collect())
+            .collect();
+        plans.push(MixingPlan::from_rows(rows, None));
+        stride *= f;
+    }
+    plans
+}
+
+/// One merge of the CECA-style schedule: groups `[lo, mid)` and
+/// `[mid, hi)` (sizes `α ≥ β ≥ 1`, `α − β ≤ 1`).
+type Merge = (usize, usize, usize);
+
+/// Balanced merge tree over `[lo, hi)`: a segment of size `s` merges
+/// its two halves at round `⌈log₂ s⌉ − 1`; both halves complete on
+/// strictly earlier rounds (`⌈log₂⌈s/2⌉⌉ = ⌈log₂ s⌉ − 1`), so every
+/// group is internally uniform before it merges.
+fn schedule_merges(lo: usize, hi: usize, rounds: &mut [Vec<Merge>]) {
+    let s = hi - lo;
+    if s <= 1 {
+        return;
+    }
+    let mid = lo + s.div_ceil(2);
+    schedule_merges(lo, mid, rounds);
+    schedule_merges(mid, hi, rounds);
+    rounds[tau(s) - 1].push((lo, mid, hi));
+}
+
+/// The `p = ⌈log₂ n⌉`-round CECA-style plan cycle: after round `r`,
+/// every group that merged holds the exact average of its members'
+/// starting values (uniform within the group, bitwise — both sides of
+/// a merge evaluate the same two-term convex combination in the same
+/// accumulation order), so the period product is exactly `J` for ANY
+/// `n`. Every node touches at most 2 partners per round (its read
+/// partner, plus at most one extra reader when `|A| = |B| + 1`).
+pub fn ceca_cycle(n: usize) -> Vec<MixingPlan> {
+    let p = tau(n);
+    if p == 0 {
+        return vec![identity_plan()];
+    }
+    let mut rounds: Vec<Vec<Merge>> = vec![Vec::new(); p];
+    schedule_merges(0, n, &mut rounds);
+    rounds
+        .iter()
+        .map(|merges| {
+            let mut rows: Vec<Vec<(usize, f64)>> =
+                (0..n).map(|i| vec![(i, 1.0)]).collect();
+            for &(lo, mid, hi) in merges {
+                let alpha = mid - lo;
+                let beta = hi - mid;
+                let wa = alpha as f64 / (alpha + beta) as f64;
+                let wb = beta as f64 / (alpha + beta) as f64;
+                for u in lo..mid {
+                    let partner = mid + (u - lo) % beta;
+                    rows[u] = vec![(u, wa), (partner, wb)];
+                }
+                for v in mid..hi {
+                    let partner = lo + (v - mid);
+                    rows[v] = vec![(partner, wa), (v, wb)];
+                }
+            }
+            MixingPlan::from_rows(rows, None)
+        })
+        .collect()
+}
+
+/// Base-(k+1) graph family (after Takezawa et al. 2023): finite-time
+/// exact averaging for arbitrary `n` with per-round factor cap
+/// `radix = k + 1`.
+pub struct BaseKFamily {
+    radix: usize,
+    names: &'static [&'static str],
+}
+
+impl BaseKFamily {
+    /// The factor cap `k + 1`.
+    pub fn radix(&self) -> usize {
+        self.radix
+    }
+}
+
+impl TopologyFamily for BaseKFamily {
+    fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    fn build(&self, n: usize, _seed: u64) -> FamilySchedule {
+        if n <= 1 {
+            FamilySchedule::Static(identity_plan())
+        } else {
+            FamilySchedule::Periodic(base_k_cycle(n, self.radix))
+        }
+    }
+
+    fn analytic_degree(&self, n: usize) -> usize {
+        // Paper accounting (one send + one receive per peer slot, like
+        // one-peer exp's degree 1): worst round has f−1 out-neighbors.
+        // Radix 2 therefore reports 1, consistent with the bitwise-equal
+        // one-peer exponential schedule at powers of two.
+        mixed_radix_factors(n, self.radix)
+            .iter()
+            .map(|&f| (f - 1).min(n.saturating_sub(1)))
+            .max()
+            .unwrap_or(0)
+    }
+
+    fn max_degree_bound(&self, n: usize) -> Option<usize> {
+        // Realized *partners* (union of in- and out-neighbors): up to
+        // 2(f−1) per round for the circulant rounds.
+        Some(
+            mixed_radix_factors(n, self.radix)
+                .iter()
+                .map(|&f| (2 * (f - 1)).min(n.saturating_sub(1)))
+                .max()
+                .unwrap_or(0),
+        )
+    }
+
+    fn exact_period(&self, n: usize) -> Option<usize> {
+        Some(mixed_radix_factors(n, self.radix).len().max(1))
+    }
+
+    fn theory_row(&self, n: usize) -> (String, String) {
+        let period = mixed_radix_factors(n, self.radix).len().max(1);
+        (
+            format!("exact avg each {period} iters (any n)"),
+            format!("{}", self.analytic_degree(n)),
+        )
+    }
+
+    fn is_time_varying(&self) -> bool {
+        true
+    }
+}
+
+/// CECA-style one/two-peer family (after Ding et al. 2023): exact
+/// averaging in `⌈log₂ n⌉` rounds for arbitrary `n`, at most 2 partners
+/// per node per round.
+pub struct CecaFamily {
+    names: &'static [&'static str],
+}
+
+impl TopologyFamily for CecaFamily {
+    fn names(&self) -> &'static [&'static str] {
+        self.names
+    }
+
+    fn build(&self, n: usize, _seed: u64) -> FamilySchedule {
+        if n <= 1 {
+            FamilySchedule::Static(identity_plan())
+        } else {
+            FamilySchedule::Periodic(ceca_cycle(n))
+        }
+    }
+
+    fn analytic_degree(&self, n: usize) -> usize {
+        2.min(n.saturating_sub(1))
+    }
+
+    fn max_degree_bound(&self, n: usize) -> Option<usize> {
+        Some(self.analytic_degree(n))
+    }
+
+    fn exact_period(&self, n: usize) -> Option<usize> {
+        Some(tau(n).max(1))
+    }
+
+    fn theory_row(&self, n: usize) -> (String, String) {
+        (format!("exact avg each {} iters (any n)", tau(n).max(1)), "2".into())
+    }
+
+    fn is_time_varying(&self) -> bool {
+        true
+    }
+}
+
+/// Base-2 graph (radix 2): identical to one-peer exp at powers of two,
+/// still exact elsewhere (odd factors fall back to higher degree).
+pub static BASE2: BaseKFamily = BaseKFamily { radix: 2, names: &["base2"] };
+/// Base-3 graph (radix 3).
+pub static BASE3: BaseKFamily = BaseKFamily { radix: 3, names: &["base3"] };
+/// Base-4 graph (radix 4) — the default base-(k+1) instance.
+pub static BASE4: BaseKFamily = BaseKFamily { radix: 4, names: &["base4", "base_k"] };
+/// CECA-style one/two-peer schedule.
+pub static CECA: CecaFamily = CecaFamily { names: &["ceca", "ceca_one_two_peer"] };
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::topology::exponential::one_peer_exp_plan;
+
+    fn period_product(plans: &[MixingPlan], n: usize) -> Matrix {
+        let mut prod = Matrix::eye(n);
+        for plan in plans {
+            prod = plan.to_dense().matmul(&prod);
+        }
+        prod
+    }
+
+    #[test]
+    fn mixed_radix_factors_multiply_back() {
+        for n in [1usize, 2, 3, 5, 6, 12, 24, 35, 48, 64, 97, 1024] {
+            for radix in [2usize, 3, 4] {
+                let fs = mixed_radix_factors(n, radix);
+                assert_eq!(fs.iter().product::<usize>(), n.max(1), "n={n} radix={radix}");
+                // Factors only exceed the cap when nothing ≤ cap divides.
+                for &f in &fs {
+                    assert!(f >= 2, "n={n} radix={radix}: factor {f}");
+                }
+            }
+        }
+        assert_eq!(mixed_radix_factors(12, 4), vec![4, 3]);
+        assert_eq!(mixed_radix_factors(48, 4), vec![4, 4, 3]);
+        assert_eq!(mixed_radix_factors(5, 4), vec![5]);
+        assert_eq!(mixed_radix_factors(64, 2).len(), 6);
+    }
+
+    #[test]
+    fn base_k_cycle_is_exact_for_any_n() {
+        for n in [2usize, 3, 5, 6, 12, 24, 48, 64] {
+            for radix in [2usize, 3, 4] {
+                let plans = base_k_cycle(n, radix);
+                let err = period_product(&plans, n).sub(&Matrix::averaging(n)).max_abs();
+                assert!(err < 1e-12, "n={n} radix={radix}: |prod - J| = {err}");
+                for (t, plan) in plans.iter().enumerate() {
+                    assert!(plan.is_doubly_stochastic(1e-12), "n={n} radix={radix} t={t}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn base2_matches_one_peer_exp_at_powers_of_two() {
+        for n in [2usize, 4, 8, 16, 64] {
+            let plans = base_k_cycle(n, 2);
+            assert_eq!(plans.len(), tau(n));
+            for (t, plan) in plans.iter().enumerate() {
+                assert_eq!(plan.rows, one_peer_exp_plan(n, t).rows, "n={n} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn ceca_cycle_is_exact_row_stochastic_two_peer() {
+        for n in [2usize, 3, 5, 6, 7, 12, 24, 31, 48, 64] {
+            let plans = ceca_cycle(n);
+            assert_eq!(plans.len(), tau(n), "n={n}: period is ceil(log2 n)");
+            let err = period_product(&plans, n).sub(&Matrix::averaging(n)).max_abs();
+            assert!(err < 1e-12, "n={n}: |prod - J| = {err}");
+            for (r, plan) in plans.iter().enumerate() {
+                assert!(plan.max_degree <= 2, "n={n} round {r}: degree {}", plan.max_degree);
+                for (i, row) in plan.rows.iter().enumerate() {
+                    let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+                    assert!((sum - 1.0).abs() < 1e-12, "n={n} round {r} row {i}");
+                    assert!(row.iter().all(|&(_, w)| w >= 0.0), "n={n} round {r} row {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ceca_gossip_hits_consensus_bitwise() {
+        // Both sides of every merge evaluate the same convex combination
+        // in the same order, so after the period all nodes hold the
+        // bitwise-identical value.
+        let n = 12;
+        let mut x: Vec<f64> = (0..n).map(|i| ((i * 37 + 5) % 11) as f64 / 3.0).collect();
+        for plan in ceca_cycle(n) {
+            x = plan.matvec(&x);
+        }
+        for v in &x {
+            assert_eq!(v.to_bits(), x[0].to_bits(), "consensus is bitwise");
+        }
+    }
+
+    #[test]
+    fn one_node_schedules_are_identity() {
+        assert_eq!(ceca_cycle(1)[0].rows, vec![vec![(0, 1.0)]]);
+        assert_eq!(base_k_cycle(1, 4)[0].rows, vec![vec![(0, 1.0)]]);
+    }
+}

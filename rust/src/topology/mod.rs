@@ -18,8 +18,18 @@
 //! has a direct sparse constructor, and the dense [`crate::linalg::Matrix`]
 //! form survives only behind `to_dense()` for spectral analysis and tests
 //! (docs/DESIGN.md §Plan cache).
+//!
+//! Dispatch is an **open registry** ([`family`], docs/DESIGN.md
+//! §Topology registry): every per-kind behavior (plan construction,
+//! analytic degree/ρ, exact-averaging period, cost-model dispatch,
+//! config names) is declared once per [`family::TopologyFamily`], and
+//! [`finite_time`] extends the zoo with exact-averaging schedules for
+//! **arbitrary n** (base-(k+1) after Takezawa et al.; CECA-style
+//! one/two-peer after Ding et al.).
 
 pub mod exponential;
+pub mod family;
+pub mod finite_time;
 pub mod graphs;
 pub mod hypercube_onepeer;
 pub mod matching;
@@ -29,6 +39,7 @@ pub mod random;
 pub mod schedule;
 pub mod weight;
 
+pub use family::{Topology, TopologyFamily};
 pub use graphs::Graph;
 pub use plan::MixingPlan;
 pub use schedule::{Schedule, TopologyKind};

@@ -4,29 +4,32 @@
 //! Sparse-first: [`Schedule::plan_at`] hands out **cached borrowed
 //! plans** — static topologies cache one [`MixingPlan`]; periodic
 //! time-varying schedules (one-peer exponential with period
-//! `τ = ⌈log₂ n⌉`, Theorem 2; one-peer hypercube with period `log₂ n`)
-//! precompute the full period once and cycle; only genuinely stochastic
-//! schedules (random matching, permuted/uniform-sampled one-peer)
-//! regenerate per iteration — and those build sparsely from their
-//! matchings, never through a dense matrix. Amortized per-iteration
-//! topology cost on every deterministic schedule is `O(1)`.
-//! The dense [`Matrix`] form survives only behind
+//! `τ = ⌈log₂ n⌉`, Theorem 2; one-peer hypercube; the finite-time
+//! base-(k+1) and CECA-style families for arbitrary `n`) precompute the
+//! full period once and cycle; only genuinely stochastic schedules
+//! (random matching, permuted/uniform-sampled one-peer) regenerate per
+//! iteration — and those build sparsely from their matchings, never
+//! through a dense matrix. Amortized per-iteration topology cost on
+//! every deterministic schedule is `O(1)`.
+//!
+//! Construction is routed through the open family registry
+//! ([`crate::topology::family`], docs/DESIGN.md §Topology registry):
+//! [`Schedule::new`] resolves a paper-zoo [`TopologyKind`] to its
+//! registered family, and [`Schedule::from_family`] builds any
+//! registered [`Topology`] — including the open extensions that have no
+//! enum variant. The dense [`Matrix`] form survives only behind
 //! [`Schedule::weight_at`] / [`MixingPlan::to_dense`] for spectral
 //! analysis and tests (docs/DESIGN.md §Plan cache).
 
-use super::exponential::{
-    one_peer_exp_plan, one_peer_exp_weights, static_exp_plan, OnePeerOrder, OnePeerSequence,
-};
-use super::graphs;
-use super::hypercube_onepeer::one_peer_hypercube_plan;
-use super::matching::RandomMatching;
-use super::metropolis::metropolis_plan;
+use super::exponential::one_peer_exp_weights;
+use super::family::{self, FamilySchedule, PlanGen, Topology};
 use super::plan::MixingPlan;
-use super::random;
 use crate::linalg::Matrix;
 
 /// Every topology evaluated in the paper, plus the fully-connected
-/// (all-reduce) baseline used by parallel SGD.
+/// (all-reduce) baseline used by parallel SGD. This is the **closed**
+/// paper zoo; open extensions (base-(k+1), CECA, …) exist only as
+/// registered [`Topology`] families.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum TopologyKind {
     Ring,
@@ -79,26 +82,16 @@ impl TopologyKind {
         }
     }
 
-    /// Parse from the CLI/config name.
+    /// The registered family behind this kind.
+    pub fn family(self) -> Topology {
+        family::of_kind(self)
+    }
+
+    /// Parse from the CLI/config name — via the registry, so names and
+    /// aliases can never drift from [`family::find`]. Open families
+    /// parse to a [`Topology`] but not to a kind.
     pub fn parse(s: &str) -> Option<TopologyKind> {
-        Some(match s {
-            "ring" => TopologyKind::Ring,
-            "star" => TopologyKind::Star,
-            "grid" => TopologyKind::Grid2D,
-            "torus" => TopologyKind::Torus2D,
-            "hypercube" => TopologyKind::Hypercube,
-            "half_random" => TopologyKind::HalfRandom,
-            "erdos_renyi" => TopologyKind::ErdosRenyi,
-            "geometric" => TopologyKind::Geometric,
-            "random_match" => TopologyKind::RandomMatch,
-            "static_exp" => TopologyKind::StaticExp,
-            "one_peer_exp" => TopologyKind::OnePeerExp,
-            "one_peer_exp_perm" => TopologyKind::OnePeerExpPerm,
-            "one_peer_exp_uniform" => TopologyKind::OnePeerExpUniform,
-            "one_peer_hypercube" => TopologyKind::OnePeerHypercube,
-            "fully_connected" | "parallel" => TopologyKind::FullyConnected,
-            _ => return None,
-        })
+        family::find(s).and_then(|t| t.kind())
     }
 
     /// Is the weight-matrix sequence time-varying?
@@ -144,12 +137,6 @@ impl std::fmt::Display for TopologyKind {
     }
 }
 
-/// Stochastic plan generators (the only schedules that regenerate).
-enum Gen {
-    OnePeer(OnePeerSequence),
-    Matching(RandomMatching),
-}
-
 enum State {
     /// One plan, every iteration (static topologies).
     Static(MixingPlan),
@@ -158,7 +145,7 @@ enum State {
     /// Stochastic: regenerate (sparsely) per iteration; the last plan is
     /// cached so repeated `plan_at(k)` calls for the same `k` are
     /// idempotent and do not advance the RNG.
-    Stochastic { gen: Gen, current: MixingPlan, at: Option<usize> },
+    Stochastic { gen: Box<dyn PlanGen>, current: MixingPlan, at: Option<usize> },
 }
 
 /// A stream of mixing plans `W^{(0)}, W^{(1)}, …` for one topology.
@@ -168,74 +155,53 @@ enum State {
 /// advance internal RNG state and must be queried with non-decreasing
 /// `k` to stay reproducible.
 pub struct Schedule {
-    kind: TopologyKind,
+    topo: Topology,
     n: usize,
     state: State,
 }
 
 impl Schedule {
-    /// Build a schedule for `kind` on `n` nodes. `seed` feeds the random
-    /// topologies (and is ignored by deterministic ones).
+    /// Build a schedule for a paper-zoo `kind` on `n` nodes (resolved
+    /// through the registry). `seed` feeds the random topologies (and
+    /// is ignored by deterministic ones).
     pub fn new(kind: TopologyKind, n: usize, seed: u64) -> Schedule {
-        let period = super::exponential::tau(n).max(1);
-        let state = match kind {
-            TopologyKind::Ring => State::Static(metropolis_plan(&graphs::ring(n)).with_kind(kind)),
-            TopologyKind::Star => State::Static(metropolis_plan(&graphs::star(n)).with_kind(kind)),
-            TopologyKind::Grid2D => {
-                State::Static(metropolis_plan(&graphs::grid2d(n)).with_kind(kind))
-            }
-            TopologyKind::Torus2D => {
-                State::Static(metropolis_plan(&graphs::torus2d(n)).with_kind(kind))
-            }
-            TopologyKind::Hypercube => {
-                State::Static(metropolis_plan(&graphs::hypercube(n)).with_kind(kind))
-            }
-            TopologyKind::HalfRandom => {
-                State::Static(random::half_random_plan(n, seed).with_kind(kind))
-            }
-            TopologyKind::ErdosRenyi => {
-                State::Static(random::erdos_renyi_plan(n, 1.0, seed).with_kind(kind))
-            }
-            TopologyKind::Geometric => {
-                State::Static(random::geometric_plan(n, 1.0, seed).with_kind(kind))
-            }
-            TopologyKind::StaticExp => State::Static(static_exp_plan(n)),
-            TopologyKind::FullyConnected => State::Static(MixingPlan::averaging(n)),
-            TopologyKind::OnePeerExp => {
-                State::Periodic((0..period).map(|t| one_peer_exp_plan(n, t)).collect())
-            }
-            TopologyKind::OnePeerHypercube => {
-                State::Periodic((0..period).map(|t| one_peer_hypercube_plan(n, t)).collect())
-            }
-            // `current` starts as a trivial dummy for every stochastic
-            // kind — `at: None` forces the first `plan_at` call to draw
-            // the real plan.
-            TopologyKind::OnePeerExpPerm => State::Stochastic {
-                gen: Gen::OnePeer(OnePeerSequence::new(n, OnePeerOrder::RandomPermutation, seed)),
-                current: MixingPlan::averaging(1),
-                at: None,
-            },
-            TopologyKind::OnePeerExpUniform => State::Stochastic {
-                gen: Gen::OnePeer(OnePeerSequence::new(n, OnePeerOrder::UniformSampling, seed)),
-                current: MixingPlan::averaging(1),
-                at: None,
-            },
-            TopologyKind::RandomMatch => State::Stochastic {
-                gen: Gen::Matching(RandomMatching::new(n, seed)),
-                current: MixingPlan::averaging(1),
-                at: None,
-            },
-        };
-        debug_assert_eq!(
-            kind.is_deterministic(),
-            !matches!(state, State::Stochastic { .. }),
-            "TopologyKind::is_deterministic out of sync with Schedule state for {kind}"
-        );
-        Schedule { kind, n, state }
+        Schedule::from_family(kind.family(), n, seed)
     }
 
-    pub fn kind(&self) -> TopologyKind {
-        self.kind
+    /// Build a schedule for any registered family — the open-registry
+    /// entry point ([`family::find`] resolves config/CLI names).
+    pub fn from_family(topo: Topology, n: usize, seed: u64) -> Schedule {
+        let state = match topo.build(n, seed) {
+            FamilySchedule::Static(plan) => State::Static(plan),
+            FamilySchedule::Periodic(plans) => {
+                assert!(!plans.is_empty(), "{topo}: empty periodic cycle");
+                State::Periodic(plans)
+            }
+            // `current` starts as a trivial dummy for every stochastic
+            // family — `at: None` forces the first `plan_at` call to
+            // draw the real plan.
+            FamilySchedule::Stochastic(gen) => {
+                State::Stochastic { gen, current: MixingPlan::averaging(1), at: None }
+            }
+        };
+        if let Some(kind) = topo.kind() {
+            debug_assert_eq!(
+                kind.is_deterministic(),
+                !matches!(state, State::Stochastic { .. }),
+                "TopologyKind::is_deterministic out of sync with the family schedule for {kind}"
+            );
+        }
+        Schedule { topo, n, state }
+    }
+
+    /// The family this schedule was built from.
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// The paper-zoo kind, when the family has one.
+    pub fn kind(&self) -> Option<TopologyKind> {
+        self.topo.kind()
     }
 
     pub fn n(&self) -> usize {
@@ -252,10 +218,7 @@ impl Schedule {
             State::Periodic(period) => &period[k % period.len()],
             State::Stochastic { gen, current, at } => {
                 if *at != Some(k) {
-                    *current = match gen {
-                        Gen::OnePeer(seq) => seq.plan_at(k),
-                        Gen::Matching(m) => m.next_plan(),
-                    };
+                    *current = gen.plan_at(k);
                     *at = Some(k);
                 }
                 current
@@ -343,6 +306,8 @@ mod tests {
         assert_eq!(s.weight_at(0), s.weight_at(5));
         assert!(s.static_plan().is_some());
         assert_eq!(s.period(), Some(1));
+        assert_eq!(s.kind(), Some(TopologyKind::Ring));
+        assert_eq!(s.topology(), TopologyKind::Ring);
     }
 
     #[test]
@@ -407,5 +372,21 @@ mod tests {
             assert_eq!(TopologyKind::parse(kind.name()), Some(kind));
         }
         assert_eq!(TopologyKind::parse("nope"), None);
+        // Open-registry families have no kind but do resolve as families.
+        assert_eq!(TopologyKind::parse("base4"), None);
+        assert!(crate::topology::family::find("base4").is_some());
+    }
+
+    #[test]
+    fn finite_time_families_build_periodic_schedules() {
+        for (name, n) in [("base4", 12usize), ("base2", 24), ("ceca", 48)] {
+            let topo = crate::topology::family::find(name).unwrap();
+            let mut s = Schedule::from_family(topo, n, 0);
+            let period = topo.exact_period(n).unwrap();
+            assert_eq!(s.period(), Some(period), "{name} n={n}");
+            let first = s.plan_at(0).clone();
+            assert_eq!(&first, s.plan_at(period), "{name} n={n}: cycle wraps");
+            assert_eq!(s.kind(), None, "{name} is not in the closed enum");
+        }
     }
 }

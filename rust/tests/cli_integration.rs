@@ -140,6 +140,37 @@ fn train_with_config_and_overrides() {
 }
 
 #[test]
+fn train_with_finite_time_family_config() {
+    // The shipped base-(k+1) example config: an open-registry family
+    // (no TopologyKind) training end-to-end at a non-power-of-two n.
+    let (stdout, stderr, ok) = run(&[
+        "train",
+        "--config",
+        &format!("{}/configs/base4_dmsgd.json", env!("CARGO_MANIFEST_DIR")),
+        "iters=60",
+    ]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("final: loss"));
+    assert!(stdout.contains("topology: base4"), "{stdout}");
+}
+
+#[test]
+fn train_unknown_topology_error_lists_registered_names() {
+    let (_, stderr, ok) = run(&["train", "topology=mobius"]);
+    assert!(!ok);
+    for needle in ["unknown topology", "base4", "ceca", "one_peer_exp", "ring"] {
+        assert!(stderr.contains(needle), "stderr missing {needle}: {stderr}");
+    }
+}
+
+#[test]
+fn spectral_reports_finite_time_family_period() {
+    let (stdout, _, ok) = run(&["spectral", "ceca", "12"]);
+    assert!(ok, "{stdout}");
+    assert!(stdout.contains("exact-averaging period tau = 4"), "{stdout}");
+}
+
+#[test]
 fn train_rejects_bad_key() {
     let (_, stderr, ok) = run(&["train", "flux_capacitor=1"]);
     assert!(!ok);

@@ -9,6 +9,7 @@ use expograph::linalg::Matrix;
 use expograph::optim::AlgorithmKind;
 use expograph::spectral::{self, RhoMethod};
 use expograph::topology::exponential::{one_peer_exp_weights, static_exp_weights, tau};
+use expograph::topology::family;
 use expograph::topology::schedule::{static_weights, Schedule};
 use expograph::topology::TopologyKind;
 
@@ -159,6 +160,40 @@ fn claim_exact_averaging_theorem_via_schedule_plans() {
         }
         let err = prod.sub(&Matrix::averaging(n)).max_abs();
         assert!(err > 1e-6, "n={n}: unexpectedly exact (err {err})");
+    }
+}
+
+/// The generalized exact-averaging theorem through the registry's
+/// finite-time families (Takezawa et al. 2023; Ding et al. 2023): the
+/// declared-period product of schedule plans equals `J = 11ᵀ/n` to
+/// 1e-12 for **arbitrary** n — including every size where Lemma 1
+/// denies it to the one-peer exponential graph — while one-peer exp
+/// keeps its iff-power-of-two characterization, declared the same way
+/// by the registry.
+#[test]
+fn claim_finite_time_exact_averaging_for_arbitrary_n() {
+    for name in ["base2", "base3", "base4", "ceca"] {
+        let topo = family::find(name).expect("finite-time family is registered");
+        for n in [5usize, 6, 12, 24, 48] {
+            let period = topo.exact_period(n).expect("declares a period for any n");
+            let err = expograph::consensus::schedule_period_error(topo, n, period, 0);
+            assert!(err < 1e-12, "{name} n={n}: |prod - J| = {err}");
+            // Aligned periods repeat: the second cycle is exact too.
+            let err2 = expograph::consensus::schedule_period_error(topo, n, period, period);
+            assert!(err2 < 1e-12, "{name} n={n} (second period): {err2}");
+        }
+    }
+    // One-peer exponential: exact averaging iff n is a power of two.
+    let one_peer = family::find("one_peer_exp").unwrap();
+    for n in [8usize, 16, 64] {
+        assert_eq!(one_peer.exact_period(n), Some(tau(n)), "n={n}");
+        let err = expograph::consensus::exact_period_error(one_peer, n, 0).unwrap();
+        assert!(err < 1e-12, "n={n}: {err}");
+    }
+    for n in [5usize, 6, 12, 24, 48] {
+        assert_eq!(one_peer.exact_period(n), None, "no exact period at n={n}");
+        let err = expograph::consensus::schedule_period_error(one_peer, n, tau(n), 0);
+        assert!(err > 1e-6, "n={n}: unexpectedly exact ({err})");
     }
 }
 

@@ -3,7 +3,7 @@
 //! the offending seed/case so they are reproducible).
 
 use expograph::consensus;
-use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::coordinator::StackedParams;
 use expograph::linalg::{power, Matrix};
 use expograph::spectral;
 use expograph::topology::exponential::{
@@ -235,7 +235,7 @@ fn prop_mixing_preserves_mean_and_contracts() {
         ][rng.below(4)];
         let mut sched = Schedule::new(kind, n, rng.next_u64());
         let w = sched.weight_at(case);
-        let sw = SparseWeights::from_dense(&w);
+        let sw = MixingPlan::from_dense(&w);
         let mut x = StackedParams::zeros(n, dim);
         for v in x.data.iter_mut() {
             *v = rng.normal() as f32;
@@ -467,7 +467,7 @@ fn prop_parallel_consensus_invariant() {
             StackedParams::replicate(n, &vec![0.5; dim]),
             0.9,
         );
-        let w = SparseWeights::from_dense(&Matrix::averaging(n));
+        let w = MixingPlan::from_dense(&Matrix::averaging(n));
         for _ in 0..8 {
             let mut g = StackedParams::zeros(n, dim);
             for v in g.data.iter_mut() {

@@ -1,0 +1,175 @@
+//! Registry conformance suite (docs/DESIGN.md §Topology registry):
+//! property tests that every registered [`TopologyFamily`] — paper zoo
+//! and open extensions alike — honors the trait contract, plus the
+//! schedule-cache guarantee that finite-time families serve τ-period
+//! borrowed plans with no per-iteration allocation.
+
+use expograph::topology::family::{self, Topology};
+use expograph::topology::plan::MixingPlan;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyFamily;
+use expograph::util::rng::Pcg;
+
+/// A size the family accepts (power of two for the hypercube families).
+fn valid_n(topo: Topology, rng: &mut Pcg) -> usize {
+    if topo.requires_pow2() {
+        1usize << (1 + rng.below(6)) // 2..64
+    } else {
+        2 + rng.below(40)
+    }
+}
+
+/// Every registered family produces row-stochastic plans with
+/// non-negative weights, and — when it guarantees a degree bound —
+/// every realized plan respects it.
+#[test]
+fn prop_every_family_row_stochastic_and_degree_bounded() {
+    let mut rng = Pcg::seeded(0xFA111);
+    for case in 0..25 {
+        let seed = rng.next_u64();
+        for topo in family::families() {
+            let n = valid_n(topo, &mut rng);
+            let mut sched = Schedule::from_family(topo, n, seed);
+            for k in 0..5 {
+                let plan = sched.plan_at(k);
+                assert_eq!(plan.n, n, "case {case}: {topo} n={n}");
+                for (i, row) in plan.rows.iter().enumerate() {
+                    let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+                    assert!(
+                        (sum - 1.0).abs() < 1e-9,
+                        "case {case}: {topo} n={n} k={k} row {i} sums to {sum}"
+                    );
+                    assert!(
+                        row.iter().all(|&(_, w)| w >= 0.0),
+                        "case {case}: {topo} n={n} k={k} row {i} has negative weight"
+                    );
+                }
+                if let Some(bound) = topo.max_degree_bound(n) {
+                    assert!(
+                        plan.max_degree <= bound,
+                        "case {case}: {topo} n={n} k={k}: degree {} > declared bound {bound}",
+                        plan.max_degree
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Every registered name and alias round-trips through config-name
+/// parsing to the same family, names are globally unique, and the
+/// canonical-name listing is consistent with lookup.
+#[test]
+fn prop_names_roundtrip_through_config_parsing() {
+    let mut seen = std::collections::BTreeSet::new();
+    for topo in family::families() {
+        for name in topo.family().names() {
+            assert!(seen.insert(*name), "duplicate registered name {name}");
+            let found = family::find(name)
+                .unwrap_or_else(|| panic!("registered name {name} does not parse"));
+            assert_eq!(found, topo, "{name} parses to a different family");
+            let cfg = expograph::config::parse_topology(name)
+                .unwrap_or_else(|e| panic!("config rejects registered name {name}: {e}"));
+            assert_eq!(cfg, topo, "config parse of {name} drifted from the registry");
+        }
+        assert!(
+            family::names().contains(&topo.name()),
+            "{topo} missing from the canonical listing"
+        );
+    }
+    assert!(family::find("not_a_topology").is_none());
+    let err = expograph::config::parse_topology("not_a_topology").unwrap_err().to_string();
+    for name in family::names() {
+        assert!(err.contains(name), "unknown-topology error must list {name}: {err}");
+    }
+}
+
+/// Declared exact-averaging periods are honest: for every family and
+/// size where `exact_period` is `Some(τ)`, the τ-step product of the
+/// schedule's own plans equals `J` to 1e-12.
+#[test]
+fn prop_declared_exact_periods_are_exact() {
+    let mut rng = Pcg::seeded(0xFA222);
+    for _case in 0..15 {
+        for topo in family::families() {
+            let n = valid_n(topo, &mut rng);
+            if let Some(err) = expograph::consensus::exact_period_error(topo, n, 0) {
+                assert!(err < 1e-12, "{topo} n={n}: declared exact but |prod - J| = {err}");
+            }
+        }
+    }
+}
+
+/// The schedule cache serves finite-time families as τ-period
+/// **borrowed** plans: `plan_at(k)` and `plan_at(k + τ)` return the
+/// same cached `MixingPlan` (pointer-identical — no per-iteration
+/// allocation), and `period()` reports the declared exact period.
+#[test]
+fn finite_time_schedules_serve_borrowed_period_plans() {
+    for (name, n) in [("base4", 12usize), ("base4", 48), ("base2", 24), ("ceca", 12), ("ceca", 48)]
+    {
+        let topo = family::find(name).unwrap();
+        let period = topo.exact_period(n).unwrap();
+        let mut sched = Schedule::from_family(topo, n, 7);
+        assert_eq!(sched.period(), Some(period), "{name} n={n}");
+        for k in 0..period {
+            let first = sched.plan_at(k) as *const MixingPlan;
+            for cycle in 1..4 {
+                let again = sched.plan_at(k + cycle * period) as *const MixingPlan;
+                assert_eq!(
+                    first, again,
+                    "{name} n={n} k={k}: cycle {cycle} re-allocated instead of borrowing"
+                );
+            }
+        }
+    }
+    // Same contract as the paper's one-peer exponential cache.
+    let mut one_peer = Schedule::new(expograph::topology::TopologyKind::OnePeerExp, 16, 0);
+    let p0 = one_peer.plan_at(0) as *const MixingPlan;
+    assert_eq!(p0, one_peer.plan_at(4) as *const MixingPlan);
+}
+
+/// Finite-time family plans flow through netsim fault degradation like
+/// any other plan: degraded rows stay row-stochastic and the
+/// communication degree never grows (docs/DESIGN.md §NetSim).
+#[test]
+fn finite_time_plans_degrade_safely() {
+    use expograph::costmodel::CostModel;
+    use expograph::netsim::{NetSim, Scenario};
+    for name in ["base4", "ceca"] {
+        let topo = family::find(name).unwrap();
+        let mut sched = Schedule::from_family(topo, 12, 3);
+        let scen = Scenario { drop_prob: 0.5, dropout: vec![(2, 0, 2)], ..Scenario::clean() };
+        let mut sim = NetSim::new(&CostModel::paper_default(0.1), scen, 5);
+        let mut degraded_any = false;
+        for k in 0..4 {
+            let plan = sched.plan_at(k).clone();
+            let out = sim.simulate_round(k, &plan, 1e6);
+            if let Some(d) = &out.degraded {
+                degraded_any = true;
+                for (i, row) in d.rows.iter().enumerate() {
+                    let sum: f64 = row.iter().map(|&(_, w)| w).sum();
+                    assert!((sum - 1.0).abs() < 1e-9, "{name} k={k} row {i} sums to {sum}");
+                    assert!(row.iter().all(|&(_, w)| w >= 0.0), "{name} k={k} row {i}");
+                }
+                assert!(d.max_degree <= plan.max_degree, "{name} k={k}: degree grew");
+            }
+        }
+        assert!(degraded_any, "{name}: the dropout window must degrade at least one round");
+    }
+}
+
+/// The base-2 family *is* the one-peer exponential schedule at powers
+/// of two — weight for weight — while still being exact everywhere else.
+#[test]
+fn base2_collapses_to_one_peer_exp_at_powers_of_two() {
+    use expograph::topology::exponential::tau;
+    for n in [4usize, 16, 64] {
+        let base2 = family::find("base2").unwrap();
+        let mut a = Schedule::from_family(base2, n, 0);
+        let mut b = Schedule::new(expograph::topology::TopologyKind::OnePeerExp, n, 0);
+        for k in 0..2 * tau(n) {
+            assert_eq!(a.plan_at(k).rows, b.plan_at(k).rows, "n={n} k={k}");
+        }
+    }
+}

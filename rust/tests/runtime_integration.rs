@@ -3,7 +3,7 @@
 //! These require `make artifacts` to have run (they are skipped with a
 //! message otherwise, so `cargo test` stays green on a fresh checkout).
 
-use expograph::coordinator::{SparseWeights, StackedParams};
+use expograph::coordinator::{MixingPlan, StackedParams};
 use expograph::data::logreg::{generate, LogRegConfig};
 use expograph::runtime::{GossipExecutor, LogRegExecutor, Manifest, Runtime, TransformerExecutor};
 use expograph::topology::exponential::one_peer_exp_weights;
@@ -80,7 +80,7 @@ fn gossip_artifact_matches_rust_mixing() {
     // PJRT path (Pallas kernel lowered into the artifact).
     let (x_new, m_new) = exe.update(&w_flat, &x.data, &m.data, &g.data, beta, gamma).unwrap();
     // Rust hot-path.
-    let sw = SparseWeights::from_dense(&w);
+    let sw = MixingPlan::from_dense(&w);
     let mut xr = x.clone();
     let mut mr = m.clone();
     let mut xb = StackedParams::zeros(n, p);
