@@ -1,16 +1,36 @@
 //! Benchmark: the gossip/mixing hot path (the per-iteration communication
 //! work behind the TIME columns of Tables 2–3).
 //!
-//! Measures `mix_dmsgd` throughput across topologies and model sizes, and
-//! compares against a naive two-pass implementation (the §Perf ablation).
+//! The headline comparison is the scalar-reference kernels vs. the
+//! 8-lane vectorized kernels (docs/DESIGN.md §Perf) — same `fmaf` fold,
+//! bitwise-identical output (tests/kernels.rs), timed single-threaded
+//! through `mix_serial` so the ratio measures the kernel and not the
+//! thread pool — at n ∈ {64, 1024, 4096} on the static exponential
+//! (general ≥6-nonzero rows) and one-peer exponential (2-nonzero fast
+//! arm) topologies. Results land in `BENCH_mixing.json` at the repo
+//! root for the recorded perf trajectory.
+//!
+//! `--quiet` (CI mode) keeps the recorded sizes but trims sample counts
+//! and skips the exploratory throughput/ablation sections.
 
-use expograph::bench::{bench_config, black_box};
+use expograph::bench::{bench_config, black_box, quiet, write_json};
 use expograph::coordinator::StackedParams;
+use expograph::simd::ScalarGuard;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
 use expograph::util::rng::Pcg;
 
+/// Cheap deterministic fill (the big stacks make Box–Muller noticeable).
 fn stack(n: usize, p: usize, seed: u64) -> StackedParams {
+    let mut rng = Pcg::seeded(seed);
+    let mut s = StackedParams::zeros(n, p);
+    for v in s.data.iter_mut() {
+        *v = (rng.next_u32() as f32) * (2.0 / u32::MAX as f32) - 1.0;
+    }
+    s
+}
+
+fn gauss_stack(n: usize, p: usize, seed: u64) -> StackedParams {
     let mut rng = Pcg::seeded(seed);
     let mut s = StackedParams::zeros(n, p);
     for v in s.data.iter_mut() {
@@ -20,15 +40,81 @@ fn stack(n: usize, p: usize, seed: u64) -> StackedParams {
 }
 
 fn main() {
-    println!("== bench_mixing: fused DmSGD mixing update ==");
+    let q = quiet();
+
+    // --- scalar-reference vs vectorized kernels -------------------------
+    println!("== bench_mixing: scalar-reference vs 8-lane vectorized kernels ==");
+    println!("single-threaded mix_serial; outputs bitwise identical (tests/kernels.rs)\n");
+    // P per n keeps each config's two stacks within CI-runner memory
+    // while holding the acceptance config (n=1024, P=2^18) fixed.
+    let grid = [(64usize, 1usize << 18), (1024, 1 << 18), (4096, 1 << 15)];
+    let (min_iters, max_iters, min_secs) = if q { (3, 5, 0.2) } else { (5, 16, 1.0) };
+    let mut rows_json = Vec::new();
+    for &(n, p) in &grid {
+        for kind in [TopologyKind::StaticExp, TopologyKind::OnePeerExp] {
+            let mut sched = Schedule::new(kind, n, 1);
+            let plan = sched.plan_at(0).clone();
+            let nnz_row = (0..n).map(|i| plan.row_len(i)).max().unwrap_or(0);
+            let input = stack(n, p, 1);
+            let mut out = StackedParams::zeros(n, p);
+            let simd = bench_config(
+                &format!("mix simd   n={n} P={p} {}", kind.name()),
+                1, min_iters, max_iters, min_secs,
+                &mut || {
+                    plan.mix_serial(&input, &mut out);
+                    black_box(&out);
+                },
+            );
+            println!("{}", simd.report());
+            let scalar = {
+                let _g = ScalarGuard::new();
+                bench_config(
+                    &format!("mix scalar n={n} P={p} {}", kind.name()),
+                    1, min_iters, max_iters, min_secs,
+                    &mut || {
+                        plan.mix_serial(&input, &mut out);
+                        black_box(&out);
+                    },
+                )
+            };
+            println!("{}", scalar.report());
+            let speedup = scalar.median / simd.median.max(f64::MIN_POSITIVE);
+            println!("  -> vectorized speedup n={n} {}: {speedup:.2}x\n", kind.name());
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"p\": {p}, \"topology\": \"{}\", \"nnz_row_max\": {nnz_row}, \
+                 \"scalar_s_per_iter\": {:.9}, \"simd_s_per_iter\": {:.9}, \"speedup\": {:.4}}}",
+                kind.name(),
+                scalar.median,
+                simd.median,
+                speedup
+            ));
+        }
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_mixing\",\n  \"comparison\": \"scalar_vs_vectorized_mix\",\n  \
+         \"kernel\": \"mix_serial\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    write_json("BENCH_mixing.json", &json);
+    if q {
+        return;
+    }
+
+    // --- fused DmSGD throughput (the Tables 2–3 mixing workload) --------
+    println!("\n== fused DmSGD mixing update ==");
     println!("state bytes = 5 streams x n x P x 4B per update\n");
     for &(n, p) in &[(8usize, 865_024usize), (16, 865_024), (32, 100_000), (64, 100_000)] {
-        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring, TopologyKind::FullyConnected] {
+        for kind in [
+            TopologyKind::OnePeerExp,
+            TopologyKind::StaticExp,
+            TopologyKind::Ring,
+            TopologyKind::FullyConnected,
+        ] {
             let mut sched = Schedule::new(kind, n, 1);
             let sw = sched.plan_at(0).clone();
-            let mut x = stack(n, p, 1);
-            let mut m = stack(n, p, 2);
-            let g = stack(n, p, 3);
+            let mut x = gauss_stack(n, p, 1);
+            let mut m = gauss_stack(n, p, 2);
+            let g = gauss_stack(n, p, 3);
             let mut xb = StackedParams::zeros(n, p);
             let mut mb = StackedParams::zeros(n, p);
             let stats = bench_config(
@@ -48,9 +134,9 @@ fn main() {
     // Ablation: fused vs two-pass (separate premix + two mixes).
     let (n, p) = (8usize, 865_024usize);
     let sw = expograph::topology::exponential::static_exp_plan(n);
-    let x0 = stack(n, p, 1);
-    let m0 = stack(n, p, 2);
-    let g = stack(n, p, 3);
+    let x0 = gauss_stack(n, p, 1);
+    let m0 = gauss_stack(n, p, 2);
+    let g = gauss_stack(n, p, 3);
     let mut pre_x = StackedParams::zeros(n, p);
     let mut pre_m = StackedParams::zeros(n, p);
     let mut out_x = StackedParams::zeros(n, p);

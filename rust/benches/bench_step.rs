@@ -8,7 +8,7 @@
 //! n ∈ {64, 1024, 4096} on the one-peer exponential schedule. Results
 //! are emitted to `BENCH_step.json` for the perf trajectory.
 
-use expograph::bench::{bench_config, black_box, BenchStats};
+use expograph::bench::{bench_config, black_box, quiet, write_json, BenchStats};
 use expograph::coordinator::trainer::{GradProvider, QuadraticProvider};
 use expograph::coordinator::StackedParams;
 use expograph::costmodel::CostModel;
@@ -124,33 +124,36 @@ fn bench_engine(n: usize, dim: usize, threads: usize, provider: &QuadraticProvid
 }
 
 fn main() {
+    let q = quiet();
     println!("== bench_step: full training iteration (grad + mix) ==\n");
-    // MLP classification (the Table 2 workload).
-    let data = generate(&ClassifyConfig::default());
-    for n in [8usize, 32] {
-        let shards = shard(&data.train, n, Sharding::Homogeneous, 1);
-        let mlp = Mlp::new(MlpConfig { input: 32, hidden: 32, classes: 10 });
-        let provider = ClassifyProvider { data: &data, shards: &shards, mlp, batch: 32 };
-        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring] {
+    if !q {
+        // MLP classification (the Table 2 workload).
+        let data = generate(&ClassifyConfig::default());
+        for n in [8usize, 32] {
+            let shards = shard(&data.train, n, Sharding::Homogeneous, 1);
+            let mlp = Mlp::new(MlpConfig { input: 32, hidden: 32, classes: 10 });
+            let provider = ClassifyProvider { data: &data, shards: &shards, mlp, batch: 32 };
+            for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp, TopologyKind::Ring] {
+                bench_training_step(
+                    &format!("mlp_step n={n} {}", kind.name()),
+                    n,
+                    &provider,
+                    kind,
+                );
+            }
+            println!();
+        }
+        // Large-P quadratic (mixing-dominated regime).
+        let n = 8;
+        let provider = QuadraticProvider::shared(n, 200_000, 0.0, 3);
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
             bench_training_step(
-                &format!("mlp_step n={n} {}", kind.name()),
+                &format!("quadratic_step n={n} P=200000 {}", kind.name()),
                 n,
                 &provider,
                 kind,
             );
         }
-        println!();
-    }
-    // Large-P quadratic (mixing-dominated regime).
-    let n = 8;
-    let provider = QuadraticProvider::shared(n, 200_000, 0.0, 3);
-    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
-        bench_training_step(
-            &format!("quadratic_step n={n} P=200000 {}", kind.name()),
-            n,
-            &provider,
-            kind,
-        );
     }
 
     // --- engine vs legacy spawn-per-iteration ---------------------------
@@ -182,10 +185,7 @@ fn main() {
          \"results\": [\n{}\n  ]\n}}\n",
         rows_json.join(",\n")
     );
-    match std::fs::write("BENCH_step.json", &json) {
-        Ok(()) => println!("wrote BENCH_step.json"),
-        Err(e) => eprintln!("could not write BENCH_step.json: {e}"),
-    }
+    write_json("BENCH_step.json", &json);
 
     // Simulated per-iteration comm time (the actual Table 2 TIME shape).
     println!("\nsimulated per-iteration time (ResNet-50 messages, n=32):");

@@ -7,7 +7,7 @@
 //! scan) at n ∈ {64, 1024, 4096}. On the cached path the per-iteration
 //! cost must stay flat as n grows; the legacy path grows quadratically.
 
-use expograph::bench::{bench_config, black_box};
+use expograph::bench::{bench_config, black_box, quiet, write_json};
 use expograph::coordinator::MixingPlan;
 use expograph::linalg::power;
 use expograph::spectral;
@@ -56,7 +56,8 @@ fn main() {
     }
 
     // --- schedule construction (one-off cost the cache amortizes) -------
-    for n in [64usize, 256] {
+    let build_ns: &[usize] = if quiet() { &[64] } else { &[64, 256] };
+    for &n in build_ns {
         for kind in [
             TopologyKind::Ring,
             TopologyKind::StaticExp,
@@ -133,8 +134,5 @@ fn main() {
          \"results\": [\n{}\n  ]\n}}\n",
         rows_json.join(",\n")
     );
-    match std::fs::write("BENCH_topology.json", &json) {
-        Ok(()) => println!("wrote BENCH_topology.json"),
-        Err(e) => eprintln!("could not write BENCH_topology.json: {e}"),
-    }
+    write_json("BENCH_topology.json", &json);
 }

@@ -104,6 +104,33 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Was the bench binary invoked with `--quiet`? (CI mode: reduced
+/// sample counts / skipped exploratory sections, same recorded sizes.)
+pub fn quiet() -> bool {
+    std::env::args().any(|a| a == "--quiet")
+}
+
+/// Resolve a bench artifact name against the **workspace root** (the
+/// parent of this crate's manifest dir), so `BENCH_*.json` lands at the
+/// repo root regardless of the CWD the bench was launched from.
+pub fn output_path(name: &str) -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(name)
+}
+
+/// Write a bench JSON artifact to [`output_path`]; exits nonzero on
+/// failure so CI cannot silently lose a recording.
+pub fn write_json(name: &str, json: &str) {
+    let path = output_path(name);
+    match std::fs::write(&path, json) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("could not write {}: {e}", path.display());
+            std::process::exit(1);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -47,16 +47,16 @@ impl StackedParams {
         crate::engine::Lanes::split(&mut self.data, self.n, self.dim, lanes)
     }
 
-    /// Mean across nodes: `x̄ = (1/n) Σ_i x_i` into `out`.
+    /// Mean across nodes: `x̄ = (1/n) Σ_i x_i` into `out`. Rows accumulate
+    /// in ascending node order (each element's fold order is fixed —
+    /// the 8-lane blocking inside [`crate::simd::accumulate_scaled`] is
+    /// across the parameter dimension only).
     pub fn mean_into(&self, out: &mut [f32]) {
         assert_eq!(out.len(), self.dim);
-        out.iter_mut().for_each(|v| *v = 0.0);
+        out.fill(0.0);
         let scale = 1.0 / self.n as f32;
         for i in 0..self.n {
-            let row = self.row(i);
-            for (o, v) in out.iter_mut().zip(row.iter()) {
-                *o += v * scale;
-            }
+            crate::simd::accumulate_scaled(out, self.row(i), scale);
         }
     }
 
@@ -67,16 +67,16 @@ impl StackedParams {
         out
     }
 
-    /// Consensus distance `‖𝐱 − 1x̄ᵀ‖²_F = Σ_i ‖x_i − x̄‖²` (f64 accumulate).
+    /// Consensus distance `‖𝐱 − 1x̄ᵀ‖²_F = Σ_i ‖x_i − x̄‖²` (f64
+    /// accumulate): one ordered per-row reduction
+    /// ([`crate::simd::sum_sq_diff`]) per node, summed in node order —
+    /// the same per-row values the engine's sharded probe computes, so
+    /// the two probes agree bitwise.
     pub fn consensus_distance(&self) -> f64 {
         let mean = self.mean();
         let mut total = 0.0f64;
         for i in 0..self.n {
-            let row = self.row(i);
-            for (v, m) in row.iter().zip(mean.iter()) {
-                let d = (*v - *m) as f64;
-                total += d * d;
-            }
+            total += crate::simd::sum_sq_diff(self.row(i), &mean);
         }
         total
     }
@@ -96,10 +96,7 @@ impl StackedParams {
         assert_eq!(reference.len(), self.dim);
         let mut total = 0.0f64;
         for i in 0..self.n {
-            for (v, r) in self.row(i).iter().zip(reference.iter()) {
-                let d = (*v - *r) as f64;
-                total += d * d;
-            }
+            total += crate::simd::sum_sq_diff(self.row(i), reference);
         }
         total / self.n as f64
     }

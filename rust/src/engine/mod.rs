@@ -261,12 +261,12 @@ impl Engine {
     }
 
     /// Consensus distance `Σ_i ‖x_i − x̄‖²`, the O(nP) metrics probe.
-    /// The mean is the serial [`StackedParams::mean`] (so this probe and
-    /// the plain [`StackedParams::consensus_distance`] agree to f64
-    /// regrouping noise), and the sharded squared-distance pass writes
-    /// one partial **per node** that is reduced serially in node order —
-    /// so the value is bitwise-identical for any lane count, like
-    /// everything else the engine computes.
+    /// The mean is the serial [`StackedParams::mean`] (lane-independent),
+    /// and the sharded pass writes one partial **per node** — the same
+    /// ordered per-row reduction [`crate::simd::sum_sq_diff`] the serial
+    /// [`StackedParams::consensus_distance`] uses — reduced serially in
+    /// node order. So the value is bitwise-identical to the serial probe
+    /// and for any lane count, like everything else the engine computes.
     pub fn consensus_distance(&self, params: &StackedParams) -> f64 {
         let n = params.n;
         let lanes = self.lanes;
@@ -284,13 +284,7 @@ impl Engine {
                 }
                 let mut ps = p.lock(lane);
                 for (off, i) in rows.enumerate() {
-                    let mut total = 0.0f64;
-                    for (v, m) in params.row(i).iter().zip(mean.iter()) {
-                        // Same f32 difference as the plain serial probe.
-                        let d = (*v - *m) as f64;
-                        total += d * d;
-                    }
-                    ps[off] = total;
+                    ps[off] = crate::simd::sum_sq_diff(params.row(i), &mean);
                 }
             });
         }
@@ -313,7 +307,8 @@ impl Engine {
             }
             let mut os = o.lock(lane);
             for (off, i) in rows.enumerate() {
-                os[off] = plan.rows[i].iter().map(|&(j, w)| w * x[j]).sum();
+                let r = plan.row(i);
+                os[off] = r.cols.iter().zip(r.w64.iter()).map(|(&j, &w)| w * x[j as usize]).sum();
             }
         });
     }

@@ -66,6 +66,7 @@ pub mod models;
 pub mod netsim;
 pub mod optim;
 pub mod runtime;
+pub mod simd;
 pub mod spectral;
 pub mod sweep;
 pub mod topology;

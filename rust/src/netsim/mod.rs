@@ -591,7 +591,7 @@ mod tests {
         let out = sim.simulate_round(0, &plan, 1e8);
         assert!(out.dropped_pairs > 0, "expected transient drops at p=0.3");
         let d = out.degraded.expect("faults fired ⇒ degraded plan");
-        for (i, row) in d.rows.iter().enumerate() {
+        for (i, row) in d.rows_vec().iter().enumerate() {
             let sum: f64 = row.iter().map(|&(_, w)| w).sum();
             assert!((sum - 1.0).abs() < 1e-9, "row {i} sum {sum}");
         }
@@ -607,7 +607,7 @@ mod tests {
         let out = sim.simulate_round(1, &plan, 1e6);
         assert_eq!(out.offline_nodes, 1);
         let d = out.degraded.expect("offline node degrades the plan");
-        assert_eq!(d.rows[2], vec![(2, 1.0)]);
+        assert_eq!(d.rows_vec()[2], vec![(2, 1.0)]);
         // Ring is symmetric; pair-level dropout must keep it symmetric.
         assert!(d.symmetric, "degraded ring lost symmetry");
         // Outside the window: untouched.

@@ -20,6 +20,7 @@ use std::ops::Range;
 use super::{Optimizer, StepScratch};
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
+use crate::simd::fmaf;
 
 /// Decentralized SGD (no momentum): `x⁺ = W(x − γ g)`.
 pub struct DSgd {
@@ -51,12 +52,9 @@ impl Optimizer for DSgd {
         let x = &self.x.data;
         let g = &grads.data;
         // Fused: x⁺_i = Σ_j w_ij (x_j − γ g_j), no materialized pre-stack.
-        w.mix_fused_rows(rows, dim, a, |j, c0, dst| {
-            let s = j * dim + c0;
-            let e = s + dst.len();
-            for ((d, xv), gv) in dst.iter_mut().zip(&x[s..e]).zip(&g[s..e]) {
-                *d = xv - lr * gv;
-            }
+        w.mix_fused_rows(rows, dim, a, |j: usize, k: usize| {
+            let s = j * dim + k;
+            fmaf(-lr, g[s], x[s])
         });
     }
 
@@ -197,10 +195,7 @@ impl Optimizer for VanillaDmSgd {
         // Mix the model, then fold the (row-local) momentum refresh and
         // its application into the same pass over the output rows:
         // b_i = βm_i + g_i ; a_i = (Wx)_i − γ b_i.
-        w.mix_fused_rows(rows.clone(), dim, a, |j, c0, dst| {
-            let s = j * dim + c0;
-            dst.copy_from_slice(&x[s..s + dst.len()]);
-        });
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| x[j * dim + k]);
         let base = rows.start;
         for i in rows {
             let off = (i - base) * dim;
@@ -208,9 +203,9 @@ impl Optimizer for VanillaDmSgd {
             let ao = &mut a[off..off + dim];
             let bo = &mut b[off..off + dim];
             for k in 0..dim {
-                let mp = beta * mi[k] + gi[k];
+                let mp = fmaf(beta, mi[k], gi[k]);
                 bo[k] = mp;
-                ao[k] -= lr * mp;
+                ao[k] = fmaf(-lr, mp, ao[k]);
             }
         }
     }
@@ -281,12 +276,9 @@ impl Optimizer for QgDmSgd {
         let g = &grads.data;
         let beta = self.beta;
         // Fused half-step + mix: a_i = Σ_j w_ij (x_j − γ(g_j + β m_j)).
-        w.mix_fused_rows(rows.clone(), dim, a, |j, c0, dst| {
-            let s = j * dim + c0;
-            let e = s + dst.len();
-            for (((d, xv), gv), mv) in dst.iter_mut().zip(&x[s..e]).zip(&g[s..e]).zip(&m[s..e]) {
-                *d = xv - lr * (gv + beta * mv);
-            }
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| {
+            let s = j * dim + k;
+            fmaf(-lr, fmaf(beta, m[s], g[s]), x[s])
         });
         // m⁺ from the realized displacement (row-local on the shard).
         let inv_lr = 1.0 / lr.max(1e-12);
@@ -297,7 +289,7 @@ impl Optimizer for QgDmSgd {
             let ao = &a[off..off + dim];
             let bo = &mut b[off..off + dim];
             for k in 0..dim {
-                bo[k] = beta * mi[k] + (1.0 - beta) * (xi[k] - ao[k]) * inv_lr;
+                bo[k] = fmaf(beta, mi[k], (1.0 - beta) * (xi[k] - ao[k]) * inv_lr);
             }
         }
     }
@@ -360,12 +352,12 @@ impl Optimizer for ParallelMSgd {
         // where exact averaging earns its β·n-fold message cost).
         grads.mean_into(&mut self.g_mean);
         for (m, g) in self.m.iter_mut().zip(self.g_mean.iter()) {
-            *m = self.beta * *m + g;
+            *m = fmaf(self.beta, *m, *g);
         }
         let dim = self.x.dim;
         let row0 = &self.x.data[..dim];
         for ((c, x), m) in self.canonical.iter_mut().zip(row0).zip(self.m.iter()) {
-            *c = x - lr * m;
+            *c = fmaf(-lr, *m, *x);
         }
     }
 

@@ -26,6 +26,7 @@ use std::ops::Range;
 use super::{Optimizer, StepScratch};
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
+use crate::simd::fmaf;
 
 /// D² / Exact-Diffusion:
 ///
@@ -66,26 +67,16 @@ impl D2 {
         D2 { x_prev: x.clone(), g_prev: z, x, first: true, lazy }
     }
 
-    /// Fill `dst` with `pre_j[c0 .. c0+dst.len()]`, produced on the fly
-    /// inside the mixing accumulation.
-    #[inline]
-    fn pre_chunk(&self, grads: &StackedParams, lr: f32, j: usize, c0: usize, dst: &mut [f32]) {
-        let s = j * self.x.dim + c0;
-        let e = s + dst.len();
+    /// Element `k` of `pre_j` (flat index `s = j·dim + k`), produced on
+    /// the fly inside the mixing accumulation and reused verbatim by the
+    /// lazy post-pass so both sides of `(I + W)/2` see the same bits.
+    #[inline(always)]
+    fn pre_at(&self, grads: &StackedParams, lr: f32, s: usize) -> f32 {
         if self.first {
-            for ((d, xv), gv) in dst.iter_mut().zip(&self.x.data[s..e]).zip(&grads.data[s..e]) {
-                *d = xv - lr * gv;
-            }
+            fmaf(-lr, grads.data[s], self.x.data[s])
         } else {
-            for ((((d, xv), xp), gv), gp) in dst
-                .iter_mut()
-                .zip(&self.x.data[s..e])
-                .zip(&self.x_prev.data[s..e])
-                .zip(&grads.data[s..e])
-                .zip(&self.g_prev.data[s..e])
-            {
-                *d = 2.0 * xv - xp - lr * (gv - gp);
-            }
+            let corr = 2.0 * self.x.data[s] - self.x_prev.data[s];
+            fmaf(-lr, grads.data[s] - self.g_prev.data[s], corr)
         }
     }
 }
@@ -117,30 +108,17 @@ impl Optimizer for D2 {
             b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
         }
         // a ← W·pre with the correction term produced on the fly.
-        w.mix_fused_rows(rows.clone(), dim, a, |j, c0, dst| self.pre_chunk(grads, lr, j, c0, dst));
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| {
+            self.pre_at(grads, lr, j * dim + k)
+        });
         if self.lazy {
             // a ← ((I + W)/2)·pre, with pre_i recomputed row-locally.
             for i in rows {
                 let off = (i - base) * dim;
                 let out = &mut a[off..off + dim];
                 let s = i * dim;
-                let e = s + dim;
-                if self.first {
-                    for ((ov, xv), gv) in
-                        out.iter_mut().zip(&self.x.data[s..e]).zip(&grads.data[s..e])
-                    {
-                        *ov = 0.5 * (*ov + (xv - lr * gv));
-                    }
-                } else {
-                    for ((((ov, xv), xp), gv), gp) in out
-                        .iter_mut()
-                        .zip(&self.x.data[s..e])
-                        .zip(&self.x_prev.data[s..e])
-                        .zip(&grads.data[s..e])
-                        .zip(&self.g_prev.data[s..e])
-                    {
-                        *ov = 0.5 * (*ov + (2.0 * xv - xp - lr * (gv - gp)));
-                    }
+                for (k, ov) in out.iter_mut().enumerate() {
+                    *ov = 0.5 * (*ov + self.pre_at(grads, lr, s + k));
                 }
             }
         }
@@ -236,10 +214,7 @@ impl Optimizer for GradientTracking {
                 }
                 return;
             }
-            w.mix_fused_rows(rows.clone(), dim, b, |j, c0, dst| {
-                let s = j * dim + c0;
-                dst.copy_from_slice(&self.y.data[s..s + dst.len()]);
-            });
+            w.mix_fused_rows(rows.clone(), dim, b, |j: usize, k: usize| self.y.data[j * dim + k]);
             for i in rows {
                 let off = (i - base) * dim;
                 let out = &mut b[off..off + dim];
@@ -256,13 +231,9 @@ impl Optimizer for GradientTracking {
                 let off = (i - base) * dim;
                 b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
             }
-            w.mix_fused_rows(rows, dim, a, |j, c0, dst| {
-                let s = j * dim + c0;
-                let e = s + dst.len();
-                for ((d, xv), yv) in dst.iter_mut().zip(&self.x.data[s..e]).zip(&self.y.data[s..e])
-                {
-                    *d = xv - lr * yv;
-                }
+            w.mix_fused_rows(rows, dim, a, |j: usize, k: usize| {
+                let s = j * dim + k;
+                fmaf(-lr, self.y.data[s], self.x.data[s])
             });
         }
     }

@@ -1,0 +1,216 @@
+//! Explicit SIMD-friendly micro-kernel primitives for the training hot
+//! path (docs/DESIGN.md §Perf).
+//!
+//! # Contract
+//!
+//! * **Lane width.** The f32 kernels process the parameter dimension in
+//!   fixed blocks of [`LANES`] = 8 elements with per-block register
+//!   accumulators; f64 reductions use [`F64_LANES`] = 4. The block loops
+//!   are written so LLVM maps one block to one AVX/NEON vector op.
+//! * **FMA / rounding policy.** All kernels fold multiplies and adds
+//!   through [`fmaf`]/[`fmad`]. When the build enables the `fma` target
+//!   feature (see `.cargo/config.toml`, `target-cpu=native`) these are
+//!   single-rounded hardware `mul_add`s; otherwise they fall back to the
+//!   two-rounding `a * b + c` (never the libm soft-float `mul_add`,
+//!   which is ~50× slower). Rounding therefore differs between an
+//!   FMA-enabled and an FMA-less *build*, but is fixed within a build —
+//!   which is all the determinism contract pins.
+//! * **Determinism argument.** Vectorization is across the parameter
+//!   dimension only: every output element `k` is still the same
+//!   ascending-`j` fold of `fmaf` it would be in a sequential loop, and
+//!   an f32 store/load is exact — so blocking can never change a bit,
+//!   and the engine's lane-count invariance
+//!   (tests/engine_determinism.rs) is untouched. The scalar reference
+//!   kernels (see [`scalar_kernels`]) evaluate the identical per-element
+//!   fold one element at a time, which is why tests/kernels.rs can pin
+//!   vectorized vs. scalar **bitwise**.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// f32 block width of the vectorized kernels.
+pub const LANES: usize = 8;
+
+/// f64 block width of the ordered reductions.
+pub const F64_LANES: usize = 4;
+
+/// Fused multiply-add `a * b + c` (f32) under the policy above.
+#[cfg(target_feature = "fma")]
+#[inline(always)]
+pub fn fmaf(a: f32, b: f32, c: f32) -> f32 {
+    a.mul_add(b, c)
+}
+
+/// Fused multiply-add `a * b + c` (f32) under the policy above.
+#[cfg(not(target_feature = "fma"))]
+#[inline(always)]
+pub fn fmaf(a: f32, b: f32, c: f32) -> f32 {
+    a * b + c
+}
+
+/// Fused multiply-add `a * b + c` (f64) under the policy above.
+#[cfg(target_feature = "fma")]
+#[inline(always)]
+pub fn fmad(a: f64, b: f64, c: f64) -> f64 {
+    a.mul_add(b, c)
+}
+
+/// Fused multiply-add `a * b + c` (f64) under the policy above.
+#[cfg(not(target_feature = "fma"))]
+#[inline(always)]
+pub fn fmad(a: f64, b: f64, c: f64) -> f64 {
+    a * b + c
+}
+
+/// When set, the mixing kernels dispatch to their retained scalar
+/// reference twins (identical per-element `fmaf` fold, one element at a
+/// time — no blocking). This is the comparator the benches time and the
+/// oracle tests/kernels.rs pins bitwise against the vectorized path.
+static SCALAR_KERNELS: AtomicBool = AtomicBool::new(false);
+
+/// Are the scalar reference kernels selected?
+#[inline(always)]
+pub fn scalar_kernels() -> bool {
+    SCALAR_KERNELS.load(Ordering::Relaxed)
+}
+
+/// Select the scalar reference kernels (process-wide; tests and benches
+/// only — prefer the RAII [`ScalarGuard`]).
+pub fn set_scalar_kernels(on: bool) {
+    SCALAR_KERNELS.store(on, Ordering::Relaxed);
+}
+
+/// RAII selector for the scalar reference kernels: scalar while alive,
+/// vectorized again on drop.
+pub struct ScalarGuard(());
+
+impl ScalarGuard {
+    pub fn new() -> ScalarGuard {
+        set_scalar_kernels(true);
+        ScalarGuard(())
+    }
+}
+
+impl Default for ScalarGuard {
+    fn default() -> Self {
+        ScalarGuard::new()
+    }
+}
+
+impl Drop for ScalarGuard {
+    fn drop(&mut self) {
+        set_scalar_kernels(false);
+    }
+}
+
+/// `out[k] = fmaf(src[k], scale, out[k])` over the whole slice, 8-lane
+/// blocked. Per-element order of the surrounding accumulation (e.g. the
+/// row loop of `StackedParams::mean_into`) is untouched — blocking across
+/// `k` cannot regroup any single element's fold.
+#[inline]
+pub fn accumulate_scaled(out: &mut [f32], src: &[f32], scale: f32) {
+    debug_assert_eq!(out.len(), src.len());
+    let n = out.len();
+    let blocks = n / LANES;
+    for blk in 0..blocks {
+        let k0 = blk * LANES;
+        let o = &mut out[k0..k0 + LANES];
+        let s = &src[k0..k0 + LANES];
+        for l in 0..LANES {
+            o[l] = fmaf(s[l], scale, o[l]);
+        }
+    }
+    for k in blocks * LANES..n {
+        out[k] = fmaf(src[k], scale, out[k]);
+    }
+}
+
+/// Ordered f64 reduction of `Σ_k ((a[k] − b[k]) as f64)²` with
+/// [`F64_LANES`] partial accumulators: element `k` lands in accumulator
+/// `k % F64_LANES`, and the partials combine in fixed ascending order.
+/// The result is a pure function of the two slices — independent of any
+/// sharding or lane count — which is what lets the serial
+/// `StackedParams::consensus_distance` and the engine's sharded probe
+/// share it and agree bitwise.
+#[inline]
+pub fn sum_sq_diff(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut acc = [0.0f64; F64_LANES];
+    let blocks = n / F64_LANES;
+    for blk in 0..blocks {
+        let k0 = blk * F64_LANES;
+        for l in 0..F64_LANES {
+            let d = (a[k0 + l] - b[k0 + l]) as f64;
+            acc[l] = fmad(d, d, acc[l]);
+        }
+    }
+    for (l, k) in (blocks * F64_LANES..n).enumerate() {
+        let d = (a[k] - b[k]) as f64;
+        acc[l] = fmad(d, d, acc[l]);
+    }
+    ((acc[0] + acc[1]) + acc[2]) + acc[3]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmaf_matches_reference_to_one_ulp_regime() {
+        // Whatever the build's FMA policy, fmaf is one of the two
+        // correct evaluations of a*b + c.
+        let (a, b, c) = (1.25f32, 3.5f32, -0.75f32);
+        let plain = a * b + c;
+        let fused = a.mul_add(b, c);
+        let got = fmaf(a, b, c);
+        assert!(got == plain || got == fused);
+    }
+
+    #[test]
+    fn accumulate_scaled_matches_sequential_bitwise() {
+        // Blocking across k must not change a single bit vs. the naive
+        // element-at-a-time loop using the same fmaf.
+        for n in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let src: Vec<f32> = (0..n).map(|k| (k as f32 * 0.37).sin()).collect();
+            let mut out: Vec<f32> = (0..n).map(|k| (k as f32 * 0.11).cos()).collect();
+            let mut want = out.clone();
+            for k in 0..n {
+                want[k] = fmaf(src[k], 0.125, want[k]);
+            }
+            accumulate_scaled(&mut out, &src, 0.125);
+            for k in 0..n {
+                assert_eq!(out[k].to_bits(), want[k].to_bits(), "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn sum_sq_diff_is_close_and_deterministic() {
+        for n in [0usize, 1, 3, 4, 5, 63, 64, 65] {
+            let a: Vec<f32> = (0..n).map(|k| (k as f32 * 0.3).sin()).collect();
+            let b: Vec<f32> = (0..n).map(|k| (k as f32 * 0.2).cos()).collect();
+            let naive: f64 = a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| {
+                    let d = (x - y) as f64;
+                    d * d
+                })
+                .sum();
+            let got = sum_sq_diff(&a, &b);
+            assert!((got - naive).abs() <= 1e-12 * naive.max(1.0), "n={n}: {got} vs {naive}");
+            // Pure function: repeated calls identical.
+            assert_eq!(got.to_bits(), sum_sq_diff(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn scalar_guard_restores_vectorized() {
+        assert!(!scalar_kernels());
+        {
+            let _g = ScalarGuard::new();
+            assert!(scalar_kernels());
+        }
+        assert!(!scalar_kernels());
+    }
+}

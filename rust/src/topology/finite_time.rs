@@ -336,7 +336,7 @@ mod tests {
             let plans = base_k_cycle(n, 2);
             assert_eq!(plans.len(), tau(n));
             for (t, plan) in plans.iter().enumerate() {
-                assert_eq!(plan.rows, one_peer_exp_plan(n, t).rows, "n={n} t={t}");
+                assert_eq!(plan.rows_vec(), one_peer_exp_plan(n, t).rows_vec(), "n={n} t={t}");
             }
         }
     }
@@ -350,7 +350,7 @@ mod tests {
             assert!(err < 1e-12, "n={n}: |prod - J| = {err}");
             for (r, plan) in plans.iter().enumerate() {
                 assert!(plan.max_degree <= 2, "n={n} round {r}: degree {}", plan.max_degree);
-                for (i, row) in plan.rows.iter().enumerate() {
+                for (i, row) in plan.rows_vec().iter().enumerate() {
                     let sum: f64 = row.iter().map(|&(_, w)| w).sum();
                     assert!((sum - 1.0).abs() < 1e-12, "n={n} round {r} row {i}");
                     assert!(row.iter().all(|&(_, w)| w >= 0.0), "n={n} round {r} row {i}");
@@ -376,7 +376,7 @@ mod tests {
 
     #[test]
     fn one_node_schedules_are_identity() {
-        assert_eq!(ceca_cycle(1)[0].rows, vec![vec![(0, 1.0)]]);
-        assert_eq!(base_k_cycle(1, 4)[0].rows, vec![vec![(0, 1.0)]]);
+        assert_eq!(ceca_cycle(1)[0].rows_vec(), vec![vec![(0, 1.0)]]);
+        assert_eq!(base_k_cycle(1, 4)[0].rows_vec(), vec![vec![(0, 1.0)]]);
     }
 }

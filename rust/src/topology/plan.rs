@@ -10,6 +10,15 @@
 //! the [`MixingPlan::to_dense`] escape hatch for spectral analysis
 //! (eigen/ρ computations) and tests. See docs/DESIGN.md §Plan cache.
 //!
+//! Storage is flat CSR: `row_ptr` (n+1 offsets) into parallel `cols` /
+//! `weights_f64` / `weights_f32` arrays. The f64 weights are the source
+//! of truth (exact rationals like `1/(τ+1)`, preserving Lemma 1's exact-
+//! averaging property on the f64 consensus path); the f32 copy is cast
+//! **once at construction**, so the training kernels never pay a
+//! per-nonzero-per-chunk cast and never chase per-row heap pointers.
+//! Constructors still hand [`MixingPlan::from_rows`] per-row nonzero
+//! lists; the CSR flattening is internal.
+//!
 //! The mixing kernels (`mix`, `mix_dmsgd`) that consume a plan live in
 //! [`crate::coordinator::mixing`]; this module owns construction and
 //! structural metadata (`max_degree`, symmetry, originating
@@ -18,20 +27,25 @@
 use super::TopologyKind;
 use crate::linalg::Matrix;
 
-/// Sparse row-major mixing matrix plus structural metadata.
+/// Sparse row-major mixing matrix (flat CSR) plus structural metadata.
 ///
-/// Row `i` holds the sorted `(j, w_ij)` nonzeros of `W`'s row `i` in
-/// `f64` (weights are exact rationals like `1/(τ+1)`; keeping them in
-/// `f64` preserves the exact-averaging property of Lemma 1 for the
-/// consensus simulations — the `f32` cast happens once per nonzero inside
-/// the training kernels).
+/// Row `i` holds the sorted `(j, w_ij)` nonzeros of `W`'s row `i`; the
+/// kernels read them through [`MixingPlan::row`] as contiguous column /
+/// weight slices.
 #[derive(Clone, Debug, PartialEq)]
 pub struct MixingPlan {
     /// Number of nodes (rows).
     pub n: usize,
-    /// For each output row `i`: the `(j, w_ij)` of its nonzero entries,
-    /// sorted by `j`.
-    pub rows: Vec<Vec<(usize, f64)>>,
+    /// CSR row offsets: row `i`'s nonzeros live at
+    /// `row_ptr[i]..row_ptr[i+1]` in the parallel arrays below.
+    row_ptr: Vec<u32>,
+    /// Column index of each nonzero, ascending within a row.
+    cols: Vec<u32>,
+    /// `f64` weight of each nonzero (the source of truth).
+    weights_f64: Vec<f64>,
+    /// `f32` weight of each nonzero, cast once at construction for the
+    /// training kernels.
+    weights_f32: Vec<f32>,
     /// For each node, its *distinct* off-diagonal communication
     /// partners (union of in- and out-neighbors), ascending. Built once
     /// at construction; [`crate::netsim`] walks these lists directly
@@ -47,14 +61,42 @@ pub struct MixingPlan {
     pub kind: Option<TopologyKind>,
 }
 
+/// Borrowed view of one CSR row: parallel column / weight slices. The
+/// kernels iterate `cols[t]` with `w32[t]` (training, f32) or `w64[t]`
+/// (consensus, f64); `t` ascends in column order, which is what the
+/// determinism contract pins (docs/DESIGN.md §Engine).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanRow<'a> {
+    /// Column indices, ascending.
+    pub cols: &'a [u32],
+    /// f64 weights, parallel to `cols`.
+    pub w64: &'a [f64],
+    /// f32 weights, parallel to `cols` (cast once at plan construction).
+    pub w32: &'a [f32],
+}
+
+impl<'a> PlanRow<'a> {
+    /// Number of nonzeros in the row.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cols.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cols.is_empty()
+    }
+}
+
 impl MixingPlan {
     /// Build a plan from per-row nonzero lists. Rows are sorted by column
-    /// index; `max_degree` and symmetry are derived from the structure in
-    /// `O(nnz log nnz)`. Deterministic schedules pay this once at cache
-    /// build; stochastic schedules (random matching, sampled one-peer)
-    /// pay it per draw — if that ever shows up in a profile, give the
-    /// matching/one-peer constructors a variant taking their analytic
-    /// metadata (degree 1–2, symmetry by `n | 2·hop`) instead.
+    /// index, then flattened into CSR; `max_degree` and symmetry are
+    /// derived from the structure in `O(nnz log nnz)`. Deterministic
+    /// schedules pay this once at cache build; stochastic schedules
+    /// (random matching, sampled one-peer) pay it per draw — if that ever
+    /// shows up in a profile, give the matching/one-peer constructors a
+    /// variant taking their analytic metadata (degree 1–2, symmetry by
+    /// `n | 2·hop`) instead.
     pub fn from_rows(mut rows: Vec<Vec<(usize, f64)>>, kind: Option<TopologyKind>) -> MixingPlan {
         for row in rows.iter_mut() {
             row.sort_unstable_by_key(|e| e.0);
@@ -63,7 +105,32 @@ impl MixingPlan {
         let partners = partner_lists(&rows);
         let max_degree = partners.iter().map(Vec::len).max().unwrap_or(0);
         let symmetric = rows_symmetric(&rows);
-        MixingPlan { n, rows, partners, max_degree, symmetric, kind }
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        assert!(n < u32::MAX as usize && nnz < u32::MAX as usize, "plan exceeds u32 CSR indexing");
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        let mut cols = Vec::with_capacity(nnz);
+        let mut weights_f64 = Vec::with_capacity(nnz);
+        let mut weights_f32 = Vec::with_capacity(nnz);
+        row_ptr.push(0u32);
+        for row in &rows {
+            for &(j, w) in row {
+                cols.push(j as u32);
+                weights_f64.push(w);
+                weights_f32.push(w as f32);
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        MixingPlan {
+            n,
+            row_ptr,
+            cols,
+            weights_f64,
+            weights_f32,
+            partners,
+            max_degree,
+            symmetric,
+            kind,
+        }
     }
 
     /// Tag the plan with its originating topology kind.
@@ -99,12 +166,45 @@ impl MixingPlan {
         MixingPlan::from_rows(rows, Some(TopologyKind::FullyConnected))
     }
 
+    /// Borrowed CSR view of row `i` (the kernels' access path).
+    #[inline]
+    pub fn row(&self, i: usize) -> PlanRow<'_> {
+        let s = self.row_ptr[i] as usize;
+        let e = self.row_ptr[i + 1] as usize;
+        PlanRow {
+            cols: &self.cols[s..e],
+            w64: &self.weights_f64[s..e],
+            w32: &self.weights_f32[s..e],
+        }
+    }
+
+    /// Number of nonzeros in row `i`.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Iterate row `i`'s `(j, w_ij)` nonzeros in ascending-`j` order
+    /// (f64 weights — the consensus/metadata path).
+    #[inline]
+    pub fn row_entries(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let r = self.row(i);
+        r.cols.iter().zip(r.w64.iter()).map(|(&j, &w)| (j as usize, w))
+    }
+
+    /// Materialize the per-row nonzero lists (the pre-CSR representation).
+    /// Allocating — for tests, property checks, and structural diffs
+    /// only; the kernels use [`MixingPlan::row`].
+    pub fn rows_vec(&self) -> Vec<Vec<(usize, f64)>> {
+        (0..self.n).map(|i| self.row_entries(i).collect()).collect()
+    }
+
     /// Dense escape hatch for spectral analysis (eigen/ρ) and tests —
     /// never called on the training path.
     pub fn to_dense(&self) -> Matrix {
         let mut m = Matrix::zeros(self.n, self.n);
-        for (i, row) in self.rows.iter().enumerate() {
-            for &(j, w) in row {
+        for i in 0..self.n {
+            for (j, w) in self.row_entries(i) {
                 m[(i, j)] = w;
             }
         }
@@ -113,7 +213,7 @@ impl MixingPlan {
 
     /// Total number of stored nonzeros.
     pub fn nnz(&self) -> usize {
-        self.rows.iter().map(Vec::len).sum()
+        self.cols.len()
     }
 
     /// Sparse matrix-vector product `W x` in `f64` (the consensus/gossip
@@ -121,9 +221,11 @@ impl MixingPlan {
     /// dense [`Matrix::matvec`] bit-for-bit on the stored nonzeros.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.n, "matvec dimension mismatch");
-        self.rows
-            .iter()
-            .map(|row| row.iter().map(|&(j, w)| w * x[j]).sum())
+        (0..self.n)
+            .map(|i| {
+                let r = self.row(i);
+                r.cols.iter().zip(r.w64.iter()).map(|(&j, &w)| w * x[j as usize]).sum()
+            })
             .collect()
     }
 
@@ -147,9 +249,10 @@ impl MixingPlan {
         assert_eq!(offline.len(), self.n, "offline mask dimension mismatch");
         let mut changed = false;
         let mut rows = Vec::with_capacity(self.n);
-        for (i, row) in self.rows.iter().enumerate() {
+        for i in 0..self.n {
+            let row = self.row(i);
             if offline[i] {
-                if row.len() != 1 || row[0] != (i, 1.0) {
+                if row.len() != 1 || row.cols[0] as usize != i || row.w64[0] != 1.0 {
                     changed = true;
                 }
                 rows.push(vec![(i, 1.0)]);
@@ -158,7 +261,7 @@ impl MixingPlan {
             let mut out = Vec::with_capacity(row.len());
             let mut absorbed = 0.0f64;
             let mut diag = None;
-            for &(j, w) in row {
+            for (j, w) in self.row_entries(i) {
                 if j != i && (offline[j] || dropped(i, j)) {
                     absorbed += w;
                     changed = true;
@@ -183,9 +286,9 @@ impl MixingPlan {
     /// Is the plan doubly stochastic to tolerance `tol`?
     pub fn is_doubly_stochastic(&self, tol: f64) -> bool {
         let mut col_sums = vec![0.0f64; self.n];
-        for row in &self.rows {
+        for i in 0..self.n {
             let mut rsum = 0.0;
-            for &(j, w) in row {
+            for (j, w) in self.row_entries(i) {
                 if w < -tol {
                     return false;
                 }
@@ -276,8 +379,9 @@ mod tests {
     #[test]
     fn doubly_stochastic_check() {
         assert!(MixingPlan::averaging(7).is_doubly_stochastic(1e-12));
-        let mut bad = MixingPlan::averaging(3);
-        bad.rows[0][0].1 = 0.9;
+        let mut rows = MixingPlan::averaging(3).rows_vec();
+        rows[0][0].1 = 0.9;
+        let bad = MixingPlan::from_rows(rows, None);
         assert!(!bad.is_doubly_stochastic(1e-12));
     }
 
@@ -296,10 +400,11 @@ mod tests {
         let d = plan
             .degrade(&offline, |a, b| (a.min(b), a.max(b)) == (0, 1))
             .expect("a drop must degrade");
-        assert_eq!(d.rows[0], vec![(0, 1.0)]);
+        let drows = d.rows_vec();
+        assert_eq!(drows[0], vec![(0, 1.0)]);
         // Row 1 pulls from node 2, which was not dropped.
-        assert_eq!(d.rows[1], plan.rows[1]);
-        for (i, row) in d.rows.iter().enumerate() {
+        assert_eq!(drows[1], plan.rows_vec()[1]);
+        for (i, row) in drows.iter().enumerate() {
             let sum: f64 = row.iter().map(|&(_, w)| w).sum();
             assert!((sum - 1.0).abs() < 1e-12, "row {i}");
         }
@@ -312,8 +417,9 @@ mod tests {
         let mut offline = vec![false; 8];
         offline[3] = true;
         let d = plan.degrade(&offline, |_, _| false).expect("offline degrades");
-        assert_eq!(d.rows[3], vec![(3, 1.0)]);
-        for (i, row) in d.rows.iter().enumerate() {
+        let drows = d.rows_vec();
+        assert_eq!(drows[3], vec![(3, 1.0)]);
+        for (i, row) in drows.iter().enumerate() {
             assert!(i == 3 || row.iter().all(|&(j, _)| j != 3), "row {i} still reads node 3");
             let sum: f64 = row.iter().map(|&(_, w)| w).sum();
             assert!((sum - 1.0).abs() < 1e-12, "row {i}");
@@ -326,9 +432,41 @@ mod tests {
             vec![vec![(1, 0.5), (0, 0.5)], vec![(0, 0.5), (1, 0.5)]],
             None,
         );
-        assert_eq!(plan.rows[0], vec![(0, 0.5), (1, 0.5)]);
+        assert_eq!(plan.rows_vec()[0], vec![(0, 0.5), (1, 0.5)]);
         assert_eq!(plan.max_degree, 1);
         assert!(plan.symmetric);
         assert_eq!(plan.nnz(), 4);
+    }
+
+    #[test]
+    fn csr_layout_is_consistent() {
+        // The CSR arrays are parallel, rows are contiguous and ascending,
+        // and the cached f32 weights are exactly the f64 weights cast
+        // once (what the kernels rely on).
+        let plan = MixingPlan::from_dense(&static_exp_weights(16));
+        let mut total = 0usize;
+        for i in 0..plan.n {
+            let row = plan.row(i);
+            assert_eq!(row.cols.len(), row.w64.len());
+            assert_eq!(row.cols.len(), row.w32.len());
+            assert_eq!(row.len(), plan.row_len(i));
+            assert!(row.cols.windows(2).all(|p| p[0] < p[1]), "row {i} not ascending");
+            for t in 0..row.len() {
+                assert_eq!(row.w32[t].to_bits(), (row.w64[t] as f32).to_bits());
+            }
+            total += row.len();
+        }
+        assert_eq!(total, plan.nnz());
+    }
+
+    #[test]
+    fn empty_rows_are_representable() {
+        // A row with no nonzeros must survive the CSR flattening (the
+        // kernels zero such output rows).
+        let plan = MixingPlan::from_rows(vec![vec![(0, 1.0)], vec![], vec![(2, 1.0)]], None);
+        assert_eq!(plan.row_len(1), 0);
+        assert!(plan.row(1).is_empty());
+        assert!(plan.rows_vec()[1].is_empty());
+        assert_eq!(plan.nnz(), 2);
     }
 }

@@ -1,0 +1,231 @@
+//! Vectorized vs. scalar-reference kernel pinning (docs/DESIGN.md §Perf).
+//!
+//! The mixing micro-kernels dispatch on [`expograph::simd::scalar_kernels`]
+//! between the 8-lane blocked vectorized path and its retained scalar
+//! reference twin. Both evaluate the identical per-output-element
+//! ascending-`j` `fmaf` fold, so their outputs must agree **bitwise** —
+//! on every algorithm, every row-nonzero shape (0/1/2/k), dims that
+//! exercise every block/tail split, and netsim-degraded plans.
+//!
+//! Note on the dispatch flag: it is process-global, and the tests in
+//! this binary run concurrently. Tests therefore *select* a mode (via
+//! [`expograph::simd::ScalarGuard`]) but never assert the flag's value —
+//! and since the two paths are bitwise-equal by construction, a
+//! concurrent guard changing the mode mid-test can never flip a result.
+
+use expograph::coordinator::state::StackedParams;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::AlgorithmKind;
+use expograph::simd::ScalarGuard;
+use expograph::topology::exponential::static_exp_plan;
+use expograph::topology::family;
+use expograph::topology::plan::MixingPlan;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+use expograph::util::rng::Pcg;
+
+const ALL_ALGORITHMS: [AlgorithmKind; 7] = [
+    AlgorithmKind::DSgd,
+    AlgorithmKind::DmSgd,
+    AlgorithmKind::VanillaDmSgd,
+    AlgorithmKind::QgDmSgd,
+    AlgorithmKind::ParallelSgd,
+    AlgorithmKind::D2,
+    AlgorithmKind::GradientTracking,
+];
+
+fn random_stack(n: usize, dim: usize, seed: u64) -> StackedParams {
+    let mut rng = Pcg::seeded(seed);
+    let mut s = StackedParams::zeros(n, dim);
+    for v in s.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    s
+}
+
+fn assert_stacks_bitwise(a: &StackedParams, b: &StackedParams, label: &str) {
+    assert_eq!(a.data.len(), b.data.len(), "{label}: length");
+    for (k, (x, y)) in a.data.iter().zip(b.data.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: element {k}: {x} vs {y}");
+    }
+}
+
+/// Drive `iters` full optimizer steps (all phases, via the public
+/// single-shard `step`) and return the final parameter stack.
+fn run_algorithm(
+    algo: AlgorithmKind,
+    kind: TopologyKind,
+    n: usize,
+    dim: usize,
+    iters: usize,
+) -> StackedParams {
+    let mut sched = Schedule::new(kind, n, 5);
+    let init: Vec<f32> = (0..dim).map(|k| 0.1 + 0.01 * (k % 13) as f32).collect();
+    let mut opt = algo.build(n, &init, 0.9);
+    for k in 0..iters {
+        let grads = random_stack(n, dim, 1000 + k as u64);
+        let plan = sched.plan_at(k).clone();
+        opt.step(&plan, &grads, 0.05);
+    }
+    opt.params().clone()
+}
+
+/// Every algorithm's trajectory is bitwise identical under the scalar
+/// reference kernels and the vectorized kernels, at dims covering the
+/// 8-lane block/tail splits (1, 7, 8, 9, 4097) on a ≥6-nonzero static
+/// topology and the paper's 2-nonzero one-peer topology.
+#[test]
+fn scalar_and_vectorized_trajectories_match_bitwise_for_all_algorithms() {
+    let n = 16;
+    for algo in ALL_ALGORITHMS {
+        // D² needs a symmetric W; hypercube is the symmetric static
+        // analogue of static exp (same log-degree).
+        let static_kind = if algo == AlgorithmKind::D2 {
+            TopologyKind::Hypercube
+        } else {
+            TopologyKind::StaticExp
+        };
+        for kind in [static_kind, TopologyKind::OnePeerExp] {
+            for dim in [1usize, 7, 8, 9, 4097] {
+                let iters = if dim > 16 { 3 } else { 8 };
+                let vectorized = run_algorithm(algo, kind, n, dim, iters);
+                let scalar = {
+                    let _g = ScalarGuard::new();
+                    run_algorithm(algo, kind, n, dim, iters)
+                };
+                assert_stacks_bitwise(
+                    &vectorized,
+                    &scalar,
+                    &format!("{algo}/{kind} dim={dim}"),
+                );
+            }
+        }
+    }
+}
+
+/// The 0/1/2/k-nonzero row specializations are pinned bitwise across
+/// both kernel paths at every block/tail dim split, including the big
+/// dims around the 8-lane boundary (4095/4096/4097).
+#[test]
+fn row_shape_specializations_match_bitwise() {
+    let rows = vec![
+        vec![(0usize, 1.0f64)],                                // 1 nonzero
+        vec![(0, 0.5), (2, 0.5)],                              // 2 (one-peer shape)
+        vec![(1, 0.25), (2, 0.5), (4, 0.25)],                  // 3
+        vec![],                                                // empty row
+        vec![(0, 0.2), (1, 0.2), (2, 0.2), (3, 0.2), (4, 0.2)], // k
+        vec![(0, 1.0 / 6.0), (1, 1.0 / 6.0), (2, 1.0 / 6.0), (3, 1.0 / 6.0), (4, 1.0 / 6.0), (5, 1.0 / 6.0)],
+    ];
+    let n = rows.len();
+    let plan = MixingPlan::from_rows(rows, None);
+    for dim in [1usize, 7, 8, 9, 4095, 4096, 4097] {
+        let input = random_stack(n, dim, 77);
+        let mut vec_out = StackedParams::zeros(n, dim);
+        plan.mix(&input, &mut vec_out);
+        let mut sc_out = StackedParams::zeros(n, dim);
+        {
+            let _g = ScalarGuard::new();
+            plan.mix(&input, &mut sc_out);
+        }
+        assert_stacks_bitwise(&vec_out, &sc_out, &format!("mix dim={dim}"));
+        // The empty row zeroes its output on both paths.
+        assert!(vec_out.row(3).iter().all(|v| *v == 0.0), "dim={dim}: empty row not zeroed");
+    }
+}
+
+/// The fused dual-output DmSGD kernel is pinned bitwise across both
+/// paths too (it has its own 1/2/k specializations).
+#[test]
+fn fused_dmsgd_kernel_matches_bitwise() {
+    let n = 16;
+    let plan = static_exp_plan(n);
+    for dim in [1usize, 9, 4097] {
+        let x0 = random_stack(n, dim, 11);
+        let m0 = random_stack(n, dim, 12);
+        let g = random_stack(n, dim, 13);
+        let run = |scalar: bool| {
+            let _g = scalar.then(ScalarGuard::new);
+            let mut x = x0.clone();
+            let mut m = m0.clone();
+            let mut xb = StackedParams::zeros(n, dim);
+            let mut mb = StackedParams::zeros(n, dim);
+            plan.mix_dmsgd(&mut x, &mut m, &g, 0.9, 0.05, &mut xb, &mut mb);
+            (x, m)
+        };
+        let (xv, mv) = run(false);
+        let (xs, ms) = run(true);
+        assert_stacks_bitwise(&xv, &xs, &format!("dmsgd x dim={dim}"));
+        assert_stacks_bitwise(&mv, &ms, &format!("dmsgd m dim={dim}"));
+    }
+}
+
+/// Netsim-degraded plans (renormalized rows, isolated nodes) flow
+/// through the same kernels and stay pinned bitwise.
+#[test]
+fn netsim_degraded_plans_match_bitwise() {
+    let n = 16;
+    let plan = static_exp_plan(n);
+    let scen = Scenario { dropout: vec![(2, 0, 3)], ..Scenario::lossy() };
+    let mut sim = NetSim::new(&expograph::costmodel::CostModel::paper_default(0.1), scen, 5);
+    let out = sim.simulate_round(0, &plan, 1e8);
+    let degraded = out.degraded.expect("lossy scenario at p=0.3 over 56 pairs must degrade");
+    for dim in [1usize, 9, 4096] {
+        let input = random_stack(n, dim, 31);
+        let mut vec_out = StackedParams::zeros(n, dim);
+        degraded.mix(&input, &mut vec_out);
+        let mut sc_out = StackedParams::zeros(n, dim);
+        {
+            let _g = ScalarGuard::new();
+            degraded.mix(&input, &mut sc_out);
+        }
+        assert_stacks_bitwise(&vec_out, &sc_out, &format!("degraded mix dim={dim}"));
+    }
+}
+
+/// CSR construction equivalence for every registry family: a plan's CSR
+/// arrays round-trip exactly through the dense escape hatch (the legacy
+/// construction path), and the row views are self-consistent.
+#[test]
+fn csr_plans_roundtrip_dense_for_every_registry_family() {
+    for topo in family::families() {
+        let n = if topo.requires_pow2() { 16 } else { 12 };
+        let mut sched = Schedule::from_family(topo, n, 3);
+        for k in 0..4 {
+            let plan = sched.plan_at(k).clone();
+            let name = topo.name();
+            // Legacy path: dense → from_dense rebuilds the CSR from
+            // scratch; the per-row nonzero lists must agree exactly.
+            let rebuilt = MixingPlan::from_dense(&plan.to_dense());
+            assert_eq!(
+                plan.rows_vec(),
+                rebuilt.rows_vec(),
+                "{name} n={n} k={k}: CSR vs dense-roundtrip rows"
+            );
+            assert_eq!(plan.nnz(), rebuilt.nnz(), "{name} k={k}: nnz");
+            assert_eq!(plan.max_degree, rebuilt.max_degree, "{name} k={k}: degree");
+            assert_eq!(plan.symmetric, rebuilt.symmetric, "{name} k={k}: symmetry");
+            // Row-view self-consistency: parallel slices, ascending
+            // cols, f32 weights cast once from the f64 truth.
+            let mut total = 0usize;
+            for i in 0..plan.n {
+                let row = plan.row(i);
+                assert_eq!(row.len(), plan.row_len(i), "{name} k={k} row {i}");
+                assert_eq!(row.cols.len(), row.w64.len());
+                assert_eq!(row.cols.len(), row.w32.len());
+                assert!(
+                    row.cols.windows(2).all(|p| p[0] < p[1]),
+                    "{name} k={k} row {i}: cols not ascending"
+                );
+                for t in 0..row.len() {
+                    assert_eq!(
+                        row.w32[t].to_bits(),
+                        (row.w64[t] as f32).to_bits(),
+                        "{name} k={k} row {i} entry {t}: f32 cache"
+                    );
+                }
+                total += row.len();
+            }
+            assert_eq!(total, plan.nnz(), "{name} k={k}: row lengths vs nnz");
+        }
+    }
+}

@@ -118,7 +118,7 @@ fn prop_plans_match_legacy_dense_builders() {
                 let want = MixingPlan::from_dense(&dense);
                 let got = sched.plan_at(k);
                 assert_eq!(got.n, want.n, "case {case}: {kind} n={n} k={k}");
-                assert_eq!(got.rows, want.rows, "case {case}: {kind} n={n} seed={seed} k={k}");
+                assert_eq!(got.rows_vec(), want.rows_vec(), "case {case}: {kind} n={n} seed={seed} k={k}");
                 assert_eq!(
                     got.max_degree, want.max_degree,
                     "case {case}: {kind} n={n} k={k} (degree)"
@@ -155,7 +155,7 @@ fn prop_periodic_plan_cache_equivalence() {
                 }
                 _ => expograph::topology::hypercube_onepeer::one_peer_hypercube_plan(n, k),
             };
-            assert_eq!(a.rows, direct.rows, "{kind} n={n} k={k} (direct)");
+            assert_eq!(a.rows_vec(), direct.rows_vec(), "{kind} n={n} k={k} (direct)");
         }
     }
 }
@@ -423,7 +423,7 @@ fn prop_netsim_degraded_plans_row_stochastic_and_symmetry_preserving() {
             let out = sim.simulate_round(k, &plan, 1e6);
             if let Some(d) = &out.degraded {
                 assert_eq!(d.n, plan.n);
-                for (i, row) in d.rows.iter().enumerate() {
+                for (i, row) in d.rows_vec().iter().enumerate() {
                     let sum: f64 = row.iter().map(|&(_, w)| w).sum();
                     assert!(
                         (sum - 1.0).abs() < 1e-9,

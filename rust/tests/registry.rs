@@ -33,7 +33,7 @@ fn prop_every_family_row_stochastic_and_degree_bounded() {
             for k in 0..5 {
                 let plan = sched.plan_at(k);
                 assert_eq!(plan.n, n, "case {case}: {topo} n={n}");
-                for (i, row) in plan.rows.iter().enumerate() {
+                for (i, row) in plan.rows_vec().iter().enumerate() {
                     let sum: f64 = row.iter().map(|&(_, w)| w).sum();
                     assert!(
                         (sum - 1.0).abs() < 1e-9,
@@ -147,7 +147,7 @@ fn finite_time_plans_degrade_safely() {
             let out = sim.simulate_round(k, &plan, 1e6);
             if let Some(d) = &out.degraded {
                 degraded_any = true;
-                for (i, row) in d.rows.iter().enumerate() {
+                for (i, row) in d.rows_vec().iter().enumerate() {
                     let sum: f64 = row.iter().map(|&(_, w)| w).sum();
                     assert!((sum - 1.0).abs() < 1e-9, "{name} k={k} row {i} sums to {sum}");
                     assert!(row.iter().all(|&(_, w)| w >= 0.0), "{name} k={k} row {i}");
@@ -169,7 +169,7 @@ fn base2_collapses_to_one_peer_exp_at_powers_of_two() {
         let mut a = Schedule::from_family(base2, n, 0);
         let mut b = Schedule::new(expograph::topology::TopologyKind::OnePeerExp, n, 0);
         for k in 0..2 * tau(n) {
-            assert_eq!(a.plan_at(k).rows, b.plan_at(k).rows, "n={n} k={k}");
+            assert_eq!(a.plan_at(k).rows_vec(), b.plan_at(k).rows_vec(), "n={n} k={k}");
         }
     }
 }
