@@ -1,82 +1,125 @@
-//! Benchmark: per-round overhead of the discrete-event network
-//! simulator vs the O(1) closed-form cost model it generalizes
-//! (docs/DESIGN.md §NetSim).
+//! Benchmark: arena-based event simulation at training scale and beyond
+//! (docs/DESIGN.md §NetSim, §Perf trajectory).
 //!
-//! The simulator walks one event per exchange slot, so a clean round is
-//! O(nnz log n) in the plan's partner count — the acceptance bar is
-//! that instrumenting a training run stays cheap next to the O(n·P)
-//! gradient/mixing work of the same iteration, and that the closed
-//! form remains dramatically cheaper (it is the fast path; the
-//! simulator is opt-in for heterogeneous/faulty studies).
+//! Three sections, all landing in `BENCH_netsim.json`:
+//!
+//! 1. **Arena rounds/sec** at n ∈ {4096, 65536, 2²⁰} on the one-peer
+//!    exponential graph (clean and lossy scenarios). Plans come from the
+//!    direct sparse constructor — `Schedule` would precompute the full
+//!    τ-plan period, which at n = 2²⁰ is ~1 GB of CSR.
+//! 2. **Old-vs-arena comparator** at n ∈ {4096, 65536}: the retired
+//!    per-round `BinaryHeap` + fresh-`Vec` path survives as
+//!    `simulate_round_reference` (the bitwise pin in tests/netsim_scale.rs)
+//!    and is timed here as the "before" side. The acceptance bar is no
+//!    small-n regression.
+//! 3. **State-bytes proxy**: `arena_bytes() + plan.state_bytes()` — the
+//!    resident footprint of one live simulation, recorded so the perf
+//!    trajectory can track peak-RSS alongside rounds/sec.
+//!
+//! `--quiet` (CI mode) trims sample counts but keeps every recorded size
+//! including n = 2²⁰ — a non-recorded clean/lossy round is O(n) slot
+//! folds plus hash coins, cheap even at a million nodes.
 
-use expograph::bench::{bench_config, black_box};
+use expograph::bench::{bench_config, black_box, quiet, write_json};
 use expograph::costmodel::CostModel;
 use expograph::netsim::{NetSim, Scenario};
-use expograph::topology::schedule::Schedule;
-use expograph::topology::TopologyKind;
+use expograph::topology::exponential::one_peer_exp_plan;
 
 fn main() {
-    println!("== bench_netsim ==\n");
+    let q = quiet();
+    println!("== bench_netsim: arena event simulation, one-peer exp ==\n");
     let cost = CostModel::paper_default(0.4);
     let msg = 1e8;
+    let (min_iters, max_iters, min_secs) = if q { (3, 64, 0.1) } else { (10, 1024, 0.5) };
+    let mut rows_json = Vec::new();
 
-    for n in [64usize, 1024, 4096] {
-        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
-            let mut sched = Schedule::new(kind, n, 1);
-            let plan = sched.plan_at(0).clone();
-
-            let closed = bench_config(
-                &format!("costmodel closed form   n={n} {}", kind.name()),
-                10, 50, 4096, 0.2,
-                &mut || {
-                    black_box(cost.partial_averaging_time(&plan, msg));
-                },
-            );
-            println!("{}", closed.report());
-
-            let mut sim = NetSim::new(&cost, Scenario::clean(), 1);
+    // --- arena rounds/sec at the large-n grid ---------------------------
+    for &n in &[4096usize, 65_536, 1 << 20] {
+        // One plan reused across rounds: per-round cost is independent of
+        // which hop the one-peer realization uses, and holding τ plans
+        // live at n = 2²⁰ would dominate the memory the bench measures.
+        let plan = one_peer_exp_plan(n, 0);
+        for scenario in [Scenario::clean(), Scenario::lossy()] {
+            let label = scenario.name.clone();
+            let mut sim = NetSim::new(&cost, scenario, 1);
             let mut k = 0usize;
-            let clean = bench_config(
-                &format!("netsim clean round      n={n} {}", kind.name()),
-                5, 20, 1024, 0.2,
+            let stats = bench_config(
+                &format!("arena round n={n} {label}"),
+                2,
+                min_iters,
+                max_iters,
+                min_secs,
                 &mut || {
                     black_box(sim.simulate_round(k, &plan, msg).comm);
                     k += 1;
                 },
             );
-            println!("{}", clean.report());
-
-            let mut sim = NetSim::new(&cost, Scenario::lossy(), 1);
-            let mut k = 0usize;
-            let lossy = bench_config(
-                &format!("netsim lossy round      n={n} {}", kind.name()),
-                5, 20, 1024, 0.2,
-                &mut || {
-                    black_box(sim.simulate_round(k, &plan, msg).degraded.is_some());
-                    k += 1;
-                },
-            );
-            println!("{}", lossy.report());
+            println!("{}", stats.report());
+            let state = sim.arena_bytes() + plan.state_bytes();
+            let rps = 1.0 / stats.median.max(f64::MIN_POSITIVE);
             println!(
-                "  -> event-sim overhead {:.0}x over closed form; lossy/clean {:.1}x\n",
-                clean.median / closed.median.max(1e-12),
-                lossy.median / clean.median.max(1e-12)
+                "  -> {rps:.0} rounds/s, live state {:.1} MiB\n",
+                state as f64 / (1 << 20) as f64
             );
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"scenario\": \"{label}\", \"engine\": \"arena\", \
+                 \"s_per_round\": {:.9}, \"rounds_per_sec\": {:.3}, \"state_bytes\": {state}}}",
+                stats.median, rps
+            ));
         }
     }
 
-    // The collective baseline: 2(n−1) phases, uniform fast path.
-    for n in [64usize, 1024] {
-        let mut sim = NetSim::new(&cost, Scenario::clean(), 1);
-        let mut k = 0usize;
-        let s = bench_config(
-            &format!("netsim clean allreduce  n={n}"),
-            5, 20, 2048, 0.2,
-            &mut || {
-                black_box(sim.simulate_allreduce(k, n, msg).comm);
-                k += 1;
-            },
-        );
-        println!("{}", s.report());
+    // --- old (heap) vs arena comparator at small/medium n ---------------
+    println!("== heap reference vs arena (no small-n regression) ==\n");
+    for &n in &[4096usize, 65_536] {
+        let plan = one_peer_exp_plan(n, 0);
+        for scenario in [Scenario::clean(), Scenario::lossy()] {
+            let label = scenario.name.clone();
+            let mut sim = NetSim::new(&cost, scenario.clone(), 1);
+            let mut k = 0usize;
+            let old = bench_config(
+                &format!("heap  round n={n} {label}"),
+                2,
+                min_iters,
+                max_iters,
+                min_secs,
+                &mut || {
+                    black_box(sim.simulate_round_reference(k, &plan, msg).comm);
+                    k += 1;
+                },
+            );
+            println!("{}", old.report());
+            let mut sim = NetSim::new(&cost, scenario, 1);
+            let mut k = 0usize;
+            let new = bench_config(
+                &format!("arena round n={n} {label}"),
+                2,
+                min_iters,
+                max_iters,
+                min_secs,
+                &mut || {
+                    black_box(sim.simulate_round(k, &plan, msg).comm);
+                    k += 1;
+                },
+            );
+            println!("{}", new.report());
+            let speedup = old.median / new.median.max(f64::MIN_POSITIVE);
+            println!("  -> arena speedup n={n} {label}: {speedup:.2}x\n");
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"scenario\": \"{label}\", \"engine\": \"reference\", \
+                 \"s_per_round\": {:.9}, \"rounds_per_sec\": {:.3}, \
+                 \"arena_speedup\": {:.4}}}",
+                old.median,
+                1.0 / old.median.max(f64::MIN_POSITIVE),
+                speedup
+            ));
+        }
     }
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_netsim\",\n  \"comparison\": \"heap_reference_vs_arena_round\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    write_json("BENCH_netsim.json", &json);
 }

@@ -211,9 +211,19 @@ pub struct NetSimRunConfig {
     /// Per-iteration local compute seconds.
     pub compute: f64,
     pub seed: u64,
+    /// Plan-only mode (`plan_only=on`, or the `--large-n` preset):
+    /// scalar consensus to the initial mean instead of P-dimensional
+    /// training — the only mode allowed past n = 65536, where training
+    /// state (n × dim floats per optimizer slot) stops fitting.
+    pub plan_only: bool,
     /// Sweep scheduling (jobs + result cache) for the cell grid.
     pub sweep: SweepConfig,
 }
+
+/// Largest node count the training-state path accepts; beyond this the
+/// sweep must run `plan_only` (enforced by
+/// [`NetSimRunConfig::validate`]).
+pub const NETSIM_TRAINING_MAX_NODES: usize = 65_536;
 
 impl Default for NetSimRunConfig {
     fn default() -> Self {
@@ -236,6 +246,7 @@ impl Default for NetSimRunConfig {
             msg_bytes: 25.5e6 * 4.0,
             compute: 0.4,
             seed: 1,
+            plan_only: false,
             sweep: SweepConfig::default(),
         }
     }
@@ -317,6 +328,9 @@ impl NetSimRunConfig {
                 }
             }
             "seed" => self.seed = value.parse()?,
+            "plan_only" => {
+                self.plan_only = parse_switch(value).map_err(|e| anyhow!("plan_only: {e}"))?;
+            }
             other => {
                 if !self.sweep.set(other, value)? {
                     bail!("unknown netsim config key: {other}");
@@ -324,6 +338,37 @@ impl NetSimRunConfig {
             }
         }
         Ok(())
+    }
+
+    /// Cross-field validation (called by the runner and the CLI after
+    /// all overrides, since `set` is per-key and order-independent):
+    /// node counts past [`NETSIM_TRAINING_MAX_NODES`] require the
+    /// plan-only path — the training path would allocate `n × dim`
+    /// floats per optimizer slot.
+    pub fn validate(&self) -> Result<()> {
+        if !self.plan_only {
+            if let Some(&n) = self.nodes.iter().find(|&&n| n > NETSIM_TRAINING_MAX_NODES) {
+                bail!(
+                    "n={n} exceeds the training-state limit ({NETSIM_TRAINING_MAX_NODES}); \
+                     large-n sweeps must set plan_only=on (or use --large-n)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// The `--large-n` preset: the scaling axis of the tentpole —
+    /// one-peer exponential plans only (O(1) degree, streamed per
+    /// round), clean + lossy scenarios, n ∈ {2¹⁴, 2¹⁶, 2²⁰}, plan-only
+    /// consensus, one job (a 2²⁰-node cell owns the machine's memory
+    /// bandwidth; parallel cells would just thrash).
+    pub fn apply_large_n_preset(&mut self) {
+        self.nodes = vec![1 << 14, 1 << 16, 1 << 20];
+        self.topologies = vec![TopologyKind::OnePeerExp];
+        self.scenarios = vec![crate::netsim::Scenario::clean(), crate::netsim::Scenario::lossy()];
+        self.plan_only = true;
+        self.iters = 256;
+        self.sweep.jobs = 1;
     }
 }
 
@@ -387,6 +432,38 @@ mod tests {
         cfg.set("cache", "off").unwrap();
         assert_eq!(cfg.sweep, SweepConfig { jobs: 4, cache: false });
         assert!(cfg.set("cache", "sideways").is_err());
+    }
+
+    #[test]
+    fn netsim_plan_only_knob_and_large_n_validation() {
+        let mut cfg = NetSimRunConfig::default();
+        assert!(!cfg.plan_only);
+        assert!(cfg.validate().is_ok());
+        // Past the training-state limit the sweep must be plan-only.
+        cfg.set("nodes", "1048576").unwrap();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("plan_only"), "error must point at the knob: {err}");
+        cfg.set("plan_only", "on").unwrap();
+        assert!(cfg.plan_only);
+        assert!(cfg.validate().is_ok());
+        cfg.set("plan_only", "off").unwrap();
+        assert!(cfg.validate().is_err());
+        assert!(cfg.set("plan_only", "sideways").is_err());
+        // At or below the limit the training path stays allowed.
+        cfg.set("nodes", "65536").unwrap();
+        assert!(cfg.validate().is_ok());
+    }
+
+    #[test]
+    fn large_n_preset_is_plan_only_one_peer() {
+        let mut cfg = NetSimRunConfig::default();
+        cfg.apply_large_n_preset();
+        assert_eq!(cfg.nodes, vec![1 << 14, 1 << 16, 1 << 20]);
+        assert_eq!(cfg.topologies, vec![TopologyKind::OnePeerExp]);
+        assert_eq!(cfg.scenarios.len(), 2);
+        assert!(cfg.plan_only);
+        assert_eq!(cfg.sweep.jobs, 1);
+        assert!(cfg.validate().is_ok());
     }
 
     #[test]

@@ -15,6 +15,17 @@
 //! — the paper's Table 2 trade-off — while the straggler scenario slows
 //! every topology's clock without touching its trajectory and the lossy
 //! scenario costs extra iterations through degraded plans.
+//!
+//! **Plan-only mode** (`plan_only=on`, the `--large-n` axis): the same
+//! table at n up to 2²⁰ with no P-dimensional training state. Each node
+//! carries one scalar drawn from a hash coin; the target is the exact
+//! initial mean, so consensus (what the paper's exact-averaging story
+//! is about) is the entire objective, and the live state is the plan's
+//! CSR plus a handful of n-vectors — `O(n + edges)`. Rounds still run
+//! through the full [`NetSim`] (times, faults, degraded plans, bytes),
+//! and the state mixes through [`MixingPlan::matvec_into`] on the
+//! degraded-or-original plan, double-buffered so a round allocates
+//! nothing.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -24,9 +35,11 @@ use crate::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
 use crate::coordinator::LrSchedule;
 use crate::costmodel::CostModel;
 use crate::engine::budget_lanes;
-use crate::netsim::{NetSim, Scenario};
+use crate::netsim::{coin, NetSim, Scenario};
 use crate::optim::AlgorithmKind;
 use crate::sweep::{Axis, Col, Grid, Record, Sink, Sweep};
+use crate::topology::exponential::one_peer_exp_plan;
+use crate::topology::plan::MixingPlan;
 use crate::topology::schedule::Schedule;
 use crate::topology::TopologyKind;
 use crate::util::json::Json;
@@ -46,13 +59,18 @@ pub struct NetSimCell {
     /// Simulated seconds to target (total simulated time when not
     /// reached — the honest "still not there after the whole budget").
     pub time_to_target: f64,
-    /// Total simulated seconds of the whole budget.
+    /// Total simulated seconds of the whole budget (plan-only cells
+    /// stop at the target, so their total spans only executed rounds).
     pub total_time: f64,
     pub final_err: f64,
     pub err0: f64,
     /// Exchanges lost and rounds degraded across the run.
     pub dropped: usize,
     pub degraded_rounds: usize,
+    /// Payload bytes on the wire across the run (sum of
+    /// [`crate::netsim::RoundOutcome::bytes_on_wire`]) — the baseline
+    /// column future compression work has to beat.
+    pub bytes_on_wire: f64,
 }
 
 impl NetSimCell {
@@ -70,6 +88,7 @@ impl NetSimCell {
             .with("err0", self.err0)
             .with("dropped", self.dropped)
             .with("degraded_rounds", self.degraded_rounds)
+            .with("bytes_on_wire", self.bytes_on_wire)
     }
 
     /// Inverse of [`NetSimCell::record`] (cache-served cells).
@@ -88,6 +107,7 @@ impl NetSimCell {
             err0: rec.num("err0"),
             dropped: rec.num("dropped") as usize,
             degraded_rounds: rec.num("degraded_rounds") as usize,
+            bytes_on_wire: rec.num("bytes_on_wire"),
         })
     }
 }
@@ -163,6 +183,79 @@ pub fn time_to_target_with(
         err0,
         dropped: sim.dropped_total,
         degraded_rounds: sim.degraded_rounds,
+        bytes_on_wire: sim.bytes_on_wire_total,
+    }
+}
+
+/// Run one plan-only cell: scalar consensus to the initial mean at
+/// large `n`, no training state. One-peer exponential plans are built
+/// round by round straight from the closed form — a `Schedule` would
+/// precompute all τ period plans, which at n = 2²⁰ is a gigabyte of
+/// cached CSR; every other family still goes through the schedule (its
+/// caching is exactly right for static plans).
+pub fn plan_only_time_to_target(
+    cfg: &NetSimRunConfig,
+    kind: TopologyKind,
+    n: usize,
+    scenario: &Scenario,
+) -> NetSimCell {
+    let cost = CostModel::paper_default(cfg.compute);
+    let mut sim = NetSim::new(&cost, scenario.clone(), cfg.seed);
+    // Deterministic scalar state: node i starts at a pure hash coin (the
+    // same n-keyed seed split as the training path's provider).
+    let seed = cfg.seed ^ ((n as u64) << 20);
+    let mut x: Vec<f64> = (0..n).map(|i| coin(seed, 0, i, i, 0x1A17)).collect();
+    let xbar = x.iter().sum::<f64>() / n as f64;
+    let sq_err = |x: &[f64]| x.iter().map(|&v| (v - xbar) * (v - xbar)).sum::<f64>() / n as f64;
+    let err0 = sq_err(&x).max(1e-12);
+    let target = cfg.tol * err0;
+
+    let mut sched = if kind == TopologyKind::OnePeerExp {
+        None
+    } else {
+        Some(Schedule::new(kind, n, cfg.seed))
+    };
+    let mut buf = vec![0.0f64; n];
+    let mut total_time = 0.0f64;
+    let mut final_err = err0;
+    let mut hit: Option<usize> = None;
+    for k in 0..cfg.iters {
+        let plan_storage;
+        let plan: &MixingPlan = match sched.as_mut() {
+            Some(s) => s.plan_at(k),
+            None => {
+                plan_storage = one_peer_exp_plan(n, k);
+                &plan_storage
+            }
+        };
+        let out = sim.simulate_round(k, plan, cfg.msg_bytes);
+        let mix = out.degraded.as_ref().unwrap_or(plan);
+        mix.matvec_into(&x, &mut buf);
+        std::mem::swap(&mut x, &mut buf);
+        total_time += out.iteration_time(cost.overlap);
+        final_err = sq_err(&x);
+        if final_err <= target {
+            hit = Some(k);
+            break;
+        }
+    }
+    let (reached, iters_to_target) = match hit {
+        Some(k) => (true, k + 1),
+        None => (false, cfg.iters),
+    };
+    NetSimCell {
+        topology: kind,
+        n,
+        scenario: scenario.name.clone(),
+        reached,
+        iters_to_target,
+        time_to_target: total_time,
+        total_time,
+        final_err,
+        err0,
+        dropped: sim.dropped_total,
+        degraded_rounds: sim.degraded_rounds,
+        bytes_on_wire: sim.bytes_on_wire_total,
     }
 }
 
@@ -171,6 +264,7 @@ pub fn time_to_target_with(
 /// cell for programmatic assertions (tests) on top of the emitted
 /// artifacts.
 pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimCell>> {
+    cfg.validate()?;
     std::fs::create_dir_all(out_dir)
         .with_context(|| format!("creating {}", out_dir.display()))?;
     #[derive(Clone, Debug)]
@@ -193,14 +287,18 @@ pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimC
         grid.cells(),
         |spec| {
             format!(
-                "{:?} {:?} n={} iters={} dim={} tol={} msg_bytes={} compute={}",
+                "{:?} {:?} n={} iters={} dim={} tol={} msg_bytes={} compute={} plan_only={}",
                 spec.kind, spec.scenario, spec.n, cfg.iters, cfg.dim, cfg.tol, cfg.msg_bytes,
-                cfg.compute
+                cfg.compute, cfg.plan_only
             )
         },
         |spec, cc| {
-            vec![time_to_target_with(cfg, spec.kind, spec.n, &spec.scenario, Some(cc.lanes))
-                .record()]
+            let cell = if cfg.plan_only {
+                plan_only_time_to_target(cfg, spec.kind, spec.n, &spec.scenario)
+            } else {
+                time_to_target_with(cfg, spec.kind, spec.n, &spec.scenario, Some(cc.lanes))
+            };
+            vec![cell.record()]
         },
     );
     let cells = out
@@ -245,6 +343,7 @@ pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimC
         Col::auto("final_err"),
         Col::auto("dropped"),
         Col::auto("degraded_rounds"),
+        Col::auto("bytes_on_wire"),
     ]);
     for cell in &out {
         sink.push(&cell.records[0]);
@@ -288,6 +387,7 @@ fn cells_to_json(cfg: &NetSimRunConfig, cells: &[NetSimCell]) -> Json {
                     o.insert("err0".into(), Json::Num(c.err0));
                     o.insert("dropped".into(), Json::Num(c.dropped as f64));
                     o.insert("degraded_rounds".into(), Json::Num(c.degraded_rounds as f64));
+                    o.insert("bytes_on_wire".into(), Json::Num(c.bytes_on_wire));
                     Json::Obj(o)
                 })
                 .collect(),
@@ -333,6 +433,35 @@ mod tests {
         assert_eq!(again[0].time_to_target, clean.time_to_target);
         assert_eq!(std::fs::read(tmp.join("netsim.csv")).unwrap(), csv_cold);
         assert_eq!(std::fs::read(tmp.join("netsim.json")).unwrap(), json_cold);
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+
+    #[test]
+    fn plan_only_sweep_reaches_consensus_and_records_bytes() {
+        let tmp =
+            std::env::temp_dir().join(format!("expograph-netsim-po-{}", std::process::id()));
+        let cfg = NetSimRunConfig {
+            nodes: vec![64],
+            topologies: vec![TopologyKind::OnePeerExp],
+            scenarios: vec![Scenario::clean(), Scenario::lossy()],
+            iters: 200,
+            plan_only: true,
+            ..Default::default()
+        };
+        let cells = netsim_table(&cfg, &tmp).unwrap();
+        assert_eq!(cells.len(), 2);
+        let (clean, lossy) = (&cells[0], &cells[1]);
+        // Lemma 1 at n = 2⁶: τ = 6 one-peer rounds average exactly, so
+        // scalar consensus hits any tolerance within one period.
+        assert!(clean.reached, "clean one-peer exp must reach consensus");
+        assert!(clean.iters_to_target <= 6, "exact averaging within τ rounds");
+        assert!(clean.bytes_on_wire > 0.0, "bytes ledger must be populated");
+        assert!(lossy.degraded_rounds > 0, "30% drops must degrade rounds");
+        assert!(lossy.iters_to_target >= clean.iters_to_target);
+        let text = std::fs::read_to_string(tmp.join("netsim.json")).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let rows = doc.get("rows").unwrap().as_array().unwrap();
+        assert!(rows[0].get("bytes_on_wire").is_some(), "json carries the bytes column");
         std::fs::remove_dir_all(&tmp).ok();
     }
 }

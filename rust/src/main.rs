@@ -57,11 +57,14 @@ USAGE:
       topologies (from the registry — includes the finite-time
       arbitrary-n families):
                   {topologies}
-  expograph netsim [--out DIR] [key=value ...]
+  expograph netsim [--out DIR] [--large-n] [key=value ...]
       discrete-event network simulation: topology x n x scenario
       time-to-target table (writes netsim.json + netsim.csv)
       keys: nodes topologies scenarios iters dim tol msg_bytes compute seed
-            jobs cache
+            jobs cache plan_only
+      plan_only=on skips model training and runs scalar plan-only
+      consensus (required for n > 65536); --large-n applies the preset
+      n = 16384,65536,1048576 one-peer-exp clean+lossy plan-only sweep
       e.g.: nodes=8,64 topologies=ring,one_peer_exp scenarios=clean,lossy
   expograph spectral <topology> <n>
   expograph info
@@ -185,10 +188,13 @@ fn cmd_netsim(args: &[String]) -> Result<()> {
     while let Some(arg) = it.next() {
         if arg == "--out" {
             out = it.next().context("--out needs a value")?.into();
+        } else if arg == "--large-n" {
+            // Preset first, key=value after it can still override knobs.
+            cfg.apply_large_n_preset();
         } else if let Some((k, v)) = arg.split_once('=') {
             cfg.set(k, v)?;
         } else {
-            bail!("expected key=value or --out DIR, got {arg}");
+            bail!("expected key=value, --large-n, or --out DIR, got {arg}");
         }
     }
     let t0 = std::time::Instant::now();

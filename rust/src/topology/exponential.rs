@@ -13,7 +13,7 @@
 //! cyclic (the paper's default), random permutation (still exact-averaging),
 //! and uniform sampling with replacement (only asymptotically exact).
 
-use super::plan::MixingPlan;
+use super::plan::{MixingPlan, PlanBuilder};
 use super::TopologyKind;
 use crate::linalg::Matrix;
 use crate::util::rng::Pcg;
@@ -56,8 +56,8 @@ pub fn static_exp_weights(n: usize) -> Matrix {
 
 /// Direct sparse constructor for the static exponential graph (Eq. (5)):
 /// row `i` holds `1/(τ+1)` at `i` and at `i + 2^t (mod n)` for
-/// `t = 0..τ−1`. Never materializes the dense matrix — `O(n log n)`
-/// nonzeros total.
+/// `t = 0..τ−1`. Streams straight into CSR through [`PlanBuilder`] —
+/// no dense matrix, no per-row `Vec`s — `O(n log n)` nonzeros total.
 pub fn static_exp_plan(n: usize) -> MixingPlan {
     if n == 1 {
         return MixingPlan::from_rows(vec![vec![(0, 1.0)]], Some(TopologyKind::StaticExp));
@@ -65,31 +65,35 @@ pub fn static_exp_plan(n: usize) -> MixingPlan {
     let t = tau(n);
     let coeff = 1.0 / (t as f64 + 1.0);
     let hops = hop_offsets(n);
-    let mut rows = Vec::with_capacity(n);
+    let mut b = PlanBuilder::new(n, n * (t + 1));
     for i in 0..n {
-        let mut row = Vec::with_capacity(t + 1);
-        row.push((i, coeff));
+        b.push(i, coeff);
         for &h in &hops {
-            row.push(((i + h) % n, coeff));
+            b.push((i + h) % n, coeff);
         }
-        rows.push(row);
+        b.finish_row();
     }
-    MixingPlan::from_rows(rows, Some(TopologyKind::StaticExp))
+    b.finish(Some(TopologyKind::StaticExp))
 }
 
 /// Direct sparse constructor for the one-peer exponential realization
 /// with hop exponent `t` (Eq. (7)): row `i` is `½` at `i` and `½` at
-/// `i + 2^{mod(t,τ)} (mod n)`. Exactly two nonzeros per row.
+/// `i + 2^{mod(t,τ)} (mod n)`. Exactly two nonzeros per row, streamed
+/// straight into CSR — this is the constructor the million-node netsim
+/// path rides on.
 pub fn one_peer_exp_plan(n: usize, t: usize) -> MixingPlan {
     if n == 1 {
         return MixingPlan::from_rows(vec![vec![(0, 1.0)]], Some(TopologyKind::OnePeerExp));
     }
     let period = tau(n);
     let hop = 1usize << (t % period.max(1));
-    let rows = (0..n)
-        .map(|i| vec![(i, 0.5), ((i + hop) % n, 0.5)])
-        .collect();
-    MixingPlan::from_rows(rows, Some(TopologyKind::OnePeerExp))
+    let mut b = PlanBuilder::new(n, 2 * n);
+    for i in 0..n {
+        b.push(i, 0.5);
+        b.push((i + hop) % n, 0.5);
+        b.finish_row();
+    }
+    b.finish(Some(TopologyKind::OnePeerExp))
 }
 
 /// Generating vector (first column) of the static exponential circulant:

@@ -38,7 +38,7 @@
 
 use super::exponential::tau;
 use super::family::{FamilySchedule, TopologyFamily};
-use super::plan::MixingPlan;
+use super::plan::{MixingPlan, PlanBuilder};
 
 /// The single-node (and `n = 1`) schedule: the identity plan.
 fn identity_plan() -> MixingPlan {
@@ -98,10 +98,14 @@ pub fn base_k_cycle(n: usize, radix: usize) -> Vec<MixingPlan> {
     let mut stride = 1usize;
     for &f in &factors {
         let w = 1.0 / f as f64;
-        let rows = (0..n)
-            .map(|i| (0..f).map(|j| ((i + j * stride) % n, w)).collect())
-            .collect();
-        plans.push(MixingPlan::from_rows(rows, None));
+        let mut b = PlanBuilder::new(n, n * f);
+        for i in 0..n {
+            for j in 0..f {
+                b.push((i + j * stride) % n, w);
+            }
+            b.finish_row();
+        }
+        plans.push(b.finish(None));
         stride *= f;
     }
     plans
@@ -140,26 +144,47 @@ pub fn ceca_cycle(n: usize) -> Vec<MixingPlan> {
     }
     let mut rounds: Vec<Vec<Merge>> = vec![Vec::new(); p];
     schedule_merges(0, n, &mut rounds);
+    // Every row is either the identity `{(i, 1)}` or a two-entry merge
+    // row, so three flat per-node arrays (partner id, self weight,
+    // partner weight) describe a round completely and the plan streams
+    // into CSR with no per-row `Vec`s.
+    let mut other: Vec<u32> = Vec::with_capacity(n);
+    let mut w_self: Vec<f64> = Vec::with_capacity(n);
+    let mut w_other: Vec<f64> = Vec::with_capacity(n);
     rounds
         .iter()
         .map(|merges| {
-            let mut rows: Vec<Vec<(usize, f64)>> =
-                (0..n).map(|i| vec![(i, 1.0)]).collect();
+            other.clear();
+            other.extend(0..n as u32);
+            w_self.clear();
+            w_self.resize(n, 1.0);
+            w_other.clear();
+            w_other.resize(n, 0.0);
             for &(lo, mid, hi) in merges {
                 let alpha = mid - lo;
                 let beta = hi - mid;
                 let wa = alpha as f64 / (alpha + beta) as f64;
                 let wb = beta as f64 / (alpha + beta) as f64;
                 for u in lo..mid {
-                    let partner = mid + (u - lo) % beta;
-                    rows[u] = vec![(u, wa), (partner, wb)];
+                    other[u] = (mid + (u - lo) % beta) as u32;
+                    w_self[u] = wa;
+                    w_other[u] = wb;
                 }
                 for v in mid..hi {
-                    let partner = lo + (v - mid);
-                    rows[v] = vec![(partner, wa), (v, wb)];
+                    other[v] = (lo + (v - mid)) as u32;
+                    w_self[v] = wb;
+                    w_other[v] = wa;
                 }
             }
-            MixingPlan::from_rows(rows, None)
+            let mut b = PlanBuilder::new(n, 2 * n);
+            for i in 0..n {
+                b.push(i, w_self[i]);
+                if other[i] as usize != i {
+                    b.push(other[i] as usize, w_other[i]);
+                }
+                b.finish_row();
+            }
+            b.finish(None)
         })
         .collect()
 }

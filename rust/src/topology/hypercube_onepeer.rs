@@ -11,7 +11,7 @@
 //! Requires `n = 2^τ`.
 
 use super::exponential::tau;
-use super::plan::MixingPlan;
+use super::plan::{MixingPlan, PlanBuilder};
 use super::TopologyKind;
 use crate::linalg::Matrix;
 
@@ -43,8 +43,13 @@ pub fn one_peer_hypercube_plan(n: usize, t: usize) -> MixingPlan {
     }
     let period = tau(n).max(1);
     let bit = 1usize << (t % period);
-    let rows = (0..n).map(|i| vec![(i, 0.5), (i ^ bit, 0.5)]).collect();
-    MixingPlan::from_rows(rows, Some(TopologyKind::OnePeerHypercube))
+    let mut b = PlanBuilder::new(n, 2 * n);
+    for i in 0..n {
+        b.push(i, 0.5);
+        b.push(i ^ bit, 0.5);
+        b.finish_row();
+    }
+    b.finish(Some(TopologyKind::OnePeerHypercube))
 }
 
 #[cfg(test)]

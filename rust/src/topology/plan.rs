@@ -16,8 +16,15 @@
 //! averaging property on the f64 consensus path); the f32 copy is cast
 //! **once at construction**, so the training kernels never pay a
 //! per-nonzero-per-chunk cast and never chase per-row heap pointers.
-//! Constructors still hand [`MixingPlan::from_rows`] per-row nonzero
-//! lists; the CSR flattening is internal.
+//! The per-node communication-partner lists (what [`crate::netsim`]
+//! walks every simulated round) are flat CSR too — at `n = 2²⁰` a
+//! `Vec<Vec<usize>>` would cost a heap allocation plus pointer chase
+//! per node, which is exactly the layout this module exists to avoid.
+//!
+//! There is **one construction path**: [`PlanBuilder`] streams nonzeros
+//! row by row straight into the CSR arrays (no intermediate
+//! `Vec<Vec<(usize, f64)>>`), and [`MixingPlan::from_rows`] is a thin
+//! adapter over it for callers that already hold per-row lists.
 //!
 //! The mixing kernels (`mix`, `mix_dmsgd`) that consume a plan live in
 //! [`crate::coordinator::mixing`]; this module owns construction and
@@ -46,13 +53,17 @@ pub struct MixingPlan {
     /// `f32` weight of each nonzero, cast once at construction for the
     /// training kernels.
     weights_f32: Vec<f32>,
-    /// For each node, its *distinct* off-diagonal communication
-    /// partners (union of in- and out-neighbors), ascending. Built once
-    /// at construction; [`crate::netsim`] walks these lists directly
-    /// every simulated round instead of re-deriving them.
-    pub partners: Vec<Vec<usize>>,
+    /// CSR offsets into `partner_cols`: node `u`'s *distinct*
+    /// off-diagonal communication partners (union of in- and
+    /// out-neighbors), ascending, live at
+    /// `partner_ptr[u]..partner_ptr[u+1]`. Built once at construction;
+    /// [`crate::netsim`] walks these slices directly every simulated
+    /// round instead of re-deriving them.
+    partner_ptr: Vec<u32>,
+    /// Partner ids, ascending within each node's segment.
+    partner_cols: Vec<u32>,
     /// Max over nodes of the number of distinct partners (the longest
-    /// `partners` list) — the paper's per-iteration communication
+    /// partner segment) — the paper's per-iteration communication
     /// degree.
     pub max_degree: usize,
     /// Is `W` exactly symmetric? (What D²/Exact-Diffusion require.)
@@ -88,49 +99,116 @@ impl<'a> PlanRow<'a> {
     }
 }
 
-impl MixingPlan {
-    /// Build a plan from per-row nonzero lists. Rows are sorted by column
-    /// index, then flattened into CSR; `max_degree` and symmetry are
-    /// derived from the structure in `O(nnz log nnz)`. Deterministic
-    /// schedules pay this once at cache build; stochastic schedules
-    /// (random matching, sampled one-peer) pay it per draw — if that ever
-    /// shows up in a profile, give the matching/one-peer constructors a
-    /// variant taking their analytic metadata (degree 1–2, symmetry by
-    /// `n | 2·hop`) instead.
-    pub fn from_rows(mut rows: Vec<Vec<(usize, f64)>>, kind: Option<TopologyKind>) -> MixingPlan {
-        for row in rows.iter_mut() {
-            row.sort_unstable_by_key(|e| e.0);
-        }
-        let n = rows.len();
-        let partners = partner_lists(&rows);
-        let max_degree = partners.iter().map(Vec::len).max().unwrap_or(0);
-        let symmetric = rows_symmetric(&rows);
-        let nnz: usize = rows.iter().map(Vec::len).sum();
-        assert!(n < u32::MAX as usize && nnz < u32::MAX as usize, "plan exceeds u32 CSR indexing");
-        let mut row_ptr = Vec::with_capacity(n + 1);
-        let mut cols = Vec::with_capacity(nnz);
-        let mut weights_f64 = Vec::with_capacity(nnz);
-        let mut weights_f32 = Vec::with_capacity(nnz);
+/// Streaming CSR constructor: push nonzeros row by row, then
+/// [`PlanBuilder::finish`]. This is the **only** construction path —
+/// [`MixingPlan::from_rows`] adapts per-row lists onto it — so the
+/// closed-form family constructors can build million-node plans without
+/// ever materializing a `Vec<Vec<(usize, f64)>>` (one heap allocation
+/// per row is exactly the layout the large-n netsim path cannot
+/// afford).
+///
+/// Rows are sorted by column on [`PlanBuilder::finish_row`] (in a
+/// reused scratch, skipped when the row was pushed ascending — every
+/// in-tree constructor except the wrap-around static-exp rows);
+/// `finish` derives the partner CSR, `max_degree`, and symmetry in
+/// `O(nnz log max_row)`.
+pub struct PlanBuilder {
+    row_ptr: Vec<u32>,
+    cols: Vec<u32>,
+    weights_f64: Vec<f64>,
+    weights_f32: Vec<f32>,
+    /// Reused per-row sort scratch (allocated at most once per build).
+    scratch: Vec<(u32, f64)>,
+}
+
+impl PlanBuilder {
+    /// Start a build; `n_hint` / `nnz_hint` pre-size the arrays (exact
+    /// values avoid every reallocation, approximations are fine).
+    pub fn new(n_hint: usize, nnz_hint: usize) -> PlanBuilder {
+        let mut row_ptr = Vec::with_capacity(n_hint + 1);
         row_ptr.push(0u32);
-        for row in &rows {
-            for &(j, w) in row {
-                cols.push(j as u32);
-                weights_f64.push(w);
-                weights_f32.push(w as f32);
-            }
-            row_ptr.push(cols.len() as u32);
+        PlanBuilder {
+            row_ptr,
+            cols: Vec::with_capacity(nnz_hint),
+            weights_f64: Vec::with_capacity(nnz_hint),
+            weights_f32: Vec::with_capacity(nnz_hint),
+            scratch: Vec::new(),
         }
+    }
+
+    /// Append one nonzero `(j, w)` to the current row.
+    #[inline]
+    pub fn push(&mut self, j: usize, w: f64) {
+        self.cols.push(j as u32);
+        self.weights_f64.push(w);
+        self.weights_f32.push(w as f32);
+    }
+
+    /// Close the current row: sort its nonzeros by column (no-op when
+    /// pushed ascending) and advance the row offsets.
+    pub fn finish_row(&mut self) {
+        let start = *self.row_ptr.last().unwrap() as usize;
+        if !self.cols[start..].windows(2).all(|p| p[0] <= p[1]) {
+            self.scratch.clear();
+            self.scratch.extend(
+                self.cols[start..]
+                    .iter()
+                    .zip(&self.weights_f64[start..])
+                    .map(|(&c, &w)| (c, w)),
+            );
+            self.scratch.sort_unstable_by_key(|e| e.0);
+            for (t, &(c, w)) in self.scratch.iter().enumerate() {
+                self.cols[start + t] = c;
+                self.weights_f64[start + t] = w;
+                self.weights_f32[start + t] = w as f32;
+            }
+        }
+        self.row_ptr.push(self.cols.len() as u32);
+    }
+
+    /// Derive structural metadata (partner CSR, `max_degree`, symmetry)
+    /// and seal the plan.
+    pub fn finish(self, kind: Option<TopologyKind>) -> MixingPlan {
+        let n = self.row_ptr.len() - 1;
+        let nnz = self.cols.len();
+        assert!(n < u32::MAX as usize && nnz < u32::MAX as usize, "plan exceeds u32 CSR indexing");
+        let (partner_ptr, partner_cols) =
+            partner_csr(n, &self.row_ptr, &self.cols, &self.weights_f64);
+        let max_degree = (0..n)
+            .map(|u| (partner_ptr[u + 1] - partner_ptr[u]) as usize)
+            .max()
+            .unwrap_or(0);
+        let symmetric = csr_symmetric(n, &self.row_ptr, &self.cols, &self.weights_f64);
         MixingPlan {
             n,
-            row_ptr,
-            cols,
-            weights_f64,
-            weights_f32,
-            partners,
+            row_ptr: self.row_ptr,
+            cols: self.cols,
+            weights_f64: self.weights_f64,
+            weights_f32: self.weights_f32,
+            partner_ptr,
+            partner_cols,
             max_degree,
             symmetric,
             kind,
         }
+    }
+}
+
+impl MixingPlan {
+    /// Build a plan from per-row nonzero lists — a thin adapter over
+    /// [`PlanBuilder`] for callers that already hold materialized rows
+    /// (tests, `from_dense`, ad-hoc matrices). Large-n constructors
+    /// should stream through the builder directly.
+    pub fn from_rows(rows: Vec<Vec<(usize, f64)>>, kind: Option<TopologyKind>) -> MixingPlan {
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        let mut b = PlanBuilder::new(rows.len(), nnz);
+        for row in &rows {
+            for &(j, w) in row {
+                b.push(j, w);
+            }
+            b.finish_row();
+        }
+        b.finish(kind)
     }
 
     /// Tag the plan with its originating topology kind.
@@ -145,25 +223,30 @@ impl MixingPlan {
     pub fn from_dense(w: &Matrix) -> MixingPlan {
         let n = w.rows();
         assert_eq!(n, w.cols(), "mixing matrix must be square");
-        let mut rows = Vec::with_capacity(n);
+        let mut b = PlanBuilder::new(n, n);
         for i in 0..n {
-            let mut row = Vec::new();
             for j in 0..n {
                 let v = w[(i, j)];
                 if v != 0.0 {
-                    row.push((j, v));
+                    b.push(j, v);
                 }
             }
-            rows.push(row);
+            b.finish_row();
         }
-        MixingPlan::from_rows(rows, None)
+        b.finish(None)
     }
 
     /// The exact-averaging plan `J = 11ᵀ/n` (parallel SGD baseline).
     pub fn averaging(n: usize) -> MixingPlan {
         let w = 1.0 / n as f64;
-        let rows = (0..n).map(|_| (0..n).map(|j| (j, w)).collect()).collect();
-        MixingPlan::from_rows(rows, Some(TopologyKind::FullyConnected))
+        let mut b = PlanBuilder::new(n, n * n);
+        for _ in 0..n {
+            for j in 0..n {
+                b.push(j, w);
+            }
+            b.finish_row();
+        }
+        b.finish(Some(TopologyKind::FullyConnected))
     }
 
     /// Borrowed CSR view of row `i` (the kernels' access path).
@@ -182,6 +265,14 @@ impl MixingPlan {
     #[inline]
     pub fn row_len(&self, i: usize) -> usize {
         (self.row_ptr[i + 1] - self.row_ptr[i]) as usize
+    }
+
+    /// Node `u`'s distinct off-diagonal communication partners (union of
+    /// in- and out-neighbors), ascending — a borrowed CSR segment, the
+    /// same degree notion as [`MixingPlan::max_degree`].
+    #[inline]
+    pub fn partners(&self, u: usize) -> &[u32] {
+        &self.partner_cols[self.partner_ptr[u] as usize..self.partner_ptr[u + 1] as usize]
     }
 
     /// Iterate row `i`'s `(j, w_ij)` nonzeros in ascending-`j` order
@@ -216,17 +307,37 @@ impl MixingPlan {
         self.cols.len()
     }
 
+    /// Bytes of live plan state (all CSR arrays, by length) — the
+    /// peak-RSS proxy the large-n tests/benches assert is `O(n + nnz)`.
+    pub fn state_bytes(&self) -> usize {
+        self.row_ptr.len() * 4
+            + self.cols.len() * 4
+            + self.weights_f64.len() * 8
+            + self.weights_f32.len() * 4
+            + self.partner_ptr.len() * 4
+            + self.partner_cols.len() * 4
+    }
+
     /// Sparse matrix-vector product `W x` in `f64` (the consensus/gossip
     /// simulation path). Accumulates in ascending-`j` order, matching the
     /// dense [`Matrix::matvec`] bit-for-bit on the stored nonzeros.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0f64; self.n];
+        self.matvec_into(x, &mut out);
+        out
+    }
+
+    /// Allocation-free [`MixingPlan::matvec`] into a caller-owned
+    /// buffer — the large-n plan-only consensus loop double-buffers
+    /// through this. Identical accumulation order, so the two entry
+    /// points are bitwise-equal.
+    pub fn matvec_into(&self, x: &[f64], out: &mut [f64]) {
         assert_eq!(x.len(), self.n, "matvec dimension mismatch");
-        (0..self.n)
-            .map(|i| {
-                let r = self.row(i);
-                r.cols.iter().zip(r.w64.iter()).map(|(&j, &w)| w * x[j as usize]).sum()
-            })
-            .collect()
+        assert_eq!(out.len(), self.n, "matvec output dimension mismatch");
+        for (i, o) in out.iter_mut().enumerate() {
+            let r = self.row(i);
+            *o = r.cols.iter().zip(r.w64.iter()).map(|(&j, &w)| w * x[j as usize]).sum();
+        }
     }
 
     /// Fault-renormalized copy of the plan (the network simulator's
@@ -239,9 +350,136 @@ impl MixingPlan {
     ///
     /// `dropped` must be symmetric in its arguments for symmetric input
     /// plans to stay symmetric (the simulator drops per unordered
-    /// pair). Returns `None` when no entry changed, so fault-free
-    /// rounds keep borrowing the original plan bit-for-bit.
+    /// pair), and pure — it is consulted once per surviving structure
+    /// query, not once per nonzero. Returns `None` when no entry
+    /// changed, so fault-free rounds keep borrowing the original plan
+    /// bit-for-bit.
     pub fn degrade(
+        &self,
+        offline: &[bool],
+        dropped: impl FnMut(usize, usize) -> bool,
+    ) -> Option<MixingPlan> {
+        assert_eq!(offline.len(), self.n, "offline mask dimension mismatch");
+        self.degrade_if(|u| offline[u], dropped)
+    }
+
+    /// [`MixingPlan::degrade`] with the offline set as a predicate (so
+    /// the simulator's bitset mask needs no `Vec<bool>` materialize).
+    ///
+    /// Builds the degraded plan **CSR-direct** in one pass over the
+    /// input CSR — no `rows_vec()` materialize, no `from_rows`
+    /// round-trip — and derives the partner lists by filtering the
+    /// original partner CSR (a pair survives iff both endpoints are
+    /// online and the exchange was not dropped). Bitwise-identical to
+    /// [`MixingPlan::degrade_reference`], pinned by tests/kernels.rs.
+    pub fn degrade_if(
+        &self,
+        offline: impl Fn(usize) -> bool,
+        mut dropped: impl FnMut(usize, usize) -> bool,
+    ) -> Option<MixingPlan> {
+        let n = self.n;
+        let mut changed = false;
+        let mut row_ptr: Vec<u32> = Vec::with_capacity(n + 1);
+        row_ptr.push(0u32);
+        let mut cols: Vec<u32> = Vec::with_capacity(self.cols.len());
+        let mut w64: Vec<f64> = Vec::with_capacity(self.cols.len());
+        let mut w32: Vec<f32> = Vec::with_capacity(self.cols.len());
+        for i in 0..n {
+            let row = self.row(i);
+            if offline(i) {
+                if row.len() != 1 || row.cols[0] as usize != i || row.w64[0] != 1.0 {
+                    changed = true;
+                }
+                cols.push(i as u32);
+                w64.push(1.0);
+                w32.push(1.0);
+                row_ptr.push(cols.len() as u32);
+                continue;
+            }
+            let start = cols.len();
+            let mut absorbed = 0.0f64;
+            let mut diag: Option<usize> = None;
+            for t in 0..row.len() {
+                let j = row.cols[t] as usize;
+                let w = row.w64[t];
+                if j != i && (offline(j) || dropped(i, j)) {
+                    absorbed += w;
+                    changed = true;
+                } else {
+                    if j == i {
+                        diag = Some(cols.len());
+                    }
+                    cols.push(j as u32);
+                    w64.push(w);
+                    w32.push(w as f32);
+                }
+            }
+            if absorbed != 0.0 {
+                match diag {
+                    Some(p) => {
+                        w64[p] += absorbed;
+                        w32[p] = w64[p] as f32;
+                    }
+                    None => {
+                        // The surviving entries are still ascending, so
+                        // the absorbing diagonal slots in at its sorted
+                        // position (the reference path appends and
+                        // re-sorts; only the current row's tail shifts).
+                        let pos = start + cols[start..].partition_point(|&c| (c as usize) < i);
+                        cols.insert(pos, i as u32);
+                        w64.insert(pos, absorbed);
+                        w32.insert(pos, absorbed as f32);
+                    }
+                }
+            }
+            row_ptr.push(cols.len() as u32);
+        }
+        if !changed {
+            return None;
+        }
+        // Partner lists: a pair {u, v} survives iff both ends are online
+        // and the exchange was not dropped (a lost pair loses *both*
+        // directed entries, an offline node keeps none) — so the
+        // degraded partner CSR is a filter of the original one.
+        let mut partner_ptr: Vec<u32> = Vec::with_capacity(n + 1);
+        partner_ptr.push(0u32);
+        let mut partner_cols: Vec<u32> = Vec::with_capacity(self.partner_cols.len());
+        let mut max_degree = 0usize;
+        for u in 0..n {
+            if !offline(u) {
+                for &v in self.partners(u) {
+                    let vv = v as usize;
+                    if !offline(vv) && !dropped(u, vv) {
+                        partner_cols.push(v);
+                    }
+                }
+            }
+            let deg = partner_cols.len() - *partner_ptr.last().unwrap() as usize;
+            max_degree = max_degree.max(deg);
+            partner_ptr.push(partner_cols.len() as u32);
+        }
+        let symmetric = csr_symmetric(n, &row_ptr, &cols, &w64);
+        Some(MixingPlan {
+            n,
+            row_ptr,
+            cols,
+            weights_f64: w64,
+            weights_f32: w32,
+            partner_ptr,
+            partner_cols,
+            max_degree,
+            symmetric,
+            kind: self.kind,
+        })
+    }
+
+    /// Reference twin of [`MixingPlan::degrade_if`]: materialize the
+    /// per-row lists, apply the renormalization rule, and rebuild
+    /// through [`MixingPlan::from_rows`] — the pre-arena implementation,
+    /// kept (like the scalar kernel twins, docs/DESIGN.md §Perf) as the
+    /// bitwise pin for the CSR-direct path and the honest "before" side
+    /// of `bench_netsim`'s comparator.
+    pub fn degrade_reference(
         &self,
         offline: &[bool],
         mut dropped: impl FnMut(usize, usize) -> bool,
@@ -303,39 +541,79 @@ impl MixingPlan {
     }
 }
 
-/// Distinct communication partners per node, matching
+/// Distinct communication partners per node as a flat CSR, matching
 /// [`crate::topology::weight::max_comm_degree`]'s notion on the dense
 /// form: `j` is a partner of `i` iff `w_ij ≠ 0` or `w_ji ≠ 0`, `i ≠ j`.
-/// Ascending and deduplicated; the longest list is `max_degree`.
-fn partner_lists(rows: &[Vec<(usize, f64)>]) -> Vec<Vec<usize>> {
-    let n = rows.len();
-    let mut partners: Vec<Vec<usize>> = vec![Vec::new(); n];
-    for (i, row) in rows.iter().enumerate() {
-        for &(j, w) in row {
-            if i != j && w != 0.0 {
-                partners[i].push(j);
-                partners[j].push(i);
+/// Ascending and deduplicated within each segment.
+///
+/// Two passes over the nonzeros (count, scatter) into one flat
+/// adjacency array with possible duplicates (an edge stored in both
+/// directions appears twice), then per-segment sort + dedup with
+/// in-place compaction — `O(n + nnz log max_deg)` time, `O(n + nnz)`
+/// memory, zero per-node allocations.
+fn partner_csr(n: usize, row_ptr: &[u32], cols: &[u32], w: &[f64]) -> (Vec<u32>, Vec<u32>) {
+    // Pass 1: directed-degree counts (duplicates included).
+    let mut ptr = vec![0u32; n + 1];
+    for i in 0..n {
+        for t in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+            let j = cols[t] as usize;
+            if j != i && w[t] != 0.0 {
+                ptr[i + 1] += 1;
+                ptr[j + 1] += 1;
             }
         }
     }
-    for p in partners.iter_mut() {
-        p.sort_unstable();
-        p.dedup();
+    for u in 0..n {
+        ptr[u + 1] += ptr[u];
     }
-    partners
+    // Pass 2: scatter both directions of every stored edge.
+    let mut adj = vec![0u32; ptr[n] as usize];
+    let mut cursor: Vec<u32> = ptr[..n].to_vec();
+    for i in 0..n {
+        for t in row_ptr[i] as usize..row_ptr[i + 1] as usize {
+            let j = cols[t] as usize;
+            if j != i && w[t] != 0.0 {
+                adj[cursor[i] as usize] = j as u32;
+                cursor[i] += 1;
+                adj[cursor[j] as usize] = i as u32;
+                cursor[j] += 1;
+            }
+        }
+    }
+    // Sort + dedup each segment, compacting in place (the write cursor
+    // never catches up with the segment being read).
+    let mut out_ptr = vec![0u32; n + 1];
+    let mut write = 0usize;
+    for u in 0..n {
+        let (s, e) = (ptr[u] as usize, ptr[u + 1] as usize);
+        adj[s..e].sort_unstable();
+        let mut prev = u32::MAX;
+        for t in s..e {
+            let v = adj[t];
+            if v != prev {
+                adj[write] = v;
+                write += 1;
+                prev = v;
+            }
+        }
+        out_ptr[u + 1] = write as u32;
+    }
+    adj.truncate(write);
+    (out_ptr, adj)
 }
 
-/// Exact structural symmetry: every stored `(i, j, w)` has a matching
-/// `(j, i, w)` (bitwise-equal weight, mirroring
+/// Exact structural symmetry on CSR arrays: every stored `(i, j, w)`
+/// has a matching `(j, i, w)` (bitwise-equal weight, mirroring
 /// `Matrix::is_symmetric(0.0)` on the dense form).
-fn rows_symmetric(rows: &[Vec<(usize, f64)>]) -> bool {
-    let lookup = |i: usize, j: usize| -> Option<f64> {
-        let row = &rows[i];
-        row.binary_search_by_key(&j, |e| e.0).ok().map(|p| row[p].1)
+fn csr_symmetric(n: usize, row_ptr: &[u32], cols: &[u32], w: &[f64]) -> bool {
+    let lookup = |i: usize, j: u32| -> Option<f64> {
+        let (s, e) = (row_ptr[i] as usize, row_ptr[i + 1] as usize);
+        cols[s..e].binary_search(&j).ok().map(|p| w[s + p])
     };
-    rows.iter()
-        .enumerate()
-        .all(|(i, row)| row.iter().all(|&(j, w)| lookup(j, i) == Some(w)))
+    (0..n).all(|i| {
+        (row_ptr[i] as usize..row_ptr[i + 1] as usize)
+            .all(|t| lookup(cols[t] as usize, i as u32) == Some(w[t]))
+    })
 }
 
 #[cfg(test)]
@@ -377,6 +655,18 @@ mod tests {
     }
 
     #[test]
+    fn matvec_into_is_bitwise_matvec() {
+        let plan = MixingPlan::from_dense(&static_exp_weights(17));
+        let x: Vec<f64> = (0..17).map(|i| (i as f64 * 0.7).cos()).collect();
+        let a = plan.matvec(&x);
+        let mut b = vec![0.0f64; 17];
+        plan.matvec_into(&x, &mut b);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
     fn doubly_stochastic_check() {
         assert!(MixingPlan::averaging(7).is_doubly_stochastic(1e-12));
         let mut rows = MixingPlan::averaging(3).rows_vec();
@@ -386,10 +676,54 @@ mod tests {
     }
 
     #[test]
+    fn builder_streaming_equals_from_rows() {
+        // The streaming path and the per-row-list adapter build the
+        // identical plan (full struct equality: CSR arrays, partners,
+        // metadata) — including out-of-order (wrap-around) rows.
+        let n = 24usize;
+        let rows: Vec<Vec<(usize, f64)>> = (0..n)
+            .map(|i| {
+                vec![
+                    ((i + 5) % n, 0.25),
+                    (i, 0.5),
+                    ((i + 1) % n, 0.25),
+                ]
+            })
+            .collect();
+        let via_rows = MixingPlan::from_rows(rows.clone(), Some(TopologyKind::Ring));
+        let mut b = PlanBuilder::new(n, 3 * n);
+        for row in &rows {
+            for &(j, w) in row {
+                b.push(j, w);
+            }
+            b.finish_row();
+        }
+        let streamed = b.finish(Some(TopologyKind::Ring));
+        assert_eq!(streamed, via_rows);
+    }
+
+    #[test]
+    fn partner_segments_match_brute_force_union() {
+        for w in [static_exp_weights(16), static_exp_weights(9), one_peer_exp_weights(12, 1)] {
+            let plan = MixingPlan::from_dense(&w);
+            let n = plan.n;
+            for u in 0..n {
+                let mut want: Vec<u32> = (0..n)
+                    .filter(|&v| v != u && (w[(u, v)] != 0.0 || w[(v, u)] != 0.0))
+                    .map(|v| v as u32)
+                    .collect();
+                want.sort_unstable();
+                assert_eq!(plan.partners(u), &want[..], "node {u}");
+            }
+        }
+    }
+
+    #[test]
     fn degrade_none_when_no_fault_fires() {
         let plan = MixingPlan::from_dense(&static_exp_weights(16));
         let offline = vec![false; 16];
         assert!(plan.degrade(&offline, |_, _| false).is_none());
+        assert!(plan.degrade_reference(&offline, |_, _| false).is_none());
     }
 
     #[test]
@@ -427,6 +761,48 @@ mod tests {
     }
 
     #[test]
+    fn degrade_csr_direct_matches_reference_bitwise() {
+        // The CSR-direct degrade and the rows_vec→from_rows reference
+        // build the identical struct (PartialEq covers the CSR arrays,
+        // the filtered partner lists, max_degree, and symmetry) across
+        // plans with and without diagonals, offline nodes, and drops.
+        let perm = MixingPlan::from_rows(
+            (0..6).map(|i| vec![((i + 1) % 6, 1.0)]).collect(),
+            None,
+        );
+        let plans = [
+            MixingPlan::from_dense(&static_exp_weights(16)),
+            MixingPlan::from_dense(&one_peer_exp_weights(8, 1)),
+            MixingPlan::averaging(7),
+            perm,
+        ];
+        for (p, plan) in plans.iter().enumerate() {
+            let n = plan.n;
+            let mut offline = vec![false; n];
+            offline[1] = true;
+            let hash_drop = |a: usize, b: usize| (a.min(b) * 31 + a.max(b) * 17) % 3 == 0;
+            for (o, d) in [
+                (vec![false; n], true),
+                (offline.clone(), false),
+                (offline, true),
+            ] {
+                let drop_fn = |a: usize, b: usize| d && hash_drop(a, b);
+                let fast = plan.degrade(&o, drop_fn);
+                let slow = plan.degrade_reference(&o, drop_fn);
+                assert_eq!(fast, slow, "plan {p}");
+                if let Some(fast) = fast {
+                    // The absorbing diagonal lands at its sorted
+                    // position even when the original row had none.
+                    for i in 0..n {
+                        let r = fast.row(i);
+                        assert!(r.cols.windows(2).all(|c| c[0] < c[1]), "plan {p} row {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn from_rows_sorts_and_counts() {
         let plan = MixingPlan::from_rows(
             vec![vec![(1, 0.5), (0, 0.5)], vec![(0, 0.5), (1, 0.5)]],
@@ -457,6 +833,7 @@ mod tests {
             total += row.len();
         }
         assert_eq!(total, plan.nnz());
+        assert!(plan.state_bytes() >= plan.nnz() * 16 + (plan.n + 1) * 8);
     }
 
     #[test]
@@ -468,5 +845,6 @@ mod tests {
         assert!(plan.row(1).is_empty());
         assert!(plan.rows_vec()[1].is_empty());
         assert_eq!(plan.nnz(), 2);
+        assert!(plan.partners(1).is_empty());
     }
 }

@@ -116,6 +116,50 @@ fn netsim_subcommand_emits_parseable_json_with_clean_beating_lossy() {
 }
 
 #[test]
+fn netsim_plan_only_large_n_runs_and_is_gated() {
+    use expograph::util::json::Json;
+    let tmp = std::env::temp_dir().join(format!("expograph-cli-planonly-{}", std::process::id()));
+    let (stdout, stderr, ok) = run(&[
+        "netsim",
+        "nodes=16384",
+        "topologies=one_peer_exp",
+        "scenarios=clean",
+        "iters=32",
+        "plan_only=on",
+        "--out",
+        tmp.to_str().unwrap(),
+    ]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    let text = std::fs::read_to_string(tmp.join("netsim.json")).expect("netsim.json written");
+    let doc = Json::parse(&text).expect("netsim.json parses");
+    let rows = doc.get("rows").and_then(|r| r.as_array()).expect("rows array");
+    assert_eq!(rows.len(), 1, "1 topology x 1 size x 1 scenario");
+    let row = &rows[0];
+    assert_eq!(row.get("n").and_then(|v| v.as_f64()), Some(16384.0));
+    let t = row.get("time_to_target").and_then(|v| v.as_f64()).expect("time_to_target");
+    assert!(t > 0.0);
+    let bytes = row.get("bytes_on_wire").and_then(|v| v.as_f64()).expect("bytes_on_wire");
+    assert!(bytes > 0.0, "plan-only run put no bytes on the wire");
+    // One-peer exp averages exactly in tau = log2(n) = 14 rounds
+    // (Lemma 1), so the scalar consensus must hit the target by then.
+    let iters = row.get("iters_to_target").and_then(|v| v.as_f64()).expect("iters_to_target");
+    assert!(iters <= 14.0, "one-peer exp n=2^14 took {iters} rounds");
+    std::fs::remove_dir_all(&tmp).ok();
+
+    // The gate: sizes beyond the training ceiling require plan_only,
+    // and the error says so.
+    let (_, stderr, ok) = run(&["netsim", "nodes=1048576"]);
+    assert!(!ok);
+    assert!(stderr.contains("plan_only"), "{stderr}");
+
+    // And the usage text advertises both new knobs.
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    assert!(stdout.contains("--large-n"), "usage missing --large-n\n{stdout}");
+    assert!(stdout.contains("plan_only"), "usage missing plan_only\n{stdout}");
+}
+
+#[test]
 fn netsim_subcommand_rejects_bad_keys() {
     let (_, stderr, ok) = run(&["netsim", "scenarios=sunny"]);
     assert!(!ok);

@@ -182,6 +182,44 @@ fn netsim_degraded_plans_match_bitwise() {
     }
 }
 
+/// The CSR-direct `degrade` rebuild is byte-identical to the retained
+/// `degrade_reference` twin (per-row lists + `from_rows`) for every
+/// registry family under mixed fault patterns — full struct equality,
+/// so the weights, the f32 caches the kernels consume, the partner
+/// lists, and the symmetry flag are all pinned at once.
+#[test]
+fn csr_direct_degrade_matches_reference_twin_bitwise() {
+    for topo in family::families() {
+        let n = if topo.requires_pow2() { 16 } else { 12 };
+        let mut sched = Schedule::from_family(topo, n, 3);
+        for k in 0..3usize {
+            let plan = sched.plan_at(k).clone();
+            let name = topo.name();
+            let mut offline = vec![false; n];
+            offline[1] = true;
+            offline[n - 2] = k % 2 == 0;
+            // Deterministic, symmetric in {u, v} — the simulator's
+            // per-unordered-pair drop contract.
+            let drop = |u: usize, v: usize| (u.min(v) * 7 + u.max(v) * 13 + k) % 4 == 0;
+            let fast = plan.degrade(&offline, drop);
+            let slow = plan.degrade_reference(&offline, drop);
+            assert_eq!(fast, slow, "{name} n={n} k={k}: degrade twins diverge");
+            let deg = fast.expect("offline node 1 must change every registry plan");
+            // And the degraded plan still drives both kernel paths to
+            // the same bits.
+            let input = random_stack(n, 9, 40 + k as u64);
+            let mut vec_out = StackedParams::zeros(n, 9);
+            deg.mix(&input, &mut vec_out);
+            let mut sc_out = StackedParams::zeros(n, 9);
+            {
+                let _g = ScalarGuard::new();
+                deg.mix(&input, &mut sc_out);
+            }
+            assert_stacks_bitwise(&vec_out, &sc_out, &format!("{name} k={k} degraded mix"));
+        }
+    }
+}
+
 /// CSR construction equivalence for every registry family: a plan's CSR
 /// arrays round-trip exactly through the dense escape hatch (the legacy
 /// construction path), and the row views are self-consistent.

@@ -1,0 +1,141 @@
+//! Large-n NetSim acceptance suite (docs/DESIGN.md §NetSim).
+//!
+//! The arena rewrite's three contracts at training scale and above:
+//!
+//! * **Reproducibility** — one recorded round at n = 65536 per scenario
+//!   yields the identical trace, degraded plan, and bitwise-identical
+//!   times when replayed from a fresh simulator.
+//! * **Row stochasticity** — every degraded plan renormalizes lost mass
+//!   into the diagonal, so each row still sums to 1.
+//! * **Linear memory** — live simulator state (reused arena + CSR plan)
+//!   is O(n + edges); no dense n × n anywhere.
+//!
+//! Plus the determinism pin the refactor rides on: the arena path is
+//! bitwise identical (times, traces, degraded plans, counters) to the
+//! retired heap implementation, which survives as
+//! `NetSim::simulate_round_reference` for exactly this comparison.
+
+use expograph::costmodel::CostModel;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::topology::exponential::one_peer_exp_plan;
+use expograph::topology::plan::MixingPlan;
+
+const MSG: f64 = 1e8;
+
+fn scenarios() -> [Scenario; 3] {
+    [Scenario::clean(), Scenario::straggler(), Scenario::lossy()]
+}
+
+/// One recorded round at iteration `k` from a fresh recording simulator.
+fn one_round(
+    scenario: &Scenario,
+    plan: &MixingPlan,
+    k: usize,
+) -> (NetSim, expograph::netsim::RoundOutcome) {
+    let cost = CostModel::paper_default(0.4);
+    let mut sim = NetSim::new(&cost, scenario.clone(), 7).recording();
+    let out = sim.simulate_round(k, plan, MSG);
+    (sim, out)
+}
+
+/// One round per scenario at n = 65536: replaying from a fresh simulator
+/// reproduces the event trace and the outcome bit for bit.
+#[test]
+fn traces_at_65536_are_reproducible() {
+    let n = 65_536;
+    // k = 55 sits inside the lossy scenario's dropout window [50, 90),
+    // so the offline path is exercised too.
+    let k = 55;
+    let plan = one_peer_exp_plan(n, k);
+    for scenario in scenarios() {
+        let (mut a, out_a) = one_round(&scenario, &plan, k);
+        let (mut b, out_b) = one_round(&scenario, &plan, k);
+        assert_eq!(out_a.compute.to_bits(), out_b.compute.to_bits(), "{}", scenario.name);
+        assert_eq!(out_a.comm.to_bits(), out_b.comm.to_bits(), "{}", scenario.name);
+        assert_eq!(
+            out_a.bytes_on_wire.to_bits(),
+            out_b.bytes_on_wire.to_bits(),
+            "{}",
+            scenario.name
+        );
+        assert_eq!(out_a.degraded, out_b.degraded, "{}", scenario.name);
+        assert_eq!(a.take_log(), b.take_log(), "{} trace not reproducible", scenario.name);
+        if scenario.is_faultless() {
+            assert!(out_a.degraded.is_none(), "{} degraded a faultless plan", scenario.name);
+        } else {
+            assert!(out_a.degraded.is_some(), "{} fired no fault at n=65536", scenario.name);
+        }
+    }
+}
+
+/// Degraded plans at n = 65536 stay row-stochastic: lost off-diagonal
+/// mass is absorbed into the diagonal, never destroyed.
+#[test]
+fn degraded_plans_at_65536_are_row_stochastic() {
+    let n = 65_536;
+    let k = 55;
+    let plan = one_peer_exp_plan(n, k);
+    let (_, out) = one_round(&Scenario::lossy(), &plan, k);
+    let deg = out.degraded.expect("lossy round at n=65536 should degrade the plan");
+    assert!(out.dropped_pairs > 0 && out.offline_nodes > 0);
+    for i in 0..n {
+        let mut sum = 0.0;
+        for (j, w) in deg.row_entries(i) {
+            assert!(w > 0.0, "row {i} has non-positive weight at col {j}");
+            sum += w;
+        }
+        assert!((sum - 1.0).abs() < 1e-12, "row {i} sums to {sum}");
+    }
+}
+
+/// Live simulator state is O(n + edges): the reused arena plus the CSR
+/// plan fit in a small constant times (n + nnz) bytes — at n = 65536 a
+/// dense n × n f64 matrix alone would need 32 GiB.
+#[test]
+fn live_state_is_linear_in_nodes_and_edges() {
+    let n = 65_536;
+    let plan = one_peer_exp_plan(n, 3);
+    let (sim, _) = one_round(&Scenario::lossy(), &plan, 55);
+    let live = sim.arena_bytes() + plan.state_bytes();
+    // Generous constant: ~24 B/entry of CSR + ~40 B/event of recorded
+    // queue + per-node SoA. Anything super-linear blows through this
+    // immediately at 65536 nodes.
+    let budget = 128 * (n + plan.nnz());
+    assert!(live <= budget, "live state {live} B exceeds linear budget {budget} B");
+}
+
+/// The acceptance pin: at n = 4096 (recording on, all three scenarios,
+/// iterations spanning the dropout window) the arena path and the
+/// retired heap path agree bitwise — times, traces, degraded plans, and
+/// cumulative counters.
+#[test]
+fn arena_matches_heap_reference_bitwise_at_4096() {
+    let n = 4096;
+    let cost = CostModel::paper_default(0.4);
+    for scenario in scenarios() {
+        let mut fast = NetSim::new(&cost, scenario.clone(), 9).recording();
+        let mut slow = NetSim::new(&cost, scenario.clone(), 9).recording();
+        for k in [0usize, 1, 49, 55, 89, 90] {
+            let plan = one_peer_exp_plan(n, k);
+            let a = fast.simulate_round(k, &plan, MSG);
+            let b = slow.simulate_round_reference(k, &plan, MSG);
+            let tag = format!("{} k={k}", scenario.name);
+            assert_eq!(a.compute.to_bits(), b.compute.to_bits(), "{tag} compute");
+            assert_eq!(a.comm.to_bits(), b.comm.to_bits(), "{tag} comm");
+            assert_eq!(a.bytes_on_wire.to_bits(), b.bytes_on_wire.to_bits(), "{tag} bytes");
+            assert_eq!(a.degraded, b.degraded, "{tag} degraded plan");
+            assert_eq!(a.dropped_pairs, b.dropped_pairs, "{tag} dropped");
+            assert_eq!(a.offline_nodes, b.offline_nodes, "{tag} offline");
+        }
+        assert_eq!(fast.take_log(), slow.take_log(), "{} traces diverge", scenario.name);
+        assert_eq!(fast.rounds, slow.rounds);
+        assert_eq!(fast.dropped_total, slow.dropped_total);
+        assert_eq!(fast.degraded_rounds, slow.degraded_rounds);
+        assert_eq!(
+            fast.bytes_on_wire_total.to_bits(),
+            slow.bytes_on_wire_total.to_bits(),
+            "{} cumulative bytes diverge",
+            scenario.name
+        );
+    }
+}
