@@ -1,0 +1,96 @@
+//! Benchmark: compressed vs dense gossip steps — kernel overhead and
+//! bytes per round at n ∈ {64, 1024, 4096}.
+//!
+//! Two numbers per (n, compressor) cell, both recorded to
+//! `BENCH_compress.json`:
+//!
+//! * `s_per_iter` — median wall-clock of one full DmSGD step through
+//!   `step_engine_compressed` (staging + compression + damped mixing),
+//!   against the dense `identity` row driven through the same entry
+//!   point (which routes to the plain kernels — the overhead baseline);
+//! * `round_bytes` — the wire ledger of one clean one-peer round at that
+//!   n, priced through `CompressorKind::wire_bytes` — the economy the
+//!   kernel overhead buys.
+
+use expograph::bench::{bench_config, quiet, write_json, BenchStats};
+use expograph::compress::{CompressorKind, GossipCompression};
+use expograph::coordinator::StackedParams;
+use expograph::engine::Engine;
+use expograph::optim::{AlgorithmKind, StepScratch};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+use expograph::util::rng::Pcg;
+
+fn bench_compressed_step(n: usize, dim: usize, comp: CompressorKind, q: bool) -> BenchStats {
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    let engine = Engine::new(threads.min(n));
+    let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let mut gz = GossipCompression::new(comp, 7);
+    let mut scratch = StepScratch::default();
+    let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 1);
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut rng = Pcg::seeded(11);
+    for v in grads.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let mut k = 0usize;
+    // --quiet trims sample counts, never sizes (CI convention).
+    let (min_iters, max_iters, min_secs) = if q { (3, 64, 0.1) } else { (5, 256, 0.25) };
+    bench_config(
+        &format!("dmsgd step n={n} P={dim} {}", comp.label()),
+        2,
+        min_iters,
+        max_iters,
+        min_secs,
+        &mut || {
+            let plan = sched.plan_at(k);
+            opt.step_engine_compressed(&engine, plan, &grads, 0.05, &mut scratch, &mut gz);
+            k += 1;
+        },
+    )
+}
+
+/// Bytes one clean one-peer round puts on the wire at this size: n
+/// directed pulls, each priced through the compressor.
+fn round_bytes(n: usize, dim: usize, comp: CompressorKind) -> f64 {
+    n as f64 * comp.wire_bytes(4.0 * dim as f64)
+}
+
+fn main() {
+    let q = quiet();
+    println!("== bench_compress: compressed vs dense gossip step ==\n");
+    let dim = 256;
+    let compressors = [
+        CompressorKind::Identity,
+        CompressorKind::TopK { frac: 0.125 },
+        CompressorKind::Int8,
+    ];
+    let mut rows_json = Vec::new();
+    for n in [64usize, 1024, 4096] {
+        let mut dense_median = f64::NAN;
+        for comp in compressors {
+            let stats = bench_compressed_step(n, dim, comp, q);
+            println!("{}", stats.report());
+            if comp.is_identity() {
+                dense_median = stats.median;
+            }
+            let overhead = stats.median / dense_median.max(f64::MIN_POSITIVE);
+            let bytes = round_bytes(n, dim, comp);
+            rows_json.push(format!(
+                "    {{\"n\": {n}, \"compressor\": \"{}\", \"s_per_iter\": {:.9}, \
+                 \"overhead_vs_dense\": {:.4}, \"round_bytes\": {:.1}}}",
+                comp.label(),
+                stats.median,
+                overhead,
+                bytes
+            ));
+        }
+        println!();
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"bench_compress\",\n  \"topology\": \"one_peer_exp\",\n  \
+         \"algorithm\": \"dmsgd\",\n  \"dim\": {dim},\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    write_json("BENCH_compress.json", &json);
+}

@@ -1,0 +1,483 @@
+//! Wire compression for gossip exchanges, with error feedback.
+//!
+//! Decentralized training buys cheap averaging twice over: the topology
+//! bounds *how many* messages a round needs (the paper's thesis), and a
+//! [`Compressor`] bounds *how large* each message is. This module adds
+//! the second axis without giving up the repo's determinism discipline:
+//! compressed trajectories stay bitwise identical for any engine lane
+//! count, because every piece of compression state is row-local.
+//!
+//! # Scheme: lag-as-memory reconstruction (CHOCO / EF21 style)
+//!
+//! Each wire stream keeps a *reconstruction stack* `h` alongside the raw
+//! payload stack `p`. The simulator has global memory, so the copy of
+//! `h_i` a sender holds and the copy its receivers hold are one and the
+//! same array — exactly the invariant real implementations maintain by
+//! applying identical compressed updates on both ends. Per round:
+//!
+//! ```text
+//! q_i = C(p_i − h_i)        // compress the reconstruction lag
+//! h_i ← h_i + q_i           // sender and receivers apply the same q_i
+//! x⁺_i = p_i + γ·(Σ_j w_ij h_j − h_i)   // damped gossip on reconstructions
+//! ```
+//!
+//! The *lag* `p − h` is the error memory: coordinates a sparsifier drops
+//! simply stay in the next round's difference. (A separate accumulated
+//! residual à la classic error feedback double-counts the dropped
+//! coordinates — the lag already contains them — and measurably
+//! diverges; this was checked numerically before the scheme was chosen.)
+//! The consensus step size `γ` damps the pull toward lagged
+//! reconstructions; `γ = 1` recovers plain mixing and is only stable for
+//! mild compression, so each compressor picks its own `γ`
+//! ([`Compressor::gamma`], `min(1, 3·frac)` for top-k per the CHOCO
+//! `γ ∝ δ` rule).
+//!
+//! The identity compressor copies `p` into `h` bitwise and the trainer
+//! routes identity runs through the uncompressed kernels, so
+//! `CompressorKind::Identity` is byte-identical — outputs *and* wire
+//! ledger — to a build without this module.
+//!
+//! # Determinism
+//!
+//! [`Compressor::compress_row`] sees one row (one node's payload) plus
+//! `(node, iter, seed)`; it never reads another row or any lane-indexed
+//! state. Top-k selection is a total order (`f32::total_cmp` on
+//! magnitudes, ascending index tie-break); int8 stochastic rounding
+//! draws from the same splitmix-style [`coin`](crate::netsim::coin)
+//! hash netsim uses, keyed by `(seed, iter, node, element)`. Sharding
+//! rows across lanes therefore cannot change a single bit.
+//!
+//! # Wire pricing
+//!
+//! [`CompressorKind::wire_bytes`] is the *single* source of payload
+//! size: the trainer prices both the closed-form cost model and netsim
+//! rounds through it, so the `bytes_on_wire` ledger and the time ledger
+//! can never disagree about what a compressed round weighs.
+
+use crate::coordinator::state::StackedParams;
+use crate::netsim::coin;
+
+/// Salt for int8 stochastic-rounding draws (disjoint from netsim's
+/// fault/jitter salts).
+const SALT_QUANT: u64 = 0x08B1;
+
+/// Default kept fraction for [`CompressorKind::TopK`].
+pub const DEFAULT_TOPK_FRAC: f32 = 0.125;
+
+/// A per-row wire compressor with reconstruction-based error feedback.
+///
+/// Implementations advance the shared reconstruction `h` toward the raw
+/// payload `p` using only information that fits in the compressed
+/// message; the un-transmitted lag `p − h` is the error-feedback state.
+/// The update must be row-local and a pure function of
+/// `(p, h, node, iter, seed)`.
+pub trait Compressor: Send + Sync {
+    /// Compressor family name (stable identifier, no parameters).
+    fn name(&self) -> &'static str;
+
+    /// Bytes one node's compressed message puts on the wire, given the
+    /// dense message would be `dense_bytes`.
+    fn wire_bytes(&self, dense_bytes: f64) -> f64;
+
+    /// Consensus step size for mixing from reconstructions
+    /// (`x⁺ = p + γ(Wh − h)`). `1.0` recovers undamped gossip.
+    fn gamma(&self) -> f32 {
+        1.0
+    }
+
+    /// Transmit `C(p − h)` for one node's row and apply it to `h`.
+    fn compress_row(&self, p: &[f32], h: &mut [f32], node: usize, iter: usize, seed: u64);
+}
+
+/// No-op compressor: the reconstruction is the payload, bit for bit.
+pub struct Identity;
+
+impl Compressor for Identity {
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+
+    fn wire_bytes(&self, dense_bytes: f64) -> f64 {
+        dense_bytes
+    }
+
+    fn compress_row(&self, p: &[f32], h: &mut [f32], _node: usize, _iter: usize, _seed: u64) {
+        h.copy_from_slice(p);
+    }
+}
+
+/// Top-k sparsification of the reconstruction lag: transmit the `k =
+/// ceil(frac·dim)` coordinates of `p − h` with the largest magnitude
+/// (index + fresh value pairs), leave the rest lagging.
+pub struct TopK {
+    pub frac: f32,
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn wire_bytes(&self, dense_bytes: f64) -> f64 {
+        // Each kept coordinate ships a u32 index + f32 value: 8 bytes
+        // against 4 dense, hence the factor 2 on the kept fraction.
+        (2.0 * self.frac as f64 * dense_bytes).min(dense_bytes)
+    }
+
+    fn gamma(&self) -> f32 {
+        // CHOCO rule γ ∝ δ: aggressive sparsification needs a gentler
+        // consensus step. Calibrated on the heterogeneous quadratic —
+        // 4·frac sits on the stability boundary, 3·frac inside it.
+        (3.0 * self.frac).min(1.0)
+    }
+
+    fn compress_row(&self, p: &[f32], h: &mut [f32], _node: usize, _iter: usize, _seed: u64) {
+        let dim = p.len();
+        let k = ((self.frac * dim as f32).ceil() as usize).clamp(1, dim);
+        if k == dim {
+            h.copy_from_slice(p);
+            return;
+        }
+        let mut idx: Vec<u32> = (0..dim as u32).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            let da = (p[a as usize] - h[a as usize]).abs();
+            let db = (p[b as usize] - h[b as usize]).abs();
+            // Largest lag first; ascending index breaks ties (and
+            // total_cmp totalizes NaN), so selection is a total order.
+            db.total_cmp(&da).then(a.cmp(&b))
+        });
+        for &i in &idx[..k] {
+            h[i as usize] = p[i as usize];
+        }
+    }
+}
+
+/// Int8 stochastic quantization of the reconstruction lag: one shared
+/// absmax scale per row, each coordinate rounded to an integer level
+/// with probability proportional to its remainder (unbiased).
+pub struct Int8;
+
+impl Compressor for Int8 {
+    fn name(&self) -> &'static str {
+        "int8"
+    }
+
+    fn wire_bytes(&self, dense_bytes: f64) -> f64 {
+        // One byte per f32 coordinate plus a 4-byte row scale.
+        dense_bytes / 4.0 + 4.0
+    }
+
+    fn compress_row(&self, p: &[f32], h: &mut [f32], node: usize, iter: usize, seed: u64) {
+        let dim = p.len();
+        let mut max_abs = 0.0f32;
+        for i in 0..dim {
+            max_abs = max_abs.max((p[i] - h[i]).abs());
+        }
+        if max_abs == 0.0 || !max_abs.is_finite() {
+            // Zero lag transmits nothing; a non-finite lag has no
+            // representable scale, so hold the reconstruction still
+            // rather than poison it.
+            return;
+        }
+        let scale = max_abs / 127.0;
+        for i in 0..dim {
+            let t = p[i] - h[i];
+            let x = t / scale; // in [-127, 127]
+            let fl = x.floor();
+            let up = coin(seed, iter, node, i, SALT_QUANT) < (x - fl) as f64;
+            let level = if up { fl + 1.0 } else { fl };
+            h[i] += level * scale;
+        }
+    }
+}
+
+/// Which compressor a run uses — the config/CLI-facing value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CompressorKind {
+    Identity,
+    TopK { frac: f32 },
+    Int8,
+}
+
+impl Default for CompressorKind {
+    fn default() -> Self {
+        CompressorKind::Identity
+    }
+}
+
+impl CompressorKind {
+    /// Parse a CLI/config spelling: `identity` (aliases `dense`,
+    /// `none`), `topk` (default fraction), `topk:<frac>`, `int8`.
+    pub fn parse(s: &str) -> Option<CompressorKind> {
+        match s {
+            "identity" | "dense" | "none" => Some(CompressorKind::Identity),
+            "int8" => Some(CompressorKind::Int8),
+            "topk" => Some(CompressorKind::TopK { frac: DEFAULT_TOPK_FRAC }),
+            _ => {
+                let frac: f32 = s.strip_prefix("topk:")?.parse().ok()?;
+                (frac > 0.0 && frac <= 1.0).then_some(CompressorKind::TopK { frac })
+            }
+        }
+    }
+
+    /// Display/record label; round-trips through [`CompressorKind::parse`].
+    pub fn label(&self) -> String {
+        match self {
+            CompressorKind::Identity => "identity".to_string(),
+            CompressorKind::TopK { frac } => format!("topk:{frac}"),
+            CompressorKind::Int8 => "int8".to_string(),
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        matches!(self, CompressorKind::Identity)
+    }
+
+    /// Wire size of one node's message — the single pricing point both
+    /// the cost model and netsim consume (satellite: no call site may
+    /// scale `msg_bytes` on its own).
+    pub fn wire_bytes(&self, dense_bytes: f64) -> f64 {
+        match self {
+            CompressorKind::Identity => dense_bytes,
+            CompressorKind::TopK { frac } => TopK { frac: *frac }.wire_bytes(dense_bytes),
+            CompressorKind::Int8 => Int8.wire_bytes(dense_bytes),
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn Compressor> {
+        match self {
+            CompressorKind::Identity => Box::new(Identity),
+            CompressorKind::TopK { frac } => Box::new(TopK { frac: *frac }),
+            CompressorKind::Int8 => Box::new(Int8),
+        }
+    }
+}
+
+/// One wire stream's state: the raw payload staged this round and the
+/// shared reconstruction the network actually mixes.
+pub struct StreamState {
+    /// Raw pre-mix payload, staged by `Optimizer::payload_shard`.
+    pub p: StackedParams,
+    /// Shared reconstruction `h` (sender and receivers hold the same
+    /// array — global-memory simulation of both ends applying `q`).
+    pub h: StackedParams,
+}
+
+/// All compression state for one training run: the compressor, the
+/// per-stream reconstruction stacks, and the round counter that keys
+/// stochastic rounding. Owned by the step driver, advanced once per
+/// optimizer step regardless of lane count.
+pub struct GossipCompression {
+    kind: CompressorKind,
+    comp: Box<dyn Compressor>,
+    seed: u64,
+    iter: usize,
+    streams: Vec<StreamState>,
+}
+
+/// Per-stream seed separation, so two streams of the same round draw
+/// independent stochastic-rounding coins.
+pub fn stream_seed(seed: u64, stream: usize) -> u64 {
+    seed ^ ((stream as u64 + 1) << 56)
+}
+
+impl GossipCompression {
+    pub fn new(kind: CompressorKind, seed: u64) -> Self {
+        GossipCompression { kind, comp: kind.build(), seed, iter: 0, streams: Vec::new() }
+    }
+
+    pub fn kind(&self) -> CompressorKind {
+        self.kind
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.kind.is_identity()
+    }
+
+    pub fn gamma(&self) -> f32 {
+        self.comp.gamma()
+    }
+
+    pub fn iter(&self) -> usize {
+        self.iter
+    }
+
+    /// Size the stream stacks (idempotent; reconstructions start at 0,
+    /// the shared initial value both ends agree on).
+    pub fn ensure(&mut self, total_streams: usize, n: usize, dim: usize) {
+        while self.streams.len() < total_streams {
+            self.streams.push(StreamState {
+                p: StackedParams::zeros(n, dim),
+                h: StackedParams::zeros(n, dim),
+            });
+        }
+    }
+
+    /// Split borrows for the staging pass: the compressor, the round
+    /// counter, the base seed, and the mutable stream states.
+    pub fn parts_mut(&mut self) -> (&dyn Compressor, usize, u64, &mut [StreamState]) {
+        (self.comp.as_ref(), self.iter, self.seed, &mut self.streams[..])
+    }
+
+    /// Borrow `count` streams starting at `start` (one phase's worth)
+    /// for the mixing pass.
+    pub fn phase_states(&self, start: usize, count: usize) -> Vec<&StreamState> {
+        self.streams[start..start + count].iter().collect()
+    }
+
+    /// Advance the round counter — exactly once per optimizer step.
+    pub fn advance(&mut self) {
+        self.iter += 1;
+    }
+
+    /// Σ‖p − h‖² over all streams: the live error-feedback residual.
+    /// Bounded along a stable trajectory; diverges when γ is too hot.
+    pub fn residual_sq(&self) -> f64 {
+        self.streams
+            .iter()
+            .map(|st| {
+                st.p
+                    .data
+                    .iter()
+                    .zip(st.h.data.iter())
+                    .map(|(&p, &h)| {
+                        let d = (p - h) as f64;
+                        d * d
+                    })
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_reconstruction_is_bitwise_payload() {
+        let p: Vec<f32> = (0..17).map(|i| (i as f32 - 8.0) * 0.37).collect();
+        let mut h = vec![f32::NAN; 17];
+        Identity.compress_row(&p, &mut h, 3, 11, 42);
+        for (a, b) in p.iter().zip(h.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn topk_transmits_exactly_k_coordinates() {
+        let dim = 16;
+        let p: Vec<f32> = (0..dim).map(|i| i as f32).collect();
+        let mut h = vec![0.0f32; dim];
+        let c = TopK { frac: 0.25 }; // k = 4
+        c.compress_row(&p, &mut h, 0, 0, 1);
+        let touched = h.iter().filter(|&&v| v != 0.0).count();
+        assert_eq!(touched, 4, "k = ceil(0.25·16) coordinates move");
+        // The largest lags win: coordinates 12..16.
+        for i in 12..dim {
+            assert_eq!(h[i], p[i]);
+        }
+        for i in 1..12 {
+            assert_eq!(h[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn topk_selection_breaks_ties_by_index() {
+        let p = [1.0f32, 1.0, 1.0, 1.0];
+        let mut h = vec![0.0f32; 4];
+        TopK { frac: 0.25 }.compress_row(&p, &mut h, 0, 0, 1); // k = 1
+        assert_eq!(h, vec![1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn topk_lag_drains_over_rounds() {
+        let dim = 32;
+        let p: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.73).sin()).collect();
+        let mut h = vec![0.0f32; dim];
+        let c = TopK { frac: DEFAULT_TOPK_FRAC }; // k = 4
+        for it in 0..(dim / 4) {
+            c.compress_row(&p, &mut h, 0, it, 1);
+        }
+        // A static payload is fully reconstructed in dim/k rounds.
+        for (a, b) in p.iter().zip(h.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn int8_is_deterministic_and_contracts_the_lag() {
+        let dim = 64;
+        let p: Vec<f32> = (0..dim).map(|i| (i as f32 * 1.13).cos() * 3.0).collect();
+        let mut h1 = vec![0.0f32; dim];
+        let mut h2 = vec![0.0f32; dim];
+        Int8.compress_row(&p, &mut h1, 5, 9, 77);
+        Int8.compress_row(&p, &mut h2, 5, 9, 77);
+        assert_eq!(h1, h2, "same (node, iter, seed) → same quantization");
+        let lag: f32 = p.iter().zip(h1.iter()).map(|(a, b)| (a - b).abs()).fold(0.0, f32::max);
+        // One round leaves at most one quantization bin of lag.
+        let scale = p.iter().fold(0.0f32, |m, v| m.max(v.abs())) / 127.0;
+        assert!(lag <= scale * 1.0001, "lag {lag} exceeds one bin {scale}");
+        let mut h3 = vec![0.0f32; dim];
+        Int8.compress_row(&p, &mut h3, 5, 10, 77);
+        assert_ne!(h1, h3, "different iter draws different rounding coins");
+    }
+
+    #[test]
+    fn int8_zero_and_nonfinite_lag_hold_still() {
+        let mut h = vec![1.0f32, -2.0];
+        let p = h.clone();
+        Int8.compress_row(&p, &mut h, 0, 0, 1);
+        assert_eq!(h, vec![1.0, -2.0]);
+        let bad = [f32::INFINITY, 0.0];
+        Int8.compress_row(&bad, &mut h, 0, 0, 1);
+        assert!(h.iter().all(|v| v.is_finite()), "non-finite lag must not poison h");
+    }
+
+    #[test]
+    fn kind_parse_label_round_trip() {
+        for s in ["identity", "topk", "topk:0.25", "int8"] {
+            let k = CompressorKind::parse(s).unwrap();
+            assert_eq!(CompressorKind::parse(&k.label()), Some(k));
+        }
+        assert_eq!(CompressorKind::parse("dense"), Some(CompressorKind::Identity));
+        assert_eq!(CompressorKind::parse("topk:0"), None);
+        assert_eq!(CompressorKind::parse("topk:1.5"), None);
+        assert_eq!(CompressorKind::parse("gzip"), None);
+    }
+
+    #[test]
+    fn wire_bytes_pricing() {
+        let dense = 4.0 * 32.0;
+        assert_eq!(CompressorKind::Identity.wire_bytes(dense), dense);
+        assert_eq!(
+            CompressorKind::TopK { frac: 0.125 }.wire_bytes(dense),
+            2.0 * 0.125 * dense
+        );
+        // Index+value pairs can never exceed the dense message.
+        assert_eq!(CompressorKind::TopK { frac: 0.9 }.wire_bytes(dense), dense);
+        assert_eq!(CompressorKind::Int8.wire_bytes(dense), dense / 4.0 + 4.0);
+    }
+
+    #[test]
+    fn gossip_compression_state_machine() {
+        let mut gz = GossipCompression::new(
+            CompressorKind::TopK { frac: DEFAULT_TOPK_FRAC },
+            7,
+        );
+        gz.ensure(2, 4, 8);
+        gz.ensure(2, 4, 8); // idempotent
+        assert_eq!(gz.iter(), 0);
+        {
+            let (comp, iter, seed, streams) = gz.parts_mut();
+            assert_eq!(streams.len(), 2);
+            let p: Vec<f32> = (0..8).map(|i| i as f32).collect();
+            let StreamState { h, .. } = &mut streams[0];
+            comp.compress_row(&p, &mut h.data[0..8], 0, iter, stream_seed(seed, 0));
+        }
+        assert!(gz.residual_sq() >= 0.0);
+        gz.advance();
+        assert_eq!(gz.iter(), 1);
+        assert!((gz.gamma() - 3.0 * DEFAULT_TOPK_FRAC).abs() < 1e-6);
+    }
+}

@@ -17,6 +17,7 @@
 //! }
 //! ```
 
+use crate::compress::CompressorKind;
 use crate::optim::AlgorithmKind;
 use crate::topology::{family, Topology, TopologyKind};
 use crate::util::json::Json;
@@ -207,7 +208,11 @@ pub struct NetSimRunConfig {
     /// `tol · err₀`.
     pub tol: f64,
     /// Gossip message size (defaults to ResNet-50-scale, like Table 2).
+    /// This is the *dense* payload; every wire-size computation prices
+    /// rounds at `compressor.wire_bytes(msg_bytes)`.
     pub msg_bytes: f64,
+    /// Gossip payload compressor (`compressor=identity|topk[:frac]|int8`).
+    pub compressor: CompressorKind,
     /// Per-iteration local compute seconds.
     pub compute: f64,
     pub seed: u64,
@@ -244,6 +249,7 @@ impl Default for NetSimRunConfig {
             dim: 32,
             tol: 0.01,
             msg_bytes: 25.5e6 * 4.0,
+            compressor: CompressorKind::Identity,
             compute: 0.4,
             seed: 1,
             plan_only: false,
@@ -320,6 +326,11 @@ impl NetSimRunConfig {
                 if !self.msg_bytes.is_finite() || self.msg_bytes <= 0.0 {
                     bail!("msg_bytes must be positive");
                 }
+            }
+            "compressor" => {
+                self.compressor = CompressorKind::parse(value).ok_or_else(|| {
+                    anyhow!("unknown compressor {value} (identity | topk[:frac] | int8)")
+                })?;
             }
             "compute" => {
                 self.compute = value.parse()?;
@@ -427,6 +438,13 @@ mod tests {
         assert!(cfg.set("tol", "-1").is_err());
         assert!(cfg.set("msg_bytes", "nan").is_err());
         assert!(cfg.set("bogus", "1").is_err());
+        assert_eq!(cfg.compressor, CompressorKind::Identity);
+        cfg.set("compressor", "topk:0.25").unwrap();
+        assert_eq!(cfg.compressor, CompressorKind::TopK { frac: 0.25 });
+        cfg.set("compressor", "int8").unwrap();
+        assert_eq!(cfg.compressor, CompressorKind::Int8);
+        cfg.set("compressor", "identity").unwrap();
+        assert!(cfg.set("compressor", "gzip").is_err());
         // Sweep keys ride along on the netsim config surface.
         cfg.set("jobs", "4").unwrap();
         cfg.set("cache", "off").unwrap();

@@ -18,6 +18,7 @@
 
 use super::schedule_lr::LrSchedule;
 use super::state::StackedParams;
+use crate::compress::{CompressorKind, GossipCompression};
 use crate::costmodel::CostModel;
 use crate::engine::{auto_lanes, Engine};
 use crate::netsim::NetSim;
@@ -65,6 +66,12 @@ pub struct TrainConfig {
     pub msg_bytes: Option<f64>,
     /// Cost model for the simulated communication clock.
     pub cost: Option<CostModel>,
+    /// Gossip payload compressor (docs/DESIGN.md §Compression). Every
+    /// wire-size computation — netsim ledger and closed-form cost alike —
+    /// prices gossip rounds at `compressor.wire_bytes(msg_bytes)`;
+    /// all-reduce rounds stay dense (the parallel baseline does not
+    /// compress). `Identity` is byte-for-byte the pre-compression path.
+    pub compressor: CompressorKind,
 }
 
 impl Default for TrainConfig {
@@ -79,6 +86,7 @@ impl Default for TrainConfig {
             seed: 0,
             msg_bytes: None,
             cost: None,
+            compressor: CompressorKind::Identity,
         }
     }
 }
@@ -97,6 +105,12 @@ pub struct TrainingHistory {
     /// Per-iteration simulated seconds (empty unless a cost model or
     /// [`NetSim`] was supplied) — `sim_time` is its running total.
     pub round_times: Vec<f64>,
+    /// Per-iteration bytes put on the wire (empty unless a cost model or
+    /// [`NetSim`] was supplied). Sourced from the netsim ledger when one
+    /// is attached, else from the same closed-form slot count the cost
+    /// model charges — both priced through
+    /// [`CompressorKind::wire_bytes`] for gossip rounds.
+    pub round_bytes: Vec<f64>,
     /// Learning rate trace at `record_every` granularity.
     pub lr: Vec<(usize, f32)>,
 }
@@ -147,6 +161,11 @@ impl<'a> Trainer<'a> {
         let mut scratch = StepScratch::default();
         let mut history = TrainingHistory::default();
         let msg_bytes = self.cfg.msg_bytes.unwrap_or(4.0 * dim as f64);
+        // Single pricing point for compressed gossip payloads: both the
+        // netsim ledger and the closed-form cost model see this number,
+        // so the two wire ledgers cannot drift apart.
+        let gossip_bytes = self.cfg.compressor.wire_bytes(msg_bytes);
+        let mut gz = GossipCompression::new(self.cfg.compressor, self.cfg.seed);
 
         // The persistent worker pool: created once here, reused by every
         // iteration's gradients, optimizer step, and consensus probe —
@@ -192,7 +211,7 @@ impl<'a> Trainer<'a> {
                 if parallel {
                     sim.simulate_allreduce(k, n, msg_bytes)
                 } else {
-                    sim.simulate_round(k, plan, msg_bytes)
+                    sim.simulate_round(k, plan, gossip_bytes)
                 }
             });
             let step_plan = outcome
@@ -200,8 +219,11 @@ impl<'a> Trainer<'a> {
                 .and_then(|o| o.degraded.as_ref())
                 .unwrap_or(plan);
 
-            // Fused shard-local optimizer step on the same pool.
-            self.optimizer.step_engine(&engine, step_plan, &grads, lr, &mut scratch);
+            // Fused shard-local optimizer step on the same pool. With the
+            // identity compressor this delegates to the plain dense
+            // kernels (byte-identical to the pre-compression path).
+            self.optimizer
+                .step_engine_compressed(&engine, step_plan, &grads, lr, &mut scratch, &mut gz);
 
             history.loss.push(mean_loss);
             if let Some(outcome) = &outcome {
@@ -209,16 +231,29 @@ impl<'a> Trainer<'a> {
                 let t = outcome.iteration_time(overlap);
                 history.sim_time += t;
                 history.round_times.push(t);
+                history.round_bytes.push(outcome.bytes_on_wire);
             } else if let Some(cost) = &self.cfg.cost {
-                let comm = if parallel {
-                    cost.allreduce_time(n, msg_bytes)
+                let (comm, bytes) = if parallel {
+                    // Ring all-reduce: 2(n−1) phases of n chunks of
+                    // msg_bytes/n — total 2(n−1)·msg_bytes on the wire.
+                    (
+                        cost.allreduce_time(n, msg_bytes),
+                        2.0 * (n as f64 - 1.0) * msg_bytes,
+                    )
                 } else {
-                    cost.partial_averaging_time(plan, msg_bytes)
+                    // Same directed-slot count netsim bills in the clean
+                    // case: one compressed payload per both-online pull.
+                    let slots: usize = (0..n).map(|u| step_plan.partners(u).len()).sum();
+                    (
+                        cost.partial_averaging_time(plan, gossip_bytes),
+                        slots as f64 * gossip_bytes,
+                    )
                 };
                 let hidden = cost.compute.min(comm) * cost.overlap;
                 let t = cost.compute + comm - hidden;
                 history.sim_time += t;
                 history.round_times.push(t);
+                history.round_bytes.push(bytes);
             }
             if k % self.cfg.record_every == 0 || k + 1 == self.cfg.iters {
                 history
@@ -324,6 +359,7 @@ mod tests {
                 seed: 7,
                 msg_bytes: None,
                 cost: Some(CostModel::paper_default(0.01)),
+                compressor: CompressorKind::Identity,
             },
         );
         let hist = trainer.run();

@@ -175,6 +175,24 @@ mod tests {
     }
 
     #[test]
+    fn degenerate_sizes_are_well_defined() {
+        let m = CostModel::paper_default(0.3);
+        // n = 1: a one-node "collective" has 2(n−1) = 0 phases — zero
+        // time, not a negative or NaN one.
+        assert_eq!(m.allreduce_time(1, 1e8), 0.0);
+        assert_eq!(m.allreduce_time(0, 1e8), 0.0); // clamps to n = 1
+        // msg_bytes = 0: pure-latency rounds — the α term survives.
+        assert_eq!(m.link_time(0.0), m.alpha);
+        let n = 16;
+        assert_eq!(m.allreduce_time(n, 0.0), 2.0 * (n as f64 - 1.0) * m.alpha);
+        let plan = crate::topology::exponential::static_exp_plan(n);
+        assert_eq!(
+            m.partial_averaging_time(&plan, 0.0),
+            plan.max_degree as f64 * m.alpha
+        );
+    }
+
+    #[test]
     fn partial_averaging_uses_realized_degree() {
         let m = CostModel::paper_default(0.0);
         let plan = crate::topology::exponential::static_exp_plan(16);

@@ -156,6 +156,10 @@ pub fn time_to_target_with(
             seed: cfg.seed,
             msg_bytes: Some(cfg.msg_bytes),
             cost: None,
+            // The trainer is the single pricing point: it routes gossip
+            // rounds through `CompressorKind::wire_bytes` — no raw
+            // `cfg.msg_bytes` reaches the wire from here.
+            compressor: cfg.compressor,
         },
     )
     .with_netsim(sim);
@@ -228,7 +232,9 @@ pub fn plan_only_time_to_target(
                 &plan_storage
             }
         };
-        let out = sim.simulate_round(k, plan, cfg.msg_bytes);
+        // Price the scalar round through the same single point as the
+        // training path: the compressor owns the payload size.
+        let out = sim.simulate_round(k, plan, cfg.compressor.wire_bytes(cfg.msg_bytes));
         let mix = out.degraded.as_ref().unwrap_or(plan);
         mix.matvec_into(&x, &mut buf);
         std::mem::swap(&mut x, &mut buf);
@@ -287,9 +293,10 @@ pub fn netsim_table(cfg: &NetSimRunConfig, out_dir: &Path) -> Result<Vec<NetSimC
         grid.cells(),
         |spec| {
             format!(
-                "{:?} {:?} n={} iters={} dim={} tol={} msg_bytes={} compute={} plan_only={}",
+                "{:?} {:?} n={} iters={} dim={} tol={} msg_bytes={} compute={} plan_only={} \
+                 compressor={}",
                 spec.kind, spec.scenario, spec.n, cfg.iters, cfg.dim, cfg.tol, cfg.msg_bytes,
-                cfg.compute, cfg.plan_only
+                cfg.compute, cfg.plan_only, cfg.compressor.label()
             )
         },
         |spec, cc| {

@@ -38,6 +38,11 @@
 //!   over heterogeneous / faulty networks (stragglers, link jitter, message
 //!   drop, node dropout); collapses onto [`costmodel`]'s closed forms on a
 //!   clean uniform network.
+//! * [`compress`] — gossip payload compression (identity, top-k
+//!   sparsification, stochastic int8) with per-stream lag-as-memory error
+//!   feedback; `Compressor::wire_bytes` is the single source of payload
+//!   size for both [`costmodel`] and [`netsim`], and compressed steps stay
+//!   bitwise lane-count-invariant.
 //! * [`runtime`] — PJRT CPU client that loads the AOT artifacts
 //!   (`artifacts/*.hlo.txt`) produced by the build-time JAX/Pallas layers.
 //! * [`data`], [`models`] — synthetic workloads (logistic regression per
@@ -54,6 +59,7 @@
 //! request/training path is pure Rust.
 
 pub mod bench;
+pub mod compress;
 pub mod config;
 pub mod consensus;
 pub mod coordinator;

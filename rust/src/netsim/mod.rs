@@ -229,15 +229,17 @@ pub struct RoundOutcome {
     pub dropped_pairs: usize,
     /// Nodes offline this round.
     pub offline_nodes: usize,
-    /// Payload bytes put on the wire this round (the
-    /// `floats_transmitted` ledger of compression baselines — the
-    /// column a future compression PR has to beat). Gossip rounds:
-    /// every executed pull slot whose partner is *online* carries the
-    /// full message — a transiently dropped exchange was still
-    /// transmitted (then lost), while a pull from an offline partner
-    /// times out with zero payload. Allreduce: each ring link carries
-    /// its chunk every phase, and a lost chunk is retransmitted
-    /// (doubling that link's bytes).
+    /// Payload bytes put on the wire this round — the bytes-to-accuracy
+    /// ledger of [`crate::compress`]. Both paths price offline nodes the
+    /// same way: **a dead endpoint transmits nothing, so offline slots
+    /// cost time but zero bytes**. Gossip rounds: every executed pull
+    /// slot whose *both* endpoints are online carries the full message —
+    /// a transiently dropped exchange was still transmitted (then lost),
+    /// while a pull touching an offline node times out unpaid. Allreduce:
+    /// each ring link carries its chunk every phase; a chunk lost to the
+    /// drop coin is retransmitted (doubling that link's bytes), and a
+    /// phase touching an offline endpoint reroutes at double *time* but
+    /// zero bytes.
     pub bytes_on_wire: f64,
 }
 
@@ -785,9 +787,11 @@ impl NetSim {
     /// phases; each phase lasts as long as its slowest link. A dropped
     /// chunk is retransmitted and a phase touching an offline node
     /// times out and reroutes — either way that link's phase cost
-    /// doubles; an allreduce cannot renormalize a loss away, so the
-    /// collective always completes exactly and there is never a
-    /// degraded plan — faults only cost it time. Clean uniform case:
+    /// doubles, but only the retransmission is billed bytes: an offline
+    /// endpoint transmits nothing (see [`RoundOutcome::bytes_on_wire`]).
+    /// An allreduce cannot renormalize a loss away, so the collective
+    /// always completes exactly and there is never a degraded plan —
+    /// faults only cost it time. Clean uniform case:
     /// `2(n−1)·(α + (S/n)·β)` — exactly [`CostModel::allreduce_time`].
     pub fn simulate_allreduce(&mut self, k: usize, n: usize, msg_bytes: f64) -> RoundOutcome {
         let n = n.max(1);
@@ -833,12 +837,23 @@ impl NetSim {
                 for u in 0..n {
                     let v = (u + 1) % n;
                     let mut d = self.slot_time(k, u, v, chunk);
-                    let lost = arena.offline.get(u)
-                        || arena.offline.get(v)
-                        || (s.drop_prob > 0.0
-                            && coin(self.seed, k, phase * n + u, v, SALT_DROP_AR)
-                                < s.drop_prob);
-                    if lost {
+                    let offline = arena.offline.get(u) || arena.offline.get(v);
+                    // `!offline &&` mirrors the short-circuit the combined
+                    // predicate had: an offline endpoint never draws the
+                    // drop coin, so splitting the cases keeps every coin
+                    // stream (and hence every downstream draw) unchanged.
+                    let dropped = !offline
+                        && s.drop_prob > 0.0
+                        && coin(self.seed, k, phase * n + u, v, SALT_DROP_AR) < s.drop_prob;
+                    if offline {
+                        // Timeout + reroute doubles the phase cost, but a
+                        // dead endpoint transmits nothing: zero bytes —
+                        // the same pricing the gossip ledger applies to
+                        // pulls from offline partners.
+                        d *= 2.0;
+                        arena.link_lost.set(u);
+                    } else if dropped {
+                        // Transmitted, lost, retransmitted: double bytes.
                         d *= 2.0;
                         arena.link_lost.set(u);
                         bytes_on_wire += 2.0 * chunk;
@@ -914,11 +929,37 @@ mod tests {
     }
 
     #[test]
-    fn allreduce_pays_for_offline_nodes() {
+    fn degenerate_sizes_zero_phase_collectives_and_pure_latency_rounds() {
+        // n = 1: 2(n−1) = 0 phases — zero comm, zero bytes, and the
+        // closed form agrees.
+        let mut sim = NetSim::new(&cost(), Scenario::clean(), 1);
+        let out = sim.simulate_allreduce(0, 1, 1e8);
+        assert_eq!(out.comm, 0.0);
+        assert_eq!(out.bytes_on_wire, 0.0);
+        assert_eq!(cost().allreduce_time(1, 1e8), 0.0);
+
+        // msg_bytes = 0: pure-latency rounds. The clock still charges α
+        // per slot/phase; the bytes ledger is exactly zero.
+        let plan = static_exp_plan(16);
+        let mut sim = NetSim::new(&cost(), Scenario::clean(), 1);
+        let gossip = sim.simulate_round(0, &plan, 0.0);
+        let want = cost().partial_averaging_time(&plan, 0.0);
+        assert!((gossip.comm - want).abs() <= 1e-12 * want, "{} vs {want}", gossip.comm);
+        assert!(gossip.comm > 0.0, "latency term must survive zero payload");
+        assert_eq!(gossip.bytes_on_wire, 0.0);
+        let ar = sim.simulate_allreduce(1, 16, 0.0);
+        assert!((ar.comm - cost().allreduce_time(16, 0.0)).abs() <= 1e-12 * ar.comm);
+        assert_eq!(ar.bytes_on_wire, 0.0);
+    }
+
+    #[test]
+    fn allreduce_pays_time_but_not_bytes_for_offline_nodes() {
+        let n = 16usize;
+        let msg = 1e8;
         let scen = Scenario { dropout: vec![(0, 0, 2)], ..Scenario::clean() };
         let mut sim = NetSim::new(&cost(), scen, 1);
-        let partitioned = sim.simulate_allreduce(0, 16, 1e8);
-        let healed = sim.simulate_allreduce(5, 16, 1e8);
+        let partitioned = sim.simulate_allreduce(0, n, msg);
+        let healed = sim.simulate_allreduce(5, n, msg);
         assert_eq!(partitioned.offline_nodes, 1);
         assert!(partitioned.degraded.is_none(), "allreduce completes exactly, only slower");
         assert!(
@@ -927,10 +968,54 @@ mod tests {
             partitioned.comm,
             healed.comm
         );
-        assert!((healed.comm - cost().allreduce_time(16, 1e8)).abs() <= 1e-11 * healed.comm);
-        assert!(
-            partitioned.bytes_on_wire > healed.bytes_on_wire,
-            "retransmissions must show up in the bytes ledger"
+        assert!((healed.comm - cost().allreduce_time(n, msg)).abs() <= 1e-11 * healed.comm);
+        // Time doubles on the two ring links touching the dead node, but a
+        // dead transmitter is never billed bytes: both links go unpaid, so
+        // the round carries exactly (n−2)/n of the clean payload.
+        let chunk = msg / n as f64;
+        let phases = 2 * (n - 1);
+        assert_eq!(healed.bytes_on_wire, phases as f64 * n as f64 * chunk);
+        assert_eq!(
+            partitioned.bytes_on_wire,
+            phases as f64 * (n - 2) as f64 * chunk,
+            "offline endpoints must not be billed bytes"
+        );
+        assert!(partitioned.bytes_on_wire < healed.bytes_on_wire);
+    }
+
+    #[test]
+    fn allreduce_bills_dropped_chunks_double_and_offline_gossip_pulls_zero() {
+        let n = 16usize;
+        let msg = 1e8;
+        // drop_prob = 1.0: every chunk is transmitted, lost, and
+        // retransmitted — exactly 2× the clean ledger, unlike offline.
+        let scen = Scenario { drop_prob: 1.0, ..Scenario::clean() };
+        let mut sim = NetSim::new(&cost(), scen, 1);
+        let lossy = sim.simulate_allreduce(0, n, msg);
+        let mut clean_sim = NetSim::new(&cost(), Scenario::clean(), 1);
+        let clean = clean_sim.simulate_allreduce(0, n, msg);
+        assert_eq!(lossy.bytes_on_wire, 2.0 * clean.bytes_on_wire);
+
+        // The gossip ledger prices the same offline scenario the same
+        // way: pulls touching the dead node cost zero bytes.
+        let plan = static_exp_plan(n);
+        let scen = Scenario { dropout: vec![(0, 0, 2)], ..Scenario::clean() };
+        let mut sim = NetSim::new(&cost(), scen, 1);
+        let faulted = sim.simulate_round(0, &plan, msg);
+        let healed = sim.simulate_round(5, &plan, msg);
+        let dead_slots: usize = (0..n)
+            .map(|u| {
+                if u == 0 {
+                    plan.partners(u).len()
+                } else {
+                    plan.partners(u).iter().filter(|&&v| v == 0).count()
+                }
+            })
+            .sum();
+        assert!(dead_slots > 0);
+        assert_eq!(
+            faulted.bytes_on_wire,
+            healed.bytes_on_wire - dead_slots as f64 * msg
         );
     }
 

@@ -17,7 +17,8 @@
 
 use std::ops::Range;
 
-use super::{Optimizer, StepScratch};
+use super::{damp_rows, Optimizer, StepScratch};
+use crate::compress::StreamState;
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 use crate::simd::fmaf;
@@ -67,6 +68,50 @@ impl Optimizer for DSgd {
         scratch: &mut StepScratch,
     ) {
         std::mem::swap(&mut self.x.data, &mut scratch.a.data);
+    }
+
+    fn phase_streams(&self, _phase: usize) -> usize {
+        1
+    }
+
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        _stream: usize,
+        rows: Range<usize>,
+        grads: &StackedParams,
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let g = &grads.data;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                let s = i * dim + k;
+                out[off + k] = fmaf(-lr, g[s], x[s]);
+            }
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        _b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let h = &q[0].h.data;
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| h[j * dim + k]);
+        damp_rows(rows, dim, gamma, q[0], a);
     }
 
     fn params(&self) -> &StackedParams {
@@ -142,6 +187,66 @@ impl Optimizer for DmSgd {
     ) {
         std::mem::swap(&mut self.x.data, &mut scratch.a.data);
         std::mem::swap(&mut self.m.data, &mut scratch.b.data);
+    }
+
+    fn phase_streams(&self, _phase: usize) -> usize {
+        // Two stacks gossip each round: x − γm and βm + g.
+        2
+    }
+
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        stream: usize,
+        rows: Range<usize>,
+        grads: &StackedParams,
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let g = &grads.data;
+        let beta = self.beta;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                let s = i * dim + k;
+                out[off + k] = if stream == 0 {
+                    fmaf(-lr, m[s], x[s])
+                } else {
+                    fmaf(beta, m[s], g[s])
+                };
+            }
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let h0 = &q[0].h.data;
+        let h1 = &q[1].h.data;
+        w.mix_fused_rows2(
+            rows.clone(),
+            dim,
+            a,
+            b,
+            |j: usize, k: usize| h0[j * dim + k],
+            |j: usize, k: usize| h1[j * dim + k],
+        );
+        damp_rows(rows.clone(), dim, gamma, q[0], a);
+        damp_rows(rows, dim, gamma, q[1], b);
     }
 
     fn params(&self) -> &StackedParams {
@@ -220,6 +325,63 @@ impl Optimizer for VanillaDmSgd {
     ) {
         std::mem::swap(&mut self.x.data, &mut scratch.a.data);
         std::mem::swap(&mut self.m.data, &mut scratch.b.data);
+    }
+
+    fn phase_streams(&self, _phase: usize) -> usize {
+        // Only the model gossips; momentum is node-local by definition.
+        1
+    }
+
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        _stream: usize,
+        rows: Range<usize>,
+        _grads: &StackedParams,
+        _lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            out[off..off + dim].copy_from_slice(&x[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let m = &self.m.data;
+        let g = &grads.data;
+        let beta = self.beta;
+        let hq = &q[0].h.data;
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| hq[j * dim + k]);
+        damp_rows(rows.clone(), dim, gamma, q[0], a);
+        // The momentum refresh/application stays the dense row-local tail.
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let (mi, gi) = (&m[i * dim..(i + 1) * dim], &g[i * dim..(i + 1) * dim]);
+            let ao = &mut a[off..off + dim];
+            let bo = &mut b[off..off + dim];
+            for k in 0..dim {
+                let mp = fmaf(beta, mi[k], gi[k]);
+                bo[k] = mp;
+                ao[k] = fmaf(-lr, mp, ao[k]);
+            }
+        }
     }
 
     fn params(&self) -> &StackedParams {
@@ -304,6 +466,69 @@ impl Optimizer for QgDmSgd {
     ) {
         std::mem::swap(&mut self.x.data, &mut scratch.a.data);
         std::mem::swap(&mut self.m.data, &mut scratch.b.data);
+    }
+
+    fn phase_streams(&self, _phase: usize) -> usize {
+        1
+    }
+
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        _stream: usize,
+        rows: Range<usize>,
+        grads: &StackedParams,
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let g = &grads.data;
+        let beta = self.beta;
+        let base = rows.start;
+        // The gossiped half-step x_half = x − γ(g + βm).
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                let s = i * dim + k;
+                out[off + k] = fmaf(-lr, fmaf(beta, m[s], g[s]), x[s]);
+            }
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let beta = self.beta;
+        let hq = &q[0].h.data;
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| hq[j * dim + k]);
+        damp_rows(rows.clone(), dim, gamma, q[0], a);
+        // m⁺ from the realized displacement — identical tail to the
+        // dense kernel, now reading the damped-compressed x⁺.
+        let inv_lr = 1.0 / lr.max(1e-12);
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let (mi, xi) = (&m[i * dim..(i + 1) * dim], &x[i * dim..(i + 1) * dim]);
+            let ao = &a[off..off + dim];
+            let bo = &mut b[off..off + dim];
+            for k in 0..dim {
+                bo[k] = fmaf(beta, mi[k], (1.0 - beta) * (xi[k] - ao[k]) * inv_lr);
+            }
+        }
     }
 
     fn params(&self) -> &StackedParams {

@@ -23,7 +23,8 @@
 
 use std::ops::Range;
 
-use super::{Optimizer, StepScratch};
+use super::{damp_rows, Optimizer, StepScratch};
+use crate::compress::StreamState;
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 use crate::simd::fmaf;
@@ -139,6 +140,66 @@ impl Optimizer for D2 {
         self.first = false;
     }
 
+    fn phase_streams(&self, _phase: usize) -> usize {
+        1
+    }
+
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        _stream: usize,
+        rows: Range<usize>,
+        grads: &StackedParams,
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        // The gossiped stack is the bias-corrected pre-mix state.
+        for i in rows {
+            let off = (i - base) * dim;
+            let s = i * dim;
+            for k in 0..dim {
+                out[off + k] = self.pre_at(grads, lr, s + k);
+            }
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        _phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        for i in rows.clone() {
+            let off = (i - base) * dim;
+            b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
+        }
+        let hq = &q[0].h.data;
+        w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| hq[j * dim + k]);
+        damp_rows(rows.clone(), dim, gamma, q[0], a);
+        if self.lazy {
+            // The self half of (I + W)/2 never touches the wire: use the
+            // exact local pre, same as the dense kernel.
+            for i in rows {
+                let off = (i - base) * dim;
+                let out = &mut a[off..off + dim];
+                let s = i * dim;
+                for (k, ov) in out.iter_mut().enumerate() {
+                    *ov = 0.5 * (*ov + self.pre_at(grads, lr, s + k));
+                }
+            }
+        }
+    }
+
     fn params(&self) -> &StackedParams {
         &self.x
     }
@@ -252,6 +313,86 @@ impl Optimizer for GradientTracking {
             std::mem::swap(&mut self.x.data, &mut scratch.a.data);
             std::mem::swap(&mut self.g_prev.data, &mut scratch.b.data);
             self.first = false;
+        }
+    }
+
+    fn phase_streams(&self, _phase: usize) -> usize {
+        // Phase 0 gossips the tracker, phase 1 the model half-step.
+        1
+    }
+
+    fn payload_shard(
+        &self,
+        phase: usize,
+        _stream: usize,
+        rows: Range<usize>,
+        _grads: &StackedParams,
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        if phase == 0 {
+            // The tracker stack y (all zeros on the first step, where the
+            // dense kernel skips the exchange too).
+            for i in rows {
+                let off = (i - base) * dim;
+                out[off..off + dim].copy_from_slice(&self.y.data[i * dim..(i + 1) * dim]);
+            }
+        } else {
+            // x − γ y⁺ (y already refreshed by the phase-0 commit).
+            for i in rows {
+                let off = (i - base) * dim;
+                for k in 0..dim {
+                    let s = i * dim + k;
+                    out[off + k] = fmaf(-lr, self.y.data[s], self.x.data[s]);
+                }
+            }
+        }
+    }
+
+    fn step_shard_q(
+        &self,
+        phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        _lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let base = rows.start;
+        let hq = &q[0].h.data;
+        if phase == 0 {
+            if self.first {
+                // y⁰ = g⁰: no exchange happens on the first step.
+                for i in rows {
+                    let off = (i - base) * dim;
+                    b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
+                }
+                return;
+            }
+            w.mix_fused_rows(rows.clone(), dim, b, |j: usize, k: usize| hq[j * dim + k]);
+            damp_rows(rows.clone(), dim, gamma, q[0], b);
+            for i in rows {
+                let off = (i - base) * dim;
+                let out = &mut b[off..off + dim];
+                let gi = &grads.data[i * dim..(i + 1) * dim];
+                let gpi = &self.g_prev.data[i * dim..(i + 1) * dim];
+                for (k, o) in out.iter_mut().enumerate() {
+                    *o = (*o + gi[k]) - gpi[k];
+                }
+            }
+        } else {
+            for i in rows.clone() {
+                let off = (i - base) * dim;
+                b[off..off + dim].copy_from_slice(&grads.data[i * dim..(i + 1) * dim]);
+            }
+            w.mix_fused_rows(rows.clone(), dim, a, |j: usize, k: usize| hq[j * dim + k]);
+            damp_rows(rows, dim, gamma, q[0], a);
         }
     }
 

@@ -22,6 +22,7 @@
 
 use std::ops::Range;
 
+use crate::compress::{stream_seed, GossipCompression, StreamState};
 use crate::coordinator::mixing::MixingPlan;
 use crate::coordinator::state::StackedParams;
 use crate::engine::{shard_range, Engine, Lanes};
@@ -125,6 +126,31 @@ impl StepScratch {
         let (bn, bdim) = if secondary { (n, dim) } else { (0, 0) };
         if self.b.n != bn || self.b.dim != bdim {
             self.b = StackedParams::zeros(bn, bdim);
+        }
+    }
+}
+
+/// Row-local damped consensus correction shared by the compressed
+/// kernels: after the standard fold `out = Σ_j w_ij h_j`, rewrite each
+/// output row as `out_i = p_i + γ·(out_i − h_i)` — node `i` keeps its
+/// exact local payload as the base and takes a damped step toward the
+/// neighbor reconstructions (CHOCO-Gossip's consensus step). Touches
+/// only row `i`'s slices, so lane invariance is preserved.
+pub(crate) fn damp_rows(
+    rows: Range<usize>,
+    dim: usize,
+    gamma: f32,
+    st: &StreamState,
+    out: &mut [f32],
+) {
+    let base = rows.start;
+    let p = &st.p.data;
+    let h = &st.h.data;
+    for i in rows {
+        let off = (i - base) * dim;
+        let s = i * dim;
+        for k in 0..dim {
+            out[off + k] = crate::simd::fmaf(gamma, out[off + k] - h[s + k], p[s + k]);
         }
     }
 }
@@ -260,6 +286,201 @@ pub trait Optimizer: Send + Sync {
             }
             self.commit(phase, w, grads, lr, scratch);
         }
+    }
+
+    /// Number of wire payload streams phase `phase` exchanges (DmSGD
+    /// gossips two stacks per round, most algorithms one). `0` — the
+    /// default — opts the algorithm out of wire compression: the
+    /// compressed step drivers fall back to the dense kernels (e.g.
+    /// parallel SGD's exact all-reduce stays full precision).
+    fn phase_streams(&self, _phase: usize) -> usize {
+        0
+    }
+
+    /// Stage the raw pre-mix payload of stream `stream` in `phase` for
+    /// rows `rows` into the shard view `out` (row `rows.start` maps to
+    /// offset 0). Row-local by contract, like [`Optimizer::step_shard`].
+    /// Only called when [`Optimizer::phase_streams`] is nonzero.
+    #[allow(clippy::too_many_arguments)]
+    fn payload_shard(
+        &self,
+        _phase: usize,
+        _stream: usize,
+        _rows: Range<usize>,
+        _grads: &StackedParams,
+        _lr: f32,
+        _out: &mut [f32],
+    ) {
+    }
+
+    /// [`Optimizer::step_shard`] variant that mixes from the compressed
+    /// reconstructions in `q` (one [`StreamState`] per stream of this
+    /// phase, in [`Optimizer::payload_shard`] stream order) with the
+    /// damped consensus step `out = p + γ(Wh − h)` instead of computing
+    /// dense payloads on the fly. The default forwards to the dense
+    /// kernel — correct for phases with zero streams, which put nothing
+    /// on the wire.
+    #[allow(clippy::too_many_arguments)]
+    fn step_shard_q(
+        &self,
+        phase: usize,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        q: &[&StreamState],
+        gamma: f32,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        let _ = (q, gamma);
+        self.step_shard(phase, rows, w, grads, lr, a, b);
+    }
+
+    /// Single-shard compressed step: stage payloads, advance the shared
+    /// reconstructions through the compressor, mix from them. Identity
+    /// compressors (and stream-less algorithms) delegate to the plain
+    /// dense kernels, so they stay bitwise identical to
+    /// [`Optimizer::step_with`].
+    fn step_compressed(
+        &mut self,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        scratch: &mut StepScratch,
+        gz: &mut GossipCompression,
+    ) {
+        let phases = self.phases();
+        let total: usize = (0..phases).map(|p| self.phase_streams(p)).sum();
+        if gz.is_identity() || total == 0 {
+            self.step_with(w, grads, lr, scratch);
+            gz.advance();
+            return;
+        }
+        let n = self.params().n;
+        let dim = self.params().dim;
+        scratch.ensure(n, dim, self.needs_secondary());
+        gz.ensure(total, n, dim);
+        self.prepare(w, grads, lr);
+        let gamma = gz.gamma();
+        let mut s0 = 0usize;
+        for phase in 0..phases {
+            let ns = self.phase_streams(phase);
+            {
+                let (comp, iter, seed, streams) = gz.parts_mut();
+                for s in 0..ns {
+                    let sseed = stream_seed(seed, s0 + s);
+                    let StreamState { p, h } = &mut streams[s0 + s];
+                    self.payload_shard(phase, s, 0..n, grads, lr, &mut p.data[..]);
+                    for i in 0..n {
+                        let o = i * dim;
+                        comp.compress_row(
+                            &p.data[o..o + dim],
+                            &mut h.data[o..o + dim],
+                            i,
+                            iter,
+                            sseed,
+                        );
+                    }
+                }
+            }
+            {
+                let q = gz.phase_states(s0, ns);
+                let a = &mut scratch.a.data[..];
+                let b = &mut scratch.b.data[..];
+                self.step_shard_q(phase, 0..n, w, grads, lr, &q, gamma, a, b);
+            }
+            self.commit(phase, w, grads, lr, scratch);
+            s0 += ns;
+        }
+        gz.advance();
+    }
+
+    /// Engine-driven compressed step: the payload staging + compression
+    /// pass and the reconstruction-mixing pass are each broadcast over
+    /// the worker pool. Compression state updates are row-local and the
+    /// mixing kernels keep their fixed fold order, so trajectories are
+    /// bitwise-identical for any lane count — same discipline as
+    /// [`Optimizer::step_engine`].
+    fn step_engine_compressed(
+        &mut self,
+        engine: &Engine,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        scratch: &mut StepScratch,
+        gz: &mut GossipCompression,
+    ) {
+        if engine.lanes() == 1 {
+            self.step_compressed(w, grads, lr, scratch, gz);
+            return;
+        }
+        let phases = self.phases();
+        let total: usize = (0..phases).map(|p| self.phase_streams(p)).sum();
+        if gz.is_identity() || total == 0 {
+            self.step_engine(engine, w, grads, lr, scratch);
+            gz.advance();
+            return;
+        }
+        let n = self.params().n;
+        let dim = self.params().dim;
+        scratch.ensure(n, dim, self.needs_secondary());
+        gz.ensure(total, n, dim);
+        self.prepare(w, grads, lr);
+        let gamma = gz.gamma();
+        let lanes = engine.lanes();
+        let mut s0 = 0usize;
+        for phase in 0..phases {
+            let ns = self.phase_streams(phase);
+            {
+                let (comp, iter, seed, streams) = gz.parts_mut();
+                for s in 0..ns {
+                    let sseed = stream_seed(seed, s0 + s);
+                    let StreamState { p, h } = &mut streams[s0 + s];
+                    let pl = Lanes::split(&mut p.data, n, dim, lanes);
+                    let hl = Lanes::split(&mut h.data, n, dim, lanes);
+                    let this: &Self = self;
+                    engine.run(&|lane| {
+                        let rows = shard_range(n, lanes, lane);
+                        if rows.is_empty() {
+                            return;
+                        }
+                        let mut gp = pl.lock(lane);
+                        let mut gh = hl.lock(lane);
+                        this.payload_shard(phase, s, rows.clone(), grads, lr, &mut gp[..]);
+                        for (r, i) in rows.enumerate() {
+                            let o = r * dim;
+                            comp.compress_row(
+                                &gp[o..o + dim],
+                                &mut gh[o..o + dim],
+                                i,
+                                iter,
+                                sseed,
+                            );
+                        }
+                    });
+                }
+            }
+            {
+                let q = gz.phase_states(s0, ns);
+                let qs: &[&StreamState] = &q;
+                let a = Lanes::split(&mut scratch.a.data, n, dim, lanes);
+                let b = Lanes::split(&mut scratch.b.data, n, dim, lanes);
+                let this: &Self = self;
+                engine.run(&|lane| {
+                    let rows = shard_range(n, lanes, lane);
+                    if rows.is_empty() {
+                        return;
+                    }
+                    let mut ga = a.lock(lane);
+                    let mut gb = b.lock(lane);
+                    this.step_shard_q(phase, rows, w, grads, lr, qs, gamma, &mut ga[..], &mut gb[..]);
+                });
+            }
+            self.commit(phase, w, grads, lr, scratch);
+            s0 += ns;
+        }
+        gz.advance();
     }
 
     /// Current stacked parameters.

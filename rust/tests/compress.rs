@@ -1,0 +1,297 @@
+//! Compressor contract suite (run by name in CI: `cargo test --test
+//! compress`).
+//!
+//! Pins the four load-bearing properties of docs/DESIGN.md §Compression:
+//!
+//! 1. the identity compressor is a bitwise no-op across every algorithm
+//!    and both exponential-graph schedules,
+//! 2. compressed (top-k / int8) trajectories are bitwise invariant to
+//!    the engine lane count,
+//! 3. the error-feedback residual stays bounded along a training
+//!    trajectory on the heterogeneous quadratic,
+//! 4. degraded (netsim-faulted) plans compose with compression safely,
+//!
+//! plus the wire-economy reconciliation: netsim's clean-case
+//! `bytes_on_wire` equals what the closed-form cost model charges for
+//! the same round, for every compressor kind.
+
+use expograph::compress::{CompressorKind, GossipCompression};
+use expograph::coordinator::state::StackedParams;
+use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer};
+use expograph::costmodel::CostModel;
+use expograph::engine::Engine;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::{AlgorithmKind, StepScratch};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+use expograph::util::rng::Pcg;
+
+const ALL_ALGORITHMS: [AlgorithmKind; 7] = [
+    AlgorithmKind::DSgd,
+    AlgorithmKind::DmSgd,
+    AlgorithmKind::VanillaDmSgd,
+    AlgorithmKind::QgDmSgd,
+    AlgorithmKind::ParallelSgd,
+    AlgorithmKind::D2,
+    AlgorithmKind::GradientTracking,
+];
+
+fn grads(n: usize, dim: usize, seed: u64) -> StackedParams {
+    let mut rng = Pcg::seeded(seed);
+    let mut g = StackedParams::zeros(n, dim);
+    for v in g.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    g
+}
+
+/// Schedule for an algorithm: D² needs a symmetric plan, everything
+/// else runs the requested exponential-graph schedule directly.
+fn schedule_for(algo: AlgorithmKind, kind: TopologyKind, n: usize) -> Schedule {
+    if algo == AlgorithmKind::D2 {
+        Schedule::new(TopologyKind::OnePeerHypercube, n, 0)
+    } else {
+        Schedule::new(kind, n, 0)
+    }
+}
+
+#[test]
+fn identity_compression_is_a_bitwise_noop_for_every_algorithm() {
+    let n = 16;
+    let dim = 24;
+    let init: Vec<f32> = (0..dim).map(|j| 0.25 * j as f32 - 1.0).collect();
+    for kind in [TopologyKind::StaticExp, TopologyKind::OnePeerExp] {
+        for algo in ALL_ALGORITHMS {
+            let mut dense = algo.build(n, &init, 0.9);
+            let mut staged = algo.build(n, &init, 0.9);
+            let mut s1 = StepScratch::default();
+            let mut s2 = StepScratch::default();
+            let mut gz = GossipCompression::new(CompressorKind::Identity, 11);
+            let mut sched = schedule_for(algo, kind, n);
+            for step in 0..5u64 {
+                let g = grads(n, dim, 31 + step);
+                let plan = sched.plan_at(step as usize).clone();
+                dense.step_with(&plan, &g, 0.05, &mut s1);
+                staged.step_compressed(&plan, &g, 0.05, &mut s2, &mut gz);
+            }
+            assert_eq!(
+                dense.params().data,
+                staged.params().data,
+                "{}/{kind:?}: identity compression must not move a bit",
+                dense.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn compressed_trajectories_are_lane_count_invariant() {
+    // The whole determinism story: sharding the staging pass and the
+    // reconstruction-mixing pass across lanes must not change a bit.
+    let n = 23; // deliberately not a lane multiple
+    let dim = 17;
+    let init: Vec<f32> = (0..dim).map(|j| 0.1 * j as f32).collect();
+    for comp in [
+        CompressorKind::TopK { frac: 0.25 },
+        CompressorKind::Int8,
+    ] {
+        for algo in [
+            AlgorithmKind::DSgd,
+            AlgorithmKind::DmSgd, // two streams per round
+            AlgorithmKind::GradientTracking, // two phases
+        ] {
+            let mut reference: Option<Vec<f32>> = None;
+            for lanes in [1usize, 2, 3, 7] {
+                let engine = Engine::new(lanes);
+                let mut opt = algo.build(n, &init, 0.9);
+                let mut scratch = StepScratch::default();
+                let mut gz = GossipCompression::new(comp, 5);
+                let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 0);
+                for step in 0..6u64 {
+                    let g = grads(n, dim, 900 + step);
+                    let plan = sched.plan_at(step as usize).clone();
+                    opt.step_engine_compressed(&engine, &plan, &g, 0.05, &mut scratch, &mut gz);
+                }
+                match &reference {
+                    None => reference = Some(opt.params().data.clone()),
+                    Some(want) => assert_eq!(
+                        want,
+                        &opt.params().data,
+                        "{algo}/{comp:?}: lanes={lanes} diverged from lanes=1"
+                    ),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn error_feedback_residual_stays_bounded_on_heterogeneous_quadratic() {
+    // CHOCO-style damped mixing keeps Σ‖p − h‖² bounded along the run;
+    // a mis-tuned γ shows up here as a residual blow-up long before the
+    // params go non-finite.
+    let n = 16;
+    let dim = 32;
+    let provider = QuadraticProvider::random(n, dim, 0.0, 9);
+    let cbar = provider.targets.mean();
+    for comp in [
+        CompressorKind::TopK { frac: 0.125 },
+        CompressorKind::Int8,
+    ] {
+        let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.8);
+        let mut scratch = StepScratch::default();
+        let mut gz = GossipCompression::new(comp, 13);
+        let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 0);
+        let mut grads = StackedParams::zeros(n, dim);
+        let mut losses = vec![0.0f64; n];
+        let engine = Engine::new(1);
+        let mut max_resid = 0.0f64;
+        let err0 = opt.params().mean_sq_error_to(&cbar);
+        for k in 0..400usize {
+            let plan = sched.plan_at(k).clone();
+            engine.compute_grads(&provider, opt.params(), &mut grads, &mut losses, k, 9);
+            let lr = 0.1 * 0.5f32.powi((k / 50) as i32);
+            opt.step_compressed(&plan, &grads, lr, &mut scratch, &mut gz);
+            let r = gz.residual_sq();
+            assert!(r.is_finite(), "{comp:?}: residual went non-finite at iter {k}");
+            max_resid = max_resid.max(r);
+        }
+        // Bounded: same order as the problem scale (‖c_i‖² ≈ n·dim),
+        // nowhere near a blow-up.
+        assert!(
+            max_resid < 1e4,
+            "{comp:?}: max residual {max_resid} suggests divergence"
+        );
+        let err = opt.params().mean_sq_error_to(&cbar);
+        assert!(
+            err < 0.1 * err0,
+            "{comp:?}: compressed DmSGD failed to make progress ({err0} -> {err})"
+        );
+    }
+}
+
+#[test]
+fn degraded_plans_compose_with_compression() {
+    // A netsim-faulted round hands the trainer a renormalized plan;
+    // compressed mixing over it must stay finite, keep making progress,
+    // and stay lane-count-invariant.
+    let n = 16;
+    let dim = 12;
+    let init = vec![0.0f32; dim];
+    let cost = CostModel::paper_default(0.1);
+    for comp in [
+        CompressorKind::TopK { frac: 0.25 },
+        CompressorKind::Int8,
+    ] {
+        let mut reference: Option<Vec<f32>> = None;
+        for lanes in [1usize, 3] {
+            let engine = Engine::new(lanes);
+            let mut sim = NetSim::new(&cost, Scenario::lossy(), 3);
+            let mut opt = AlgorithmKind::DmSgd.build(n, &init, 0.8);
+            let mut scratch = StepScratch::default();
+            let mut gz = GossipCompression::new(comp, 17);
+            let mut sched = Schedule::new(TopologyKind::StaticExp, n, 0);
+            let mut degraded_seen = 0usize;
+            for k in 0..40usize {
+                let g = grads(n, dim, 4000 + k as u64);
+                let plan = sched.plan_at(k).clone();
+                let out = sim.simulate_round(k, &plan, 1e6);
+                let step_plan = out.degraded.as_ref().unwrap_or(&plan);
+                if out.degraded.is_some() {
+                    degraded_seen += 1;
+                }
+                opt.step_engine_compressed(&engine, step_plan, &g, 0.05, &mut scratch, &mut gz);
+                assert!(
+                    opt.params().data.iter().all(|v| v.is_finite()),
+                    "{comp:?}: params went non-finite under a degraded plan"
+                );
+            }
+            assert!(degraded_seen > 0, "lossy scenario must actually degrade rounds");
+            match &reference {
+                None => reference = Some(opt.params().data.clone()),
+                Some(want) => assert_eq!(
+                    want,
+                    &opt.params().data,
+                    "{comp:?}: degraded-plan trajectory not lane-invariant"
+                ),
+            }
+        }
+    }
+}
+
+#[test]
+fn netsim_and_costmodel_charge_identical_clean_bytes() {
+    // The single-pricing-point satellite: for the same round, netsim's
+    // ledger and the trainer's closed-form cost accounting must agree —
+    // for every compressor kind, including the dense baseline.
+    let n = 16;
+    let dim = 24;
+    for comp in [
+        CompressorKind::Identity,
+        CompressorKind::TopK { frac: 0.125 },
+        CompressorKind::Int8,
+    ] {
+        let provider = QuadraticProvider::random(n, dim, 0.0, 21);
+        let cfg = TrainConfig {
+            iters: 12,
+            record_every: 4,
+            seed: 21,
+            cost: Some(CostModel::paper_default(0.1)),
+            compressor: comp,
+            ..Default::default()
+        };
+        let run = |netsim: bool| {
+            let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.8);
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, 0),
+                opt,
+                &provider,
+                cfg.clone(),
+            );
+            if netsim {
+                trainer = trainer.with_netsim(NetSim::new(
+                    &CostModel::paper_default(0.1),
+                    Scenario::clean(),
+                    21,
+                ));
+            }
+            trainer.run()
+        };
+        let simulated = run(true);
+        let closed = run(false);
+        assert_eq!(simulated.round_bytes.len(), closed.round_bytes.len());
+        for (k, (s, c)) in simulated
+            .round_bytes
+            .iter()
+            .zip(closed.round_bytes.iter())
+            .enumerate()
+        {
+            assert_eq!(s, c, "{comp:?}: netsim vs costmodel bytes differ at round {k}");
+        }
+        // A clean netsim never perturbs the trajectory either.
+        assert_eq!(simulated.loss, closed.loss);
+    }
+    // Sanity across kinds: the compressed ledgers are strictly cheaper
+    // than dense, and ordered the way the wire math says.
+    let bytes_of = |comp: CompressorKind| {
+        let provider = QuadraticProvider::random(n, dim, 0.0, 21);
+        let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.8);
+        let mut trainer = Trainer::new(
+            Schedule::new(TopologyKind::OnePeerExp, n, 0),
+            opt,
+            &provider,
+            TrainConfig {
+                iters: 4,
+                cost: Some(CostModel::paper_default(0.1)),
+                compressor: comp,
+                ..Default::default()
+            },
+        );
+        trainer.run().round_bytes.iter().sum::<f64>()
+    };
+    let dense = bytes_of(CompressorKind::Identity);
+    let topk = bytes_of(CompressorKind::TopK { frac: 0.125 });
+    let int8 = bytes_of(CompressorKind::Int8);
+    assert!(topk < dense && int8 < dense);
+    assert!((topk / dense - 0.25).abs() < 1e-9, "top-k eighth ships 2·frac of dense");
+}
