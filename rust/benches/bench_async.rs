@@ -1,0 +1,136 @@
+//! Benchmark: bulk-synchronous vs bounded-staleness execution
+//! (docs/DESIGN.md §Async runtime) on the one-peer exponential schedule
+//! with DmSGD at n ∈ {64, 1024, 4096}.
+//!
+//! Two quantities per mode:
+//!   * real throughput (steps/sec) and engine dispatches per iteration —
+//!     the barrier-crossing count the async wave model is designed to
+//!     keep at two;
+//!   * the simulated clock under a flaky-node scenario — the staleness
+//!     dividend (sync pays a sum of per-round maxima, async a max of
+//!     per-node sums over the gate window).
+//!
+//! Results are emitted to `BENCH_async.json` for the perf trajectory.
+
+use expograph::bench::{bench_config, black_box, quiet, write_json, BenchStats};
+use expograph::coordinator::trainer::{ExecutionMode, QuadraticProvider, TrainConfig, Trainer};
+use expograph::costmodel::CostModel;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::AlgorithmKind;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+/// Time full training runs (the engine is built inside `Trainer::run`,
+/// so a run is the unit both modes can be measured at) and report the
+/// per-iteration medians plus the dispatch count the history carries.
+fn bench_mode(
+    n: usize,
+    dim: usize,
+    iters: usize,
+    execution: ExecutionMode,
+) -> (BenchStats, f64) {
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let mut dispatches = 0u64;
+    let stats = bench_config(
+        &format!("{:<8} n={n} P={dim} ({iters} iters/run)", execution.label()),
+        1,
+        3,
+        64,
+        0.25,
+        &mut || {
+            let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, 1),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters,
+                    record_every: iters.max(1),
+                    seed: 7,
+                    execution,
+                    ..Default::default()
+                },
+            );
+            let hist = trainer.run();
+            dispatches = hist.dispatches;
+            black_box(hist.loss.last().copied());
+        },
+    );
+    (stats, dispatches as f64 / iters as f64)
+}
+
+/// Simulated wall-clock of one run under a timing scenario (netsim
+/// attached as the event oracle).
+fn simulated_clock(n: usize, iters: usize, scenario: Scenario, execution: ExecutionMode) -> f64 {
+    let dim = 64;
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let cost = CostModel::paper_default(0.01);
+    let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(TopologyKind::OnePeerExp, n, 1),
+        opt,
+        &provider,
+        TrainConfig {
+            iters,
+            record_every: iters.max(1),
+            seed: 7,
+            execution,
+            ..Default::default()
+        },
+    )
+    .with_netsim(NetSim::new(&cost, scenario, 7));
+    trainer.run().sim_time
+}
+
+fn main() {
+    let q = quiet();
+    println!("== bench_async: sync vs bounded-staleness executor, one-peer exp ==\n");
+
+    let dim = 256;
+    let iters = 32;
+    let mut rows_json = Vec::new();
+    for n in [64usize, 1024, 4096] {
+        let (sync, sync_dpi) = bench_mode(n, dim, iters, ExecutionMode::Sync);
+        let (asyn, asyn_dpi) = bench_mode(n, dim, iters, ExecutionMode::Async { tau: 2 });
+        println!("{}", sync.report());
+        println!("{}", asyn.report());
+        let sync_sps = iters as f64 / sync.median.max(f64::MIN_POSITIVE);
+        let asyn_sps = iters as f64 / asyn.median.max(f64::MIN_POSITIVE);
+        println!(
+            "  -> n={n}: sync {sync_sps:.1} steps/s @ {sync_dpi:.2} dispatches/iter, \
+             async:2 {asyn_sps:.1} steps/s @ {asyn_dpi:.2} dispatches/iter\n"
+        );
+        rows_json.push(format!(
+            "    {{\"n\": {n}, \"sync_steps_per_sec\": {sync_sps:.4}, \
+             \"async_steps_per_sec\": {asyn_sps:.4}, \
+             \"sync_dispatches_per_iter\": {sync_dpi:.4}, \
+             \"async_dispatches_per_iter\": {asyn_dpi:.4}}}"
+        ));
+    }
+
+    // The simulated-clock dividend under transient slowdowns: flaky
+    // nodes stall every synchronous round but only cost async partners a
+    // stale read.
+    let clock_iters = if q { 100 } else { 400 };
+    let n = 64;
+    let sync_t = simulated_clock(n, clock_iters, Scenario::flaky(), ExecutionMode::Sync);
+    let a1_t = simulated_clock(n, clock_iters, Scenario::flaky(), ExecutionMode::Async { tau: 1 });
+    let a2_t = simulated_clock(n, clock_iters, Scenario::flaky(), ExecutionMode::Async { tau: 2 });
+    println!("simulated clock, flaky scenario, n={n}, {clock_iters} iters:");
+    println!("  sync    {sync_t:.3}s");
+    println!("  async:1 {a1_t:.3}s  ({:.2}x)", sync_t / a1_t.max(f64::MIN_POSITIVE));
+    println!("  async:2 {a2_t:.3}s  ({:.2}x)", sync_t / a2_t.max(f64::MIN_POSITIVE));
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_async\",\n  \
+         \"comparison\": \"sync_vs_bounded_staleness\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"algorithm\": \"dmsgd\",\n  \
+         \"dim\": {dim},\n  \"tau\": 2,\n  \
+         \"flaky_clock\": {{\"n\": {n}, \"iters\": {clock_iters}, \
+         \"sync_sim_time\": {sync_t:.6}, \"async1_sim_time\": {a1_t:.6}, \
+         \"async2_sim_time\": {a2_t:.6}}},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows_json.join(",\n")
+    );
+    write_json("BENCH_async.json", &json);
+}

@@ -9,7 +9,7 @@
 //! are emitted to `BENCH_step.json` for the perf trajectory.
 
 use expograph::bench::{bench_config, black_box, quiet, write_json, BenchStats};
-use expograph::coordinator::trainer::{GradProvider, QuadraticProvider};
+use expograph::coordinator::trainer::{GradProvider, QuadraticProvider, TrainConfig, Trainer};
 use expograph::coordinator::StackedParams;
 use expograph::costmodel::CostModel;
 use expograph::data::classify::{generate, ClassifyConfig};
@@ -123,6 +123,46 @@ fn bench_engine(n: usize, dim: usize, threads: usize, provider: &QuadraticProvid
     )
 }
 
+/// Full trainer runs probing consensus every iteration, with the probe
+/// either fused into the next gradient dispatch (`cfg.fused_probe`, the
+/// default: 2 barrier crossings per record round) or standalone (the
+/// pre-fusion protocol: 3). Values are bitwise identical either way —
+/// this measures the crossing saved.
+fn bench_probe(n: usize, dim: usize, fused: bool) -> (BenchStats, f64) {
+    let iters = 32usize;
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let mut dispatches = 0u64;
+    let stats = bench_config(
+        &format!(
+            "{} consensus probe  n={n} P={dim} ({iters} iters/run)",
+            if fused { "fused     " } else { "standalone" }
+        ),
+        1,
+        3,
+        64,
+        0.25,
+        &mut || {
+            let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, 1),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters,
+                    record_every: 1,
+                    seed: 7,
+                    fused_probe: fused,
+                    ..Default::default()
+                },
+            );
+            let hist = trainer.run();
+            dispatches = hist.dispatches;
+            black_box(hist.loss.last().copied());
+        },
+    );
+    (stats, dispatches as f64 / iters as f64)
+}
+
 fn main() {
     let q = quiet();
     println!("== bench_step: full training iteration (grad + mix) ==\n");
@@ -179,10 +219,34 @@ fn main() {
             legacy.median, engine.median, speedup
         ));
     }
+    // --- fused vs standalone consensus probe ----------------------------
+    // Every-iteration recording with the probe fused into the next
+    // gradient dispatch vs fired as its own barrier crossing.
+    println!("\nfused vs standalone consensus probe (record_every=1), one-peer exp:");
+    let mut probe_rows = Vec::new();
+    for n in [64usize, 1024] {
+        let (standalone, s_dpi) = bench_probe(n, dim, false);
+        let (fused, f_dpi) = bench_probe(n, dim, true);
+        println!("{}", standalone.report());
+        println!("{}", fused.report());
+        let speedup = standalone.median / fused.median.max(f64::MIN_POSITIVE);
+        println!(
+            "  -> n={n}: {s_dpi:.2} -> {f_dpi:.2} dispatches/iter, {speedup:.2}x\n"
+        );
+        probe_rows.push(format!(
+            "    {{\"n\": {n}, \"standalone_s_per_run\": {:.9}, \"fused_s_per_run\": {:.9}, \
+             \"standalone_dispatches_per_iter\": {s_dpi:.4}, \
+             \"fused_dispatches_per_iter\": {f_dpi:.4}, \"speedup\": {speedup:.4}}}",
+            standalone.median, fused.median
+        ));
+    }
+
     let json = format!(
         "{{\n  \"bench\": \"bench_step\",\n  \"comparison\": \"engine_vs_legacy_spawn_per_iter\",\n  \
          \"topology\": \"one_peer_exp\",\n  \"algorithm\": \"dmsgd\",\n  \"dim\": {dim},\n  \
+         \"fused_probe\": [\n{}\n  ],\n  \
          \"results\": [\n{}\n  ]\n}}\n",
+        probe_rows.join(",\n"),
         rows_json.join(",\n")
     );
     write_json("BENCH_step.json", &json);

@@ -38,6 +38,7 @@ fn run_cell(cell: usize, lane_cap: usize) -> Vec<Record> {
             seed: cell as u64,
             msg_bytes: None,
             cost: None,
+            ..Default::default()
         },
     );
     let hist = trainer.run();

@@ -18,6 +18,7 @@
 //! ```
 
 use crate::compress::CompressorKind;
+use crate::coordinator::ExecutionMode;
 use crate::optim::AlgorithmKind;
 use crate::topology::{family, Topology, TopologyKind};
 use crate::util::json::Json;
@@ -49,6 +50,23 @@ impl Default for SweepConfig {
     fn default() -> Self {
         SweepConfig { jobs: 0, cache: true }
     }
+}
+
+/// Largest accepted staleness bound: the executor keeps `τ + 2` payload
+/// versions per node, so an absurd τ is a memory bug, not a knob.
+pub const MAX_STALENESS: usize = 4096;
+
+/// Parse an execution mode (`sync` or `async:<τ>`, τ ≤
+/// [`MAX_STALENESS`]) with a config-surface error message.
+pub fn parse_execution(s: &str) -> Result<ExecutionMode> {
+    let mode = ExecutionMode::parse(s)
+        .ok_or_else(|| anyhow!("unknown execution mode {s} (sync | async:<staleness>)"))?;
+    if let ExecutionMode::Async { tau } = mode {
+        if tau > MAX_STALENESS {
+            bail!("async staleness {tau} exceeds the limit ({MAX_STALENESS})");
+        }
+    }
+    Ok(mode)
 }
 
 /// Parse an on/off-style boolean (`on|off|true|false|1|0`).
@@ -94,6 +112,10 @@ pub struct RunConfig {
     pub heterogeneous: bool,
     pub warmup_allreduce: bool,
     pub seed: u64,
+    /// Execution mode: `"sync"` (bulk-synchronous rounds) or
+    /// `"async:<τ>"` (bounded-staleness gossip — docs/DESIGN.md §Async
+    /// runtime). `async:0` is bitwise identical to `sync`.
+    pub execution: ExecutionMode,
 }
 
 impl Default for RunConfig {
@@ -109,6 +131,7 @@ impl Default for RunConfig {
             heterogeneous: false,
             warmup_allreduce: true,
             seed: 1,
+            execution: ExecutionMode::Sync,
         }
     }
 }
@@ -138,6 +161,10 @@ impl RunConfig {
                     let s = val.as_str().context("algorithm")?;
                     cfg.algorithm =
                         AlgorithmKind::parse(s).ok_or_else(|| anyhow!("unknown algorithm {s}"))?;
+                }
+                "execution" => {
+                    let s = val.as_str().context("execution")?;
+                    cfg.execution = parse_execution(s)?;
                 }
                 other => bail!("unknown config key: {other}"),
             }
@@ -181,6 +208,7 @@ impl RunConfig {
                 self.algorithm = AlgorithmKind::parse(value)
                     .ok_or_else(|| anyhow!("unknown algorithm {value}"))?
             }
+            "execution" => self.execution = parse_execution(value)?,
             other => bail!("unknown config key: {other}"),
         }
         Ok(())
@@ -296,7 +324,9 @@ impl NetSimRunConfig {
                     .map(|s| {
                         let s = s.trim();
                         crate::netsim::Scenario::parse(s)
-                            .ok_or_else(|| anyhow!("unknown scenario {s} (clean|straggler|lossy)"))
+                            .ok_or_else(|| {
+                                anyhow!("unknown scenario {s} (clean|straggler|flaky|lossy)")
+                            })
                     })
                     .collect::<Result<Vec<_>>>()?;
                 if self.scenarios.is_empty() {
@@ -504,6 +534,43 @@ mod tests {
         assert_eq!(cfg.topology, TopologyKind::Ring);
         assert_eq!(cfg.lr, 0.25);
         assert!(cfg.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn execution_mode_round_trips_through_config_surfaces() {
+        // JSON key.
+        let doc = Json::parse(r#"{"nodes": 8, "execution": "async:2"}"#).unwrap();
+        let cfg = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.execution, ExecutionMode::Async { tau: 2 });
+        // Absent key keeps the bulk-synchronous default.
+        assert_eq!(RunConfig::default().execution, ExecutionMode::Sync);
+        // CLI override, including the label() round trip.
+        let mut cfg = RunConfig::default();
+        cfg.set("execution", "async:0").unwrap();
+        assert_eq!(cfg.execution, ExecutionMode::Async { tau: 0 });
+        cfg.set("execution", &ExecutionMode::Async { tau: 3 }.label()).unwrap();
+        assert_eq!(cfg.execution, ExecutionMode::Async { tau: 3 });
+        cfg.set("execution", "sync").unwrap();
+        assert_eq!(cfg.execution, ExecutionMode::Sync);
+        // Rejections: garbage, missing τ, and an absurd τ.
+        assert!(cfg.set("execution", "bulk").is_err());
+        assert!(cfg.set("execution", "async").is_err());
+        assert!(cfg.set("execution", "async:9999999").is_err());
+        let err =
+            RunConfig::from_json(&Json::parse(r#"{"execution": "async:5000"}"#).unwrap())
+                .unwrap_err()
+                .to_string();
+        assert!(err.contains("staleness"), "{err}");
+    }
+
+    #[test]
+    fn netsim_scenarios_accept_flaky() {
+        use crate::netsim::Scenario;
+        let mut cfg = NetSimRunConfig::default();
+        cfg.set("scenarios", "clean,flaky").unwrap();
+        assert_eq!(cfg.scenarios, vec![Scenario::clean(), Scenario::flaky()]);
+        let err = cfg.set("scenarios", "sunny").unwrap_err().to_string();
+        assert!(err.contains("flaky"), "error must list the flaky preset: {err}");
     }
 
     #[test]

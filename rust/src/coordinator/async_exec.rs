@@ -1,0 +1,368 @@
+//! Bounded-staleness asynchronous gossip executor
+//! (docs/DESIGN.md §Async runtime).
+//!
+//! `execution = async:<τ>` replaces the bulk-synchronous round with a
+//! **serial-wave** event model: every node still executes step `k`
+//! during wave `k`, but each node advances on its own simulated clock —
+//! netsim's deterministic hash-derived compute/link times decide *when*
+//! a node's wave-`k` payload commits, and a node gossip-pulls whichever
+//! committed payload **version** of each partner is ready when its own
+//! clock gets there, at most `τ` iterations behind. Asynchrony
+//! therefore lives in two places only:
+//!
+//! * the **clock** — a node never waits for the global slowest node,
+//!   only for version `k − τ` of its partners (the staleness floor) and
+//!   for the fleet to have released wave `k − τ − 1` (the progress
+//!   gate); `sim_time` is the release envelope, not a sum of global
+//!   barriers, which is where straggler resilience shows up;
+//! * the **resolved versions** — the per-`(reader, partner)` payload
+//!   version fed to the mixing fold.
+//!
+//! Numerically, a wave is two engine dispatches — (A) gradients fused
+//! with payload staging into a `τ + 2`-slot version ring, (B) the
+//! pull-based mix [`Optimizer::step_shard_async`] — plus the ordinary
+//! serial `commit`. All kernels are row-local with fixed fold order and
+//! every timing/resolution decision is a pure function of
+//! `(seed, iter, endpoints)`, so async runs are reproducible and
+//! bitwise lane-count-invariant, like every other subsystem.
+//!
+//! At `τ = 0` every resolution is forced fresh and the round is priced
+//! by the exact synchronous code (netsim `simulate_round` or the
+//! closed-form cost model), so `async:0` is **bitwise identical** to
+//! `execution = sync` — pinned by `tests/engine_determinism.rs`.
+//!
+//! Scope: single-phase algorithms with an async gossip form
+//! ([`Optimizer::async_streams`] > 0) and timing-only (faultless)
+//! scenarios; anything else is rejected with a clear panic. With τ ≥ 1
+//! an attached netsim is used as the timing oracle only — its round
+//! counters do not advance.
+
+use super::state::StackedParams;
+use super::trainer::{Trainer, TrainingHistory};
+use crate::compress::{stream_seed, Compressor};
+use crate::costmodel::CostModel;
+use crate::engine::{auto_lanes, shard_range, Engine, Lanes};
+use crate::netsim::{NetSim, Scenario};
+use crate::optim::{Optimizer, StepScratch};
+
+/// Borrow ring slot `cur` mutably and slot `prev` immutably out of one
+/// stream's version ring (slot-major, `nd` elements per slot).
+fn split_ring_slot(ring: &mut [f32], cur: usize, prev: usize, nd: usize) -> (&mut [f32], &[f32]) {
+    assert_ne!(cur, prev, "version ring needs at least 2 slots");
+    if prev < cur {
+        let (head, tail) = ring.split_at_mut(cur * nd);
+        (&mut tail[..nd], &head[prev * nd..(prev + 1) * nd])
+    } else {
+        let (head, tail) = ring.split_at_mut(prev * nd);
+        (&mut head[cur * nd..(cur + 1) * nd], &tail[..nd])
+    }
+}
+
+/// Drive one full training run in bounded-staleness mode. Called by
+/// [`Trainer::run_with`] when `cfg.execution = Async { tau }`.
+pub(crate) fn run_async(
+    tr: &mut Trainer<'_>,
+    tau: usize,
+    probe: &mut dyn FnMut(usize, &StackedParams),
+) -> TrainingHistory {
+    let Trainer { topology, optimizer, provider, cfg, netsim } = tr;
+    let provider = *provider;
+    let n = provider.nodes();
+    let dim = provider.dim();
+    assert_eq!(optimizer.params().n, n, "optimizer/provider node mismatch");
+    assert_eq!(optimizer.params().dim, dim, "optimizer/provider dim mismatch");
+    assert!(tau <= 1 << 16, "execution=async:{tau}: staleness bound is unreasonably large");
+
+    let streams = optimizer.async_streams();
+    assert!(
+        streams > 0,
+        "execution=async:{tau}: algorithm '{}' has no async gossip form; use execution=sync",
+        optimizer.name()
+    );
+    assert_eq!(
+        optimizer.phases(),
+        1,
+        "async execution supports single-phase algorithms only"
+    );
+    if let Some(sim) = netsim.as_ref() {
+        assert!(
+            sim.scenario.is_faultless(),
+            "execution=async:{tau}: scenario '{}' drops messages or partitions nodes; \
+             the bounded-staleness executor models timing faults only",
+            sim.scenario.name
+        );
+    }
+
+    let msg_bytes = cfg.msg_bytes.unwrap_or(4.0 * dim as f64);
+    let gossip_bytes = cfg.compressor.wire_bytes(msg_bytes);
+    let comp: Option<Box<dyn Compressor>> =
+        if cfg.compressor.is_identity() { None } else { Some(cfg.compressor.build()) };
+    let gamma = comp.as_ref().map(|c| c.gamma()).unwrap_or(1.0);
+    let sseeds: Vec<u64> = (0..streams).map(|s| stream_seed(cfg.seed, s)).collect();
+
+    // Same engine sizing as the synchronous path.
+    let lanes = cfg.lanes.unwrap_or_else(|| {
+        if cfg.parallel_grads {
+            std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1)
+        } else {
+            auto_lanes(n, n * dim)
+        }
+    });
+    let engine = Engine::new(lanes.clamp(1, n.max(1)));
+    let lanes_n = engine.lanes();
+
+    if cfg.warmup_allreduce {
+        optimizer.params_mut().allreduce();
+    }
+
+    // Timing oracle for τ ≥ 1: the attached netsim when present (used
+    // read-only — counters do not advance), else an internal clean-
+    // scenario simulator over `cfg.cost` (or the paper default, for
+    // ordering only — times are emitted iff a netsim or cost model was
+    // actually supplied, matching the sync path's contract).
+    let owned_oracle: Option<NetSim> = if tau > 0 && netsim.is_none() {
+        let cm = cfg.cost.unwrap_or_else(|| CostModel::paper_default(0.01));
+        Some(NetSim::new(&cm, Scenario::clean(), cfg.seed))
+    } else {
+        None
+    };
+    let emit_times = netsim.is_some() || cfg.cost.is_some();
+
+    // The payload version ring: `S = τ + 2` slots per stream, slot-major
+    // `[slot][node][dim]`, slot = version mod S. Wave k reads versions
+    // in `[k − τ, k]` (τ + 1 slots) while overwriting slot `k mod S`,
+    // which leaves exactly one slot of headroom — no wave can clobber a
+    // version still in another node's staleness window. Rings start at
+    // zero, which is also the error-feedback reconstruction's initial
+    // state, so the compressed chain matches sync's from wave 0.
+    let s_slots = tau + 2;
+    let nd = n * dim;
+    let mut rings: Vec<Vec<f32>> = (0..streams).map(|_| vec![0.0f32; s_slots * nd]).collect();
+    // Raw (pre-compression) payloads of the current wave — the damped
+    // consensus step's base. Unused (empty) under identity compression.
+    let praw_len = if comp.is_some() { nd } else { 0 };
+    let mut praw: Vec<Vec<f32>> = (0..streams).map(|_| vec![0.0f32; praw_len]).collect();
+
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut losses = vec![0.0f64; n];
+    let mut scratch = StepScratch::default();
+    let mut history = TrainingHistory::default();
+
+    // Event-clock state (τ ≥ 1 only).
+    let mut clock = vec![0.0f64; n];
+    let mut start_of = vec![0.0f64; n];
+    let mut t_comp = vec![0.0f64; n];
+    let mut ready = vec![0.0f64; n * s_slots];
+    let mut release_hist: Vec<f64> = Vec::with_capacity(cfg.iters);
+    // Per-wave resolved version slots, CSR-aligned with
+    // `plan.partners(u)` (ascending — the mix closure binary-searches).
+    let mut res_off = vec![0usize; n + 1];
+    let mut res_slot: Vec<u32> = Vec::new();
+
+    for k in 0..cfg.iters {
+        let lr = cfg.lr.at(k);
+        let plan = topology.plan_at(k);
+        let cur = k % s_slots;
+        let prev = (cur + s_slots - 1) % s_slots;
+
+        // ---- Dispatch A: gradients fused with payload staging. Each
+        // lane computes its gradient rows, stages its raw payload rows
+        // from them, and commits its rows of ring slot `k mod S` (for
+        // compressed gossip: copy the node's previous reconstruction,
+        // then advance it through the compressor — the same per-row
+        // error-feedback chain as the sync path).
+        {
+            let opt: &dyn Optimizer = &**optimizer;
+            let g = grads.lane_shards(lanes_n);
+            let l = Lanes::split(&mut losses, n, 1, lanes_n);
+            let mut cur_lanes = Vec::with_capacity(streams);
+            let mut prev_views: Vec<&[f32]> = Vec::with_capacity(streams);
+            for r in rings.iter_mut() {
+                let (c, p) = split_ring_slot(r, cur, prev, nd);
+                cur_lanes.push(Lanes::split(c, n, dim, lanes_n));
+                prev_views.push(p);
+            }
+            let praw_lanes: Vec<Lanes<'_, f32>> =
+                praw.iter_mut().map(|p| Lanes::split(p, n, dim, lanes_n)).collect();
+            let comp_ref = comp.as_deref();
+            let seed = cfg.seed;
+            engine.run(&|lane| {
+                let rows = shard_range(n, lanes_n, lane);
+                if rows.is_empty() {
+                    return;
+                }
+                let mut gs = g.lock(lane);
+                let mut ls = l.lock(lane);
+                let params = opt.params();
+                for (off, i) in rows.clone().enumerate() {
+                    let out = &mut gs[off * dim..(off + 1) * dim];
+                    ls[off] = provider.grad(i, params.row(i), k, seed, out) as f64;
+                }
+                for s in 0..streams {
+                    let mut cs = cur_lanes[s].lock(lane);
+                    match comp_ref {
+                        None => {
+                            // Identity: the staged payload *is* the
+                            // committed version.
+                            opt.stage_shard_async(s, rows.clone(), &gs[..], lr, &mut cs[..]);
+                        }
+                        Some(c) => {
+                            let mut ps = praw_lanes[s].lock(lane);
+                            opt.stage_shard_async(s, rows.clone(), &gs[..], lr, &mut ps[..]);
+                            let pv = prev_views[s];
+                            for (off, i) in rows.clone().enumerate() {
+                                let o = off * dim;
+                                cs[o..o + dim].copy_from_slice(&pv[i * dim..(i + 1) * dim]);
+                                c.compress_row(&ps[o..o + dim], &mut cs[o..o + dim], i, k, sseeds[s]);
+                            }
+                        }
+                    }
+                }
+            });
+        }
+        history.loss.push(losses.iter().sum::<f64>() / n as f64);
+
+        // ---- Serial: event clock + per-(reader, partner) version
+        // resolution, and round pricing.
+        res_slot.clear();
+        if tau == 0 {
+            // Degenerate staleness: every read is fresh. Pricing is the
+            // exact synchronous code, so async:0 == sync bit for bit.
+            for u in 0..n {
+                for _ in plan.partners(u) {
+                    res_slot.push(cur as u32);
+                }
+                res_off[u + 1] = res_slot.len();
+            }
+            if let Some(sim) = netsim.as_mut() {
+                let outcome = sim.simulate_round(k, plan, gossip_bytes);
+                let overlap = sim.cost.overlap;
+                let t = outcome.iteration_time(overlap);
+                history.sim_time += t;
+                history.round_times.push(t);
+                history.round_bytes.push(outcome.bytes_on_wire);
+            } else if let Some(cost) = &cfg.cost {
+                let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
+                let comm = cost.partial_averaging_time(plan, gossip_bytes);
+                let bytes = slots as f64 * gossip_bytes;
+                let hidden = cost.compute.min(comm) * cost.overlap;
+                let t = cost.compute + comm - hidden;
+                history.sim_time += t;
+                history.round_times.push(t);
+                history.round_bytes.push(bytes);
+            }
+        } else {
+            let oracle: &NetSim =
+                netsim.as_ref().or(owned_oracle.as_ref()).expect("async timing oracle");
+            let overlap = oracle.cost.overlap;
+            // Progress gate: wave k may start only once every node has
+            // finished wave k − τ − 1 (bounded staleness is two-sided —
+            // no node runs ahead of the floor it must serve).
+            let gate = if k > tau { release_hist[k - tau - 1] } else { 0.0 };
+            for u in 0..n {
+                let start = clock[u].max(gate);
+                start_of[u] = start;
+                let tc = start + oracle.compute_time(k, u, n);
+                t_comp[u] = tc;
+                ready[u * s_slots + cur] = tc;
+            }
+            let lo = k.saturating_sub(tau);
+            let prev_release = release_hist.last().copied().unwrap_or(0.0);
+            let mut release = prev_release;
+            for u in 0..n {
+                let mut t = t_comp[u];
+                for &v in plan.partners(u) {
+                    let v = v as usize;
+                    // Newest version in [k − τ, k] already committed by
+                    // v when u's chain clock gets there; if even the
+                    // floor is not ready, u blocks until it is.
+                    let mut chosen = usize::MAX;
+                    let mut j = k;
+                    loop {
+                        if ready[v * s_slots + j % s_slots] <= t {
+                            chosen = j;
+                            break;
+                        }
+                        if j == lo {
+                            break;
+                        }
+                        j -= 1;
+                    }
+                    let slot_start = if chosen == usize::MAX {
+                        chosen = lo;
+                        t.max(ready[v * s_slots + lo % s_slots])
+                    } else {
+                        t
+                    };
+                    t = slot_start + oracle.slot_time(k, u, v, gossip_bytes);
+                    res_slot.push((chosen % s_slots) as u32);
+                }
+                res_off[u + 1] = res_slot.len();
+                let comp_t = t_comp[u] - start_of[u];
+                let comm_t = t - t_comp[u];
+                let hidden = comp_t.min(comm_t) * overlap;
+                let finish = start_of[u] + comp_t + comm_t - hidden;
+                clock[u] = finish;
+                release = release.max(finish);
+            }
+            release_hist.push(release);
+            if emit_times {
+                let rt = release - prev_release;
+                history.sim_time += rt;
+                history.round_times.push(rt);
+                let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
+                history.round_bytes.push(slots as f64 * gossip_bytes);
+            }
+        }
+
+        // ---- Dispatch B: the pull-based mix. Every payload element is
+        // read through the resolved-version closure; rows land in the
+        // ordinary step scratch and the ordinary serial commit adopts
+        // them.
+        scratch.ensure(n, dim, optimizer.needs_secondary());
+        optimizer.prepare(plan, &grads, lr);
+        {
+            let opt: &dyn Optimizer = &**optimizer;
+            let ring_views: Vec<&[f32]> = rings.iter().map(|r| &r[..]).collect();
+            let praw_views: Vec<&[f32]> = praw.iter().map(|p| &p[..]).collect();
+            let res_off_ref = &res_off;
+            let res_slot_ref = &res_slot;
+            let src = |i: usize, s: usize, j: usize, e: usize| -> f32 {
+                let slot = if j == i {
+                    cur
+                } else {
+                    let ps = plan.partners(i);
+                    let pos = ps.partition_point(|&c| (c as usize) < j);
+                    debug_assert!(
+                        pos < ps.len() && ps[pos] as usize == j,
+                        "mix column {j} not among partners of {i}"
+                    );
+                    res_slot_ref[res_off_ref[i] + pos] as usize
+                };
+                ring_views[s][slot * nd + j * dim + e]
+            };
+            let damp_opt: Option<(f32, &[&[f32]])> =
+                if comp.is_some() { Some((gamma, &praw_views[..])) } else { None };
+            let a = Lanes::split(&mut scratch.a.data, n, dim, lanes_n);
+            let b = Lanes::split(&mut scratch.b.data, n, dim, lanes_n);
+            engine.run(&|lane| {
+                let rows = shard_range(n, lanes_n, lane);
+                if rows.is_empty() {
+                    return;
+                }
+                let mut ga = a.lock(lane);
+                let mut gb = b.lock(lane);
+                opt.step_shard_async(rows, plan, &grads, lr, &src, damp_opt, &mut ga[..], &mut gb[..]);
+            });
+        }
+        optimizer.commit(0, plan, &grads, lr, &mut scratch);
+
+        if k % cfg.record_every == 0 || k + 1 == cfg.iters {
+            history.consensus.push((k, engine.consensus_distance(optimizer.params())));
+            history.lr.push((k, lr));
+            probe(k, optimizer.params());
+        }
+    }
+    history.dispatches = engine.dispatches();
+    history
+}

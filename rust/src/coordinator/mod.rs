@@ -8,6 +8,7 @@
 //! pure-Rust models ([`crate::models`]) or the PJRT runtime
 //! ([`crate::runtime`]); the coordinator is agnostic.
 
+pub mod async_exec;
 pub mod mixing;
 pub mod schedule_lr;
 pub mod state;
@@ -17,5 +18,5 @@ pub mod transient;
 pub use mixing::MixingPlan;
 pub use schedule_lr::LrSchedule;
 pub use state::StackedParams;
-pub use trainer::{GradProvider, TrainConfig, Trainer, TrainingHistory};
+pub use trainer::{ExecutionMode, GradProvider, TrainConfig, Trainer, TrainingHistory};
 pub use transient::transient_iterations;

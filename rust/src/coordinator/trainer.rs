@@ -42,6 +42,48 @@ pub trait GradProvider: Sync {
     fn grad(&self, node: usize, params: &[f32], iter: usize, seed: u64, out: &mut [f32]) -> f32;
 }
 
+/// How the fleet advances through iterations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum ExecutionMode {
+    /// Bulk-synchronous: every node waits on the slowest each round.
+    #[default]
+    Sync,
+    /// Bounded-staleness gossip (docs/DESIGN.md §Async runtime): nodes
+    /// advance on local clocks and pull whichever committed payload
+    /// version of each partner is ready, at most `tau` iterations
+    /// behind. `tau = 0` forces fresh payloads everywhere and is
+    /// bitwise-identical to [`ExecutionMode::Sync`] (pinned by
+    /// `tests/engine_determinism.rs`).
+    Async { tau: usize },
+}
+
+impl ExecutionMode {
+    /// Parse `"sync"` / `"async:<tau>"` (the config/CLI surface).
+    pub fn parse(s: &str) -> Option<ExecutionMode> {
+        if s == "sync" {
+            return Some(ExecutionMode::Sync);
+        }
+        if let Some(t) = s.strip_prefix("async:") {
+            return t.parse::<usize>().ok().map(|tau| ExecutionMode::Async { tau });
+        }
+        None
+    }
+
+    /// Round-trippable name (`parse(label()) == self`).
+    pub fn label(&self) -> String {
+        match self {
+            ExecutionMode::Sync => "sync".into(),
+            ExecutionMode::Async { tau } => format!("async:{tau}"),
+        }
+    }
+}
+
+impl std::fmt::Display for ExecutionMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
 /// Trainer configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -72,6 +114,16 @@ pub struct TrainConfig {
     /// all-reduce rounds stay dense (the parallel baseline does not
     /// compress). `Identity` is byte-for-byte the pre-compression path.
     pub compressor: CompressorKind,
+    /// Execution mode: bulk-synchronous (default) or bounded-staleness
+    /// async gossip (docs/DESIGN.md §Async runtime).
+    pub execution: ExecutionMode,
+    /// Fold the consensus probe of record iterations into the *next*
+    /// iteration's gradient dispatch ([`Engine::compute_grads_probed`]),
+    /// cutting a record round's barrier crossings from 3 to 2. The
+    /// parameters a deferred probe reads are untouched between the two
+    /// points, so every recorded value is bitwise identical; `false`
+    /// keeps the standalone probe dispatch.
+    pub fused_probe: bool,
 }
 
 impl Default for TrainConfig {
@@ -87,6 +139,8 @@ impl Default for TrainConfig {
             msg_bytes: None,
             cost: None,
             compressor: CompressorKind::Identity,
+            execution: ExecutionMode::Sync,
+            fused_probe: true,
         }
     }
 }
@@ -113,6 +167,18 @@ pub struct TrainingHistory {
     pub round_bytes: Vec<f64>,
     /// Learning rate trace at `record_every` granularity.
     pub lr: Vec<(usize, f32)>,
+    /// Total engine broadcast dispatches (barrier crossings) over the
+    /// run — the denominator of steps-per-crossing in `bench_async`.
+    pub dispatches: u64,
+}
+
+impl TrainingHistory {
+    /// Last recorded consensus distance, `NaN` when none was recorded
+    /// (`iters == 0` runs record no samples) — a NaN-safe summary for
+    /// callers that previously unwrapped `consensus.last()`.
+    pub fn final_consensus(&self) -> f64 {
+        self.consensus.last().map(|&(_, d)| d).unwrap_or(f64::NAN)
+    }
 }
 
 /// Orchestrates one training run.
@@ -152,6 +218,9 @@ impl<'a> Trainer<'a> {
         &mut self,
         mut probe: impl FnMut(usize, &StackedParams),
     ) -> TrainingHistory {
+        if let ExecutionMode::Async { tau } = self.cfg.execution {
+            return super::async_exec::run_async(self, tau, &mut probe);
+        }
         let n = self.provider.nodes();
         let dim = self.provider.dim();
         assert_eq!(self.optimizer.params().n, n, "optimizer/provider node mismatch");
@@ -183,6 +252,13 @@ impl<'a> Trainer<'a> {
             self.optimizer.params_mut().allreduce();
         }
 
+        // Deferred consensus probe (`cfg.fused_probe`): a record
+        // iteration's probe rides in the *next* iteration's gradient
+        // dispatch — the parameters are untouched in between, so the
+        // recorded values are bitwise identical at one less barrier
+        // crossing per record round.
+        let mut pending: Option<(usize, f32)> = None;
+
         for k in 0..self.cfg.iters {
             // Borrowed, cached sparse plan: no dense matrix, no O(n²)
             // scan, no allocation for deterministic topologies.
@@ -192,14 +268,28 @@ impl<'a> Trainer<'a> {
             // Per-node stochastic gradients, sharded over the pool. The
             // per-node losses land in node order, so the mean below is
             // lane-count-independent bit for bit.
-            engine.compute_grads(
-                self.provider,
-                self.optimizer.params(),
-                &mut grads,
-                &mut losses,
-                k,
-                self.cfg.seed,
-            );
+            if let Some((pk, plr)) = pending.take() {
+                let d = engine.compute_grads_probed(
+                    self.provider,
+                    self.optimizer.params(),
+                    &mut grads,
+                    &mut losses,
+                    k,
+                    self.cfg.seed,
+                );
+                history.consensus.push((pk, d));
+                history.lr.push((pk, plr));
+                probe(pk, self.optimizer.params());
+            } else {
+                engine.compute_grads(
+                    self.provider,
+                    self.optimizer.params(),
+                    &mut grads,
+                    &mut losses,
+                    k,
+                    self.cfg.seed,
+                );
+            }
             let mean_loss: f64 = losses.iter().sum::<f64>() / n as f64;
 
             // Network simulation (when attached): price the round by
@@ -256,13 +346,18 @@ impl<'a> Trainer<'a> {
                 history.round_bytes.push(bytes);
             }
             if k % self.cfg.record_every == 0 || k + 1 == self.cfg.iters {
-                history
-                    .consensus
-                    .push((k, engine.consensus_distance(self.optimizer.params())));
-                history.lr.push((k, lr));
-                probe(k, self.optimizer.params());
+                if self.cfg.fused_probe && k + 1 != self.cfg.iters {
+                    pending = Some((k, lr));
+                } else {
+                    history
+                        .consensus
+                        .push((k, engine.consensus_distance(self.optimizer.params())));
+                    history.lr.push((k, lr));
+                    probe(k, self.optimizer.params());
+                }
             }
         }
+        history.dispatches = engine.dispatches();
         history
     }
 
@@ -360,10 +455,11 @@ mod tests {
                 msg_bytes: None,
                 cost: Some(CostModel::paper_default(0.01)),
                 compressor: CompressorKind::Identity,
+                ..Default::default()
             },
         );
         let hist = trainer.run();
-        let final_consensus = hist.consensus.last().unwrap().1;
+        let final_consensus = hist.final_consensus();
         (hist, final_consensus)
     }
 
@@ -437,5 +533,74 @@ mod tests {
         // are noiseless and equal-target here? targets differ, so allow a
         // loose bound).
         assert!(hist.consensus[0].1 < 10.0);
+    }
+
+    #[test]
+    fn zero_iteration_run_yields_nan_safe_summary() {
+        let n = 4;
+        let dim = 3;
+        let provider = QuadraticProvider::random(n, dim, 0.0, 2);
+        let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0; dim], 0.9);
+        let mut t = Trainer::new(
+            Schedule::new(TopologyKind::OnePeerExp, n, 0),
+            opt,
+            &provider,
+            TrainConfig { iters: 0, ..Default::default() },
+        );
+        let hist = t.run();
+        assert!(hist.consensus.is_empty());
+        assert!(hist.loss.is_empty());
+        // The old `consensus.last().unwrap()` panicked here; the summary
+        // must instead be a quiet NaN.
+        assert!(hist.final_consensus().is_nan());
+    }
+
+    #[test]
+    fn fused_probe_is_bitwise_identical_to_standalone() {
+        let n = 8;
+        let dim = 16;
+        let provider = QuadraticProvider::random(n, dim, 0.1, 9);
+        let histories: Vec<TrainingHistory> = [false, true]
+            .iter()
+            .map(|&fused| {
+                let opt = AlgorithmKind::DmSgd.build(n, &vec![0.25; dim], 0.9);
+                let mut t = Trainer::new(
+                    Schedule::new(TopologyKind::OnePeerExp, n, 1),
+                    opt,
+                    &provider,
+                    TrainConfig {
+                        iters: 37,
+                        record_every: 5,
+                        seed: 11,
+                        fused_probe: fused,
+                        ..Default::default()
+                    },
+                );
+                t.run()
+            })
+            .collect();
+        let (a, b) = (&histories[0], &histories[1]);
+        assert_eq!(a.consensus.len(), b.consensus.len());
+        for (x, y) in a.consensus.iter().zip(b.consensus.iter()) {
+            assert_eq!(x.0, y.0);
+            assert_eq!(x.1.to_bits(), y.1.to_bits(), "iter {}", x.0);
+        }
+        for (x, y) in a.loss.iter().zip(b.loss.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(a.lr, b.lr);
+    }
+
+    #[test]
+    fn execution_mode_parses_and_round_trips() {
+        assert_eq!(ExecutionMode::parse("sync"), Some(ExecutionMode::Sync));
+        assert_eq!(ExecutionMode::parse("async:0"), Some(ExecutionMode::Async { tau: 0 }));
+        assert_eq!(ExecutionMode::parse("async:3"), Some(ExecutionMode::Async { tau: 3 }));
+        assert_eq!(ExecutionMode::parse("async"), None);
+        assert_eq!(ExecutionMode::parse("async:x"), None);
+        assert_eq!(ExecutionMode::parse("bulk"), None);
+        for mode in [ExecutionMode::Sync, ExecutionMode::Async { tau: 2 }] {
+            assert_eq!(ExecutionMode::parse(&mode.label()), Some(mode));
+        }
     }
 }

@@ -24,7 +24,7 @@
 //! `tests/engine_determinism.rs`. See docs/DESIGN.md §Engine.
 
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Barrier, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
@@ -147,6 +147,11 @@ pub struct Engine {
     /// `Sync` — without this, two safe `&Engine` drivers could race the
     /// slot and the barriers.
     driver: Mutex<()>,
+    /// Lifetime count of broadcast rounds (barrier crossings on
+    /// multi-lane pools; inline calls on single-lane ones). The benches
+    /// read this to report dispatches/iteration — the quantity the
+    /// fused probe and the async executor each shave.
+    dispatches: AtomicU64,
 }
 
 impl Engine {
@@ -171,7 +176,7 @@ impl Engine {
                     .expect("engine: failed to spawn worker")
             })
             .collect();
-        Engine { lanes, workers, shared, driver: Mutex::new(()) }
+        Engine { lanes, workers, shared, driver: Mutex::new(()), dispatches: AtomicU64::new(0) }
     }
 
     /// Pool sized by [`auto_lanes`] for an `n_rows × row_len` state.
@@ -183,12 +188,18 @@ impl Engine {
         self.lanes
     }
 
+    /// Total broadcast dispatches since creation (see the field docs).
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches.load(Ordering::Relaxed)
+    }
+
     /// Broadcast `f` to every lane and wait for completion. `f(lane)`
     /// runs once per lane (lane 0 on the calling thread); the call
     /// returns only after all lanes finished, so `f` may borrow local
     /// state. Single-lane engines degrade to a plain call — no barrier
     /// traffic at all.
     pub fn run(&self, f: &(dyn Fn(usize) + Sync)) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
         if self.lanes == 1 {
             f(0);
             return;
@@ -258,6 +269,54 @@ impl Engine {
                 ls[off] = provider.grad(i, params.row(i), iter, seed, out) as f64;
             }
         });
+    }
+
+    /// [`Engine::compute_grads`] fused with the consensus probe: one
+    /// broadcast fills `grads`/`losses` *and* the per-node partials of
+    /// `Σ_i ‖x_i − x̄‖²` against the serial mean, returning the serial
+    /// node-ordered reduction. Each per-node quantity is computed by the
+    /// exact same code as the unfused pair ([`Engine::compute_grads`]
+    /// then [`Engine::consensus_distance`]), just inside a single
+    /// barrier round — so results are bitwise-identical to running the
+    /// two dispatches back to back, at one fewer crossing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compute_grads_probed(
+        &self,
+        provider: &dyn GradProvider,
+        params: &StackedParams,
+        grads: &mut StackedParams,
+        losses: &mut [f64],
+        iter: usize,
+        seed: u64,
+    ) -> f64 {
+        let n = params.n;
+        let dim = params.dim;
+        assert_eq!(grads.n, n);
+        assert_eq!(grads.dim, dim, "grads/params dim mismatch");
+        assert_eq!(losses.len(), n);
+        let lanes = self.lanes;
+        let mean = params.mean();
+        let mut per_node = vec![0.0f64; n];
+        {
+            let g = grads.lane_shards(lanes);
+            let l = Lanes::split(losses, n, 1, lanes);
+            let p = Lanes::split(&mut per_node, n, 1, lanes);
+            self.run(&|lane| {
+                let rows = shard_range(n, lanes, lane);
+                if rows.is_empty() {
+                    return;
+                }
+                let mut gs = g.lock(lane);
+                let mut ls = l.lock(lane);
+                let mut ps = p.lock(lane);
+                for (off, i) in rows.enumerate() {
+                    let out = &mut gs[off * dim..(off + 1) * dim];
+                    ls[off] = provider.grad(i, params.row(i), iter, seed, out) as f64;
+                    ps[off] = crate::simd::sum_sq_diff(params.row(i), &mean);
+                }
+            });
+        }
+        per_node.iter().sum()
     }
 
     /// Consensus distance `Σ_i ‖x_i − x̄‖²`, the O(nP) metrics probe.

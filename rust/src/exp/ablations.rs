@@ -67,6 +67,7 @@ pub fn ablation_warmup(ctx: &Ctx) -> Result<()> {
                     seed,
                     msg_bytes: None,
                     cost: None,
+                    ..Default::default()
                 },
             );
             let mut last_mse = 0.0;

@@ -1,0 +1,309 @@
+//! `table_async` — execution mode × scenario × topology on
+//! **simulated time-to-accuracy** (docs/DESIGN.md §Async runtime).
+//!
+//! The bulk-synchronous round pays the fleet's slowest node every
+//! iteration; the bounded-staleness executor only gates wave `k` on the
+//! fleet having *released* wave `k − τ − 1`, so a slow node costs its
+//! partners a stale read instead of a global stall. This table measures
+//! that trade on the heterogeneous quadratic (the `netsim` /
+//! `table_compression` workload): under timing faults (persistent
+//! straggler, transiently flaky nodes) async τ ∈ {1, 2} should reach the
+//! accuracy target in strictly less simulated wall-clock than sync on
+//! the one-peer exponential graph, while on a clean network the two
+//! agree (uniform times never force a stale read).
+//!
+//! Emits `table_async.csv` / `.json` and a paper-style text table.
+
+use std::collections::BTreeMap;
+
+use super::Ctx;
+use crate::coordinator::trainer::{ExecutionMode, QuadraticProvider, TrainConfig, Trainer};
+use crate::coordinator::LrSchedule;
+use crate::costmodel::CostModel;
+use crate::engine::budget_lanes;
+use crate::netsim::{NetSim, Scenario};
+use crate::optim::AlgorithmKind;
+use crate::sweep::{Axis, Col, Grid, Record, Sink};
+use crate::topology::schedule::Schedule;
+use crate::topology::TopologyKind;
+use crate::util::json::Json;
+use crate::util::table::TextTable;
+use anyhow::{Context, Result};
+
+/// Topology rows of the table.
+const KINDS: [TopologyKind; 2] = [TopologyKind::OnePeerExp, TopologyKind::StaticExp];
+
+/// Timing-only scenarios (the async executor rejects faulty ones).
+fn scenarios() -> Vec<Scenario> {
+    vec![Scenario::clean(), Scenario::straggler(), Scenario::flaky()]
+}
+
+/// Execution-mode columns of the table.
+fn modes() -> Vec<ExecutionMode> {
+    vec![
+        ExecutionMode::Sync,
+        ExecutionMode::Async { tau: 1 },
+        ExecutionMode::Async { tau: 2 },
+    ]
+}
+
+/// One cell: a full training run to the accuracy target.
+#[derive(Clone, Debug)]
+pub struct AsyncCell {
+    pub topology: TopologyKind,
+    pub scenario: String,
+    pub execution: ExecutionMode,
+    pub reached: bool,
+    pub iters_to_target: usize,
+    /// Simulated seconds up to (and including) the round that hit the
+    /// target — the full budget's clock when not reached.
+    pub time_to_target: f64,
+    pub final_err: f64,
+}
+
+fn cell_record(c: &AsyncCell) -> Record {
+    Record::new()
+        .with("topology", c.topology.name())
+        .with("scenario", c.scenario.as_str())
+        .with("execution", c.execution.label().as_str())
+        .with("reached", c.reached)
+        .with("iters_to_target", c.iters_to_target)
+        .with("time_to_target", c.time_to_target)
+        .with("final_err", c.final_err)
+}
+
+fn cell_from_record(rec: &Record) -> Result<AsyncCell> {
+    let tname = rec.text("topology");
+    let ename = rec.text("execution");
+    Ok(AsyncCell {
+        topology: TopologyKind::parse(tname)
+            .ok_or_else(|| anyhow::anyhow!("cached cell has unknown topology {tname}"))?,
+        scenario: rec.text("scenario").to_string(),
+        execution: ExecutionMode::parse(ename)
+            .ok_or_else(|| anyhow::anyhow!("cached cell has unknown execution mode {ename}"))?,
+        reached: rec.flag("reached"),
+        iters_to_target: rec.num("iters_to_target") as usize,
+        time_to_target: rec.num("time_to_target"),
+        final_err: rec.num("final_err"),
+    })
+}
+
+/// Run one (topology, scenario, execution) cell at the sweep's fixed
+/// n/dim — the `table_compression` protocol with the network clock as
+/// the moving part instead of the wire format.
+fn run_cell(
+    ctx: &Ctx,
+    kind: TopologyKind,
+    scenario: &Scenario,
+    execution: ExecutionMode,
+    lane_cap: Option<usize>,
+) -> AsyncCell {
+    let n = 16;
+    let dim = 32;
+    let iters = ctx.scaled(1200);
+    let tol = 0.01;
+    let provider = QuadraticProvider::random(n, dim, 0.0, ctx.seed ^ 0xA5);
+    let cbar = provider.targets.mean();
+    let err0 = cbar.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().max(1e-12);
+    let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.8);
+    let sim = NetSim::new(&CostModel::paper_default(0.01), scenario.clone(), ctx.seed);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, n, ctx.seed),
+        opt,
+        &provider,
+        TrainConfig {
+            iters,
+            lr: LrSchedule::HalveEvery { init: 0.1, every: (iters / 8).max(1) },
+            warmup_allreduce: false,
+            record_every: 1,
+            parallel_grads: false,
+            lanes: lane_cap.map(|cap| budget_lanes(cap, n, n * dim)),
+            seed: ctx.seed,
+            msg_bytes: Some(4.0 * dim as f64),
+            cost: None,
+            execution,
+            ..Default::default()
+        },
+    )
+    .with_netsim(sim);
+    let mut errs: Vec<f64> = Vec::with_capacity(iters);
+    let hist = trainer.run_with(|_, params| errs.push(params.mean_sq_error_to(&cbar)));
+    let target = tol * err0;
+    let hit = errs.iter().position(|&e| e <= target);
+    let (reached, iters_to_target, time_to_target) = match hit {
+        Some(k) => (true, k + 1, hist.round_times[..=k].iter().sum()),
+        None => (false, iters, hist.sim_time),
+    };
+    AsyncCell {
+        topology: kind,
+        scenario: scenario.name.clone(),
+        execution,
+        reached,
+        iters_to_target,
+        time_to_target,
+        final_err: errs.last().copied().unwrap_or(err0),
+    }
+}
+
+/// Run the sweep (parallel, cache-aware), print the table, and write
+/// `table_async.csv` + `.json`. Returns the cells for test assertions
+/// on top of the artifacts.
+pub fn table_async_cells(ctx: &Ctx) -> Result<Vec<AsyncCell>> {
+    std::fs::create_dir_all(&ctx.out_dir)
+        .with_context(|| format!("creating {}", ctx.out_dir.display()))?;
+    #[derive(Clone, Debug)]
+    struct Spec {
+        kind: TopologyKind,
+        scenario: Scenario,
+        execution: ExecutionMode,
+    }
+    let grid = Grid::product3(
+        &Axis::new("topology", KINDS.to_vec()),
+        &Axis::new("scenario", scenarios()),
+        &Axis::new("execution", modes()),
+        |&kind, scenario, &execution| Spec { kind, scenario: scenario.clone(), execution },
+    );
+    let out = ctx.runner("table_async").run(
+        grid.cells(),
+        |spec| format!("{:?} {} {}", spec.kind, spec.scenario.name, spec.execution.label()),
+        |spec, cc| {
+            vec![cell_record(&run_cell(
+                ctx,
+                spec.kind,
+                &spec.scenario,
+                spec.execution,
+                Some(cc.lanes),
+            ))]
+        },
+    );
+    let cells = out
+        .iter()
+        .map(|cell| cell_from_record(&cell.records[0]))
+        .collect::<Result<Vec<_>>>()?;
+
+    // Text table: one row per (topology, scenario), simulated
+    // time-to-target per execution mode — the staleness dividend at a
+    // glance.
+    let mut header = vec!["topology".to_string(), "scenario".to_string()];
+    for mode in modes() {
+        header.push(format!("{} time", mode.label()));
+        header.push(format!("{} iters", mode.label()));
+    }
+    let mut t = TextTable::new(&header.iter().map(String::as_str).collect::<Vec<_>>());
+    for &kind in &KINDS {
+        for scenario in scenarios() {
+            let mut row = vec![kind.name().to_string(), scenario.name.clone()];
+            for mode in modes() {
+                let c = cells
+                    .iter()
+                    .find(|c| {
+                        c.topology == kind && c.scenario == scenario.name && c.execution == mode
+                    })
+                    .expect("cell exists");
+                row.push(if c.reached {
+                    format!("{:.2}s", c.time_to_target)
+                } else {
+                    format!(">{:.2}s", c.time_to_target)
+                });
+                row.push(c.iters_to_target.to_string());
+            }
+            t.row(row);
+        }
+    }
+
+    let mut sink = Sink::new(vec![
+        Col::auto("topology"),
+        Col::auto("scenario"),
+        Col::auto("execution"),
+        Col::auto("reached"),
+        Col::auto("iters_to_target"),
+        Col::auto("time_to_target"),
+        Col::auto("final_err"),
+    ]);
+    for cell in &out {
+        sink.push(&cell.records[0]);
+    }
+    sink.write_csv(&ctx.out_dir, "table_async")?;
+
+    let mut root = BTreeMap::new();
+    root.insert(
+        "rows".to_string(),
+        Json::Arr(
+            cells
+                .iter()
+                .map(|c| {
+                    let mut o = BTreeMap::new();
+                    o.insert("topology".into(), Json::Str(c.topology.name().into()));
+                    o.insert("scenario".into(), Json::Str(c.scenario.clone()));
+                    o.insert("execution".into(), Json::Str(c.execution.label()));
+                    o.insert("reached".into(), Json::Bool(c.reached));
+                    o.insert("iters_to_target".into(), Json::Num(c.iters_to_target as f64));
+                    o.insert("time_to_target".into(), Json::Num(c.time_to_target));
+                    o.insert("final_err".into(), Json::Num(c.final_err));
+                    Json::Obj(o)
+                })
+                .collect(),
+        ),
+    );
+    let path = ctx.out_dir.join("table_async.json");
+    std::fs::write(&path, Json::Obj(root).to_string())
+        .with_context(|| format!("writing {}", path.display()))?;
+
+    println!("Async — simulated time-to-accuracy (err ≤ 0.01 · err₀), DmSGD, n = 16");
+    println!("{}", t.render());
+    println!("  sync pays the slowest node per round; async:τ gates wave k on the");
+    println!("  fleet's release of wave k-τ-1 and reads partner payloads ≤ τ stale.");
+    println!("  csv: {}", ctx.csv_path("table_async").display());
+    Ok(cells)
+}
+
+/// `expograph exp table_async` entry point.
+pub fn table_async(ctx: &Ctx) -> Result<()> {
+    table_async_cells(ctx).map(|_| ())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounded_staleness_beats_sync_under_timing_faults() {
+        let tmp = std::env::temp_dir().join(format!("expograph-async-{}", std::process::id()));
+        let ctx = Ctx { out_dir: tmp.clone(), ..Ctx::default() };
+        let cells = table_async_cells(&ctx).unwrap();
+        assert_eq!(cells.len(), KINDS.len() * scenarios().len() * modes().len());
+        assert!(tmp.join("table_async.csv").exists());
+        assert!(tmp.join("table_async.json").exists());
+        let get = |scenario: &str, mode: ExecutionMode| {
+            cells
+                .iter()
+                .find(|c| {
+                    c.topology == TopologyKind::OnePeerExp
+                        && c.scenario == scenario
+                        && c.execution == mode
+                })
+                .expect("cell exists")
+        };
+        // On a clean one-peer network everything reaches the target.
+        assert!(get("clean", ExecutionMode::Sync).reached);
+        assert!(get("clean", ExecutionMode::Async { tau: 1 }).reached);
+        // The acceptance headline: under at least one timing-fault
+        // scenario, some async τ ∈ {1, 2} reaches the accuracy target in
+        // strictly less simulated wall-clock than sync on one-peer exp.
+        let mut wins = Vec::new();
+        for scenario in ["straggler", "flaky"] {
+            let sync = get(scenario, ExecutionMode::Sync);
+            for tau in [1usize, 2] {
+                let asyn = get(scenario, ExecutionMode::Async { tau });
+                if asyn.reached && asyn.time_to_target < sync.time_to_target {
+                    wins.push((scenario, tau, sync.time_to_target / asyn.time_to_target));
+                }
+            }
+        }
+        assert!(
+            !wins.is_empty(),
+            "no (scenario, τ) pair beat sync on simulated time-to-target: {cells:?}"
+        );
+        std::fs::remove_dir_all(&tmp).ok();
+    }
+}

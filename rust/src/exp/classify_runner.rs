@@ -131,6 +131,7 @@ pub fn run_classify_with(
             seed: spec.seed,
             msg_bytes: None,
             cost: None,
+            ..Default::default()
         },
     );
     let hist = trainer.run();

@@ -117,6 +117,7 @@ fn run_cell(
             msg_bytes: Some(4.0 * dim as f64),
             cost: None,
             compressor: comp,
+            ..Default::default()
         },
     )
     .with_netsim(sim);

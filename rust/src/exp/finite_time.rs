@@ -103,6 +103,7 @@ fn run_cell(cell: &FiniteTimeCell, iters: usize, seed: u64, lane_cap: Option<usi
             seed,
             msg_bytes: Some(MSG_BYTES),
             cost: Some(CostModel::paper_default(COMPUTE)),
+            ..Default::default()
         },
     );
     let mut errs: Vec<f64> = Vec::with_capacity(iters);

@@ -129,6 +129,7 @@ pub fn run_logreg_with(
             seed: run.seed,
             msg_bytes: None,
             cost: None,
+            ..Default::default()
         },
     );
     let x_star32: Vec<f32> = x_star.iter().map(|&v| v as f32).collect();

@@ -9,6 +9,7 @@
 //! `expograph exp all`).
 
 pub mod ablations;
+pub mod async_runner;
 pub mod classify_runner;
 pub mod compression;
 pub mod figures;
@@ -97,7 +98,8 @@ pub const ALL: &[&str] = &[
     "fig3", "fig4", "fig10", "fig11", "fig12", "table1", "table5", "table6",
     "fig1", "fig13", "table7", "table8", "table2", "table3", "table4",
     "table9", "table10", "table_finite_time", "table_compression",
-    "ablation_warmup", "ablation_sampling", "ablation_symmetric", "netsim",
+    "table_async", "ablation_warmup", "ablation_sampling",
+    "ablation_symmetric", "netsim",
 ];
 
 /// Dispatch one experiment by id.
@@ -122,6 +124,7 @@ pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
         "table10" => tables::table10(ctx),
         "table_finite_time" => finite_time::table_finite_time(ctx),
         "table_compression" => compression::table_compression(ctx),
+        "table_async" => async_runner::table_async(ctx),
         "ablation_warmup" => ablations::ablation_warmup(ctx),
         "ablation_sampling" => ablations::ablation_sampling(ctx),
         "ablation_symmetric" => ablations::ablation_symmetric(ctx),

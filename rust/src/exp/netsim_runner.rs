@@ -160,6 +160,7 @@ pub fn time_to_target_with(
             // rounds through `CompressorKind::wire_bytes` — no raw
             // `cfg.msg_bytes` reaches the wire from here.
             compressor: cfg.compressor,
+            ..Default::default()
         },
     )
     .with_netsim(sim);

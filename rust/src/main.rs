@@ -54,6 +54,9 @@ USAGE:
       --cache     on|off: serve completed cells from <out>/.cache/ (default on)
   expograph train [--config FILE] [key=value ...]
       keys: nodes topology algorithm iters lr beta batch heterogeneous seed
+            execution
+      execution=sync | async:<staleness> — bounded-staleness gossip
+      (async:0 is bitwise identical to sync)
       topologies (from the registry — includes the finite-time
       arbitrary-n families):
                   {topologies}
@@ -62,6 +65,7 @@ USAGE:
       time-to-target table (writes netsim.json + netsim.csv)
       keys: nodes topologies scenarios iters dim tol msg_bytes compute seed
             jobs cache plan_only
+      scenarios: clean straggler flaky lossy
       plan_only=on skips model training and runs scalar plan-only
       consensus (required for n > 65536); --large-n applies the preset
       n = 16384,65536,1048576 one-peer-exp clean+lossy plan-only sweep
@@ -164,6 +168,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
             seed: cfg.seed,
             msg_bytes: None,
             cost: Some(CostModel::paper_default(0.01)),
+            execution: cfg.execution,
+            ..Default::default()
         },
     );
     let hist = trainer.run_with(|k, params| {
@@ -174,9 +180,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
     });
     println!(
         "final: loss {:.4}  sim_time {:.2}s  consensus {:.3e}",
-        hist.loss.last().unwrap(),
+        hist.loss.last().copied().unwrap_or(f64::NAN),
         hist.sim_time,
-        hist.consensus.last().unwrap().1
+        hist.final_consensus()
     );
     Ok(())
 }

@@ -65,6 +65,7 @@ const SALT_DROP_AR: u64 = 0xD202;
 const SALT_COMPUTE: u64 = 0xC011;
 const SALT_LINK_JITTER: u64 = 0x11A7;
 const SALT_LINK_HET: u64 = 0x4E70;
+const SALT_FLAKY: u64 = 0xF1A6;
 
 /// SplitMix64 finalizer — the avalanche step behind the hash coins.
 #[inline]
@@ -118,6 +119,12 @@ pub struct Scenario {
     /// (network-partitioned, still computing locally) for iterations
     /// `from ≤ k < until`.
     pub dropout: Vec<(usize, usize, usize)>,
+    /// Per-node per-iteration probability of a *transient* slowdown
+    /// (GC pause, co-tenant burst): an independent coin per (iter,
+    /// node), unlike `straggler_frac`'s persistent prefix.
+    pub flaky_prob: f64,
+    /// Compute-time multiplier applied when the flaky coin fires.
+    pub flaky_factor: f64,
 }
 
 impl Scenario {
@@ -132,6 +139,8 @@ impl Scenario {
             link_jitter: 0.0,
             het_spread: 0.0,
             dropout: Vec::new(),
+            flaky_prob: 0.0,
+            flaky_factor: 1.0,
         }
     }
 
@@ -161,11 +170,27 @@ impl Scenario {
         }
     }
 
+    /// Transient stragglers: any node is 4× slower with probability
+    /// 1/8, independently per iteration. Timing-only (faultless), so
+    /// the trajectory is bitwise identical to `clean` — but unlike the
+    /// persistent `straggler` preset the slow set changes every round,
+    /// which is the regime where bounded-staleness execution shines.
+    pub fn flaky() -> Scenario {
+        Scenario {
+            name: "flaky".into(),
+            flaky_prob: 0.125,
+            flaky_factor: 4.0,
+            compute_jitter: 0.2,
+            ..Scenario::clean()
+        }
+    }
+
     /// Parse a preset by name (the CLI/config surface).
     pub fn parse(name: &str) -> Option<Scenario> {
         Some(match name {
             "clean" => Scenario::clean(),
             "straggler" => Scenario::straggler(),
+            "flaky" => Scenario::flaky(),
             "lossy" => Scenario::lossy(),
             _ => return None,
         })
@@ -485,11 +510,14 @@ impl NetSim {
 
     /// Per-node compute time for iteration `k` (seconds); `n` is the
     /// round's node count (straggler selection is a prefix of node ids).
-    fn compute_time(&self, k: usize, u: usize, n: usize) -> f64 {
+    pub(crate) fn compute_time(&self, k: usize, u: usize, n: usize) -> f64 {
         let s = &self.scenario;
         let mut t = self.cost.compute;
         if s.straggler_factor != 1.0 && u < s.straggler_count(n) {
             t *= s.straggler_factor;
+        }
+        if s.flaky_prob > 0.0 && coin(self.seed, k, u, u, SALT_FLAKY) < s.flaky_prob {
+            t *= s.flaky_factor;
         }
         if s.compute_jitter > 0.0 {
             t *= 1.0 + s.compute_jitter * coin(self.seed, k, u, u, SALT_COMPUTE);
@@ -500,7 +528,7 @@ impl NetSim {
     /// Duration of one exchange slot between `u` and `v` at iteration
     /// `k` carrying `msg_bytes`. Symmetric in `(u, v)` — both ends of a
     /// pairwise exchange observe the same duration.
-    fn slot_time(&self, k: usize, u: usize, v: usize, msg_bytes: f64) -> f64 {
+    pub(crate) fn slot_time(&self, k: usize, u: usize, v: usize, msg_bytes: f64) -> f64 {
         let (a, b) = (u.min(v), u.max(v));
         let s = &self.scenario;
         let mut t = self.cost.link_time(msg_bytes);

@@ -114,6 +114,58 @@ impl Optimizer for DSgd {
         damp_rows(rows, dim, gamma, q[0], a);
     }
 
+    fn async_streams(&self) -> usize {
+        1
+    }
+
+    fn stage_shard_async(
+        &self,
+        _stream: usize,
+        rows: Range<usize>,
+        g_rows: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                out[off + k] = fmaf(-lr, g_rows[off + k], x[i * dim + k]);
+            }
+        }
+    }
+
+    fn step_shard_async(
+        &self,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        src: &(dyn Fn(usize, usize, usize, usize) -> f32 + Sync),
+        damp: Option<(f32, &[&[f32]])>,
+        a: &mut [f32],
+        _b: &mut [f32],
+    ) {
+        // The payload x_j − γ g_j is what the executor versioned; mixing
+        // the resolved versions is the same fmaf fold as the dense
+        // kernel, so at τ=0 (all-fresh) the trajectory is bitwise equal.
+        let dim = self.x.dim;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let ao = &mut a[off..off + dim];
+            w.mix_fused_rows(i..i + 1, dim, ao, |j: usize, k: usize| src(i, 0, j, k));
+            if let Some((gamma, praw)) = damp {
+                let p = &praw[0][i * dim..(i + 1) * dim];
+                for k in 0..dim {
+                    ao[k] = fmaf(gamma, ao[k] - src(i, 0, i, k), p[k]);
+                }
+            }
+        }
+    }
+
     fn params(&self) -> &StackedParams {
         &self.x
     }
@@ -249,6 +301,77 @@ impl Optimizer for DmSgd {
         damp_rows(rows, dim, gamma, q[1], b);
     }
 
+    fn async_streams(&self) -> usize {
+        2
+    }
+
+    fn stage_shard_async(
+        &self,
+        stream: usize,
+        rows: Range<usize>,
+        g_rows: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let beta = self.beta;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                let s = i * dim + k;
+                out[off + k] = if stream == 0 {
+                    fmaf(-lr, m[s], x[s])
+                } else {
+                    fmaf(beta, m[s], g_rows[off + k])
+                };
+            }
+        }
+    }
+
+    fn step_shard_async(
+        &self,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        src: &(dyn Fn(usize, usize, usize, usize) -> f32 + Sync),
+        damp: Option<(f32, &[&[f32]])>,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        // Both gossiped stacks (x − γm and βm + g) are versioned; the
+        // dual fold is the same `mix_fused_rows2` behind
+        // `mix_dmsgd_rows`, so τ=0 stays bitwise equal to sync.
+        let dim = self.x.dim;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let ao = &mut a[off..off + dim];
+            let bo = &mut b[off..off + dim];
+            w.mix_fused_rows2(
+                i..i + 1,
+                dim,
+                ao,
+                bo,
+                |j: usize, k: usize| src(i, 0, j, k),
+                |j: usize, k: usize| src(i, 1, j, k),
+            );
+            if let Some((gamma, praw)) = damp {
+                let p0 = &praw[0][i * dim..(i + 1) * dim];
+                let p1 = &praw[1][i * dim..(i + 1) * dim];
+                for k in 0..dim {
+                    ao[k] = fmaf(gamma, ao[k] - src(i, 0, i, k), p0[k]);
+                }
+                for k in 0..dim {
+                    bo[k] = fmaf(gamma, bo[k] - src(i, 1, i, k), p1[k]);
+                }
+            }
+        }
+    }
+
     fn params(&self) -> &StackedParams {
         &self.x
     }
@@ -375,6 +498,65 @@ impl Optimizer for VanillaDmSgd {
             let off = (i - base) * dim;
             let (mi, gi) = (&m[i * dim..(i + 1) * dim], &g[i * dim..(i + 1) * dim]);
             let ao = &mut a[off..off + dim];
+            let bo = &mut b[off..off + dim];
+            for k in 0..dim {
+                let mp = fmaf(beta, mi[k], gi[k]);
+                bo[k] = mp;
+                ao[k] = fmaf(-lr, mp, ao[k]);
+            }
+        }
+    }
+
+    fn async_streams(&self) -> usize {
+        1
+    }
+
+    fn stage_shard_async(
+        &self,
+        _stream: usize,
+        rows: Range<usize>,
+        _g_rows: &[f32],
+        _lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            out[off..off + dim].copy_from_slice(&x[i * dim..(i + 1) * dim]);
+        }
+    }
+
+    fn step_shard_async(
+        &self,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        grads: &StackedParams,
+        lr: f32,
+        src: &(dyn Fn(usize, usize, usize, usize) -> f32 + Sync),
+        damp: Option<(f32, &[&[f32]])>,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        // Mix the versioned model payload, then the row-local momentum
+        // refresh — same tail as the dense kernel.
+        let dim = self.x.dim;
+        let m = &self.m.data;
+        let g = &grads.data;
+        let beta = self.beta;
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let ao = &mut a[off..off + dim];
+            w.mix_fused_rows(i..i + 1, dim, ao, |j: usize, k: usize| src(i, 0, j, k));
+            if let Some((gamma, praw)) = damp {
+                let p = &praw[0][i * dim..(i + 1) * dim];
+                for k in 0..dim {
+                    ao[k] = fmaf(gamma, ao[k] - src(i, 0, i, k), p[k]);
+                }
+            }
+            let (mi, gi) = (&m[i * dim..(i + 1) * dim], &g[i * dim..(i + 1) * dim]);
             let bo = &mut b[off..off + dim];
             for k in 0..dim {
                 let mp = fmaf(beta, mi[k], gi[k]);
@@ -524,6 +706,71 @@ impl Optimizer for QgDmSgd {
             let off = (i - base) * dim;
             let (mi, xi) = (&m[i * dim..(i + 1) * dim], &x[i * dim..(i + 1) * dim]);
             let ao = &a[off..off + dim];
+            let bo = &mut b[off..off + dim];
+            for k in 0..dim {
+                bo[k] = fmaf(beta, mi[k], (1.0 - beta) * (xi[k] - ao[k]) * inv_lr);
+            }
+        }
+    }
+
+    fn async_streams(&self) -> usize {
+        1
+    }
+
+    fn stage_shard_async(
+        &self,
+        _stream: usize,
+        rows: Range<usize>,
+        g_rows: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let beta = self.beta;
+        let base = rows.start;
+        // The gossiped half-step x_half = x − γ(g + βm).
+        for i in rows {
+            let off = (i - base) * dim;
+            for k in 0..dim {
+                let s = i * dim + k;
+                out[off + k] = fmaf(-lr, fmaf(beta, m[s], g_rows[off + k]), x[s]);
+            }
+        }
+    }
+
+    fn step_shard_async(
+        &self,
+        rows: Range<usize>,
+        w: &MixingPlan,
+        _grads: &StackedParams,
+        lr: f32,
+        src: &(dyn Fn(usize, usize, usize, usize) -> f32 + Sync),
+        damp: Option<(f32, &[&[f32]])>,
+        a: &mut [f32],
+        b: &mut [f32],
+    ) {
+        // Mix the versioned half-step payload, then refresh m from the
+        // realized displacement — the same row-local tail as the dense
+        // kernel.
+        let dim = self.x.dim;
+        let x = &self.x.data;
+        let m = &self.m.data;
+        let beta = self.beta;
+        let inv_lr = 1.0 / lr.max(1e-12);
+        let base = rows.start;
+        for i in rows {
+            let off = (i - base) * dim;
+            let ao = &mut a[off..off + dim];
+            w.mix_fused_rows(i..i + 1, dim, ao, |j: usize, k: usize| src(i, 0, j, k));
+            if let Some((gamma, praw)) = damp {
+                let p = &praw[0][i * dim..(i + 1) * dim];
+                for k in 0..dim {
+                    ao[k] = fmaf(gamma, ao[k] - src(i, 0, i, k), p[k]);
+                }
+            }
+            let (mi, xi) = (&m[i * dim..(i + 1) * dim], &x[i * dim..(i + 1) * dim]);
             let bo = &mut b[off..off + dim];
             for k in 0..dim {
                 bo[k] = fmaf(beta, mi[k], (1.0 - beta) * (xi[k] - ao[k]) * inv_lr);

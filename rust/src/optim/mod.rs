@@ -483,6 +483,63 @@ pub trait Optimizer: Send + Sync {
         gz.advance();
     }
 
+    /// Number of gossip payload streams the bounded-staleness async
+    /// executor exchanges for this algorithm. `0` — the default — means
+    /// the algorithm is not supported by `execution = async:<τ>` (the
+    /// executor rejects it with a clear error). For the supported
+    /// single-phase algorithms this equals [`Optimizer::phase_streams`]
+    /// of phase 0 (the staging path *is* [`Optimizer::payload_shard`],
+    /// so staged bytes match the sync wire payloads bitwise).
+    fn async_streams(&self) -> usize {
+        0
+    }
+
+    /// Stage the raw gossip payload of async stream `stream` for rows
+    /// `rows` into the shard view `out` (row `rows.start` at offset 0),
+    /// like [`Optimizer::payload_shard`] — except the gradient rows
+    /// arrive as the *shard-local* slice `g_rows` (same layout as
+    /// `out`), which lets the executor fuse staging into the gradient
+    /// dispatch: the lane that just computed its gradient rows stages
+    /// its payload rows in the same barrier round. Expressions must
+    /// match [`Optimizer::payload_shard`] exactly.
+    fn stage_shard_async(
+        &self,
+        _stream: usize,
+        _rows: Range<usize>,
+        _g_rows: &[f32],
+        _lr: f32,
+        _out: &mut [f32],
+    ) {
+        panic!("{} does not support async execution", self.name());
+    }
+
+    /// Async-mode shard kernel: compute output rows `rows` into the
+    /// shard views `a`/`b` exactly like [`Optimizer::step_shard`], but
+    /// pull every mixed payload element through `src(reader, stream,
+    /// col, elem)` — the executor resolves `(reader, col)` to whichever
+    /// committed payload version the bounded-staleness clock makes
+    /// visible. `damp = Some((gamma, praw))` composes with compressed
+    /// gossip: after the mix, each output row is rewritten
+    /// `out = p + γ·(out − h)` per stream, where `p` is the node's raw
+    /// payload (`praw[stream]`, full `n×dim`) and `h` its own
+    /// reconstruction (`src(i, stream, i, ·)`) — the same damped
+    /// consensus step as [`damp_rows`]. Row-local by contract; commit
+    /// via the ordinary [`Optimizer::commit`] of phase 0.
+    #[allow(clippy::too_many_arguments)]
+    fn step_shard_async(
+        &self,
+        _rows: Range<usize>,
+        _w: &MixingPlan,
+        _grads: &StackedParams,
+        _lr: f32,
+        _src: &(dyn Fn(usize, usize, usize, usize) -> f32 + Sync),
+        _damp: Option<(f32, &[&[f32]])>,
+        _a: &mut [f32],
+        _b: &mut [f32],
+    ) {
+        panic!("{} does not support async execution", self.name());
+    }
+
     /// Current stacked parameters.
     fn params(&self) -> &StackedParams;
 

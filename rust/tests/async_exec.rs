@@ -1,0 +1,219 @@
+//! Bounded-staleness executor acceptance (docs/DESIGN.md §Async
+//! runtime): τ = 0 parity with the synchronous path (including
+//! compressed gossip), clean-network freshness, convergence under real
+//! staleness, the straggler dividend on the simulated clock, and the
+//! executor's scope rejections.
+
+use expograph::compress::CompressorKind;
+use expograph::coordinator::trainer::{
+    ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
+};
+use expograph::costmodel::CostModel;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::AlgorithmKind;
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+
+const N: usize = 16;
+const DIM: usize = 24;
+const ITERS: usize = 80;
+
+fn run(
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    execution: ExecutionMode,
+    compressor: CompressorKind,
+    scenario: Option<Scenario>,
+) -> TrainingHistory {
+    let provider = QuadraticProvider::random(N, DIM, 0.05, 13);
+    let opt = algo.build(N, &vec![0.0f32; DIM], 0.9);
+    let cost = CostModel::paper_default(0.01);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, N, 3),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: ITERS,
+            record_every: 10,
+            seed: 17,
+            compressor,
+            execution,
+            cost: Some(cost),
+            ..Default::default()
+        },
+    );
+    if let Some(scen) = scenario {
+        trainer.netsim = Some(NetSim::new(&cost, scen, 7));
+    }
+    trainer.run()
+}
+
+fn assert_same_trajectory(a: &TrainingHistory, b: &TrainingHistory, label: &str) {
+    assert_eq!(a.loss.len(), b.loss.len(), "{label}: loss length");
+    for (k, (x, y)) in a.loss.iter().zip(b.loss.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: loss diverged at iter {k}: {x} vs {y}");
+    }
+    assert_eq!(a.consensus.len(), b.consensus.len(), "{label}: probe count");
+    for ((ka, x), (kb, y)) in a.consensus.iter().zip(b.consensus.iter()) {
+        assert_eq!(ka, kb, "{label}: probe iteration");
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: consensus diverged at iter {ka}");
+    }
+}
+
+/// τ = 0 parity extends to compressed gossip: the async payload ring
+/// carries the same per-row error-feedback chain as the synchronous
+/// stream state, so top-k and int8 trajectories match bit for bit.
+#[test]
+fn async_tau0_matches_sync_with_compression() {
+    for comp in [CompressorKind::TopK { frac: 0.25 }, CompressorKind::Int8] {
+        for algo in [AlgorithmKind::DSgd, AlgorithmKind::DmSgd] {
+            let sync = run(TopologyKind::OnePeerExp, algo, ExecutionMode::Sync, comp, None);
+            let asyn = run(
+                TopologyKind::OnePeerExp,
+                algo,
+                ExecutionMode::Async { tau: 0 },
+                comp,
+                None,
+            );
+            assert_same_trajectory(&sync, &asyn, &format!("{algo} {comp:?} async:0"));
+        }
+    }
+}
+
+/// On a clean network every node's clock advances in lockstep (uniform
+/// compute and link times, equal degrees), so even τ ≥ 1 never resolves
+/// a stale read — the trajectory is the synchronous one, bit for bit.
+/// Asynchrony only changes trajectories when the clock model makes
+/// someone actually late.
+#[test]
+fn async_clean_network_resolves_fresh_and_matches_sync() {
+    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+        let sync = run(
+            kind,
+            AlgorithmKind::DmSgd,
+            ExecutionMode::Sync,
+            CompressorKind::Identity,
+            Some(Scenario::clean()),
+        );
+        let asyn = run(
+            kind,
+            AlgorithmKind::DmSgd,
+            ExecutionMode::Async { tau: 2 },
+            CompressorKind::Identity,
+            Some(Scenario::clean()),
+        );
+        assert_same_trajectory(&sync, &asyn, &format!("{kind} clean async:2"));
+    }
+}
+
+/// Under a persistent straggler τ ≥ 1 actually reads stale versions —
+/// the trajectory diverges from sync — yet the run still converges, and
+/// the release-envelope clock never falls behind the synchronous one
+/// (the straggler sets both paces; async just stops charging it to
+/// everyone's critical path).
+#[test]
+fn async_staleness_converges_under_straggler() {
+    let sync = run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        ExecutionMode::Sync,
+        CompressorKind::Identity,
+        Some(Scenario::straggler()),
+    );
+    let asyn = run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        ExecutionMode::Async { tau: 2 },
+        CompressorKind::Identity,
+        Some(Scenario::straggler()),
+    );
+    assert!(asyn.loss.iter().all(|l| l.is_finite()), "async run produced non-finite loss");
+    let early: f64 = asyn.loss[..10].iter().sum::<f64>() / 10.0;
+    let late: f64 = asyn.loss[ITERS - 10..].iter().sum::<f64>() / 10.0;
+    assert!(late < early * 0.5, "async run failed to converge: {early} -> {late}");
+    assert!(
+        asyn.loss.iter().zip(sync.loss.iter()).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "straggler at tau=2 should force at least one stale read"
+    );
+    assert!(
+        asyn.sim_time <= sync.sim_time * 1.05,
+        "async clock {} fell behind sync {} under a straggler",
+        asyn.sim_time,
+        sync.sim_time
+    );
+    assert_eq!(asyn.round_times.len(), ITERS, "async emits one release increment per wave");
+}
+
+/// The clock dividend: under *transient* slowdowns (flaky nodes) the
+/// synchronous round pays whichever node is slow each round — a sum of
+/// per-round maxima — while the async release envelope is a max of
+/// per-node sums: a node slow this wave catches up next wave while its
+/// partners read one version stale instead of stalling. Strictly less
+/// simulated wall-clock for the same iteration count.
+#[test]
+fn async_beats_sync_clock_under_flaky_nodes() {
+    for tau in [1usize, 2] {
+        let sync = run(
+            TopologyKind::OnePeerExp,
+            AlgorithmKind::DmSgd,
+            ExecutionMode::Sync,
+            CompressorKind::Identity,
+            Some(Scenario::flaky()),
+        );
+        let asyn = run(
+            TopologyKind::OnePeerExp,
+            AlgorithmKind::DmSgd,
+            ExecutionMode::Async { tau },
+            CompressorKind::Identity,
+            Some(Scenario::flaky()),
+        );
+        assert!(asyn.loss.iter().all(|l| l.is_finite()), "tau={tau}: non-finite loss");
+        assert!(
+            asyn.sim_time < sync.sim_time,
+            "tau={tau}: async clock {} not faster than sync {} under flaky nodes",
+            asyn.sim_time,
+            sync.sim_time
+        );
+    }
+}
+
+/// Algorithms without an async gossip form are rejected up front, not
+/// silently run wrong.
+#[test]
+#[should_panic(expected = "no async gossip form")]
+fn async_rejects_algorithms_without_gossip_form() {
+    run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::ParallelSgd,
+        ExecutionMode::Async { tau: 1 },
+        CompressorKind::Identity,
+        None,
+    );
+}
+
+/// Fault-injecting scenarios (message drops, partitions) are out of the
+/// bounded-staleness model's scope — timing faults only.
+#[test]
+#[should_panic(expected = "timing faults only")]
+fn async_rejects_faulty_scenarios() {
+    run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::DmSgd,
+        ExecutionMode::Async { tau: 1 },
+        CompressorKind::Identity,
+        Some(Scenario::lossy()),
+    );
+}
+
+/// Two-phase algorithms ride the single-phase rejection too.
+#[test]
+#[should_panic(expected = "no async gossip form")]
+fn async_rejects_two_phase_algorithms() {
+    run(
+        TopologyKind::OnePeerExp,
+        AlgorithmKind::GradientTracking,
+        ExecutionMode::Async { tau: 1 },
+        CompressorKind::Identity,
+        None,
+    );
+}

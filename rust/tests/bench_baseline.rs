@@ -1,0 +1,178 @@
+//! The repo's bench trajectory, recorded **in tree**: despite the CI
+//! bench job, no `BENCH_*.json` had ever landed at the workspace root.
+//! This suite closes that gap honestly — for any missing artifact it
+//! records a *measured* reduced-protocol baseline (real timings from
+//! the same kernels the full benches drive; nothing is fabricated),
+//! tagged `"protocol": "baseline"` so a full `cargo bench`/CI run
+//! simply overwrites it with richer rows — and then validates that
+//! every artifact parses and carries a non-empty `results` array.
+
+use expograph::bench::{bench_config, black_box, output_path, BenchStats};
+use expograph::coordinator::trainer::{ExecutionMode, QuadraticProvider, TrainConfig, Trainer};
+use expograph::coordinator::StackedParams;
+use expograph::costmodel::CostModel;
+use expograph::engine::Engine;
+use expograph::netsim::{NetSim, Scenario};
+use expograph::optim::{AlgorithmKind, StepScratch};
+use expograph::topology::schedule::Schedule;
+use expograph::topology::TopologyKind;
+use expograph::util::json::Json;
+
+/// One full training iteration (grad + fused DmSGD step) on the
+/// persistent engine — the quantity `benches/bench_step.rs` tracks.
+fn baseline_step() -> String {
+    let (n, dim) = (64usize, 64usize);
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 1);
+    let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+    let engine = Engine::new(2);
+    let mut scratch = StepScratch::default();
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut losses = vec![0.0f64; n];
+    let mut k = 0usize;
+    let stats = bench_config("baseline step n=64", 2, 10, 256, 0.05, &mut || {
+        let plan = sched.plan_at(k);
+        engine.compute_grads(&provider, opt.params(), &mut grads, &mut losses, k, 7);
+        opt.step_engine(&engine, plan, &grads, 0.05, &mut scratch);
+        k += 1;
+    });
+    format!(
+        "{{\n  \"bench\": \"bench_step\",\n  \"protocol\": \"baseline\",\n  \
+         \"results\": [\n    {{\"n\": {n}, \"dim\": {dim}, \
+         \"engine_s_per_iter\": {:.9}}}\n  ]\n}}\n",
+        stats.median
+    )
+}
+
+/// The serial mixing kernel (`MixingPlan::mix_serial`) — the quantity
+/// `benches/bench_mixing.rs` tracks.
+fn baseline_mixing() -> String {
+    let (n, dim) = (256usize, 64usize);
+    let mut sched = Schedule::new(TopologyKind::StaticExp, n, 1);
+    let plan = sched.plan_at(0);
+    let input = StackedParams::replicate(n, &vec![1.0f32; dim]);
+    let mut out = StackedParams::zeros(n, dim);
+    let stats = bench_config("baseline mix n=256", 2, 10, 512, 0.05, &mut || {
+        plan.mix_serial(&input, &mut out);
+        black_box(out.data[0]);
+    });
+    format!(
+        "{{\n  \"bench\": \"bench_mixing\",\n  \"protocol\": \"baseline\",\n  \
+         \"kernel\": \"mix_serial\",\n  \"results\": [\n    {{\"n\": {n}, \"p\": {dim}, \
+         \"topology\": \"static_exp\", \"simd_s_per_iter\": {:.9}}}\n  ]\n}}\n",
+        stats.median
+    )
+}
+
+/// One simulated straggler round on the arena chain walk — the quantity
+/// `benches/bench_netsim.rs` tracks.
+fn baseline_netsim() -> String {
+    let n = 1024usize;
+    let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 1);
+    let cost = CostModel::paper_default(0.01);
+    let mut sim = NetSim::new(&cost, Scenario::straggler(), 1);
+    let mut k = 0usize;
+    let stats = bench_config("baseline netsim round n=1024", 2, 10, 512, 0.05, &mut || {
+        let plan = sched.plan_at(k);
+        black_box(sim.simulate_round(k, plan, 1024.0).iteration_time(cost.overlap));
+        k += 1;
+    });
+    format!(
+        "{{\n  \"bench\": \"bench_netsim\",\n  \"protocol\": \"baseline\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"results\": [\n    {{\"n\": {n}, \
+         \"scenario\": \"straggler\", \"rounds_per_sec\": {:.4}}}\n  ]\n}}\n",
+        1.0 / stats.median.max(f64::MIN_POSITIVE)
+    )
+}
+
+fn timed_run(n: usize, dim: usize, iters: usize, execution: ExecutionMode) -> (BenchStats, f64) {
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let mut dispatches = 0u64;
+    let stats = bench_config(
+        &format!("baseline {} n={n}", execution.label()),
+        1,
+        3,
+        32,
+        0.05,
+        &mut || {
+            let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, 1),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters,
+                    record_every: iters.max(1),
+                    seed: 7,
+                    execution,
+                    ..Default::default()
+                },
+            );
+            let hist = trainer.run();
+            dispatches = hist.dispatches;
+            black_box(hist.loss.last().copied());
+        },
+    );
+    (stats, dispatches as f64 / iters as f64)
+}
+
+/// Sync vs bounded-staleness executor throughput and dispatches/iter —
+/// the quantity `benches/bench_async.rs` tracks.
+fn baseline_async() -> String {
+    let (n, dim, iters) = (64usize, 64usize, 16usize);
+    let (sync, sync_dpi) = timed_run(n, dim, iters, ExecutionMode::Sync);
+    let (asyn, asyn_dpi) = timed_run(n, dim, iters, ExecutionMode::Async { tau: 2 });
+    format!(
+        "{{\n  \"bench\": \"bench_async\",\n  \"protocol\": \"baseline\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"tau\": 2,\n  \
+         \"results\": [\n    {{\"n\": {n}, \
+         \"sync_steps_per_sec\": {:.4}, \"async_steps_per_sec\": {:.4}, \
+         \"sync_dispatches_per_iter\": {sync_dpi:.4}, \
+         \"async_dispatches_per_iter\": {asyn_dpi:.4}}}\n  ]\n}}\n",
+        iters as f64 / sync.median.max(f64::MIN_POSITIVE),
+        iters as f64 / asyn.median.max(f64::MIN_POSITIVE),
+    )
+}
+
+/// Parse one artifact and check the shared schema every bench (and
+/// every baseline above) emits.
+fn validate(name: &str) {
+    let path = output_path(name);
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{} unreadable: {e}", path.display()));
+    let json =
+        Json::parse(&text).unwrap_or_else(|e| panic!("{name} does not parse as JSON: {e}"));
+    let bench = json
+        .get("bench")
+        .and_then(Json::as_str)
+        .unwrap_or_else(|| panic!("{name}: missing top-level \"bench\" string"));
+    assert!(!bench.is_empty(), "{name}: empty \"bench\" name");
+    let results = json
+        .get("results")
+        .and_then(Json::as_array)
+        .unwrap_or_else(|| panic!("{name}: missing top-level \"results\" array"));
+    assert!(!results.is_empty(), "{name}: empty \"results\" array");
+    for (i, row) in results.iter().enumerate() {
+        assert!(row.as_object().is_some(), "{name}: results[{i}] is not an object");
+    }
+}
+
+#[test]
+fn bench_trajectory_artifacts_recorded_and_valid() {
+    let artifacts: [(&str, fn() -> String); 4] = [
+        ("BENCH_step.json", baseline_step),
+        ("BENCH_mixing.json", baseline_mixing),
+        ("BENCH_netsim.json", baseline_netsim),
+        ("BENCH_async.json", baseline_async),
+    ];
+    for (name, record) in artifacts {
+        let path = output_path(name);
+        if !path.exists() {
+            let json = record();
+            std::fs::write(&path, json)
+                .unwrap_or_else(|e| panic!("could not record {}: {e}", path.display()));
+            println!("recorded baseline {}", path.display());
+        }
+        validate(name);
+    }
+}

@@ -215,6 +215,32 @@ fn spectral_reports_finite_time_family_period() {
 }
 
 #[test]
+fn train_with_async_config_round_trips_execution_mode() {
+    // The shipped bounded-staleness example config: execution=async:2
+    // from JSON, end-to-end through the async executor.
+    let cfg = format!("{}/configs/async_dmsgd.json", env!("CARGO_MANIFEST_DIR"));
+    let (stdout, stderr, ok) = run(&["train", "--config", &cfg, "iters=60"]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("final: loss"));
+    assert!(stdout.contains("execution: Async { tau: 2 }"), "{stdout}");
+
+    // A key=value override round-trips the mode back to sync.
+    let (stdout, stderr, ok) =
+        run(&["train", "--config", &cfg, "iters=60", "execution=sync"]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("execution: Sync"), "{stdout}");
+
+    // Unknown modes fail with the parse error, and the usage text
+    // advertises the key.
+    let (_, stderr, ok) = run(&["train", "execution=warp"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown execution mode"), "{stderr}");
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    assert!(stdout.contains("async:<staleness>"), "usage missing execution key\n{stdout}");
+}
+
+#[test]
 fn train_rejects_bad_key() {
     let (_, stderr, ok) = run(&["train", "flux_capacitor=1"]);
     assert!(!ok);

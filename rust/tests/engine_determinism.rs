@@ -6,8 +6,11 @@
 //! workers cannot change a single bit of the trajectory.
 
 use expograph::coordinator::schedule_lr::LrSchedule;
-use expograph::coordinator::trainer::{QuadraticProvider, TrainConfig, Trainer, TrainingHistory};
+use expograph::coordinator::trainer::{
+    ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
+};
 use expograph::costmodel::CostModel;
+use expograph::netsim::{NetSim, Scenario};
 use expograph::optim::AlgorithmKind;
 use expograph::topology::schedule::Schedule;
 use expograph::topology::TopologyKind;
@@ -33,8 +36,42 @@ fn run(kind: TopologyKind, algo: AlgorithmKind, lanes: usize) -> TrainingHistory
             seed: 19,
             msg_bytes: None,
             cost: Some(CostModel::paper_default(0.01)),
+            ..Default::default()
         },
     );
+    trainer.run()
+}
+
+/// Like `run`, but with an explicit execution mode and optional netsim
+/// (timing-only scenarios; the async executor rejects faulty ones).
+fn run_exec(
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    lanes: usize,
+    execution: ExecutionMode,
+    netsim: Option<NetSim>,
+) -> TrainingHistory {
+    let provider = QuadraticProvider::random(N, DIM, 0.2, 11);
+    let opt = algo.build(N, &vec![0.1; DIM], 0.9);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, N, 5),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: ITERS,
+            lr: LrSchedule::Const(0.05),
+            warmup_allreduce: true,
+            record_every: 10,
+            parallel_grads: false,
+            lanes: Some(lanes),
+            seed: 19,
+            msg_bytes: None,
+            cost: Some(CostModel::paper_default(0.01)),
+            execution,
+            ..Default::default()
+        },
+    );
+    trainer.netsim = netsim;
     trainer.run()
 }
 
@@ -120,6 +157,7 @@ fn parallel_grads_flag_matches_explicit_lane_pin() {
                 seed: 7,
                 msg_bytes: None,
                 cost: None,
+                ..Default::default()
             },
         );
         t.run()
@@ -129,4 +167,85 @@ fn parallel_grads_flag_matches_explicit_lane_pin() {
     let pinned = mk(false, Some(4));
     assert_bitwise_equal(&serial.loss, &auto.loss, "parallel_grads auto");
     assert_bitwise_equal(&serial.loss, &pinned.loss, "lanes=4");
+}
+
+/// The tentpole's τ = 0 contract: `execution = async:0` forces every
+/// gossip pull fresh and prices the round with the exact synchronous
+/// code, so the whole history — losses, consensus probes, learning-rate
+/// trace, simulated clock, per-round times — is **bitwise identical**
+/// to `execution = sync`.
+#[test]
+fn async_tau0_is_bitwise_identical_to_sync() {
+    for algo in [AlgorithmKind::DSgd, AlgorithmKind::DmSgd, AlgorithmKind::QgDmSgd] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+            let sync = run_exec(kind, algo, 2, ExecutionMode::Sync, None);
+            let asyn = run_exec(kind, algo, 2, ExecutionMode::Async { tau: 0 }, None);
+            let label = format!("{algo}/{kind} async:0");
+            assert_bitwise_equal(&sync.loss, &asyn.loss, &label);
+            assert_eq!(sync.consensus.len(), asyn.consensus.len(), "{label}: probe count");
+            for ((ka, a), (kb, b)) in sync.consensus.iter().zip(asyn.consensus.iter()) {
+                assert_eq!(ka, kb, "{label}: probe iteration");
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: consensus diverged at iter {ka}");
+            }
+            assert_eq!(sync.lr, asyn.lr, "{label}: lr trace");
+            assert_eq!(sync.sim_time.to_bits(), asyn.sim_time.to_bits(), "{label}: sim clock");
+            assert_bitwise_equal(&sync.round_times, &asyn.round_times, &label);
+            assert_bitwise_equal(&sync.round_bytes, &asyn.round_bytes, &label);
+        }
+    }
+}
+
+/// Same contract against an attached netsim: async:0 uses the netsim's
+/// `simulate_round` pricing verbatim, so the discrete-event clock also
+/// matches bit for bit.
+#[test]
+fn async_tau0_matches_sync_under_netsim() {
+    let cost = CostModel::paper_default(0.01);
+    for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+        let mk = |mode| {
+            run_exec(
+                kind,
+                AlgorithmKind::DmSgd,
+                3,
+                mode,
+                Some(NetSim::new(&cost, Scenario::straggler(), 9)),
+            )
+        };
+        let sync = mk(ExecutionMode::Sync);
+        let asyn = mk(ExecutionMode::Async { tau: 0 });
+        let label = format!("DmSgd/{kind} async:0 netsim");
+        assert_bitwise_equal(&sync.loss, &asyn.loss, &label);
+        assert_eq!(sync.sim_time.to_bits(), asyn.sim_time.to_bits(), "{label}: sim clock");
+        assert_bitwise_equal(&sync.round_times, &asyn.round_times, &label);
+    }
+}
+
+/// Bounded-staleness runs are deterministic too: a fixed (seed, τ)
+/// yields one trace, bitwise invariant to the lane count — staleness
+/// resolution is a serial pure function of the event clock, never of
+/// thread scheduling.
+#[test]
+fn async_traces_are_bitwise_lane_invariant() {
+    let cost = CostModel::paper_default(0.01);
+    let mk = |lanes| {
+        run_exec(
+            TopologyKind::OnePeerExp,
+            AlgorithmKind::DmSgd,
+            lanes,
+            ExecutionMode::Async { tau: 2 },
+            Some(NetSim::new(&cost, Scenario::flaky(), 9)),
+        )
+    };
+    let base = mk(1);
+    assert!(base.loss.iter().all(|l| l.is_finite()), "async:2 produced non-finite loss");
+    for lanes in [2usize, 3, 7] {
+        let pooled = mk(lanes);
+        let label = format!("async:2 lanes={lanes}");
+        assert_bitwise_equal(&base.loss, &pooled.loss, &label);
+        assert_bitwise_equal(&base.round_times, &pooled.round_times, &label);
+        for ((ka, a), (kb, b)) in base.consensus.iter().zip(pooled.consensus.iter()) {
+            assert_eq!(ka, kb, "{label}: probe iteration");
+            assert_eq!(a.to_bits(), b.to_bits(), "{label}: consensus diverged at iter {ka}");
+        }
+    }
 }

@@ -93,6 +93,7 @@ fn quad_run(
             seed: 5,
             msg_bytes: Some(1e8),
             cost,
+            ..Default::default()
         },
     );
     trainer.netsim = netsim;
@@ -187,6 +188,7 @@ fn lossy_run_degrades_plans_and_diverges() {
             seed: 5,
             msg_bytes: Some(1e8),
             cost: None,
+            ..Default::default()
         },
     )
     .with_netsim(NetSim::new(&cost, Scenario::lossy(), 9));

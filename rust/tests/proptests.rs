@@ -365,6 +365,7 @@ fn prop_netsim_trace_and_degraded_plans_lane_invariant() {
                     seed: 7,
                     msg_bytes: Some(1e7),
                     cost: None,
+                    ..Default::default()
                 },
             )
             .with_netsim(NetSim::new(&CostModel::paper_default(0.05), scen, sim_seed).recording());
