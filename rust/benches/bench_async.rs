@@ -2,10 +2,13 @@
 //! (docs/DESIGN.md §Async runtime) on the one-peer exponential schedule
 //! with DmSGD at n ∈ {64, 1024, 4096}.
 //!
-//! Two quantities per mode:
+//! Three quantities per size:
 //!   * real throughput (steps/sec) and engine dispatches per iteration —
 //!     the barrier-crossing count the async wave model is designed to
 //!     keep at two;
+//!   * the serial-wave reference vs the out-of-order ready-batch
+//!     executor (`exec=waves` vs `exec=ooo`) under a straggler clock —
+//!     throughput plus the dispatch economy (2/wave vs amortized O(1));
 //!   * the simulated clock under a flaky-node scenario — the staleness
 //!     dividend (sync pays a sum of per-round maxima, async a max of
 //!     per-node sums over the gate window).
@@ -13,7 +16,9 @@
 //! Results are emitted to `BENCH_async.json` for the perf trajectory.
 
 use expograph::bench::{bench_config, black_box, quiet, write_json, BenchStats};
-use expograph::coordinator::trainer::{ExecutionMode, QuadraticProvider, TrainConfig, Trainer};
+use expograph::coordinator::trainer::{
+    AsyncExec, ExecutionMode, QuadraticProvider, TrainConfig, Trainer,
+};
 use expograph::costmodel::CostModel;
 use expograph::netsim::{NetSim, Scenario};
 use expograph::optim::AlgorithmKind;
@@ -51,6 +56,50 @@ fn bench_mode(
                     ..Default::default()
                 },
             );
+            let hist = trainer.run();
+            dispatches = hist.dispatches;
+            black_box(hist.loss.last().copied());
+        },
+    );
+    (stats, dispatches as f64 / iters as f64)
+}
+
+/// Serial-wave reference vs out-of-order ready-batch executor at the
+/// same (n, τ) under a straggler clock: real throughput plus the
+/// dispatch economy (waves pays 2 engine dispatches per wave; the
+/// ready-batch loop amortizes to 1 + 1/iters per run).
+fn bench_exec(
+    n: usize,
+    dim: usize,
+    iters: usize,
+    tau: usize,
+    async_exec: AsyncExec,
+) -> (BenchStats, f64) {
+    let provider = QuadraticProvider::shared(n, dim, 0.0, 3);
+    let cost = CostModel::paper_default(0.01);
+    let mut dispatches = 0u64;
+    let stats = bench_config(
+        &format!("{async_exec:<5} n={n} tau={tau} straggler ({iters} iters/run)"),
+        1,
+        3,
+        16,
+        0.1,
+        &mut || {
+            let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+            let mut trainer = Trainer::new(
+                Schedule::new(TopologyKind::OnePeerExp, n, 1),
+                opt,
+                &provider,
+                TrainConfig {
+                    iters,
+                    record_every: iters.max(1),
+                    seed: 7,
+                    execution: ExecutionMode::Async { tau },
+                    async_exec,
+                    ..Default::default()
+                },
+            )
+            .with_netsim(NetSim::new(&cost, Scenario::straggler(), 7));
             let hist = trainer.run();
             dispatches = hist.dispatches;
             black_box(hist.loss.last().copied());
@@ -98,13 +147,30 @@ fn main() {
         let asyn_sps = iters as f64 / asyn.median.max(f64::MIN_POSITIVE);
         println!(
             "  -> n={n}: sync {sync_sps:.1} steps/s @ {sync_dpi:.2} dispatches/iter, \
-             async:2 {asyn_sps:.1} steps/s @ {asyn_dpi:.2} dispatches/iter\n"
+             async:2 {asyn_sps:.1} steps/s @ {asyn_dpi:.2} dispatches/iter"
+        );
+        // Serial-wave reference vs the out-of-order ready-batch
+        // executor under a straggler clock: the dispatch economy the
+        // queue mode buys (2/wave -> amortized O(1) per ready batch).
+        let (waves, waves_dpi) = bench_exec(n, dim, iters, 2, AsyncExec::Waves);
+        let (ooo, ooo_dpi) = bench_exec(n, dim, iters, 2, AsyncExec::Ooo);
+        println!("{}", waves.report());
+        println!("{}", ooo.report());
+        let waves_sps = iters as f64 / waves.median.max(f64::MIN_POSITIVE);
+        let ooo_sps = iters as f64 / ooo.median.max(f64::MIN_POSITIVE);
+        println!(
+            "  -> n={n} straggler: waves {waves_sps:.1} steps/s @ {waves_dpi:.2} \
+             dispatches/iter, ooo {ooo_sps:.1} steps/s @ {ooo_dpi:.2} dispatches/iter\n"
         );
         rows_json.push(format!(
             "    {{\"n\": {n}, \"sync_steps_per_sec\": {sync_sps:.4}, \
              \"async_steps_per_sec\": {asyn_sps:.4}, \
              \"sync_dispatches_per_iter\": {sync_dpi:.4}, \
-             \"async_dispatches_per_iter\": {asyn_dpi:.4}}}"
+             \"async_dispatches_per_iter\": {asyn_dpi:.4}, \
+             \"waves_steps_per_sec\": {waves_sps:.4}, \
+             \"ooo_steps_per_sec\": {ooo_sps:.4}, \
+             \"waves_dispatches_per_iter\": {waves_dpi:.4}, \
+             \"ooo_dispatches_per_iter\": {ooo_dpi:.4}}}"
         ));
     }
 

@@ -18,7 +18,7 @@
 //! ```
 
 use crate::compress::CompressorKind;
-use crate::coordinator::ExecutionMode;
+use crate::coordinator::{AsyncExec, ExecutionMode};
 use crate::optim::AlgorithmKind;
 use crate::topology::{family, Topology, TopologyKind};
 use crate::util::json::Json;
@@ -59,14 +59,26 @@ pub const MAX_STALENESS: usize = 4096;
 /// Parse an execution mode (`sync` or `async:<τ>`, τ ≤
 /// [`MAX_STALENESS`]) with a config-surface error message.
 pub fn parse_execution(s: &str) -> Result<ExecutionMode> {
-    let mode = ExecutionMode::parse(s)
-        .ok_or_else(|| anyhow!("unknown execution mode {s} (sync | async:<staleness>)"))?;
+    let mode = ExecutionMode::parse(s).ok_or_else(|| {
+        anyhow!(
+            "unknown execution mode {s} (sync | async:<staleness>; \
+             pick the async executor with exec=waves|ooo)"
+        )
+    })?;
     if let ExecutionMode::Async { tau } = mode {
         if tau > MAX_STALENESS {
             bail!("async staleness {tau} exceeds the limit ({MAX_STALENESS})");
         }
     }
     Ok(mode)
+}
+
+/// Parse an async executor variant (`waves` or `ooo`) with a
+/// config-surface error message.
+pub fn parse_async_exec(s: &str) -> Result<AsyncExec> {
+    AsyncExec::parse(s).ok_or_else(|| {
+        anyhow!("unknown async executor {s} (waves | ooo — out-of-order ready batches)")
+    })
 }
 
 /// Parse an on/off-style boolean (`on|off|true|false|1|0`).
@@ -116,6 +128,11 @@ pub struct RunConfig {
     /// `"async:<τ>"` (bounded-staleness gossip — docs/DESIGN.md §Async
     /// runtime). `async:0` is bitwise identical to `sync`.
     pub execution: ExecutionMode,
+    /// Async executor variant: `"ooo"` (out-of-order ready batches,
+    /// default) or `"waves"` (the serial-wave reference — the escape
+    /// hatch mirroring `fused_probe`). Both are bitwise identical;
+    /// ignored under `execution=sync`.
+    pub exec: AsyncExec,
 }
 
 impl Default for RunConfig {
@@ -132,6 +149,7 @@ impl Default for RunConfig {
             warmup_allreduce: true,
             seed: 1,
             execution: ExecutionMode::Sync,
+            exec: AsyncExec::Ooo,
         }
     }
 }
@@ -165,6 +183,10 @@ impl RunConfig {
                 "execution" => {
                     let s = val.as_str().context("execution")?;
                     cfg.execution = parse_execution(s)?;
+                }
+                "exec" => {
+                    let s = val.as_str().context("exec")?;
+                    cfg.exec = parse_async_exec(s)?;
                 }
                 other => bail!("unknown config key: {other}"),
             }
@@ -209,6 +231,7 @@ impl RunConfig {
                     .ok_or_else(|| anyhow!("unknown algorithm {value}"))?
             }
             "execution" => self.execution = parse_execution(value)?,
+            "exec" => self.exec = parse_async_exec(value)?,
             other => bail!("unknown config key: {other}"),
         }
         Ok(())
@@ -561,6 +584,28 @@ mod tests {
                 .unwrap_err()
                 .to_string();
         assert!(err.contains("staleness"), "{err}");
+        // The parse error names the executor sub-knob.
+        let err = cfg.set("execution", "warp").unwrap_err().to_string();
+        assert!(err.contains("exec=waves|ooo"), "{err}");
+    }
+
+    #[test]
+    fn async_exec_round_trips_through_config_surfaces() {
+        // JSON key.
+        let doc = Json::parse(r#"{"nodes": 8, "exec": "waves"}"#).unwrap();
+        let cfg = RunConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.exec, AsyncExec::Waves);
+        // Absent key keeps the out-of-order default.
+        assert_eq!(RunConfig::default().exec, AsyncExec::Ooo);
+        // CLI override, including the label() round trip.
+        let mut cfg = RunConfig::default();
+        cfg.set("exec", "waves").unwrap();
+        assert_eq!(cfg.exec, AsyncExec::Waves);
+        cfg.set("exec", AsyncExec::Ooo.label()).unwrap();
+        assert_eq!(cfg.exec, AsyncExec::Ooo);
+        // Rejections name both accepted values.
+        let err = cfg.set("exec", "eager").unwrap_err().to_string();
+        assert!(err.contains("waves") && err.contains("ooo"), "{err}");
     }
 
     #[test]

@@ -1,30 +1,56 @@
-//! Bounded-staleness asynchronous gossip executor
+//! Bounded-staleness asynchronous gossip executors
 //! (docs/DESIGN.md §Async runtime).
 //!
 //! `execution = async:<τ>` replaces the bulk-synchronous round with a
-//! **serial-wave** event model: every node still executes step `k`
-//! during wave `k`, but each node advances on its own simulated clock —
-//! netsim's deterministic hash-derived compute/link times decide *when*
-//! a node's wave-`k` payload commits, and a node gossip-pulls whichever
+//! wave model: every node still executes step `k` during wave `k`, but
+//! each node advances on its own simulated clock — netsim's
+//! deterministic hash-derived compute/link times decide *when* a node's
+//! wave-`k` payload commits, and a node gossip-pulls whichever
 //! committed payload **version** of each partner is ready when its own
 //! clock gets there, at most `τ` iterations behind. Asynchrony
 //! therefore lives in two places only:
 //!
-//! * the **clock** — a node never waits for the global slowest node,
-//!   only for version `k − τ` of its partners (the staleness floor) and
-//!   for the fleet to have released wave `k − τ − 1` (the progress
-//!   gate); `sim_time` is the release envelope, not a sum of global
-//!   barriers, which is where straggler resilience shows up;
+//! * the **clock** ([`WaveClock`]) — a node never waits for the global
+//!   slowest node, only for version `k − τ` of its partners (the
+//!   staleness floor) and for the fleet to have released wave
+//!   `k − τ − 1` (the progress gate); `sim_time` is the release
+//!   envelope, not a sum of global barriers, which is where straggler
+//!   resilience shows up;
 //! * the **resolved versions** — the per-`(reader, partner)` payload
 //!   version fed to the mixing fold.
 //!
-//! Numerically, a wave is two engine dispatches — (A) gradients fused
-//! with payload staging into a `τ + 2`-slot version ring, (B) the
-//! pull-based mix [`Optimizer::step_shard_async`] — plus the ordinary
-//! serial `commit`. All kernels are row-local with fixed fold order and
-//! every timing/resolution decision is a pure function of
-//! `(seed, iter, endpoints)`, so async runs are reproducible and
-//! bitwise lane-count-invariant, like every other subsystem.
+//! Two executors drive the numerics, selected by
+//! [`TrainConfig::async_exec`](super::trainer::TrainConfig::async_exec):
+//!
+//! * [`run_waves_reference`] (`exec=waves`) — the serial-wave
+//!   reference: wave `k` is two engine broadcast dispatches — (A)
+//!   gradients fused with payload staging into the version ring, (B)
+//!   the pull-based mix [`Optimizer::step_shard_async`] — plus the
+//!   ordinary serial `commit`. Simple, and the pinning oracle.
+//! * [`run_ready_batches`] (`exec=ooo`, default) — the out-of-order
+//!   executor: the same wave is split into per-node tasks
+//!   `A(i, w)` (gradient + stage + publish) and `B(i, w)` (pull-mix +
+//!   commit in place), threaded through the engine's persistent
+//!   [`WorkQueue`]. A task unlocks the moment its *own* inputs exist —
+//!   `A(i, w)` after `B(i, w − 1)`, `B(i, w)` after `A(i, w)` and
+//!   `A(j, v)` for each resolved partner version `v` — so a fast node
+//!   runs up to `τ + 1` waves ahead of a straggler instead of parking
+//!   on a fleet-wide barrier. Engine dispatches collapse from two
+//!   barrier crossings per wave to **amortized O(1) per ready batch**:
+//!   one queue session for the whole run plus at most one
+//!   [`Engine::submit_batch`] per wave created (follow-on tasks ride
+//!   the completion pushes for free), i.e. dispatches/iter
+//!   ≤ 1 + 1/iters — strictly below 2 (pinned by `tests/async_exec.rs`
+//!   and tracked in `BENCH_async.json`).
+//!
+//! **Determinism.** Both executors are bitwise identical for any lane
+//! count and to each other (pinned by `tests/engine_determinism.rs`):
+//! the freshest-ready down-scan with the `k − τ` floor is a pure
+//! function of `(seed, iter, endpoints)` and is resolved *serially* by
+//! the coordinator in [`WaveClock::advance`] before any task of the
+//! wave is created, so the out-of-order schedule decides only *when*
+//! a row kernel runs, never *what* it reads — every task consumes
+//! exactly the version indices the serial reference would.
 //!
 //! At `τ = 0` every resolution is forced fresh and the round is priced
 //! by the exact synchronous code (netsim `simulate_round` or the
@@ -34,16 +60,20 @@
 //! Scope: single-phase algorithms with an async gossip form
 //! ([`Optimizer::async_streams`] > 0) and timing-only (faultless)
 //! scenarios; anything else is rejected with a clear panic. With τ ≥ 1
-//! an attached netsim is used as the timing oracle only — its round
-//! counters do not advance.
+//! an attached netsim is used as the timing oracle only
+//! ([`NetSim::ready_oracle`]) — its round counters do not advance.
+
+use std::cell::UnsafeCell;
+use std::sync::Mutex;
 
 use super::state::StackedParams;
-use super::trainer::{Trainer, TrainingHistory};
+use super::trainer::{AsyncExec, TrainConfig, Trainer, TrainingHistory};
 use crate::compress::{stream_seed, Compressor};
 use crate::costmodel::CostModel;
-use crate::engine::{auto_lanes, shard_range, Engine, Lanes};
+use crate::engine::{auto_lanes, shard_range, Engine, Lanes, QueueTask, RowTable, WorkQueue};
 use crate::netsim::{NetSim, Scenario};
 use crate::optim::{Optimizer, StepScratch};
+use crate::topology::plan::MixingPlan;
 
 /// Borrow ring slot `cur` mutably and slot `prev` immutably out of one
 /// stream's version ring (slot-major, `nd` elements per slot).
@@ -58,15 +88,32 @@ fn split_ring_slot(ring: &mut [f32], cur: usize, prev: usize, nd: usize) -> (&mu
     }
 }
 
-/// Drive one full training run in bounded-staleness mode. Called by
-/// [`Trainer::run_with`] when `cfg.execution = Async { tau }`.
-pub(crate) fn run_async(
-    tr: &mut Trainer<'_>,
+/// Everything both executors share: the validated run parameters, the
+/// compression chain, the engine pool, and the timing oracle. Building
+/// it also performs the optional warm-up all-reduce — state after
+/// `setup` is "wave 0 may start".
+struct Setup {
+    streams: usize,
+    gossip_bytes: f64,
+    comp: Option<Box<dyn Compressor>>,
+    gamma: f32,
+    sseeds: Vec<u64>,
+    engine: Engine,
+    /// Internal clean-scenario oracle for τ ≥ 1 runs without an
+    /// attached netsim (ordering only — see `emit_times`).
+    owned_oracle: Option<NetSim>,
+    /// Emit `sim_time`/`round_times`/`round_bytes` — true iff a netsim
+    /// or cost model was actually supplied, matching the sync path.
+    emit_times: bool,
+}
+
+fn setup(
+    optimizer: &mut Box<dyn Optimizer>,
+    provider: &dyn super::trainer::GradProvider,
+    cfg: &TrainConfig,
+    netsim: &Option<NetSim>,
     tau: usize,
-    probe: &mut dyn FnMut(usize, &StackedParams),
-) -> TrainingHistory {
-    let Trainer { topology, optimizer, provider, cfg, netsim } = tr;
-    let provider = *provider;
+) -> Setup {
     let n = provider.nodes();
     let dim = provider.dim();
     assert_eq!(optimizer.params().n, n, "optimizer/provider node mismatch");
@@ -109,7 +156,6 @@ pub(crate) fn run_async(
         }
     });
     let engine = Engine::new(lanes.clamp(1, n.max(1)));
-    let lanes_n = engine.lanes();
 
     if cfg.warmup_allreduce {
         optimizer.params_mut().allreduce();
@@ -127,6 +173,195 @@ pub(crate) fn run_async(
         None
     };
     let emit_times = netsim.is_some() || cfg.cost.is_some();
+
+    Setup { streams, gossip_bytes, comp, gamma, sseeds, engine, owned_oracle, emit_times }
+}
+
+/// The serial event clock: per-node chain clocks, the per-version
+/// ready-time ring, the fleet release envelope, and the per-wave
+/// resolved versions. [`WaveClock::advance`] is the *only* place
+/// staleness is resolved — both executors call it from their (serial)
+/// coordinator, so resolved versions are a pure function of
+/// `(seed, wave)` regardless of how tasks are later scheduled.
+struct WaveClock {
+    tau: usize,
+    n: usize,
+    /// Ready-ring slots: `τ + 2` (wave `k` writes slot `k mod cs` while
+    /// reading the `τ + 1` versions in `[k − τ, k]`).
+    cs: usize,
+    clock: Vec<f64>,
+    start_of: Vec<f64>,
+    t_comp: Vec<f64>,
+    ready: Vec<f64>,
+    release_hist: Vec<f64>,
+    /// CSR offsets of `res_ver`, aligned with `plan.partners(u)`
+    /// (ascending — the mix closure binary-searches).
+    res_off: Vec<usize>,
+    /// Resolved payload **versions** (wave indices, not ring slots — the
+    /// executor maps them onto its own ring size).
+    res_ver: Vec<u32>,
+}
+
+impl WaveClock {
+    fn new(tau: usize, n: usize, iters: usize) -> WaveClock {
+        let cs = tau + 2;
+        WaveClock {
+            tau,
+            n,
+            cs,
+            clock: vec![0.0; n],
+            start_of: vec![0.0; n],
+            t_comp: vec![0.0; n],
+            ready: vec![0.0; n * cs],
+            release_hist: Vec::with_capacity(iters),
+            res_off: vec![0; n + 1],
+            res_ver: Vec::new(),
+        }
+    }
+
+    /// Resolve wave `k`: fill `res_off`/`res_ver` with the freshest
+    /// ready version of each `(reader, partner)` pair and price the
+    /// round into `history`. At `τ = 0` pricing is the exact
+    /// synchronous code (so `async:0` == sync bit for bit); at `τ ≥ 1`
+    /// the round time is the growth of the fleet release envelope.
+    #[allow(clippy::too_many_arguments)]
+    fn advance(
+        &mut self,
+        k: usize,
+        plan: &MixingPlan,
+        netsim: &mut Option<NetSim>,
+        owned_oracle: &Option<NetSim>,
+        cost: &Option<CostModel>,
+        gossip_bytes: f64,
+        emit_times: bool,
+        history: &mut TrainingHistory,
+    ) {
+        let (n, tau, cs) = (self.n, self.tau, self.cs);
+        self.res_ver.clear();
+        if tau == 0 {
+            // Degenerate staleness: every read is fresh. Pricing is the
+            // exact synchronous code, so async:0 == sync bit for bit.
+            for u in 0..n {
+                for _ in plan.partners(u) {
+                    self.res_ver.push(k as u32);
+                }
+                self.res_off[u + 1] = self.res_ver.len();
+            }
+            if let Some(sim) = netsim.as_mut() {
+                let outcome = sim.simulate_round(k, plan, gossip_bytes);
+                let overlap = sim.cost.overlap;
+                let t = outcome.iteration_time(overlap);
+                history.sim_time += t;
+                history.round_times.push(t);
+                history.round_bytes.push(outcome.bytes_on_wire);
+            } else if let Some(cost) = cost {
+                let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
+                let comm = cost.partial_averaging_time(plan, gossip_bytes);
+                let bytes = slots as f64 * gossip_bytes;
+                let hidden = cost.compute.min(comm) * cost.overlap;
+                let t = cost.compute + comm - hidden;
+                history.sim_time += t;
+                history.round_times.push(t);
+                history.round_bytes.push(bytes);
+            }
+            return;
+        }
+        let oracle = netsim
+            .as_ref()
+            .or(owned_oracle.as_ref())
+            .expect("async timing oracle")
+            .ready_oracle();
+        let overlap = oracle.overlap();
+        // Progress gate: wave k may start only once every node has
+        // finished wave k − τ − 1 (bounded staleness is two-sided —
+        // no node runs ahead of the floor it must serve).
+        let gate = if k > tau { self.release_hist[k - tau - 1] } else { 0.0 };
+        for u in 0..n {
+            let start = self.clock[u].max(gate);
+            self.start_of[u] = start;
+            let tc = oracle.compute_done(k, u, n, start);
+            self.t_comp[u] = tc;
+            self.ready[u * cs + k % cs] = tc;
+        }
+        let lo = k.saturating_sub(tau);
+        let prev_release = self.release_hist.last().copied().unwrap_or(0.0);
+        let mut release = prev_release;
+        for u in 0..n {
+            let mut t = self.t_comp[u];
+            for &v in plan.partners(u) {
+                let v = v as usize;
+                // Newest version in [k − τ, k] already committed by
+                // v when u's chain clock gets there; if even the
+                // floor is not ready, u blocks until it is.
+                let mut chosen = usize::MAX;
+                let mut j = k;
+                loop {
+                    if self.ready[v * cs + j % cs] <= t {
+                        chosen = j;
+                        break;
+                    }
+                    if j == lo {
+                        break;
+                    }
+                    j -= 1;
+                }
+                let slot_start = if chosen == usize::MAX {
+                    chosen = lo;
+                    t.max(self.ready[v * cs + lo % cs])
+                } else {
+                    t
+                };
+                t = oracle.pull_done(k, u, v, slot_start, gossip_bytes);
+                self.res_ver.push(chosen as u32);
+            }
+            self.res_off[u + 1] = self.res_ver.len();
+            let comp_t = self.t_comp[u] - self.start_of[u];
+            let comm_t = t - self.t_comp[u];
+            let hidden = comp_t.min(comm_t) * overlap;
+            let finish = self.start_of[u] + comp_t + comm_t - hidden;
+            self.clock[u] = finish;
+            release = release.max(finish);
+        }
+        self.release_hist.push(release);
+        if emit_times {
+            let rt = release - prev_release;
+            history.sim_time += rt;
+            history.round_times.push(rt);
+            let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
+            history.round_bytes.push(slots as f64 * gossip_bytes);
+        }
+    }
+}
+
+/// Drive one full training run in bounded-staleness mode. Called by
+/// [`Trainer::run_with`] when `cfg.execution = Async { tau }`; picks
+/// the executor from `cfg.async_exec`.
+pub(crate) fn run_async(
+    tr: &mut Trainer<'_>,
+    tau: usize,
+    probe: &mut dyn FnMut(usize, &StackedParams),
+) -> TrainingHistory {
+    match tr.cfg.async_exec {
+        AsyncExec::Waves => run_waves_reference(tr, tau, probe),
+        AsyncExec::Ooo => run_ready_batches(tr, tau, probe),
+    }
+}
+
+/// The serial-wave reference executor (`exec=waves`): two engine
+/// broadcast dispatches per wave, fleet-wide. Kept as the escape hatch
+/// and the pinning oracle for [`run_ready_batches`].
+fn run_waves_reference(
+    tr: &mut Trainer<'_>,
+    tau: usize,
+    probe: &mut dyn FnMut(usize, &StackedParams),
+) -> TrainingHistory {
+    let Trainer { topology, optimizer, provider, cfg, netsim } = tr;
+    let provider = *provider;
+    let n = provider.nodes();
+    let dim = provider.dim();
+    let Setup { streams, gossip_bytes, comp, gamma, sseeds, engine, owned_oracle, emit_times } =
+        setup(optimizer, provider, cfg, netsim, tau);
+    let lanes_n = engine.lanes();
 
     // The payload version ring: `S = τ + 2` slots per stream, slot-major
     // `[slot][node][dim]`, slot = version mod S. Wave k reads versions
@@ -147,17 +382,7 @@ pub(crate) fn run_async(
     let mut losses = vec![0.0f64; n];
     let mut scratch = StepScratch::default();
     let mut history = TrainingHistory::default();
-
-    // Event-clock state (τ ≥ 1 only).
-    let mut clock = vec![0.0f64; n];
-    let mut start_of = vec![0.0f64; n];
-    let mut t_comp = vec![0.0f64; n];
-    let mut ready = vec![0.0f64; n * s_slots];
-    let mut release_hist: Vec<f64> = Vec::with_capacity(cfg.iters);
-    // Per-wave resolved version slots, CSR-aligned with
-    // `plan.partners(u)` (ascending — the mix closure binary-searches).
-    let mut res_off = vec![0usize; n + 1];
-    let mut res_slot: Vec<u32> = Vec::new();
+    let mut clock = WaveClock::new(tau, n, cfg.iters);
 
     for k in 0..cfg.iters {
         let lr = cfg.lr.at(k);
@@ -224,96 +449,16 @@ pub(crate) fn run_async(
 
         // ---- Serial: event clock + per-(reader, partner) version
         // resolution, and round pricing.
-        res_slot.clear();
-        if tau == 0 {
-            // Degenerate staleness: every read is fresh. Pricing is the
-            // exact synchronous code, so async:0 == sync bit for bit.
-            for u in 0..n {
-                for _ in plan.partners(u) {
-                    res_slot.push(cur as u32);
-                }
-                res_off[u + 1] = res_slot.len();
-            }
-            if let Some(sim) = netsim.as_mut() {
-                let outcome = sim.simulate_round(k, plan, gossip_bytes);
-                let overlap = sim.cost.overlap;
-                let t = outcome.iteration_time(overlap);
-                history.sim_time += t;
-                history.round_times.push(t);
-                history.round_bytes.push(outcome.bytes_on_wire);
-            } else if let Some(cost) = &cfg.cost {
-                let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
-                let comm = cost.partial_averaging_time(plan, gossip_bytes);
-                let bytes = slots as f64 * gossip_bytes;
-                let hidden = cost.compute.min(comm) * cost.overlap;
-                let t = cost.compute + comm - hidden;
-                history.sim_time += t;
-                history.round_times.push(t);
-                history.round_bytes.push(bytes);
-            }
-        } else {
-            let oracle: &NetSim =
-                netsim.as_ref().or(owned_oracle.as_ref()).expect("async timing oracle");
-            let overlap = oracle.cost.overlap;
-            // Progress gate: wave k may start only once every node has
-            // finished wave k − τ − 1 (bounded staleness is two-sided —
-            // no node runs ahead of the floor it must serve).
-            let gate = if k > tau { release_hist[k - tau - 1] } else { 0.0 };
-            for u in 0..n {
-                let start = clock[u].max(gate);
-                start_of[u] = start;
-                let tc = start + oracle.compute_time(k, u, n);
-                t_comp[u] = tc;
-                ready[u * s_slots + cur] = tc;
-            }
-            let lo = k.saturating_sub(tau);
-            let prev_release = release_hist.last().copied().unwrap_or(0.0);
-            let mut release = prev_release;
-            for u in 0..n {
-                let mut t = t_comp[u];
-                for &v in plan.partners(u) {
-                    let v = v as usize;
-                    // Newest version in [k − τ, k] already committed by
-                    // v when u's chain clock gets there; if even the
-                    // floor is not ready, u blocks until it is.
-                    let mut chosen = usize::MAX;
-                    let mut j = k;
-                    loop {
-                        if ready[v * s_slots + j % s_slots] <= t {
-                            chosen = j;
-                            break;
-                        }
-                        if j == lo {
-                            break;
-                        }
-                        j -= 1;
-                    }
-                    let slot_start = if chosen == usize::MAX {
-                        chosen = lo;
-                        t.max(ready[v * s_slots + lo % s_slots])
-                    } else {
-                        t
-                    };
-                    t = slot_start + oracle.slot_time(k, u, v, gossip_bytes);
-                    res_slot.push((chosen % s_slots) as u32);
-                }
-                res_off[u + 1] = res_slot.len();
-                let comp_t = t_comp[u] - start_of[u];
-                let comm_t = t - t_comp[u];
-                let hidden = comp_t.min(comm_t) * overlap;
-                let finish = start_of[u] + comp_t + comm_t - hidden;
-                clock[u] = finish;
-                release = release.max(finish);
-            }
-            release_hist.push(release);
-            if emit_times {
-                let rt = release - prev_release;
-                history.sim_time += rt;
-                history.round_times.push(rt);
-                let slots: usize = (0..n).map(|u| plan.partners(u).len()).sum();
-                history.round_bytes.push(slots as f64 * gossip_bytes);
-            }
-        }
+        clock.advance(
+            k,
+            plan,
+            netsim,
+            &owned_oracle,
+            &cfg.cost,
+            gossip_bytes,
+            emit_times,
+            &mut history,
+        );
 
         // ---- Dispatch B: the pull-based mix. Every payload element is
         // read through the resolved-version closure; rows land in the
@@ -325,8 +470,8 @@ pub(crate) fn run_async(
             let opt: &dyn Optimizer = &**optimizer;
             let ring_views: Vec<&[f32]> = rings.iter().map(|r| &r[..]).collect();
             let praw_views: Vec<&[f32]> = praw.iter().map(|p| &p[..]).collect();
-            let res_off_ref = &res_off;
-            let res_slot_ref = &res_slot;
+            let res_off_ref = &clock.res_off;
+            let res_ver_ref = &clock.res_ver;
             let src = |i: usize, s: usize, j: usize, e: usize| -> f32 {
                 let slot = if j == i {
                     cur
@@ -337,7 +482,7 @@ pub(crate) fn run_async(
                         pos < ps.len() && ps[pos] as usize == j,
                         "mix column {j} not among partners of {i}"
                     );
-                    res_slot_ref[res_off_ref[i] + pos] as usize
+                    res_ver_ref[res_off_ref[i] + pos] as usize % s_slots
                 };
                 ring_views[s][slot * nd + j * dim + e]
             };
@@ -364,5 +509,407 @@ pub(crate) fn run_async(
         }
     }
     history.dispatches = engine.dispatches();
+    history
+}
+
+/// Interior-mutable cell for the wave-slot ring: the coordinator fills
+/// slot `w mod W` strictly before registering wave `w` (at which point
+/// no task of waves `w − W` and earlier is live — finalize waited for
+/// them — and no task of wave `w` exists yet), and tasks only read it.
+struct SlotCell<T>(UnsafeCell<T>);
+
+// Safety: accesses are ordered by the DAG/queue mutexes — the slot is
+// never written while a reader is live (see struct docs).
+unsafe impl<T: Send> Sync for SlotCell<T> {}
+
+/// Per-wave immutable inputs, published to tasks through the slot ring:
+/// the mixing plan, the serially-resolved partner versions (CSR over
+/// `plan.partners`), the learning rate, and the record flag.
+struct WaveSlot {
+    plan: MixingPlan,
+    res_off: Vec<usize>,
+    res_ver: Vec<u32>,
+    lr: f32,
+    record: bool,
+}
+
+/// A pending wake-up: reader `reader`'s `B(reader, wave)` needs
+/// publisher version `needed` (i.e. `A(publisher, needed)` complete).
+struct Awaiter {
+    reader: u32,
+    wave: u32,
+    needed: u32,
+}
+
+/// The ready-set dependency tracker. All transitions run under one
+/// mutex, which both linearizes the single-push invariant (exactly one
+/// of `register_wave`/`complete_b` enqueues a given `A`, exactly one
+/// `complete_a` enqueues a given `B`) and provides the happens-before
+/// edges that make the [`RowTable`] row hand-offs sound.
+///
+/// Unlock rules:
+/// * `A(i, w)` — ready when `B(i, w − 1)` is done (a node's tasks form
+///   a serial chain; `A` reads the `x`/`m` rows `B` last wrote).
+/// * `B(i, w)` — ready when `A(i, w)` is done *and*, for every partner
+///   `j` of wave `w`, the resolved version `A(j, res_ver)` is done.
+struct Dag {
+    n: usize,
+    w_slots: usize,
+    /// Per node: number of completed `A` tasks (== first wave whose `A`
+    /// is still pending). Version `v` of node `j` exists iff
+    /// `a_done[j] > v`.
+    a_done: Vec<u32>,
+    /// Per node: number of completed `B` tasks.
+    b_done: Vec<u32>,
+    /// Outstanding input count of `B(i, w)` at `[(w mod W)·n + i]`.
+    b_missing: Vec<u32>,
+    /// Unfinished `B` tasks of wave `w` at `[w mod W]` — the
+    /// coordinator's finalization condition.
+    b_remaining: Vec<u32>,
+    /// Per publisher node: readers waiting on one of its versions.
+    awaiters: Vec<Vec<Awaiter>>,
+    /// Number of waves registered so far (`A(i, w)` may only be pushed
+    /// for `w < created`).
+    created: u32,
+}
+
+impl Dag {
+    fn new(n: usize, w_slots: usize) -> Dag {
+        Dag {
+            n,
+            w_slots,
+            a_done: vec![0; n],
+            b_done: vec![0; n],
+            b_missing: vec![0; w_slots * n],
+            b_remaining: vec![0; w_slots],
+            awaiters: (0..n).map(|_| Vec::new()).collect(),
+            created: 0,
+        }
+    }
+
+    /// Publish wave `w`'s dependency rows and push every task of it
+    /// that is ready right now onto `ready`.
+    fn register_wave(
+        &mut self,
+        w: usize,
+        plan: &MixingPlan,
+        res_off: &[usize],
+        res_ver: &[u32],
+        ready: &mut Vec<QueueTask>,
+    ) {
+        let n = self.n;
+        let base = (w % self.w_slots) * n;
+        self.created = w as u32 + 1;
+        self.b_remaining[w % self.w_slots] = n as u32;
+        for i in 0..n {
+            // Own publish: A(i, w) cannot have completed before its wave
+            // was registered, so it is always an outstanding input.
+            let mut missing = 1u32;
+            self.awaiters[i].push(Awaiter { reader: i as u32, wave: w as u32, needed: w as u32 });
+            for (idx, &j) in plan.partners(i).iter().enumerate() {
+                let j = j as usize;
+                let ver = res_ver[res_off[i] + idx];
+                if self.a_done[j] <= ver {
+                    missing += 1;
+                    self.awaiters[j].push(Awaiter {
+                        reader: i as u32,
+                        wave: w as u32,
+                        needed: ver,
+                    });
+                }
+            }
+            self.b_missing[base + i] = missing;
+            // A(i, w) unlocks off B(i, w − 1); if that already happened
+            // (or w == 0) the registration itself pushes it.
+            if self.b_done[i] >= w as u32 {
+                ready.push(QueueTask { node: i as u32, wave: w as u32, stage: 0 });
+            }
+        }
+    }
+
+    /// `A(i, w)` finished: version `w` of node `i` now exists. Satisfy
+    /// every awaiter whose needed version is covered and push each `B`
+    /// whose input count hits zero.
+    fn complete_a(&mut self, i: usize, w: usize, ready: &mut Vec<QueueTask>) {
+        self.a_done[i] = w as u32 + 1;
+        // Temporarily move the list out so the scan can mutate
+        // `b_missing` without aliasing `self.awaiters`.
+        let mut aws = std::mem::take(&mut self.awaiters[i]);
+        let mut idx = 0;
+        while idx < aws.len() {
+            if aws[idx].needed < self.a_done[i] {
+                let aw = aws.swap_remove(idx);
+                let slot = (aw.wave as usize % self.w_slots) * self.n + aw.reader as usize;
+                self.b_missing[slot] -= 1;
+                if self.b_missing[slot] == 0 {
+                    ready.push(QueueTask { node: aw.reader, wave: aw.wave, stage: 1 });
+                }
+            } else {
+                idx += 1;
+            }
+        }
+        self.awaiters[i] = aws;
+    }
+
+    /// `B(i, w)` finished: node `i`'s state rows are committed for wave
+    /// `w`; its next `A` unlocks if that wave is already registered, and
+    /// wave `w` moves one node closer to finalization.
+    fn complete_b(&mut self, i: usize, w: usize, ready: &mut Vec<QueueTask>) {
+        self.b_done[i] = w as u32 + 1;
+        if self.b_done[i] < self.created {
+            ready.push(QueueTask { node: i as u32, wave: w as u32 + 1, stage: 0 });
+        }
+        self.b_remaining[w % self.w_slots] -= 1;
+    }
+}
+
+/// The out-of-order ready-batch executor (`exec=ooo`, default): per-node
+/// tasks over the engine's work queue, unlocked the moment their inputs
+/// exist. Bitwise identical to [`run_waves_reference`] (see module
+/// docs) at amortized O(1) engine dispatches per ready batch.
+fn run_ready_batches(
+    tr: &mut Trainer<'_>,
+    tau: usize,
+    probe: &mut dyn FnMut(usize, &StackedParams),
+) -> TrainingHistory {
+    let Trainer { topology, optimizer, provider, cfg, netsim } = tr;
+    let provider = *provider;
+    let n = provider.nodes();
+    let dim = provider.dim();
+    let Setup { streams, gossip_bytes, comp, gamma, sseeds, engine, owned_oracle, emit_times } =
+        setup(optimizer, provider, cfg, netsim, tau);
+    let lanes_n = engine.lanes();
+    let iters = cfg.iters;
+
+    let mut history = TrainingHistory::default();
+    if iters == 0 {
+        return history;
+    }
+
+    // In-flight window W = τ + 2 waves: wave w is created once wave
+    // w − W is finalized, so per-wave rows (loss, snapshots, wave
+    // slots) ride a W-slot ring. The payload ring is *wider* than the
+    // reference executor's: S = 2τ + 2 slots. Out of order, a reader
+    // B(j, w') may consume version v as late as wave w' = v + τ, and
+    // the writer A(i, v + S) exists no earlier than the creation of
+    // wave v + S = (v + τ) + (τ + 2) — strictly after wave v + τ
+    // finalized, so with S ≥ 2τ + 2 no live version is ever clobbered.
+    let w_slots = tau + 2;
+    let s_ring = 2 * tau + 2;
+    let nd = n * dim;
+
+    let mut clock = WaveClock::new(tau, n, iters);
+    // The optimizer's state stacks, taken so per-node tasks can write
+    // x/m rows in place through RowTables (no scratch, no commit — the
+    // supported single-phase algorithms' commits are pure swaps, so the
+    // in-place per-node form is bitwise identical; restored below).
+    let (mut x_stack, mut m_stack) = optimizer.take_async_state();
+
+    let mut grads_buf = vec![0.0f32; nd];
+    let mut loss_buf = vec![0.0f64; w_slots * n];
+    let mut ring_bufs: Vec<Vec<f32>> = (0..streams).map(|_| vec![0.0f32; s_ring * nd]).collect();
+    let praw_len = if comp.is_some() { nd } else { 0 };
+    let mut praw_bufs: Vec<Vec<f32>> = (0..streams).map(|_| vec![0.0f32; praw_len]).collect();
+    let mut snap_buf = vec![0.0f32; w_slots * nd];
+    let mut tmp_buf = vec![0.0f32; lanes_n * dim];
+    let mut probe_buf = StackedParams::zeros(n, dim);
+
+    let init_plan = topology.plan_at(0).clone();
+    let slots: Vec<SlotCell<WaveSlot>> = (0..w_slots)
+        .map(|_| {
+            SlotCell(UnsafeCell::new(WaveSlot {
+                plan: init_plan.clone(),
+                res_off: Vec::new(),
+                res_ver: Vec::new(),
+                lr: 0.0,
+                record: false,
+            }))
+        })
+        .collect();
+
+    let dag = Mutex::new(Dag::new(n, w_slots));
+    let queue = WorkQueue::new();
+    let lock_dag = || dag.lock().unwrap_or_else(|p| p.into_inner());
+
+    {
+        let x_tab = RowTable::new(&mut x_stack.data, dim);
+        let m_tab = RowTable::new(&mut m_stack.data, dim);
+        let grads_tab = RowTable::new(&mut grads_buf, dim);
+        let loss_tab = RowTable::new(&mut loss_buf, 1);
+        let ring_tabs: Vec<RowTable<'_, f32>> =
+            ring_bufs.iter_mut().map(|r| RowTable::new(r, dim)).collect();
+        let praw_tabs: Vec<RowTable<'_, f32>> =
+            praw_bufs.iter_mut().map(|p| RowTable::new(p, dim)).collect();
+        let snap_tab = RowTable::new(&mut snap_buf, dim);
+        let tmp_tab = RowTable::new(&mut tmp_buf, dim);
+        let opt: &dyn Optimizer = &**optimizer;
+        let comp_ref = comp.as_deref();
+        let seed = cfg.seed;
+        let slots_ref = &slots;
+        let sseeds_ref = &sseeds;
+
+        // One task body for both stages; `lane` picks the scratch row.
+        // Safety of every `RowTable` access: the DAG's unlock rules make
+        // each row single-writer with mutex-ordered hand-offs — see the
+        // per-line comments and docs/DESIGN.md §Async runtime.
+        let run_task = |lane: usize, t: QueueTask| {
+            let i = t.node as usize;
+            let w = t.wave as usize;
+            // Slot w mod W is immutable while any task of wave w is
+            // live (rewritten only at wave w + W's creation, after
+            // wave w finalized).
+            let slot = unsafe { &*slots_ref[w % w_slots].0.get() };
+            if t.stage == 0 {
+                // ---- A(i, w): gradient, stage, publish. Row chain
+                // A(i,w) → B(i,w) → A(i,w+1) makes grads/x/m/praw rows
+                // single-writer; the ring row (w mod S, i) has no live
+                // readers (window proof above).
+                let x_row = unsafe { x_tab.row(i) };
+                let m_row = unsafe { m_tab.row(i) };
+                let g_row = unsafe { grads_tab.row_mut(i) };
+                let loss = provider.grad(i, x_row, w, seed, g_row);
+                unsafe { loss_tab.row_mut((w % w_slots) * n + i) }[0] = loss as f64;
+                for (s, ring_tab) in ring_tabs.iter().enumerate() {
+                    let cur_row = unsafe { ring_tab.row_mut((w % s_ring) * n + i) };
+                    match comp_ref {
+                        None => {
+                            opt.stage_node_async(s, x_row, m_row, g_row, slot.lr, cur_row);
+                        }
+                        Some(c) => {
+                            let p_row = unsafe { praw_tabs[s].row_mut(i) };
+                            opt.stage_node_async(s, x_row, m_row, g_row, slot.lr, p_row);
+                            // Previous reconstruction: version w − 1
+                            // (slot S − 1 at w = 0 — still all zeros,
+                            // the chain's initial state).
+                            let prev_row =
+                                unsafe { ring_tab.row(((w + s_ring - 1) % s_ring) * n + i) };
+                            cur_row.copy_from_slice(prev_row);
+                            c.compress_row(p_row, cur_row, i, w, sseeds_ref[s]);
+                        }
+                    }
+                }
+                let mut ready = Vec::new();
+                lock_dag().complete_a(i, w, &mut ready);
+                // Follow-on tasks ride the completion push — no engine
+                // dispatch charged (the amortized-O(1) economy).
+                queue.push_many(&ready);
+                queue.nudge();
+            } else {
+                // ---- B(i, w): pull-mix + in-place commit. Reads only
+                // published ring versions (complete by the unlock rule)
+                // and its own grads/praw rows; writes its own x/m rows.
+                let g_row = unsafe { grads_tab.row(i) };
+                let x_row = unsafe { x_tab.row_mut(i) };
+                let m_row = unsafe { m_tab.row_mut(i) };
+                let tmp = unsafe { tmp_tab.row_mut(lane) };
+                let src = |s: usize, j: usize, e: usize| -> f32 {
+                    let ver = if j == i {
+                        w
+                    } else {
+                        let ps = slot.plan.partners(i);
+                        let pos = ps.partition_point(|&c| (c as usize) < j);
+                        debug_assert!(
+                            pos < ps.len() && ps[pos] as usize == j,
+                            "mix column {j} not among partners of {i}"
+                        );
+                        slot.res_ver[slot.res_off[i] + pos] as usize
+                    };
+                    unsafe { ring_tabs[s].row((ver % s_ring) * n + j) }[e]
+                };
+                let praw_rows: Vec<&[f32]> =
+                    praw_tabs.iter().map(|p| unsafe { p.row(i) }).collect();
+                let damp: Option<(f32, &[&[f32]])> =
+                    if comp_ref.is_some() { Some((gamma, &praw_rows[..])) } else { None };
+                opt.step_node_async(i, &slot.plan, g_row, slot.lr, &src, damp, x_row, m_row, tmp);
+                if slot.record {
+                    unsafe { snap_tab.row_mut((w % w_slots) * n + i) }.copy_from_slice(x_row);
+                }
+                let mut ready = Vec::new();
+                lock_dag().complete_b(i, w, &mut ready);
+                queue.push_many(&ready);
+                queue.nudge();
+            }
+        };
+
+        let mut coordinator = || {
+            let mut created = 0usize;
+            let mut batch: Vec<QueueTask> = Vec::new();
+            for f in 0..iters {
+                // Create every wave the window allows: wave w needs
+                // wave w − W finalized (its per-wave ring rows free).
+                while created < iters && created < f + w_slots {
+                    let w = created;
+                    let plan = topology.plan_at(w);
+                    clock.advance(
+                        w,
+                        plan,
+                        netsim,
+                        &owned_oracle,
+                        &cfg.cost,
+                        gossip_bytes,
+                        emit_times,
+                        &mut history,
+                    );
+                    // Safety: no task of wave w exists yet and every
+                    // task of wave w − W finished (finalized) — the
+                    // slot has no concurrent reader.
+                    let slot = unsafe { &mut *slots_ref[w % w_slots].0.get() };
+                    slot.plan.clone_from(plan);
+                    slot.res_off.clone_from(&clock.res_off);
+                    slot.res_ver.clone_from(&clock.res_ver);
+                    slot.lr = cfg.lr.at(w);
+                    slot.record = w % cfg.record_every == 0 || w + 1 == iters;
+                    batch.clear();
+                    lock_dag().register_wave(w, &slot.plan, &slot.res_off, &slot.res_ver, &mut batch);
+                    if !batch.is_empty() {
+                        engine.submit_batch(&queue, &batch);
+                    }
+                    created += 1;
+                }
+                // Help drain until wave f is fully mixed, parking only
+                // when the queue is empty (every completion nudges).
+                loop {
+                    if lock_dag().b_remaining[f % w_slots] == 0 {
+                        break;
+                    }
+                    if let Some(t) = queue.try_pop() {
+                        run_task(0, t);
+                        continue;
+                    }
+                    let seen = queue.epoch();
+                    if lock_dag().b_remaining[f % w_slots] == 0 {
+                        break;
+                    }
+                    if queue.closed() {
+                        panic!("async executor: a worker lane failed");
+                    }
+                    queue.wait_event(seen);
+                }
+                // ---- Finalize wave f: mean loss in node order (the
+                // exact f64 sum the reference takes) and the throttled
+                // consensus probe from the wave's snapshot rows.
+                let base = (f % w_slots) * n;
+                let mut loss_sum = 0.0f64;
+                for i in 0..n {
+                    loss_sum += unsafe { loss_tab.row(base + i) }[0];
+                }
+                history.loss.push(loss_sum / n as f64);
+                let slot = unsafe { &*slots_ref[f % w_slots].0.get() };
+                if slot.record {
+                    for i in 0..n {
+                        probe_buf.row_mut(i).copy_from_slice(unsafe { snap_tab.row(base + i) });
+                    }
+                    history.consensus.push((f, probe_buf.consensus_distance()));
+                    history.lr.push((f, slot.lr));
+                    probe(f, &probe_buf);
+                }
+            }
+        };
+
+        engine.run_queue(&queue, &run_task, &mut coordinator);
+    }
+
+    history.dispatches = engine.dispatches();
+    optimizer.restore_async_state(x_stack, m_stack);
     history
 }

@@ -18,5 +18,5 @@ pub mod transient;
 pub use mixing::MixingPlan;
 pub use schedule_lr::LrSchedule;
 pub use state::StackedParams;
-pub use trainer::{ExecutionMode, GradProvider, TrainConfig, Trainer, TrainingHistory};
+pub use trainer::{AsyncExec, ExecutionMode, GradProvider, TrainConfig, Trainer, TrainingHistory};
 pub use transient::transient_iterations;

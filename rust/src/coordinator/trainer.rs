@@ -84,6 +84,46 @@ impl std::fmt::Display for ExecutionMode {
     }
 }
 
+/// Which executor drives `execution=async:<τ>` (docs/DESIGN.md §Async
+/// runtime). Both produce bitwise-identical trajectories (pinned by
+/// `tests/engine_determinism.rs`); they differ only in dispatch economy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum AsyncExec {
+    /// The serial-wave reference: every wave pays two engine barrier
+    /// crossings, fleet-wide. Kept as the escape hatch and the pinning
+    /// oracle (`run_waves_reference`), mirroring `fused_probe`.
+    Waves,
+    /// Out-of-order ready batches over the engine's work queue:
+    /// amortized O(1) dispatches per ready batch (default).
+    #[default]
+    Ooo,
+}
+
+impl AsyncExec {
+    /// Parse `"waves"` / `"ooo"` (the config/CLI surface).
+    pub fn parse(s: &str) -> Option<AsyncExec> {
+        match s {
+            "waves" => Some(AsyncExec::Waves),
+            "ooo" => Some(AsyncExec::Ooo),
+            _ => None,
+        }
+    }
+
+    /// Round-trippable name (`parse(label()) == self`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            AsyncExec::Waves => "waves",
+            AsyncExec::Ooo => "ooo",
+        }
+    }
+}
+
+impl std::fmt::Display for AsyncExec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
 /// Trainer configuration.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -117,6 +157,10 @@ pub struct TrainConfig {
     /// Execution mode: bulk-synchronous (default) or bounded-staleness
     /// async gossip (docs/DESIGN.md §Async runtime).
     pub execution: ExecutionMode,
+    /// Which async executor drives `execution=async:<τ>`: out-of-order
+    /// ready batches (default) or the serial-wave reference. Ignored
+    /// under [`ExecutionMode::Sync`].
+    pub async_exec: AsyncExec,
     /// Fold the consensus probe of record iterations into the *next*
     /// iteration's gradient dispatch ([`Engine::compute_grads_probed`]),
     /// cutting a record round's barrier crossings from 3 to 2. The
@@ -140,6 +184,7 @@ impl Default for TrainConfig {
             cost: None,
             compressor: CompressorKind::Identity,
             execution: ExecutionMode::Sync,
+            async_exec: AsyncExec::Ooo,
             fused_probe: true,
         }
     }

@@ -22,10 +22,20 @@
 //! rows **row-locally in a fixed order** (ascending neighbor index), so
 //! results are bitwise-identical for any lane count — pinned by
 //! `tests/engine_determinism.rs`. See docs/DESIGN.md §Engine.
+//!
+//! Alongside the barrier broadcast the engine has a second dispatch
+//! mode for the out-of-order async executor: a persistent [`WorkQueue`]
+//! of `(node, wave, stage)` tasks drained by the same worker pool
+//! inside a single [`Engine::run_queue`] session, with
+//! [`Engine::submit_batch`] charging one dispatch per ready batch
+//! instead of two barrier crossings per wave (docs/DESIGN.md §Engine,
+//! queue-dispatch contract).
 
+use std::collections::VecDeque;
+use std::marker::PhantomData;
 use std::ops::Range;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::sync::{Arc, Barrier, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
 
 use crate::coordinator::state::StackedParams;
@@ -112,6 +122,191 @@ impl<'a, T> Lanes<'a, T> {
 
     pub fn lanes(&self) -> usize {
         self.slots.len()
+    }
+}
+
+/// One unit of out-of-order work: half of node `node`'s wave `wave`.
+/// `stage` 0 is the gradient/stage/publish half, `stage` 1 the
+/// mix/commit half (docs/DESIGN.md §Async runtime, ready-set loop).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QueueTask {
+    pub node: u32,
+    pub wave: u32,
+    pub stage: u8,
+}
+
+struct QueueInner {
+    tasks: VecDeque<QueueTask>,
+    closed: bool,
+    /// Bumped on every push, nudge, and close, so a waiter can detect
+    /// "anything happened since I last looked" with one condvar.
+    epoch: u64,
+}
+
+/// The shared task injector of the queue dispatch mode: a FIFO of
+/// unlocked [`QueueTask`]s plus an event epoch. Workers park in
+/// [`WorkQueue::pop_wait`]; the coordinator parks in
+/// [`WorkQueue::wait_event`] and is woken by task completions
+/// ([`WorkQueue::nudge`]) as well as pushes. Closing the queue releases
+/// everyone: poppers drain what remains, then observe `None`.
+pub struct WorkQueue {
+    inner: Mutex<QueueInner>,
+    cv: Condvar,
+}
+
+impl Default for WorkQueue {
+    fn default() -> Self {
+        WorkQueue::new()
+    }
+}
+
+impl WorkQueue {
+    pub fn new() -> WorkQueue {
+        WorkQueue {
+            inner: Mutex::new(QueueInner { tasks: VecDeque::new(), closed: false, epoch: 0 }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> MutexGuard<'_, QueueInner> {
+        // Nothing panics while holding this lock; tolerate poison anyway
+        // so a panicked round cannot wedge the cleanup path.
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Enqueue a batch of unlocked tasks and wake every parked lane.
+    pub fn push_many(&self, tasks: &[QueueTask]) {
+        if tasks.is_empty() {
+            return;
+        }
+        let mut g = self.lock();
+        g.tasks.extend(tasks.iter().copied());
+        g.epoch += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Bump the event epoch without enqueueing — task completions call
+    /// this so a coordinator parked in [`WorkQueue::wait_event`] can
+    /// re-check its finalization condition.
+    pub fn nudge(&self) {
+        let mut g = self.lock();
+        g.epoch += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Close the queue: poppers drain the remaining tasks, then see
+    /// `None`; waiters wake. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.lock();
+        g.closed = true;
+        g.epoch += 1;
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    pub fn closed(&self) -> bool {
+        self.lock().closed
+    }
+
+    /// Current event epoch; pair with [`WorkQueue::wait_event`].
+    pub fn epoch(&self) -> u64 {
+        self.lock().epoch
+    }
+
+    /// Pop without blocking.
+    pub fn try_pop(&self) -> Option<QueueTask> {
+        self.lock().tasks.pop_front()
+    }
+
+    /// Pop, parking until a task arrives or the queue is closed *and*
+    /// drained (tasks still enqueued at close time are handed out).
+    pub fn pop_wait(&self) -> Option<QueueTask> {
+        let mut g = self.lock();
+        loop {
+            if let Some(t) = g.tasks.pop_front() {
+                return Some(t);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    /// Park until the epoch moves past `seen`, a task is available, or
+    /// the queue closes. Read `seen` via [`WorkQueue::epoch`] *before*
+    /// checking the condition you are waiting on: any event in between
+    /// bumps the epoch, so the wait returns immediately instead of
+    /// missing the wake-up.
+    pub fn wait_event(&self, seen: u64) {
+        let mut g = self.lock();
+        while g.epoch == seen && !g.closed && g.tasks.is_empty() {
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+}
+
+/// Raw row-granular view of a shared row-major buffer for the queue
+/// dispatch mode, where row ownership is dynamic (whichever lane runs
+/// the `(node, wave)` task owns that node's rows) and cannot be
+/// expressed as the static per-lane split of [`Lanes`].
+///
+/// An empty backing buffer yields empty rows for every index (mirroring
+/// [`Lanes::split`] — used for optimizers without a secondary stack).
+pub struct RowTable<'a, T> {
+    ptr: *mut T,
+    len: usize,
+    row_len: usize,
+    _marker: PhantomData<&'a mut [T]>,
+}
+
+// Safety: a RowTable hands out raw row slices; all aliasing discipline
+// is the caller's (see `row_mut`). Moving/sharing the handle itself
+// across threads is safe whenever the element type is.
+unsafe impl<T: Send> Send for RowTable<'_, T> {}
+unsafe impl<T: Send> Sync for RowTable<'_, T> {}
+
+impl<'a, T> RowTable<'a, T> {
+    pub fn new(data: &'a mut [T], row_len: usize) -> RowTable<'a, T> {
+        if !data.is_empty() {
+            assert!(row_len > 0, "RowTable: zero row_len over non-empty data");
+            assert_eq!(data.len() % row_len, 0, "RowTable: shape mismatch");
+        }
+        RowTable { ptr: data.as_mut_ptr(), len: data.len(), row_len, _marker: PhantomData }
+    }
+
+    /// Mutable view of row `i`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee no other live reference to row `i`
+    /// (the async executor's task DAG makes rows single-writer by
+    /// construction, with queue/DAG mutexes ordering the hand-offs).
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn row_mut(&self, i: usize) -> &mut [T] {
+        if self.len == 0 {
+            return &mut [];
+        }
+        let o = i * self.row_len;
+        debug_assert!(o + self.row_len <= self.len, "RowTable row {i} out of bounds");
+        std::slice::from_raw_parts_mut(self.ptr.add(o), self.row_len)
+    }
+
+    /// Shared view of row `i`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee no concurrent mutable reference to row
+    /// `i` (same DAG discipline as [`RowTable::row_mut`]).
+    pub unsafe fn row(&self, i: usize) -> &[T] {
+        if self.len == 0 {
+            return &[];
+        }
+        let o = i * self.row_len;
+        debug_assert!(o + self.row_len <= self.len, "RowTable row {i} out of bounds");
+        std::slice::from_raw_parts(self.ptr.add(o), self.row_len)
     }
 }
 
@@ -371,6 +566,89 @@ impl Engine {
             }
         });
     }
+
+    /// Enqueue a ready batch of tasks into `queue`, charging exactly
+    /// **one dispatch per call** regardless of batch size — the
+    /// accounting unit behind the out-of-order executor's amortized-O(1)
+    /// dispatches per ready batch (vs two barrier crossings per wave for
+    /// the broadcast mode).
+    pub fn submit_batch(&self, queue: &WorkQueue, tasks: &[QueueTask]) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        queue.push_many(tasks);
+    }
+
+    /// Queue dispatch session: worker lanes `1..lanes` drain `queue`
+    /// (each popped task runs `task(lane, t)`), while `coordinator` runs
+    /// on the **calling thread** (lane 0) with whatever `&mut` captures
+    /// it needs — it typically creates waves, submits ready batches via
+    /// [`Engine::submit_batch`], helps drain with
+    /// [`WorkQueue::try_pop`], and parks in [`WorkQueue::wait_event`]
+    /// between events. The session ends when `coordinator` returns: the
+    /// queue is closed, workers drain the leftovers and rejoin the done
+    /// barrier. One dispatch for the whole session.
+    ///
+    /// Panic protocol mirrors [`Engine::run`]: a panicking task closes
+    /// the queue (waking everyone) and latches the worker-panic flag; a
+    /// coordinator panic is re-raised after the pool quiesces, taking
+    /// precedence over the latch.
+    pub fn run_queue(
+        &self,
+        queue: &WorkQueue,
+        task: &(dyn Fn(usize, QueueTask) + Sync),
+        coordinator: &mut dyn FnMut(),
+    ) {
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        if self.lanes == 1 {
+            // Single lane: the coordinator drains everything itself via
+            // try_pop (it never parks — the queue holds a runnable task
+            // whenever its wave-completion condition is unmet).
+            let main = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| coordinator()));
+            queue.close();
+            if let Err(p) = main {
+                std::panic::resume_unwind(p);
+            }
+            return;
+        }
+        let _round = self.driver.lock().unwrap_or_else(|p| p.into_inner());
+        let drain = |lane: usize| {
+            while let Some(t) = queue.pop_wait() {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(lane, t)));
+                if let Err(p) = r {
+                    // Wake the coordinator and the other lanes, then let
+                    // worker_loop's catch_unwind latch the panic flag.
+                    queue.close();
+                    std::panic::resume_unwind(p);
+                }
+            }
+        };
+        let drain_ref: &(dyn Fn(usize) + Sync) = &drain;
+        // Safety: same lifetime-erasure contract as `run` — the job is
+        // only dereferenced between the two barriers, and we do not
+        // return until every worker passed the done barrier.
+        let f_erased: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(
+                drain_ref,
+            )
+        };
+        unsafe {
+            *self.shared.job.0.get() = Some(f_erased as Job);
+        }
+        self.shared.start.wait();
+        let main = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| coordinator()));
+        // Session over (or coordinator panicked): release the drain loops.
+        queue.close();
+        self.shared.done.wait();
+        unsafe {
+            *self.shared.job.0.get() = None;
+        }
+        let worker_panicked = self.shared.panicked.swap(false, Ordering::SeqCst);
+        if let Err(p) = main {
+            std::panic::resume_unwind(p);
+        }
+        if worker_panicked {
+            panic!("engine: a worker lane panicked");
+        }
+    }
 }
 
 impl Drop for Engine {
@@ -532,6 +810,115 @@ mod tests {
             let got = engine.consensus_distance(&s);
             assert_eq!(got.to_bits(), base.to_bits(), "lanes={lanes}: {got} vs {base}");
         }
+    }
+
+    #[test]
+    fn work_queue_fifo_close_drains_then_none() {
+        let q = WorkQueue::new();
+        let t = |n: u32| QueueTask { node: n, wave: 0, stage: 0 };
+        q.push_many(&[t(1), t(2)]);
+        assert_eq!(q.try_pop(), Some(t(1)));
+        q.close();
+        assert!(q.closed());
+        // A closed queue still hands out what was enqueued…
+        assert_eq!(q.pop_wait(), Some(t(2)));
+        // …then reports exhaustion instead of parking.
+        assert_eq!(q.pop_wait(), None);
+        // Pushes bump the epoch; nudges do too, without enqueueing.
+        let e = q.epoch();
+        q.nudge();
+        assert!(q.epoch() > e);
+        // wait_event with a stale epoch returns immediately.
+        q.wait_event(e);
+    }
+
+    #[test]
+    fn run_queue_executes_all_tasks_any_lane_count() {
+        for lanes in [1usize, 2, 4] {
+            let engine = Engine::new(lanes);
+            let queue = WorkQueue::new();
+            let total = 64u32;
+            let hits = AtomicUsize::new(0);
+            let base = engine.dispatches();
+            let tasks: Vec<QueueTask> =
+                (0..total).map(|n| QueueTask { node: n, wave: 0, stage: 0 }).collect();
+            engine.submit_batch(&queue, &tasks);
+            let work = |_lane: usize, _t: QueueTask| {
+                hits.fetch_add(1, Ordering::SeqCst);
+                queue.nudge();
+            };
+            engine.run_queue(&queue, &work, &mut || loop {
+                if let Some(t) = queue.try_pop() {
+                    work(0, t);
+                    continue;
+                }
+                let seen = queue.epoch();
+                if hits.load(Ordering::SeqCst) as u32 == total {
+                    break;
+                }
+                queue.wait_event(seen);
+            });
+            assert_eq!(hits.load(Ordering::SeqCst) as u32, total, "lanes={lanes}");
+            // One dispatch for the batch, one for the session.
+            assert_eq!(engine.dispatches() - base, 2, "lanes={lanes}");
+        }
+    }
+
+    #[test]
+    fn run_queue_worker_panic_propagates_and_pool_survives() {
+        let engine = Engine::new(3);
+        let queue = WorkQueue::new();
+        let tasks: Vec<QueueTask> =
+            (0..8u32).map(|n| QueueTask { node: n, wave: 0, stage: 0 }).collect();
+        engine.submit_batch(&queue, &tasks);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            engine.run_queue(
+                &queue,
+                &|_, t| {
+                    if t.node == 3 {
+                        panic!("task boom");
+                    }
+                    queue.nudge();
+                },
+                &mut || {
+                    // Park until the failing task closes the queue.
+                    loop {
+                        if queue.closed() {
+                            panic!("worker lane failed");
+                        }
+                        let seen = queue.epoch();
+                        queue.wait_event(seen);
+                    }
+                },
+            );
+        }));
+        assert!(caught.is_err());
+        // The barrier protocol stays consistent: broadcast still works.
+        let hits = AtomicUsize::new(0);
+        engine.run(&|_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn row_table_rows_are_disjoint_and_empty_backing_is_empty() {
+        let mut data = vec![0.0f32; 4 * 3];
+        let tab = RowTable::new(&mut data, 3);
+        for i in 0..4 {
+            // Safety: rows touched one at a time.
+            let r = unsafe { tab.row_mut(i) };
+            r.fill(i as f32);
+        }
+        for i in 0..4 {
+            assert_eq!(unsafe { tab.row(i) }, &[i as f32; 3]);
+        }
+        drop(tab);
+        assert_eq!(data[9], 3.0);
+        let mut empty: Vec<f32> = Vec::new();
+        let tab = RowTable::new(&mut empty, 5);
+        assert!(unsafe { tab.row(2) }.is_empty());
+        assert!(unsafe { tab.row_mut(7) }.is_empty());
     }
 
     #[test]

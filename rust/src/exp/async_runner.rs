@@ -59,6 +59,9 @@ pub struct AsyncCell {
     /// target — the full budget's clock when not reached.
     pub time_to_target: f64,
     pub final_err: f64,
+    /// Engine dispatches per training iteration — the out-of-order
+    /// executor's headline economy (amortized O(1) vs 2·waves serial).
+    pub dispatches_per_iter: f64,
 }
 
 fn cell_record(c: &AsyncCell) -> Record {
@@ -70,6 +73,7 @@ fn cell_record(c: &AsyncCell) -> Record {
         .with("iters_to_target", c.iters_to_target)
         .with("time_to_target", c.time_to_target)
         .with("final_err", c.final_err)
+        .with("dispatches_per_iter", c.dispatches_per_iter)
 }
 
 fn cell_from_record(rec: &Record) -> Result<AsyncCell> {
@@ -85,6 +89,8 @@ fn cell_from_record(rec: &Record) -> Result<AsyncCell> {
         iters_to_target: rec.num("iters_to_target") as usize,
         time_to_target: rec.num("time_to_target"),
         final_err: rec.num("final_err"),
+        // Tolerate cached cells recorded before this column existed.
+        dispatches_per_iter: rec.get("dispatches_per_iter").map(|v| v.num()).unwrap_or(f64::NAN),
     })
 }
 
@@ -142,6 +148,7 @@ fn run_cell(
         iters_to_target,
         time_to_target,
         final_err: errs.last().copied().unwrap_or(err0),
+        dispatches_per_iter: hist.dispatches as f64 / iters.max(1) as f64,
     }
 }
 
@@ -219,9 +226,13 @@ pub fn table_async_cells(ctx: &Ctx) -> Result<Vec<AsyncCell>> {
         Col::auto("iters_to_target"),
         Col::auto("time_to_target"),
         Col::auto("final_err"),
+        Col::auto("dispatches_per_iter"),
     ]);
-    for cell in &out {
-        sink.push(&cell.records[0]);
+    // Re-serialize the parsed cells (not the raw cached records) so
+    // runs resumed from a pre-`dispatches_per_iter` cache still emit
+    // every column (missing values degrade to NaN ⇒ empty CSV cell).
+    for c in &cells {
+        sink.push(&cell_record(c));
     }
     sink.write_csv(&ctx.out_dir, "table_async")?;
 
@@ -240,6 +251,7 @@ pub fn table_async_cells(ctx: &Ctx) -> Result<Vec<AsyncCell>> {
                     o.insert("iters_to_target".into(), Json::Num(c.iters_to_target as f64));
                     o.insert("time_to_target".into(), Json::Num(c.time_to_target));
                     o.insert("final_err".into(), Json::Num(c.final_err));
+                    o.insert("dispatches_per_iter".into(), Json::Num(c.dispatches_per_iter));
                     Json::Obj(o)
                 })
                 .collect(),

@@ -54,9 +54,11 @@ USAGE:
       --cache     on|off: serve completed cells from <out>/.cache/ (default on)
   expograph train [--config FILE] [key=value ...]
       keys: nodes topology algorithm iters lr beta batch heterogeneous seed
-            execution
+            execution exec
       execution=sync | async:<staleness> — bounded-staleness gossip
       (async:0 is bitwise identical to sync)
+      exec=ooo | waves — async executor: out-of-order ready batches
+      (default) or the serial-wave reference (bitwise identical)
       topologies (from the registry — includes the finite-time
       arbitrary-n families):
                   {topologies}
@@ -169,6 +171,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             msg_bytes: None,
             cost: Some(CostModel::paper_default(0.01)),
             execution: cfg.execution,
+            async_exec: cfg.exec,
             ..Default::default()
         },
     );

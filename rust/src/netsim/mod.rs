@@ -541,6 +541,15 @@ impl NetSim {
         t
     }
 
+    /// Per-node ready-time oracle view for the bounded-staleness
+    /// executors (docs/DESIGN.md §Async runtime): read-only queries of
+    /// the same deterministic hash-derived compute/link draws the
+    /// round simulation uses, one node (or one pull) at a time instead
+    /// of one round at a time. Counters do not advance.
+    pub fn ready_oracle(&self) -> ReadyOracle<'_> {
+        ReadyOracle { sim: self }
+    }
+
     /// Was the pairwise exchange `{u, v}` lost at iteration `k`?
     /// (Offline endpoints drop every exchange; otherwise a transient
     /// per-pair coin.) Pure — safe to consult repeatedly.
@@ -909,6 +918,39 @@ impl NetSim {
             offline_nodes,
             bytes_on_wire,
         }
+    }
+}
+
+/// Read-only per-node timing queries over a [`NetSim`]
+/// ([`NetSim::ready_oracle`]): the bounded-staleness executors ask
+/// "when is node `u`'s wave-`k` compute done?" and "when does `u`'s
+/// pull of `v` finish?" one event at a time — the same deterministic
+/// draws as [`NetSim::simulate_round`], without advancing any round
+/// counters. Pure: safe to consult in any order, which is what makes
+/// the out-of-order executor's clock a function of published versions
+/// rather than of scheduling order.
+pub struct ReadyOracle<'a> {
+    sim: &'a NetSim,
+}
+
+impl ReadyOracle<'_> {
+    /// Absolute time node `u`'s wave-`k` compute finishes when started
+    /// at `start` (`n` = the round's node count, for straggler
+    /// selection).
+    pub fn compute_done(&self, k: usize, u: usize, n: usize, start: f64) -> f64 {
+        start + self.sim.compute_time(k, u, n)
+    }
+
+    /// Absolute time the exchange slot `u ← v` at wave `k` finishes
+    /// when started at `start`, carrying `msg_bytes`.
+    pub fn pull_done(&self, k: usize, u: usize, v: usize, start: f64, msg_bytes: f64) -> f64 {
+        start + self.sim.slot_time(k, u, v, msg_bytes)
+    }
+
+    /// Compute/communication overlap fraction of the underlying cost
+    /// model.
+    pub fn overlap(&self) -> f64 {
+        self.sim.cost.overlap
     }
 }
 

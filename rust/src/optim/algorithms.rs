@@ -166,6 +166,52 @@ impl Optimizer for DSgd {
         }
     }
 
+    fn take_async_state(&mut self) -> (StackedParams, StackedParams) {
+        (std::mem::replace(&mut self.x, StackedParams::zeros(0, 0)), StackedParams::zeros(0, 0))
+    }
+
+    fn restore_async_state(&mut self, x: StackedParams, _m: StackedParams) {
+        self.x = x;
+    }
+
+    fn stage_node_async(
+        &self,
+        _stream: usize,
+        x_row: &[f32],
+        _m_row: &[f32],
+        g_row: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        for k in 0..x_row.len() {
+            out[k] = fmaf(-lr, g_row[k], x_row[k]);
+        }
+    }
+
+    fn step_node_async(
+        &self,
+        i: usize,
+        w: &MixingPlan,
+        _g_row: &[f32],
+        _lr: f32,
+        src: &dyn Fn(usize, usize, usize) -> f32,
+        damp: Option<(f32, &[&[f32]])>,
+        x_row: &mut [f32],
+        _m_row: &mut [f32],
+        _tmp: &mut [f32],
+    ) {
+        // Same fmaf fold as the shard entry; the mix writes x_row from
+        // scratch (payload versions live in the ring), so in-place is
+        // exactly the swap-commit value.
+        let dim = x_row.len();
+        w.mix_fused_rows(i..i + 1, dim, x_row, |j: usize, k: usize| src(0, j, k));
+        if let Some((gamma, praw)) = damp {
+            for k in 0..dim {
+                x_row[k] = fmaf(gamma, x_row[k] - src(0, i, k), praw[0][k]);
+            }
+        }
+    }
+
     fn params(&self) -> &StackedParams {
         &self.x
     }
@@ -372,6 +418,71 @@ impl Optimizer for DmSgd {
         }
     }
 
+    fn take_async_state(&mut self) -> (StackedParams, StackedParams) {
+        (
+            std::mem::replace(&mut self.x, StackedParams::zeros(0, 0)),
+            std::mem::replace(&mut self.m, StackedParams::zeros(0, 0)),
+        )
+    }
+
+    fn restore_async_state(&mut self, x: StackedParams, m: StackedParams) {
+        self.x = x;
+        self.m = m;
+    }
+
+    fn stage_node_async(
+        &self,
+        stream: usize,
+        x_row: &[f32],
+        m_row: &[f32],
+        g_row: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let beta = self.beta;
+        for k in 0..x_row.len() {
+            out[k] = if stream == 0 {
+                fmaf(-lr, m_row[k], x_row[k])
+            } else {
+                fmaf(beta, m_row[k], g_row[k])
+            };
+        }
+    }
+
+    fn step_node_async(
+        &self,
+        i: usize,
+        w: &MixingPlan,
+        _g_row: &[f32],
+        _lr: f32,
+        src: &dyn Fn(usize, usize, usize) -> f32,
+        damp: Option<(f32, &[&[f32]])>,
+        x_row: &mut [f32],
+        m_row: &mut [f32],
+        _tmp: &mut [f32],
+    ) {
+        // Dual fold over the two versioned streams; both mixes write
+        // their output rows from scratch, so in-place x/m updates equal
+        // the swap-commit values.
+        let dim = x_row.len();
+        w.mix_fused_rows2(
+            i..i + 1,
+            dim,
+            x_row,
+            m_row,
+            |j: usize, k: usize| src(0, j, k),
+            |j: usize, k: usize| src(1, j, k),
+        );
+        if let Some((gamma, praw)) = damp {
+            for k in 0..dim {
+                x_row[k] = fmaf(gamma, x_row[k] - src(0, i, k), praw[0][k]);
+            }
+            for k in 0..dim {
+                m_row[k] = fmaf(gamma, m_row[k] - src(1, i, k), praw[1][k]);
+            }
+        }
+    }
+
     fn params(&self) -> &StackedParams {
         &self.x
     }
@@ -563,6 +674,60 @@ impl Optimizer for VanillaDmSgd {
                 bo[k] = mp;
                 ao[k] = fmaf(-lr, mp, ao[k]);
             }
+        }
+    }
+
+    fn take_async_state(&mut self) -> (StackedParams, StackedParams) {
+        (
+            std::mem::replace(&mut self.x, StackedParams::zeros(0, 0)),
+            std::mem::replace(&mut self.m, StackedParams::zeros(0, 0)),
+        )
+    }
+
+    fn restore_async_state(&mut self, x: StackedParams, m: StackedParams) {
+        self.x = x;
+        self.m = m;
+    }
+
+    fn stage_node_async(
+        &self,
+        _stream: usize,
+        x_row: &[f32],
+        _m_row: &[f32],
+        _g_row: &[f32],
+        _lr: f32,
+        out: &mut [f32],
+    ) {
+        out.copy_from_slice(x_row);
+    }
+
+    fn step_node_async(
+        &self,
+        i: usize,
+        w: &MixingPlan,
+        g_row: &[f32],
+        lr: f32,
+        src: &dyn Fn(usize, usize, usize) -> f32,
+        damp: Option<(f32, &[&[f32]])>,
+        x_row: &mut [f32],
+        m_row: &mut [f32],
+        _tmp: &mut [f32],
+    ) {
+        // Mix the versioned model payload into x_row, then the row-local
+        // momentum refresh — each element reads its pre-update value
+        // before writing, so in-place equals the swap-commit values.
+        let dim = x_row.len();
+        let beta = self.beta;
+        w.mix_fused_rows(i..i + 1, dim, x_row, |j: usize, k: usize| src(0, j, k));
+        if let Some((gamma, praw)) = damp {
+            for k in 0..dim {
+                x_row[k] = fmaf(gamma, x_row[k] - src(0, i, k), praw[0][k]);
+            }
+        }
+        for k in 0..dim {
+            let mp = fmaf(beta, m_row[k], g_row[k]);
+            m_row[k] = mp;
+            x_row[k] = fmaf(-lr, mp, x_row[k]);
         }
     }
 
@@ -776,6 +941,65 @@ impl Optimizer for QgDmSgd {
                 bo[k] = fmaf(beta, mi[k], (1.0 - beta) * (xi[k] - ao[k]) * inv_lr);
             }
         }
+    }
+
+    fn take_async_state(&mut self) -> (StackedParams, StackedParams) {
+        (
+            std::mem::replace(&mut self.x, StackedParams::zeros(0, 0)),
+            std::mem::replace(&mut self.m, StackedParams::zeros(0, 0)),
+        )
+    }
+
+    fn restore_async_state(&mut self, x: StackedParams, m: StackedParams) {
+        self.x = x;
+        self.m = m;
+    }
+
+    fn stage_node_async(
+        &self,
+        _stream: usize,
+        x_row: &[f32],
+        m_row: &[f32],
+        g_row: &[f32],
+        lr: f32,
+        out: &mut [f32],
+    ) {
+        let beta = self.beta;
+        // The gossiped half-step x_half = x − γ(g + βm).
+        for k in 0..x_row.len() {
+            out[k] = fmaf(-lr, fmaf(beta, m_row[k], g_row[k]), x_row[k]);
+        }
+    }
+
+    fn step_node_async(
+        &self,
+        i: usize,
+        w: &MixingPlan,
+        _g_row: &[f32],
+        lr: f32,
+        src: &dyn Fn(usize, usize, usize) -> f32,
+        damp: Option<(f32, &[&[f32]])>,
+        x_row: &mut [f32],
+        m_row: &mut [f32],
+        tmp: &mut [f32],
+    ) {
+        // The momentum refresh reads the *pre-mix* model row after the
+        // mix, so x⁺ is built in `tmp` and adopted at the end — same
+        // float ops as the shard entry + swap commit.
+        let dim = x_row.len();
+        let beta = self.beta;
+        let out = &mut tmp[..dim];
+        w.mix_fused_rows(i..i + 1, dim, out, |j: usize, k: usize| src(0, j, k));
+        if let Some((gamma, praw)) = damp {
+            for k in 0..dim {
+                out[k] = fmaf(gamma, out[k] - src(0, i, k), praw[0][k]);
+            }
+        }
+        let inv_lr = 1.0 / lr.max(1e-12);
+        for k in 0..dim {
+            m_row[k] = fmaf(beta, m_row[k], (1.0 - beta) * (x_row[k] - out[k]) * inv_lr);
+        }
+        x_row.copy_from_slice(out);
     }
 
     fn params(&self) -> &StackedParams {

@@ -540,6 +540,69 @@ pub trait Optimizer: Send + Sync {
         panic!("{} does not support async execution", self.name());
     }
 
+    /// Hand the out-of-order executor ownership of the `(x, m)` stacks
+    /// so `(node, wave)` tasks can update rows **in place** (no step
+    /// scratch, no serial commit — a wave's per-node writes land exactly
+    /// where the serial swap would have put them). Momentum-free
+    /// algorithms return an empty secondary stack. Pair with
+    /// [`Optimizer::restore_async_state`]; the shard entry points are
+    /// unusable in between (the optimizer's own stacks are empty).
+    fn take_async_state(&mut self) -> (StackedParams, StackedParams) {
+        panic!("{} does not support async execution", self.name());
+    }
+
+    /// Put the stacks taken by [`Optimizer::take_async_state`] back.
+    fn restore_async_state(&mut self, _x: StackedParams, _m: StackedParams) {
+        panic!("{} does not support async execution", self.name());
+    }
+
+    /// Per-node form of [`Optimizer::stage_shard_async`]: stage node
+    /// `i`'s raw payload row of `stream` into `out` from its state rows
+    /// (`x_row`/`m_row` — the rows taken by
+    /// [`Optimizer::take_async_state`]) and its gradient row. Same
+    /// expressions as the shard entry, row for row, so staged payloads
+    /// are bitwise identical. The row length is `x_row.len()` (the
+    /// optimizer's own stacks are empty while the state is taken).
+    fn stage_node_async(
+        &self,
+        _stream: usize,
+        _x_row: &[f32],
+        _m_row: &[f32],
+        _g_row: &[f32],
+        _lr: f32,
+        _out: &mut [f32],
+    ) {
+        panic!("{} does not support async execution", self.name());
+    }
+
+    /// Per-node form of [`Optimizer::step_shard_async`]: compute node
+    /// `i`'s post-step rows **in place** over `x_row`/`m_row`, pulling
+    /// every mixed payload element through `src(stream, col, elem)`
+    /// (the reader is fixed at `i`, otherwise the same resolved-version
+    /// contract as the shard entry). `damp = Some((gamma, praw))` is
+    /// the compressed-gossip consensus step; here `praw[stream]` is
+    /// node `i`'s raw payload **row** (length `x_row.len()`), not the
+    /// full stack. `tmp` is a caller-owned row-sized scratch for
+    /// kernels whose update reads the pre-mix row after mixing
+    /// (quasi-global momentum). Same fold order and float ops as the
+    /// shard entry + serial swap commit, so trajectories are bitwise
+    /// identical.
+    #[allow(clippy::too_many_arguments)]
+    fn step_node_async(
+        &self,
+        _i: usize,
+        _w: &MixingPlan,
+        _g_row: &[f32],
+        _lr: f32,
+        _src: &dyn Fn(usize, usize, usize) -> f32,
+        _damp: Option<(f32, &[&[f32]])>,
+        _x_row: &mut [f32],
+        _m_row: &mut [f32],
+        _tmp: &mut [f32],
+    ) {
+        panic!("{} does not support async execution", self.name());
+    }
+
     /// Current stacked parameters.
     fn params(&self) -> &StackedParams;
 

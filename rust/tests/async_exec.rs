@@ -6,7 +6,7 @@
 
 use expograph::compress::CompressorKind;
 use expograph::coordinator::trainer::{
-    ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
+    AsyncExec, ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
 };
 use expograph::costmodel::CostModel;
 use expograph::netsim::{NetSim, Scenario};
@@ -38,6 +38,39 @@ fn run(
             seed: 17,
             compressor,
             execution,
+            cost: Some(cost),
+            ..Default::default()
+        },
+    );
+    if let Some(scen) = scenario {
+        trainer.netsim = Some(NetSim::new(&cost, scen, 7));
+    }
+    trainer.run()
+}
+
+/// Like `run`, but pinning which async executor drives the run.
+fn run_exec(
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    execution: ExecutionMode,
+    compressor: CompressorKind,
+    scenario: Option<Scenario>,
+    async_exec: AsyncExec,
+) -> TrainingHistory {
+    let provider = QuadraticProvider::random(N, DIM, 0.05, 13);
+    let opt = algo.build(N, &vec![0.0f32; DIM], 0.9);
+    let cost = CostModel::paper_default(0.01);
+    let mut trainer = Trainer::new(
+        Schedule::new(kind, N, 3),
+        opt,
+        &provider,
+        TrainConfig {
+            iters: ITERS,
+            record_every: 10,
+            seed: 17,
+            compressor,
+            execution,
+            async_exec,
             cost: Some(cost),
             ..Default::default()
         },
@@ -215,5 +248,84 @@ fn async_rejects_two_phase_algorithms() {
         ExecutionMode::Async { tau: 1 },
         CompressorKind::Identity,
         None,
+    );
+}
+
+/// The two async executors agree bit for bit under compressed gossip
+/// too: the out-of-order task `A(i, w)` advances the same per-row
+/// error-feedback reconstruction chain (previous version row → compress)
+/// as the serial-wave dispatch, and the damped consensus step reads the
+/// same raw-payload rows.
+#[test]
+fn waves_and_ready_batches_agree_under_compression() {
+    for comp in [CompressorKind::TopK { frac: 0.25 }, CompressorKind::Int8] {
+        for algo in [AlgorithmKind::DSgd, AlgorithmKind::DmSgd] {
+            let mode = ExecutionMode::Async { tau: 1 };
+            let scen = Some(Scenario::straggler());
+            let waves = run_exec(
+                TopologyKind::OnePeerExp,
+                algo,
+                mode,
+                comp,
+                scen.clone(),
+                AsyncExec::Waves,
+            );
+            let ooo = run_exec(TopologyKind::OnePeerExp, algo, mode, comp, scen, AsyncExec::Ooo);
+            assert_same_trajectory(&waves, &ooo, &format!("{algo} {comp:?} waves-vs-ooo"));
+            assert_eq!(waves.lr, ooo.lr, "{algo} {comp:?}: lr trace");
+            assert_eq!(
+                waves.sim_time.to_bits(),
+                ooo.sim_time.to_bits(),
+                "{algo} {comp:?}: sim clock"
+            );
+        }
+    }
+}
+
+/// The dispatch-economy regression pin (run by name in CI): at fleet
+/// scale the ready-batch executor must spend **strictly fewer than 2**
+/// engine dispatches per iteration — one queue session for the whole
+/// run plus at most one ready-batch submission per wave created, i.e.
+/// ≤ 1 + 1/iters — while the serial-wave reference pays ≥ 2 barrier
+/// crossings per wave (plus one per consensus probe).
+#[test]
+fn async_ready_batch_dispatch_economy() {
+    let n = 1024;
+    let dim = 4;
+    let iters = 25;
+    let provider = QuadraticProvider::random(n, dim, 0.05, 13);
+    let mut dpi = |async_exec: AsyncExec| -> f64 {
+        let opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+        let mut trainer = Trainer::new(
+            Schedule::new(TopologyKind::OnePeerExp, n, 3),
+            opt,
+            &provider,
+            TrainConfig {
+                iters,
+                record_every: 10,
+                seed: 17,
+                execution: ExecutionMode::Async { tau: 2 },
+                async_exec,
+                cost: Some(CostModel::paper_default(0.01)),
+                ..Default::default()
+            },
+        );
+        let hist = trainer.run();
+        assert!(hist.loss.iter().all(|l| l.is_finite()), "{async_exec}: non-finite loss");
+        hist.dispatches as f64 / iters as f64
+    };
+    let waves = dpi(AsyncExec::Waves);
+    let ooo = dpi(AsyncExec::Ooo);
+    assert!(
+        waves >= 2.0,
+        "serial-wave reference should pay at least two dispatches per wave, got {waves}"
+    );
+    assert!(
+        ooo < 2.0,
+        "ready-batch executor must stay strictly below 2 dispatches/iter, got {ooo}"
+    );
+    assert!(
+        ooo < waves,
+        "ready-batch executor ({ooo}) must beat the serial-wave reference ({waves})"
     );
 }

@@ -134,6 +134,90 @@ fn baseline_async() -> String {
     )
 }
 
+/// One compressed DmSGD step vs the dense identity row through the
+/// same `step_engine_compressed` entry point — the quantity
+/// `benches/bench_compress.rs` tracks.
+fn baseline_compress() -> String {
+    use expograph::compress::{CompressorKind, GossipCompression};
+    use expograph::util::rng::Pcg;
+    let (n, dim) = (64usize, 64usize);
+    let mut sched = Schedule::new(TopologyKind::OnePeerExp, n, 1);
+    let mut grads = StackedParams::zeros(n, dim);
+    let mut rng = Pcg::seeded(11);
+    for v in grads.data.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    let engine = Engine::new(2);
+    let mut rows = Vec::new();
+    let mut dense_median = f64::NAN;
+    for comp in [
+        CompressorKind::Identity,
+        CompressorKind::TopK { frac: 0.125 },
+        CompressorKind::Int8,
+    ] {
+        let mut opt = AlgorithmKind::DmSgd.build(n, &vec![0.0f32; dim], 0.9);
+        let mut gz = GossipCompression::new(comp, 7);
+        let mut scratch = StepScratch::default();
+        let mut k = 0usize;
+        let stats =
+            bench_config(&format!("baseline compress {}", comp.label()), 2, 10, 128, 0.05, &mut || {
+                let plan = sched.plan_at(k);
+                opt.step_engine_compressed(&engine, plan, &grads, 0.05, &mut scratch, &mut gz);
+                k += 1;
+            });
+        if comp.is_identity() {
+            dense_median = stats.median;
+        }
+        rows.push(format!(
+            "    {{\"n\": {n}, \"compressor\": \"{}\", \"s_per_iter\": {:.9}, \
+             \"overhead_vs_dense\": {:.4}, \"round_bytes\": {:.1}}}",
+            comp.label(),
+            stats.median,
+            stats.median / dense_median.max(f64::MIN_POSITIVE),
+            n as f64 * comp.wire_bytes(4.0 * dim as f64),
+        ));
+    }
+    format!(
+        "{{\n  \"bench\": \"bench_compress\",\n  \"protocol\": \"baseline\",\n  \
+         \"topology\": \"one_peer_exp\",\n  \"algorithm\": \"dmsgd\",\n  \"dim\": {dim},\n  \
+         \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    )
+}
+
+/// Finite-time family cycle construction + sparse `plan_at` matvec —
+/// the quantity `benches/bench_topology.rs` tracks.
+fn baseline_topology() -> String {
+    use expograph::topology::family;
+    let n = 48usize;
+    let mut rows = Vec::new();
+    for name in ["base4", "ceca"] {
+        let topo = family::find(name).expect("finite-time family registered");
+        let build = bench_config(&format!("baseline build {name}"), 2, 10, 128, 0.05, &mut || {
+            let mut s = Schedule::from_family(topo, n, 1);
+            black_box(s.plan_at(0).max_degree);
+        });
+        let mut sched = Schedule::from_family(topo, n, 1);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let mut k = 0usize;
+        let matvec =
+            bench_config(&format!("baseline matvec {name}"), 2, 10, 512, 0.05, &mut || {
+                black_box(sched.plan_at(k).matvec(&x));
+                k += 1;
+            });
+        rows.push(format!(
+            "    {{\"family\": \"{name}\", \"n\": {n}, \"build_s\": {:.9}, \
+             \"matvec_s\": {:.9}}}",
+            build.median, matvec.median
+        ));
+    }
+    format!(
+        "{{\n  \"bench\": \"bench_topology\",\n  \"protocol\": \"baseline\",\n  \
+         \"comparison\": \"finite_time_families\",\n  \"results\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    )
+}
+
 /// Parse one artifact and check the shared schema every bench (and
 /// every baseline above) emits.
 fn validate(name: &str) {
@@ -159,11 +243,13 @@ fn validate(name: &str) {
 
 #[test]
 fn bench_trajectory_artifacts_recorded_and_valid() {
-    let artifacts: [(&str, fn() -> String); 4] = [
+    let artifacts: [(&str, fn() -> String); 6] = [
         ("BENCH_step.json", baseline_step),
         ("BENCH_mixing.json", baseline_mixing),
         ("BENCH_netsim.json", baseline_netsim),
         ("BENCH_async.json", baseline_async),
+        ("BENCH_compress.json", baseline_compress),
+        ("BENCH_topology.json", baseline_topology),
     ];
     for (name, record) in artifacts {
         let path = output_path(name);

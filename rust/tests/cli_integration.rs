@@ -241,6 +241,34 @@ fn train_with_async_config_round_trips_execution_mode() {
 }
 
 #[test]
+fn train_round_trips_async_executor_knob() {
+    // The executor sub-knob: exec=waves|ooo, default ooo, threaded from
+    // key=value overrides through TrainConfig and echoed in the config
+    // banner.
+    let cfg = format!("{}/configs/async_dmsgd.json", env!("CARGO_MANIFEST_DIR"));
+    let (stdout, stderr, ok) = run(&["train", "--config", &cfg, "iters=60"]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("exec: Ooo"), "default executor not ooo\n{stdout}");
+
+    let (stdout, stderr, ok) =
+        run(&["train", "--config", &cfg, "iters=60", "exec=waves"]);
+    assert!(ok, "stdout: {stdout} stderr: {stderr}");
+    assert!(stdout.contains("exec: Waves"), "{stdout}");
+    assert!(stdout.contains("final: loss"));
+
+    // Unknown variants fail with an error naming both executors, and
+    // the usage text advertises the key.
+    let (_, stderr, ok) = run(&["train", "exec=eager"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown async executor"), "{stderr}");
+    assert!(stderr.contains("waves"), "{stderr}");
+    assert!(stderr.contains("ooo"), "{stderr}");
+    let (stdout, _, ok) = run(&["--help"]);
+    assert!(ok);
+    assert!(stdout.contains("exec=ooo | waves"), "usage missing exec key\n{stdout}");
+}
+
+#[test]
 fn train_rejects_bad_key() {
     let (_, stderr, ok) = run(&["train", "flux_capacitor=1"]);
     assert!(!ok);

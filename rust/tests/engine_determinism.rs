@@ -7,7 +7,7 @@
 
 use expograph::coordinator::schedule_lr::LrSchedule;
 use expograph::coordinator::trainer::{
-    ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
+    AsyncExec, ExecutionMode, QuadraticProvider, TrainConfig, Trainer, TrainingHistory,
 };
 use expograph::costmodel::CostModel;
 use expograph::netsim::{NetSim, Scenario};
@@ -51,6 +51,18 @@ fn run_exec(
     execution: ExecutionMode,
     netsim: Option<NetSim>,
 ) -> TrainingHistory {
+    run_exec_with(kind, algo, lanes, execution, AsyncExec::Ooo, netsim)
+}
+
+/// Full-control variant: also pins which async executor drives the run.
+fn run_exec_with(
+    kind: TopologyKind,
+    algo: AlgorithmKind,
+    lanes: usize,
+    execution: ExecutionMode,
+    async_exec: AsyncExec,
+    netsim: Option<NetSim>,
+) -> TrainingHistory {
     let provider = QuadraticProvider::random(N, DIM, 0.2, 11);
     let opt = algo.build(N, &vec![0.1; DIM], 0.9);
     let mut trainer = Trainer::new(
@@ -68,11 +80,28 @@ fn run_exec(
             msg_bytes: None,
             cost: Some(CostModel::paper_default(0.01)),
             execution,
+            async_exec,
             ..Default::default()
         },
     );
     trainer.netsim = netsim;
     trainer.run()
+}
+
+/// Compare two histories on every recorded field except `dispatches`
+/// (the executors *differ* in dispatch economy by design; everything
+/// the training run observes must match bit for bit).
+fn assert_same_history(a: &TrainingHistory, b: &TrainingHistory, label: &str) {
+    assert_bitwise_equal(&a.loss, &b.loss, label);
+    assert_eq!(a.consensus.len(), b.consensus.len(), "{label}: probe count");
+    for ((ka, x), (kb, y)) in a.consensus.iter().zip(b.consensus.iter()) {
+        assert_eq!(ka, kb, "{label}: probe iteration");
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: consensus diverged at iter {ka}");
+    }
+    assert_eq!(a.lr, b.lr, "{label}: lr trace");
+    assert_eq!(a.sim_time.to_bits(), b.sim_time.to_bits(), "{label}: sim clock");
+    assert_bitwise_equal(&a.round_times, &b.round_times, label);
+    assert_bitwise_equal(&a.round_bytes, &b.round_bytes, label);
 }
 
 /// Compare two loss curves bit for bit (f64 equality via to_bits so a
@@ -246,6 +275,84 @@ fn async_traces_are_bitwise_lane_invariant() {
         for ((ka, a), (kb, b)) in base.consensus.iter().zip(pooled.consensus.iter()) {
             assert_eq!(ka, kb, "{label}: probe iteration");
             assert_eq!(a.to_bits(), b.to_bits(), "{label}: consensus diverged at iter {ka}");
+        }
+    }
+}
+
+/// The tentpole pin: the out-of-order ready-batch executor (`exec=ooo`)
+/// is **bitwise identical** to the serial-wave reference (`exec=waves`)
+/// across staleness bounds τ ∈ {0, 1, 2}, every timing-only scenario,
+/// and every lane count — losses, probes, learning-rate trace, and the
+/// simulated clock all match, because staleness is resolved serially by
+/// the coordinator before any task is created; the out-of-order
+/// schedule decides only *when* a row kernel runs, never *what* it
+/// reads. Only the engine dispatch count (the perf headline) differs.
+#[test]
+fn ready_batches_match_serial_waves_bitwise() {
+    let cost = CostModel::paper_default(0.01);
+    let scenarios: [(&str, fn() -> Scenario); 3] = [
+        ("clean", Scenario::clean),
+        ("straggler", Scenario::straggler),
+        ("flaky", Scenario::flaky),
+    ];
+    for tau in [0usize, 1, 2] {
+        for (sname, scen) in scenarios {
+            let reference = run_exec_with(
+                TopologyKind::OnePeerExp,
+                AlgorithmKind::DmSgd,
+                1,
+                ExecutionMode::Async { tau },
+                AsyncExec::Waves,
+                Some(NetSim::new(&cost, scen(), 9)),
+            );
+            for lanes in [1usize, 2, 3, 7] {
+                let ooo = run_exec_with(
+                    TopologyKind::OnePeerExp,
+                    AlgorithmKind::DmSgd,
+                    lanes,
+                    ExecutionMode::Async { tau },
+                    AsyncExec::Ooo,
+                    Some(NetSim::new(&cost, scen(), 9)),
+                );
+                assert_same_history(
+                    &reference,
+                    &ooo,
+                    &format!("tau={tau} {sname} ooo-lanes={lanes}"),
+                );
+            }
+        }
+    }
+}
+
+/// Same pin across the algorithm zoo (every per-node kernel must match
+/// its shard kernel expression for expression), at a fixed τ/scenario.
+#[test]
+fn ready_batches_match_serial_waves_across_algorithms() {
+    let cost = CostModel::paper_default(0.01);
+    for algo in [
+        AlgorithmKind::DSgd,
+        AlgorithmKind::DmSgd,
+        AlgorithmKind::VanillaDmSgd,
+        AlgorithmKind::QgDmSgd,
+    ] {
+        for kind in [TopologyKind::OnePeerExp, TopologyKind::StaticExp] {
+            let reference = run_exec_with(
+                kind,
+                algo,
+                2,
+                ExecutionMode::Async { tau: 2 },
+                AsyncExec::Waves,
+                Some(NetSim::new(&cost, Scenario::straggler(), 9)),
+            );
+            let ooo = run_exec_with(
+                kind,
+                algo,
+                3,
+                ExecutionMode::Async { tau: 2 },
+                AsyncExec::Ooo,
+                Some(NetSim::new(&cost, Scenario::straggler(), 9)),
+            );
+            assert_same_history(&reference, &ooo, &format!("{algo}/{kind} waves-vs-ooo"));
         }
     }
 }
